@@ -1,0 +1,15 @@
+//! Regenerate every hardware table/figure of the paper in one run:
+//! Fig. 2c, S1, S4, S5, Eq. 2/3, Fig. 4 (16/8-bit), Fig. 5, the §4
+//! on-board comparison, and the S8 accelerator table.
+//!
+//!     cargo run --release --example fpga_report
+
+use addernet::report;
+
+fn main() -> anyhow::Result<()> {
+    let art = std::path::Path::new("artifacts");
+    report::run("hw-all", art, "lenet5", 256)?;
+    println!("(accuracy figures: run `repro train`/train_e2e first, then \
+              `repro report fig2|fig3ab|fig3d|s7`)");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Serving example: start the batching inference server with two model
+//! variants (AdderNet + CNN LeNet-5), fire a mixed request load, and
+//! report latency/throughput — the "general-purpose accelerator in
+//! deployment" scenario of the paper's §4, with the Rust coordinator
+//! playing the ARM-PS role and PJRT the PL role.
+//!
+//!     make artifacts && cargo run --release --example serve
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use addernet::coordinator::{server, Manifest, VariantCfg};
+use addernet::data;
+use addernet::report::quantrep;
+
+fn main() -> Result<()> {
+    let art = std::path::Path::new("artifacts");
+    let manifest = Manifest::load(art)?;
+    let n_req: usize = std::env::var("REQUESTS").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(512);
+
+    let variants: Vec<VariantCfg> = ["lenet5_adder", "lenet5_mult"].iter().map(|m| {
+        let (arch, kernel) = m.split_once('_').unwrap();
+        let w = quantrep::trained_file(arch, kernel);
+        VariantCfg {
+            model: m.to_string(),
+            weights: art.join(&w).exists().then_some(w),
+        }
+    }).collect();
+
+    println!("[serve] starting {} variants, 2ms batch window", variants.len());
+    let handle = server::start(&manifest, &variants, Duration::from_millis(2))?;
+    let names = handle.variants();
+
+    // warm-up (compile + first batch)
+    let warm = data::eval_set(4, 11);
+    for v in &names {
+        handle.submit(v, warm.images[..1024].to_vec())?.recv()?;
+    }
+
+    let load = data::eval_set(n_req, 3);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        let img = load.images[i * 1024..(i + 1) * 1024].to_vec();
+        pending.push((i, handle.submit(&names[i % names.len()], img)?));
+    }
+    let mut correct = 0usize;
+    for (i, rx) in pending {
+        let resp = rx.recv()?;
+        let pred = resp.logits.iter().enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        if pred == load.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("[serve] {n_req} requests in {dt:.2}s = {:.0} img/s, acc {:.3}",
+             n_req as f64 / dt, correct as f64 / n_req as f64);
+
+    let metrics = handle.metrics.lock().unwrap().clone();
+    for (name, m) in &metrics {
+        println!("  {name}: {} reqs in {} batches (mean {:.1}/batch), \
+                  queue p50 {}us, exec p50 {}us, e2e p99 {}us",
+                 m.requests, m.batches, m.mean_batch_size(),
+                 m.queue_lat.quantile_us(0.5), m.exec_lat.quantile_us(0.5),
+                 m.e2e_lat.quantile_us(0.99));
+    }
+    drop(metrics);
+    handle.shutdown();
+    println!("[serve] OK");
+    Ok(())
+}

@@ -1,0 +1,222 @@
+"""AOT compile path: lower Layer-2 graphs to HLO **text** + manifest.
+
+Run once by ``make artifacts``; Python never appears on the Rust request
+path.  HLO text (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly.
+
+Outputs in --out-dir:
+  * ``<graph>.hlo.txt``        one per exported graph
+  * ``<arch>_init.bin``        initial parameters, flat f32 little-endian,
+                               concatenated in sorted-name order
+  * ``manifest.json``          every graph's input/output signature, the
+                               parameter layout, and training hyper-params —
+                               the single source of truth the Rust
+                               coordinator loads.
+
+Parameter ordering contract: JAX flattens dict pytrees in sorted-key
+order; the manifest records that same sorted order, so Rust can treat the
+whole state as an opaque ordered list of buffers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import layers, model
+from .kernels import adder_conv, mult_conv
+
+DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "s32"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec_of(x) -> dict:
+    return {"shape": list(x.shape), "dtype": DTYPE_NAMES[jnp.asarray(x).dtype
+                                                         if not hasattr(x, "dtype") else x.dtype]}
+
+
+def _tree_specs(tree, prefix: str) -> List[dict]:
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    names = sorted(tree.keys()) if isinstance(tree, dict) else None
+    out = []
+    for i, leaf in enumerate(leaves):
+        name = f"{prefix}/{names[i]}" if names else f"{prefix}[{i}]"
+        d = _spec_of(leaf)
+        d["name"] = name
+        out.append(d)
+    return out
+
+
+def _abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def write_init_bin(params: Dict[str, jnp.ndarray], path: str) -> List[dict]:
+    """Write params to a flat f32 .bin (sorted-name order); return layout."""
+    layout, off = [], 0
+    with open(path, "wb") as f:
+        for name in sorted(params.keys()):
+            arr = np.asarray(params[name], dtype=np.float32)
+            f.write(arr.tobytes())
+            layout.append({"name": name, "shape": list(arr.shape),
+                           "offset": off, "size": int(arr.size)})
+            off += arr.size
+    return layout
+
+
+def export_model_graphs(arch: str, kernel: str, out_dir: str, manifest: dict,
+                        batch: int, total_steps: int, base_lr: float,
+                        with_probe: bool) -> None:
+    params = model.init_params(arch, seed=0)
+    momenta = model.init_momenta(params)
+    x = jax.ShapeDtypeStruct((batch, 32, 32, 1), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+
+    init_file = f"{arch}_init.bin"
+    if arch not in manifest["params"]:
+        layout = write_init_bin(params, os.path.join(out_dir, init_file))
+        manifest["params"][arch] = {
+            "init_file": init_file,
+            "layout": layout,
+            "trainable": [n for n in sorted(params) if model.is_trainable(n)],
+        }
+
+    def emit(graph_name: str, lowered, kind: str, extra=None):
+        fname = f"{graph_name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+        entry = {
+            "file": fname, "kind": kind, "arch": arch, "kernel": kernel,
+            "batch": batch,
+            "outputs": [{"shape": list(o.shape),
+                         "dtype": DTYPE_NAMES[o.dtype]} for o in out_avals],
+        }
+        entry.update(extra or {})
+        manifest["graphs"][graph_name] = entry
+        print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB)")
+
+    name = f"{arch}_{kernel}"
+    print(f"[aot] {name} (batch={batch})")
+
+    train_fn = model.make_train_step(arch, kernel, base_lr=base_lr,
+                                     total_steps=total_steps)
+    lowered = jax.jit(train_fn).lower(
+        _abstract(params), _abstract(momenta), x, y, step)
+    emit(f"{name}_train", lowered, "train", {
+        "total_steps": total_steps, "base_lr": base_lr,
+        "n_params": len(params), "n_momenta": len(momenta),
+        "input_order": (["params/" + n for n in sorted(params)]
+                        + ["momenta/" + n for n in sorted(momenta)]
+                        + ["x", "y", "step"]),
+        "output_order": (["params/" + n for n in sorted(params)]
+                         + ["momenta/" + n for n in sorted(momenta)]
+                         + ["loss", "acc"]),
+    })
+
+    eval_fn = model.make_eval_step(arch, kernel)
+    lowered = jax.jit(eval_fn).lower(_abstract(params), x)
+    emit(f"{name}_eval", lowered, "eval", {
+        "n_params": len(params),
+        "input_order": ["params/" + n for n in sorted(params)] + ["x"],
+        "output_order": ["logits"],
+    })
+
+    if with_probe:
+        probe_fn = model.make_probe(arch, kernel)
+        lowered = jax.jit(probe_fn).lower(_abstract(params), x)
+        emit(f"{name}_probe", lowered, "probe", {
+            "n_params": len(params),
+            "layers": model.probe_layer_names(arch),
+            "input_order": ["params/" + n for n in sorted(params)] + ["x"],
+        })
+
+
+def export_kernel_demos(out_dir: str, manifest: dict) -> None:
+    """Small standalone kernel graphs: Rust cargo tests cross-validate the
+    bit-accurate functional simulator against exactly these HLO modules."""
+    m, k, n = 16, 32, 8
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    for gname, fn in (
+        ("l1gemm_demo", lambda a, b: adder_conv.l1_gemm(a, b, bm=16, bk=16,
+                                                        bn=8)),
+        ("matmul_demo", lambda a, b: mult_conv.matmul(a, b, bm=16, bk=16,
+                                                      bn=8)),
+    ):
+        lowered = jax.jit(fn).lower(a, b)
+        fname = f"{gname}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["graphs"][gname] = {
+            "file": fname, "kind": "kernel_demo", "m": m, "k": k, "n": n,
+            "input_order": ["a", "b"], "output_order": ["out"],
+            "outputs": [{"shape": [m, n], "dtype": "f32"}],
+        }
+        print(f"  wrote {fname}")
+
+
+# Default export set: every kernel on LeNet-5 (Fig. 2/5 workloads), adder &
+# mult on the ResNet (Fig. 2/3 workloads), probes for the adder models
+# (Fig. 3a/b).  --full adds resnet20.
+DEFAULT_SET = [
+    ("lenet5", "adder", True),
+    ("lenet5", "mult", False),
+    ("lenet5", "shift", False),
+    ("lenet5", "xnor", False),
+    ("resnet8", "adder", True),
+    ("resnet8", "mult", False),
+]
+FULL_EXTRA = [
+    ("resnet20", "adder", True),
+    ("resnet20", "mult", False),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--total-steps", type=int, default=400)
+    ap.add_argument("--base-lr", type=float, default=0.1)
+    ap.add_argument("--impl", choices=("pallas", "ref"), default="pallas",
+                    help="adder-conv forward implementation in the graphs")
+    ap.add_argument("--full", action="store_true",
+                    help="also export resnet20 graphs")
+    args = ap.parse_args()
+
+    layers.set_impl(args.impl)
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"graphs": {}, "params": {},
+                "impl": args.impl, "batch": args.batch}
+    export_kernel_demos(args.out_dir, manifest)
+    todo = list(DEFAULT_SET) + (FULL_EXTRA if args.full else [])
+    for arch, kernel, probe in todo:
+        export_model_graphs(arch, kernel, args.out_dir, manifest,
+                            args.batch, args.total_steps, args.base_lr,
+                            probe)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest with {len(manifest['graphs'])} graphs written")
+
+
+if __name__ == "__main__":
+    main()

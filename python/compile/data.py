@@ -1,0 +1,128 @@
+"""Synthetic 10-class 32x32 grayscale vision dataset.
+
+This is the substitute for CIFAR-100 / ImageNet (see DESIGN.md §2): a
+deterministic, integer-arithmetic procedural generator that is mirrored
+bit-exactly in `rust/src/data/` so the Python build/test path and the Rust
+training driver see the *same* images.  All randomness comes from a 31-bit
+LCG so both languages agree without any RNG library.
+
+Classes (idx % 10):
+  0 horizontal stripes   5 filled circle
+  1 vertical stripes     6 ring (annulus)
+  2 diagonal stripes     7 square frame
+  3 anti-diagonal        8 plus-sign cross
+  4 checkerboard         9 LCG block pattern
+
+Pixel = clip(base(class, y, x, s1, s2) + noise, 0, 255);
+float value = pixel / 127.5 - 1.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+LCG_A = 1103515245
+LCG_C = 12345
+LCG_M = 1 << 31
+IMG = 32  # image side
+N_CLASSES = 10
+
+
+def _lcg_next(state: np.ndarray) -> np.ndarray:
+    """One LCG step; `state` is uint64 but kept < 2**31."""
+    return (state * LCG_A + LCG_C) % LCG_M
+
+
+def _seed_for(seed: int, idx: np.ndarray) -> np.ndarray:
+    """Per-image initial LCG state (matches rust data::sample_seed)."""
+    return (np.uint64(seed) * 2654435761 + idx.astype(np.uint64) * 97 + 1) % LCG_M
+
+
+def _base_pattern(cls: np.ndarray, s1: np.ndarray, s2: np.ndarray) -> np.ndarray:
+    """Vectorized base image for a batch. cls/s1/s2 shape (N,), out (N,32,32) int32."""
+    n = cls.shape[0]
+    y = np.arange(IMG).reshape(1, IMG, 1).astype(np.int64)
+    x = np.arange(IMG).reshape(1, 1, IMG).astype(np.int64)
+    s1 = s1.reshape(n, 1, 1).astype(np.int64)
+    s2 = s2.reshape(n, 1, 1).astype(np.int64)
+    hi, lo = 220, 35
+    out = np.full((n, IMG, IMG), lo, dtype=np.int64)
+
+    def stripes(coord):
+        p = 4 + s1 % 4
+        return np.where(((coord + s2) % p) * 2 < p, hi, lo)
+
+    pats = []
+    pats.append(stripes(y))                      # 0 horizontal
+    pats.append(stripes(x))                      # 1 vertical
+    pats.append(stripes(x + y))                  # 2 diagonal
+    pats.append(stripes(x - y + 64))             # 3 anti-diagonal
+    c = 3 + s1 % 4                               # 4 checkerboard
+    pats.append(np.where(((x // c) + (y // c)) % 2 == 0, hi, lo))
+    # 5 filled circle / 6 ring
+    dx = x - (16 + s2 % 7 - 3)
+    dy = y - (16 + (s2 // 7) % 7 - 3)
+    d2 = dx * dx + dy * dy
+    r = 6 + s1 % 7
+    pats.append(np.where(d2 <= r * r, hi, lo))   # 5
+    band = 2 + s1 % 3
+    pats.append(np.where(np.abs(d2 - r * r) <= band * r, hi, lo))  # 6
+    m = 4 + s1 % 5                               # 7 square frame
+    on_edge = (
+        ((x == m) | (x == IMG - 1 - m)) & (y >= m) & (y <= IMG - 1 - m)
+    ) | (((y == m) | (y == IMG - 1 - m)) & (x >= m) & (x <= IMG - 1 - m))
+    frame_t = 1 + s2 % 2
+    fr = np.zeros_like(out, dtype=bool)
+    for t in range(3):  # thicken frame by up to frame_t extra pixels
+        mm = m + t
+        e = (
+            ((x == mm) | (x == IMG - 1 - mm)) & (y >= mm) & (y <= IMG - 1 - mm)
+        ) | (((y == mm) | (y == IMG - 1 - mm)) & (x >= mm) & (x <= IMG - 1 - mm))
+        fr |= e & (t <= frame_t)
+    pats.append(np.where(fr | on_edge, hi, lo))  # 7
+    t = 2 + s1 % 3                               # 8 plus-sign cross
+    cxx = 16 + s2 % 5 - 2
+    pats.append(np.where((np.abs(x - cxx) < t) | (np.abs(y - cxx) < t), hi, lo))
+    # 9 LCG 4x4 block pattern: 16 on/off cells from an LCG chain seeded by s1
+    st = (s1 * 31 + 7) % LCG_M
+    blocks = np.zeros((n, 4, 4), dtype=np.int64)
+    for by in range(4):
+        for bx in range(4):
+            st = _lcg_next(st.astype(np.uint64)).astype(np.int64)
+            blocks[:, by, bx] = np.where((st.reshape(n) >> 5) % 2 == 0, hi, lo)
+    pats.append(blocks[:, (np.arange(IMG) // 8)][:, :, (np.arange(IMG) // 8)])
+
+    cls_b = cls.reshape(n, 1, 1)
+    for k, p in enumerate(pats):
+        out = np.where(cls_b == k, p, out)
+    return out
+
+
+def generate(n: int, seed: int, offset: int = 0):
+    """Generate `n` samples starting at index `offset`.
+
+    Returns (images float32 (n,32,32,1) in [-1,1], labels int32 (n,)).
+    """
+    idx = np.arange(offset, offset + n, dtype=np.uint64)
+    cls = (idx % N_CLASSES).astype(np.int64)
+    state = _seed_for(seed, idx)
+    state = _lcg_next(state)
+    s1 = (state >> 7) % 1000
+    state = _lcg_next(state)
+    s2 = (state >> 7) % 1000
+    base = _base_pattern(cls, s1.astype(np.int64), s2.astype(np.int64))
+    # Per-pixel noise chain, row-major, continuing from the image state.
+    noise = np.empty((n, IMG * IMG), dtype=np.int64)
+    for i in range(IMG * IMG):
+        state = _lcg_next(state)
+        noise[:, i] = ((state >> 7) % 41).astype(np.int64) - 20
+    img = np.clip(base + noise.reshape(n, IMG, IMG), 0, 255)
+    fimg = (img.astype(np.float32) / 127.5) - 1.0
+    return fimg[..., None], cls.astype(np.int32)
+
+
+def batches(n_total: int, batch: int, seed: int, offset: int = 0):
+    """Yield (x, y) batches covering [offset, offset+n_total)."""
+    for start in range(0, n_total, batch):
+        m = min(batch, n_total - start)
+        yield generate(m, seed, offset + start)

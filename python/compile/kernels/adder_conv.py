@@ -1,0 +1,106 @@
+"""Layer-1 Pallas kernel: the AdderNet negative-L1-distance GEMM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FPGA
+implementation is a Pout x Pin array of 2-adder kernels feeding a widening
+adder tree.  On a TPU-shaped target the same insight — "the similarity is a
+cheap elementwise op followed by a reduction" — maps onto a matmul-style
+tiling: BlockSpec carves (bm, bk) x (bk, bn) VMEM tiles (VMEM plays the role
+of the FPGA BRAM line buffers), the broadcast abs-diff + sum plays the role
+of the adder tree, and the K grid dimension time-multiplexes input channels
+exactly as the paper's Pin loop does.  The MXU cannot compute |a-b|, so this
+kernel is VPU-bound; perf analysis therefore uses the VMEM/VPU roofline, not
+MXU FLOPs (see EXPERIMENTS.md §Perf).
+
+`interpret=True` always: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO that the Rust runtime runs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _l1_gemm_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """One (bm, bk) x (bk, bn) tile step of out = -sum_k |a - b|.
+
+    Grid is (M/bm, N/bn, K/bk).  The output BlockSpec index map is constant
+    along the K axis, so the same output tile stays resident in VMEM across
+    the sequential K steps and serves as the accumulator — the widened
+    "adder tree" register of the paper's datapath.  We accumulate the
+    positive L1 distance and negate on the final step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]  # (bm, bk)
+    b = b_ref[...]  # (bk, bn)
+    # Broadcast abs-diff and reduce the K tile: the adder-tree step.
+    o_ref[...] += jnp.sum(jnp.abs(a[:, :, None] - b[None, :, :]), axis=1)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = -o_ref[...]
+
+
+def _pad_to(x: jnp.ndarray, mult0: int, mult1: int, fill: float) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)), constant_values=fill)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def l1_gemm(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128, bk: int = 128,
+            bn: int = 128) -> jnp.ndarray:
+    """out[m, n] = -sum_k |a[m, k] - b[k, n]| via the Pallas kernel.
+
+    Shapes are padded up to tile multiples; padded K entries of A and B are
+    both filled with 0 so |0 - 0| contributes nothing to the reduction, and
+    padded M/N rows are sliced off the output.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    bk = min(bk, max(8, k))
+    ap = _pad_to(a, bm, bk, 0.0)
+    bp = _pad_to(b, bk, bn, 0.0)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_l1_gemm_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def adder_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                 padding: str = "SAME", **tiles) -> jnp.ndarray:
+    """AdderNet conv built on the Pallas L1 GEMM (im2col outside the kernel).
+
+    x: (B, H, W, Cin); w: (kh, kw, Cin, Cout) -> (B, Ho, Wo, Cout).
+    """
+    kh, kw, cin, cout = w.shape
+    pats = ref.im2col(x, kh, kw, stride, padding)
+    b, ho, wo, k = pats.shape
+    out = l1_gemm(pats.reshape(-1, k), w.reshape(k, cout), **tiles)
+    return out.reshape(b, ho, wo, cout)

@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: multiply-kernel (classical CNN) GEMM baseline.
+
+Identical tiling to `adder_conv.l1_gemm` so the two kernels differ only in
+the similarity op — exactly the comparison the paper's hardware section
+makes (multiplier+tree vs 2-adders+tree).  On a real TPU this variant is the
+MXU path (`jnp.dot` inside the tile); the adder variant is the VPU path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .adder_conv import _pad_to
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # The MXU-shaped tile op: contraction instead of abs-diff reduction.
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128, bk: int = 128,
+           bn: int = 128) -> jnp.ndarray:
+    """Tiled Pallas GEMM: out = a @ b (the CNN baseline kernel)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    bk = min(bk, max(8, k))
+    ap = _pad_to(a, bm, bk, 0.0)
+    bp = _pad_to(b, bk, bn, 0.0)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def mult_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                padding: str = "SAME", **tiles) -> jnp.ndarray:
+    """CNN conv built on the Pallas GEMM (im2col outside the kernel)."""
+    kh, kw, cin, cout = w.shape
+    pats = ref.im2col(x, kh, kw, stride, padding)
+    b, ho, wo, k = pats.shape
+    out = matmul(pats.reshape(-1, k), w.reshape(k, cout), **tiles)
+    return out.reshape(b, ho, wo, cout)

@@ -1,0 +1,52 @@
+"""Layer-1 Pallas kernel: shared-scaling-factor quantization (paper §3.1).
+
+A single power-of-two scale `2^exp` is shared between features and weights
+so the integer adder datapath needs no point alignment — the kernel is a
+pure elementwise clip/round, tiled over VMEM-sized blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, o_ref, *, exp: float, bits: int):
+    qmax = float(2 ** (bits - 1) - 1)
+    s = 2.0 ** exp
+    o_ref[...] = jnp.clip(jnp.round(x_ref[...] / s), -qmax, qmax)
+
+
+@functools.partial(jax.jit, static_argnames=("exp", "bits", "block"))
+def quantize(x: jnp.ndarray, exp: float, bits: int,
+             block: int = 65536) -> jnp.ndarray:
+    """Symmetric quantize a flat-able tensor with scale 2^exp.
+
+    Returns "integers" carried in the float dtype (simulated quantization),
+    matching the FPGA functional model's int datapath inputs.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    blk = min(block, n)
+    pad = (-n) % blk
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    grid = (flat.shape[0] // blk,)
+    out = pl.pallas_call(
+        functools.partial(_quant_kernel, exp=float(exp), bits=int(bits)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
+        interpret=True,
+    )(flat)
+    return out[:n].reshape(shape)
+
+
+def fake_quant(x: jnp.ndarray, exp: float, bits: int) -> jnp.ndarray:
+    """quantize -> dequantize round trip through the Pallas kernel."""
+    return quantize(x, exp, bits) * (2.0 ** float(exp))

@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the correctness ground truth: pytest (with hypothesis sweeps over
+shapes and dtypes) asserts the Pallas kernels in `adder_conv.py`,
+`mult_conv.py` and `quant.py` match these to within dtype tolerance, and the
+Rust functional simulator (`rust/src/sim/functional.rs`) is validated against
+HLO graphs lowered from these same functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l1_gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Negative-L1-distance GEMM: out[m, n] = -sum_k |a[m, k] - b[k, n]|.
+
+    This is the AdderNet similarity (Eq. 1 with S = -|F - W|) expressed in
+    the im2col/GEMM form every conv below reduces to.
+    """
+    # (M, K, 1) - (1, K, N) -> (M, K, N); reduce K.
+    return -jnp.sum(jnp.abs(a[:, :, None] - b[None, :, :]), axis=1)
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain GEMM oracle for the multiply-kernel baseline."""
+    return jnp.matmul(a, b, preferred_element_type=a.dtype)
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1,
+           padding: str = "VALID") -> jnp.ndarray:
+    """Extract conv patches: x (B,H,W,C) -> (B, Ho, Wo, kh*kw*C).
+
+    Patch feature order is (kh, kw, C) row-major, matching the weight
+    reshape in the conv wrappers and the Rust functional simulator.
+    """
+    b, h, w, c = x.shape
+    pats = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # conv_general_dilated_patches returns features ordered (C, kh, kw);
+    # transpose to (kh, kw, C) so weights reshape naturally.
+    bo, ho, wo, f = pats.shape
+    pats = pats.reshape(bo, ho, wo, c, kh, kw)
+    pats = pats.transpose(0, 1, 2, 4, 5, 3)
+    return pats.reshape(bo, ho, wo, kh * kw * c)
+
+
+def adder_conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                     padding: str = "SAME") -> jnp.ndarray:
+    """AdderNet convolution oracle.
+
+    x: (B, H, W, Cin); w: (kh, kw, Cin, Cout).
+    out[b,h,w,co] = -sum_{ky,kx,ci} |x_patch - w|   (Eq. 1, S = -|F-W|).
+    """
+    kh, kw, cin, cout = w.shape
+    pats = im2col(x, kh, kw, stride, padding)
+    b, ho, wo, k = pats.shape
+    out = l1_gemm_ref(pats.reshape(-1, k), w.reshape(k, cout))
+    return out.reshape(b, ho, wo, cout)
+
+
+def mult_conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                    padding: str = "SAME") -> jnp.ndarray:
+    """Standard convolution oracle via the same im2col path."""
+    kh, kw, cin, cout = w.shape
+    pats = im2col(x, kh, kw, stride, padding)
+    b, ho, wo, k = pats.shape
+    out = matmul_ref(pats.reshape(-1, k), w.reshape(k, cout))
+    return out.reshape(b, ho, wo, cout)
+
+
+# ---------------------------------------------------------------------------
+# Shared-scaling-factor quantization (paper §3.1)
+# ---------------------------------------------------------------------------
+
+def shared_scale_exp(max_abs: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Power-of-two shared scale exponent e with s = 2^e.
+
+    Chosen so that qmax * 2^e >= max_abs, i.e. the clip region covers the
+    joint feature+weight range (Fig. 3c).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    return jnp.ceil(jnp.log2(jnp.maximum(max_abs, 1e-12) / qmax))
+
+
+def quantize_ref(x: jnp.ndarray, exp: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Symmetric quantization to signed `bits` with scale 2^exp.
+
+    Returns integers held in the input float dtype (simulated quantization),
+    matching what the int datapath of the FPGA functional model computes.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    s = jnp.exp2(exp)
+    return jnp.clip(jnp.round(x / s), -qmax, qmax)
+
+
+def dequantize_ref(q: jnp.ndarray, exp: jnp.ndarray) -> jnp.ndarray:
+    return q * jnp.exp2(exp)
+
+
+def fake_quant_ref(x: jnp.ndarray, exp: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """quantize -> dequantize round trip (the QAT / eval-sim primitive)."""
+    return dequantize_ref(quantize_ref(x, exp, bits), exp)
+
+
+def adder_conv2d_quant_ref(x, w, exp, bits, stride=1, padding="SAME"):
+    """Quantized AdderNet conv with ONE shared scale (the paper's method).
+
+    Because -|a-b| is 1-homogeneous, a single shared scale factors out of
+    the whole sum: conv(q(x), q(w)) * s == quantized conv output.  This is
+    exactly why the hardware needs no point alignment.
+    """
+    xq = quantize_ref(x, exp, bits)
+    wq = quantize_ref(w, exp, bits)
+    return adder_conv2d_ref(xq, wq, stride, padding) * jnp.exp2(exp)

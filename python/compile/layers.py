@@ -1,0 +1,219 @@
+"""Layer-2 building blocks: the four trainable convolution kernels + glue.
+
+Kernel types (paper Fig. 1):
+  * ``adder`` — AdderNet, S = -|F-W|, with the AdderNet training rules from
+    Chen et al. CVPR'20 (which this paper builds on): full-precision
+    gradient for W, HardTanh-clipped gradient for X, and adaptive local
+    learning-rate scaling (applied in the optimizer, see model.py).
+  * ``mult``  — classical CNN cross-correlation baseline.
+  * ``shift`` — DeepShift-style: weights rounded to sign * 2^round(log2|w|)
+    with a straight-through estimator.
+  * ``xnor``  — XNOR-net-style binary weights sign(w) * mean|w| with STE.
+
+All convs are NHWC / HWIO.  The adder forward runs through the Layer-1
+Pallas kernel (so it lowers into the exported HLO); its backward is a
+memory-chunked jnp computation of the AdderNet surrogate gradients.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import adder_conv as _adder_kernel
+
+# Toggled by aot.py: "pallas" routes the adder/mult forward through the
+# Layer-1 Pallas kernels; "ref" uses the chunked pure-jnp path (identical
+# numerics, pinned by python/tests/test_kernels.py).
+_IMPL = {"value": "pallas"}
+
+
+def set_impl(name: str) -> None:
+    assert name in ("pallas", "ref"), name
+    _IMPL["value"] = name
+
+
+def _l1_gemm_fwd_impl(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    if _IMPL["value"] == "pallas":
+        return _adder_kernel.l1_gemm(a, b, bm=512, bk=128, bn=128)
+    return _l1_gemm_chunked(a, b)
+
+
+def _pad_rows(a: jnp.ndarray, mult: int):
+    pad = (-a.shape[0]) % mult
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+    return a, pad
+
+
+def _l1_gemm_chunked(a: jnp.ndarray, b: jnp.ndarray, cm: int = 1024):
+    """Memory-bounded -L1 GEMM: scan over M chunks, never materialising
+    more than (cm, K, N) at once."""
+    m = a.shape[0]
+    cm = min(cm, m)
+    ap, _ = _pad_rows(a, cm)
+    ac = ap.reshape(-1, cm, a.shape[1])
+
+    def one(ch):
+        return -jnp.sum(jnp.abs(ch[:, :, None] - b[None, :, :]), axis=1)
+
+    out = jax.lax.map(one, ac).reshape(-1, b.shape[1])
+    return out[:m]
+
+
+@jax.custom_vjp
+def l1_gemm_train(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Trainable -L1 GEMM with the AdderNet surrogate gradients."""
+    return _l1_gemm_fwd_impl(a, b)
+
+
+def _l1_gemm_train_fwd(a, b):
+    return _l1_gemm_fwd_impl(a, b), (a, b)
+
+
+def _l1_gemm_train_bwd(res, g):
+    a, b = res  # (M, K), (K, N); g (M, N)
+    # dB[k,n] = sum_m g[m,n] * (a[m,k] - b[k,n])     [full-precision grad]
+    gsum = jnp.sum(g, axis=0)                      # (N,)
+    db = jnp.einsum("mn,mk->kn", g, a) - b * gsum[None, :]
+    # dA[m,k] = sum_n g[m,n] * clip(b[k,n] - a[m,k], -1, 1)   [HardTanh]
+    m = a.shape[0]
+    cm = min(1024, m)
+    ap, _ = _pad_rows(a, cm)
+    gp, _ = _pad_rows(g, cm)
+    ac = ap.reshape(-1, cm, a.shape[1])
+    gc = gp.reshape(-1, cm, g.shape[1])
+
+    def one(args):
+        ach, gch = args
+        t = jnp.clip(b[None, :, :] - ach[:, :, None], -1.0, 1.0)  # (cm,K,N)
+        return jnp.einsum("mkn,mn->mk", t, gch)
+
+    da = jax.lax.map(one, (ac, gc)).reshape(-1, a.shape[1])[:m]
+    return da, db
+
+
+l1_gemm_train.defvjp(_l1_gemm_train_fwd, _l1_gemm_train_bwd)
+
+
+def adder_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                 padding: str = "SAME") -> jnp.ndarray:
+    """Trainable AdderNet conv: im2col (autodiff handles its transpose)
+    around the custom-vjp L1 GEMM."""
+    kh, kw, cin, cout = w.shape
+    pats = ref.im2col(x, kh, kw, stride, padding)
+    b, ho, wo, k = pats.shape
+    out = l1_gemm_train(pats.reshape(-1, k), w.reshape(k, cout))
+    return out.reshape(b, ho, wo, cout)
+
+
+def mult_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                padding: str = "SAME") -> jnp.ndarray:
+    """Classical conv baseline (XLA-native; the Pallas mult kernel is the
+    inference-path variant, validated separately)."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+@jax.custom_vjp
+def _round_ste(x):
+    return jnp.round(x)
+
+
+_round_ste.defvjp(lambda x: (jnp.round(x), None), lambda _, g: (g,))
+
+
+@jax.custom_vjp
+def _sign_ste(x):
+    return jnp.sign(x)
+
+
+_sign_ste.defvjp(lambda x: (jnp.sign(x), None), lambda _, g: (g,))
+
+
+def shift_quantize_weights(w: jnp.ndarray) -> jnp.ndarray:
+    """DeepShift weight projection: sign(w) * 2^round(log2 |w|) with STE.
+
+    In hardware this multiplier degenerates to a barrel shifter + sign flip
+    (paper Fig. 1c); here it trains with a straight-through estimator.
+    """
+    sign = _sign_ste(w)
+    logw = jnp.log2(jnp.maximum(jnp.abs(w), 1e-8))
+    e = jnp.clip(_round_ste(logw), -8.0, 0.0)  # shifts limited to 8 bits
+    return sign * jnp.exp2(e)
+
+
+def shift_conv2d(x, w, stride: int = 1, padding: str = "SAME"):
+    return mult_conv2d(x, shift_quantize_weights(w), stride, padding)
+
+
+def xnor_binarize_weights(w: jnp.ndarray) -> jnp.ndarray:
+    """XNOR-net weight binarization: sign(w) * mean(|w|) per filter, STE."""
+    alpha = jnp.mean(jnp.abs(w), axis=(0, 1, 2), keepdims=True)
+    return _sign_ste(w) * alpha
+
+
+def xnor_conv2d(x, w, stride: int = 1, padding: str = "SAME"):
+    return mult_conv2d(x, xnor_binarize_weights(w), stride, padding)
+
+
+CONV_FNS = {
+    "adder": adder_conv2d,
+    "mult": mult_conv2d,
+    "shift": shift_conv2d,
+    "xnor": xnor_conv2d,
+}
+
+
+# ---------------------------------------------------------------------------
+# Normalization / pooling / dense
+# ---------------------------------------------------------------------------
+
+def batch_norm_train(x, gamma, beta, mean_state, var_state, momentum=0.9,
+                     eps=1e-5):
+    """BatchNorm over NHW; returns (y, new_mean_state, new_var_state).
+
+    Mandatory after adder convs: their outputs are large negative L1
+    distances and BN re-centres them (paper §2.2 / Chen et al.).
+    """
+    axes = tuple(range(x.ndim - 1))
+    mu = jnp.mean(x, axis=axes)
+    var = jnp.var(x, axis=axes)
+    y = (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+    new_mean = momentum * mean_state + (1.0 - momentum) * mu
+    new_var = momentum * var_state + (1.0 - momentum) * var
+    return y, new_mean, new_var
+
+
+def batch_norm_eval(x, gamma, beta, mean_state, var_state, eps=1e-5):
+    return (x - mean_state) / jnp.sqrt(var_state + eps) * gamma + beta
+
+
+def avg_pool(x, window: int = 2, stride: int | None = None):
+    stride = stride or window
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID") / float(window * window)
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def max_pool(x, window: int = 2, stride: int | None = None):
+    stride = stride or window
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID")
+
+
+def dense(x, w, b):
+    return jnp.matmul(x, w) + b
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)

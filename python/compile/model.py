@@ -1,0 +1,277 @@
+"""Layer-2: model definitions, loss, optimizer and the exported step fns.
+
+Architectures (32x32x1 inputs, 10 classes — the synthetic-10 dataset that
+substitutes CIFAR/ImageNet, see DESIGN.md §2):
+
+  * ``lenet5``   — the paper's Fig. 5 on-chip workload (2 conv + 3 fc).
+  * ``resnet8``  — 1 residual block per stage (fast CI-scale ResNet).
+  * ``resnet20`` — 3 blocks per stage (the paper's Fig. 2/3/7 class).
+
+Every conv uses a selectable similarity kernel (adder / mult / shift /
+xnor, see layers.py); dense heads stay multiply-based, mirroring common
+practice (the paper replaces *convolutions*).
+
+The exported graphs (lowered to HLO text by aot.py and executed by the
+Rust coordinator, which owns all state) are:
+
+  * ``train_step(params, momenta, x, y, step)``
+        -> (new_params, new_momenta, loss, acc)
+    One fused fwd+bwd+SGD(momentum, cosine LR, weight decay) step with the
+    AdderNet adaptive local learning rate on adder conv weights.
+  * ``eval_step(params, x) -> logits``           (BN in inference mode)
+  * ``probe(params, x) -> per-adder-layer feature tensors``  (Fig. 3a/b)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+
+Params = Dict[str, jnp.ndarray]
+
+# Names with these suffixes are running statistics, not SGD-trainable.
+_STATE_SUFFIXES = ("/bn_mean", "/bn_var")
+
+ARCHS = ("lenet5", "resnet8", "resnet20")
+KERNELS = ("adder", "mult", "shift", "xnor")
+
+
+def is_trainable(name: str) -> bool:
+    return not name.endswith(_STATE_SUFFIXES)
+
+
+def is_adder_conv_w(name: str, kernel: str) -> bool:
+    return kernel == "adder" and name.endswith("/conv_w")
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+def _he(rng: np.random.Generator, shape, fan_in) -> np.ndarray:
+    return (rng.standard_normal(shape) * math.sqrt(2.0 / fan_in)).astype(
+        np.float32)
+
+
+def _conv_block_init(p, rng, name, kh, kw, cin, cout):
+    p[f"{name}/conv_w"] = _he(rng, (kh, kw, cin, cout), kh * kw * cin)
+    p[f"{name}/bn_gamma"] = np.ones((cout,), np.float32)
+    p[f"{name}/bn_beta"] = np.zeros((cout,), np.float32)
+    p[f"{name}/bn_mean"] = np.zeros((cout,), np.float32)
+    p[f"{name}/bn_var"] = np.ones((cout,), np.float32)
+
+
+def _dense_init(p, rng, name, din, dout):
+    p[f"{name}/dense_w"] = _he(rng, (din, dout), din)
+    p[f"{name}/dense_b"] = np.zeros((dout,), np.float32)
+
+
+def _resnet_stages(arch: str) -> int:
+    return {"resnet8": 1, "resnet20": 3}[arch]
+
+
+def init_params(arch: str, seed: int = 0) -> Params:
+    """Initial parameters as an insertion-ordered dict (the flattening
+    order the manifest records and the Rust driver relies on)."""
+    rng = np.random.default_rng(seed)
+    p: Dict[str, np.ndarray] = {}
+    if arch == "lenet5":
+        _conv_block_init(p, rng, "conv1", 5, 5, 1, 6)
+        _conv_block_init(p, rng, "conv2", 5, 5, 6, 16)
+        _dense_init(p, rng, "fc1", 400, 120)
+        _dense_init(p, rng, "fc2", 120, 84)
+        _dense_init(p, rng, "fc3", 84, 10)
+    elif arch in ("resnet8", "resnet20"):
+        n = _resnet_stages(arch)
+        _conv_block_init(p, rng, "stem", 3, 3, 1, 16)
+        cin = 16
+        for s, cout in enumerate((16, 32, 64)):
+            for b in range(n):
+                pre = f"s{s}b{b}"
+                _conv_block_init(p, rng, f"{pre}/c1", 3, 3, cin, cout)
+                _conv_block_init(p, rng, f"{pre}/c2", 3, 3, cout, cout)
+                if cin != cout:
+                    _conv_block_init(p, rng, f"{pre}/sc", 1, 1, cin, cout)
+                cin = cout
+        _dense_init(p, rng, "fc", 64, 10)
+    else:
+        raise ValueError(arch)
+    return {k: jnp.asarray(v) for k, v in p.items()}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _conv_bn(p, new_state, name, x, kernel, stride, padding, train,
+             probe_acc=None):
+    if probe_acc is not None:
+        probe_acc.append((name, x))
+    conv = layers.CONV_FNS[kernel]
+    y = conv(x, p[f"{name}/conv_w"], stride=stride, padding=padding)
+    if train:
+        y, m, v = layers.batch_norm_train(
+            y, p[f"{name}/bn_gamma"], p[f"{name}/bn_beta"],
+            p[f"{name}/bn_mean"], p[f"{name}/bn_var"])
+        new_state[f"{name}/bn_mean"] = m
+        new_state[f"{name}/bn_var"] = v
+    else:
+        y = layers.batch_norm_eval(
+            y, p[f"{name}/bn_gamma"], p[f"{name}/bn_beta"],
+            p[f"{name}/bn_mean"], p[f"{name}/bn_var"])
+    return y
+
+
+def forward(p: Params, x: jnp.ndarray, arch: str, kernel: str,
+            train: bool, probe_acc: List | None = None):
+    """Returns (logits, dict of new BN state)."""
+    ns: Dict[str, jnp.ndarray] = {}
+    if arch == "lenet5":
+        y = _conv_bn(p, ns, "conv1", x, kernel, 1, "VALID", train, probe_acc)
+        y = layers.relu(y)
+        y = layers.avg_pool(y, 2)
+        y = _conv_bn(p, ns, "conv2", y, kernel, 1, "VALID", train, probe_acc)
+        y = layers.relu(y)
+        y = layers.avg_pool(y, 2)
+        y = y.reshape(y.shape[0], -1)
+        y = layers.relu(layers.dense(y, p["fc1/dense_w"], p["fc1/dense_b"]))
+        y = layers.relu(layers.dense(y, p["fc2/dense_w"], p["fc2/dense_b"]))
+        logits = layers.dense(y, p["fc3/dense_w"], p["fc3/dense_b"])
+    elif arch in ("resnet8", "resnet20"):
+        n = _resnet_stages(arch)
+        y = _conv_bn(p, ns, "stem", x, kernel, 1, "SAME", train, probe_acc)
+        y = layers.relu(y)
+        cin = 16
+        for s, cout in enumerate((16, 32, 64)):
+            for b in range(n):
+                pre = f"s{s}b{b}"
+                stride = 2 if (s > 0 and b == 0) else 1
+                h = _conv_bn(p, ns, f"{pre}/c1", y, kernel, stride, "SAME",
+                             train, probe_acc)
+                h = layers.relu(h)
+                h = _conv_bn(p, ns, f"{pre}/c2", h, kernel, 1, "SAME",
+                             train, probe_acc)
+                if cin != cout:
+                    sc = _conv_bn(p, ns, f"{pre}/sc", y, kernel, stride,
+                                  "SAME", train, probe_acc)
+                else:
+                    sc = y
+                y = layers.relu(h + sc)
+                cin = cout
+        y = layers.global_avg_pool(y)
+        logits = layers.dense(y, p["fc/dense_w"], p["fc/dense_b"])
+    else:
+        raise ValueError(arch)
+    return logits, ns
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics / optimizer
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(
+        jnp.float32))
+
+
+def cosine_lr(step: jnp.ndarray, base_lr: float, total_steps: int):
+    """Paper §5: LR starts at base and decays with a cosine schedule."""
+    t = jnp.clip(step.astype(jnp.float32) / float(total_steps), 0.0, 1.0)
+    return base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+def make_train_step(arch: str, kernel: str, base_lr: float = 0.1,
+                    total_steps: int = 400, momentum: float = 0.9,
+                    weight_decay: float = 5e-4):
+    """Build the fused train-step the Rust coordinator drives.
+
+    AdderNet adaptive local learning rate (Chen et al. CVPR'20 Eq. 12-13):
+    for each adder conv weight, the update is scaled by sqrt(k)/||g||_2 so
+    that every adder layer takes same-magnitude steps despite the L1
+    kernel's unbounded gradient scale.
+    """
+
+    def train_step(params: Params, momenta: Params, x, y, step):
+        def loss_fn(train_p):
+            full = dict(params)
+            full.update(train_p)
+            logits, ns = forward(full, x, arch, kernel, train=True)
+            return cross_entropy(logits, y), (logits, ns)
+
+        train_p = {k: v for k, v in params.items() if is_trainable(k)}
+        (loss, (logits, ns)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(train_p)
+        lr = cosine_lr(step, base_lr, total_steps)
+        new_params = dict(params)
+        new_momenta = dict(momenta)
+        for k, g in grads.items():
+            if weight_decay and (k.endswith("/conv_w")
+                                 or k.endswith("/dense_w")):
+                g = g + weight_decay * params[k]
+            if is_adder_conv_w(k, kernel):
+                # adaptive local LR: eta * sqrt(k)/||g||2 * g
+                norm = jnp.linalg.norm(g) + 1e-12
+                g = g * (jnp.sqrt(float(g.size)) / norm)
+            m = momentum * momenta[k] + g
+            new_momenta[k] = m
+            new_params[k] = params[k] - lr * m
+        new_params.update(ns)  # BN running stats
+        acc = accuracy(logits, y)
+        return new_params, new_momenta, loss, acc
+
+    return train_step
+
+
+def make_eval_step(arch: str, kernel: str):
+    def eval_step(params: Params, x):
+        logits, _ = forward(params, x, arch, kernel, train=False)
+        return logits
+
+    return eval_step
+
+
+def make_probe(arch: str, kernel: str):
+    """Returns per-conv-layer input features (Fig. 3a/b distributions)
+    plus the logits as the final output (which also keeps every parameter
+    live so XLA does not prune the probe graph's inputs)."""
+
+    def probe(params: Params, x):
+        acc: List[Tuple[str, jnp.ndarray]] = []
+        logits, _ = forward(params, x, arch, kernel, train=False,
+                            probe_acc=acc)
+        return tuple(t.reshape(-1) for _, t in acc) + (logits,)
+
+    return probe
+
+
+def probe_layer_names(arch: str) -> List[str]:
+    """Conv layer names in probe output order (mirrors forward order)."""
+    if arch == "lenet5":
+        return ["conv1", "conv2"]
+    n = _resnet_stages(arch)
+    names = ["stem"]
+    cin = 16
+    for s, cout in enumerate((16, 32, 64)):
+        for b in range(n):
+            names += [f"s{s}b{b}/c1", f"s{s}b{b}/c2"]
+            if cin != cout:
+                names.append(f"s{s}b{b}/sc")
+            cin = cout
+    return names
+
+
+def init_momenta(params: Params) -> Params:
+    """Zero momentum buffers — only for SGD-trainable entries."""
+    return {k: jnp.zeros_like(v) for k, v in params.items()
+            if is_trainable(k)}

@@ -1,0 +1,98 @@
+"""AOT artifact tests: manifest consistency and HLO-text validity.
+
+These run against the artifacts/ directory if `make artifacts` has been
+run; a fast lowering smoke test runs regardless.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+HAVE_ART = os.path.exists(os.path.join(ART, "manifest.json"))
+
+
+def test_lowering_smoke():
+    """eval graph lowers to parseable HLO text without artifacts."""
+    p = model.init_params("lenet5")
+    x = jax.ShapeDtypeStruct((4, 32, 32, 1), jnp.float32)
+    lowered = jax.jit(model.make_eval_step("lenet5", "mult")).lower(
+        aot._abstract(p), x)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_train_step_lowering_has_tuple_output():
+    p = model.init_params("lenet5")
+    m = model.init_momenta(p)
+    x = jax.ShapeDtypeStruct((2, 32, 32, 1), jnp.float32)
+    y = jax.ShapeDtypeStruct((2,), jnp.int32)
+    s = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = model.make_train_step("lenet5", "mult")
+    lowered = jax.jit(fn).lower(aot._abstract(p), aot._abstract(m), x, y, s)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    # one output leaf per param + momentum + loss + acc
+    n_out = len(jax.tree_util.tree_leaves(lowered.out_info))
+    assert n_out == len(p) + len(m) + 2
+
+
+@pytest.mark.skipif(not HAVE_ART, reason="run `make artifacts` first")
+class TestArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_graph_files_exist(self, manifest):
+        for name, g in manifest["graphs"].items():
+            path = os.path.join(ART, g["file"])
+            assert os.path.exists(path), name
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), name
+
+    def test_init_bins_match_layout(self, manifest):
+        for arch, info in manifest["params"].items():
+            size = os.path.getsize(os.path.join(ART, info["init_file"]))
+            total = sum(e["size"] for e in info["layout"])
+            assert size == total * 4, arch
+            # layout is sorted by name and offsets are contiguous
+            names = [e["name"] for e in info["layout"]]
+            assert names == sorted(names)
+            off = 0
+            for e in info["layout"]:
+                assert e["offset"] == off
+                off += e["size"]
+
+    def test_layout_matches_model_init(self, manifest):
+        for arch, info in manifest["params"].items():
+            p = model.init_params(arch)
+            assert [e["name"] for e in info["layout"]] == sorted(p.keys())
+            for e in info["layout"]:
+                assert list(p[e["name"]].shape) == e["shape"]
+
+    def test_train_graph_io_orders(self, manifest):
+        for name, g in manifest["graphs"].items():
+            if g["kind"] != "train":
+                continue
+            n_in = len(g["input_order"])
+            assert n_in == g["n_params"] + g["n_momenta"] + 3
+            assert g["output_order"][-2:] == ["loss", "acc"]
+            # state feedback contract: output i is input i for all state
+            n_state = g["n_params"] + g["n_momenta"]
+            assert g["input_order"][:n_state] == g["output_order"][:n_state]
+
+    def test_trainable_subset(self, manifest):
+        for arch, info in manifest["params"].items():
+            tr = set(info["trainable"])
+            assert all(model.is_trainable(n) for n in tr)
+            all_names = {e["name"] for e in info["layout"]}
+            assert tr <= all_names

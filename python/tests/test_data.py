@@ -1,0 +1,89 @@
+"""Synthetic dataset generator: determinism + the cross-language goldens
+that the Rust mirror (rust/src/data) is pinned against."""
+
+import hashlib
+
+import numpy as np
+
+from compile import data
+
+# Golden pixel values (uint8) for seed=42 — the SAME constants appear in
+# rust/src/data/tests; regenerate with python -m compile.data if the
+# generator ever changes (it should not).
+GOLDENS = [
+    # (sample, y, x, pixel)
+    (0, 0, 0, 29),
+    (0, 13, 17, 30),
+    (3, 5, 5, 222),
+    (9, 31, 31, 35),
+    (7, 16, 2, 55),
+    (5, 10, 20, 27),
+]
+GOLDEN_SHA16 = "f82b57f89133d6d1"  # sha256 prefix of 12 images, seed=42
+
+
+def _to_u8(x):
+    return np.round((x + 1.0) * 127.5).astype(np.uint8)
+
+
+def test_golden_pixels():
+    x, _ = data.generate(12, seed=42)
+    u8 = _to_u8(x)
+    for s, yy, xx, want in GOLDENS:
+        assert int(u8[s, yy, xx, 0]) == want, (s, yy, xx)
+
+
+def test_golden_hash():
+    x, _ = data.generate(12, seed=42)
+    h = hashlib.sha256(_to_u8(x).tobytes()).hexdigest()[:16]
+    assert h == GOLDEN_SHA16
+
+
+def test_determinism_and_offset_consistency():
+    a, ya = data.generate(20, seed=5, offset=0)
+    b, yb = data.generate(8, seed=5, offset=12)
+    np.testing.assert_array_equal(a[12:], b)
+    np.testing.assert_array_equal(ya[12:], yb)
+
+
+def test_labels_cycle_classes():
+    _, y = data.generate(25, seed=0, offset=3)
+    np.testing.assert_array_equal(y, (np.arange(3, 28) % 10))
+
+
+def test_value_range_and_dtype():
+    x, y = data.generate(30, seed=1)
+    assert x.dtype == np.float32 and y.dtype == np.int32
+    assert x.shape == (30, 32, 32, 1)
+    assert x.min() >= -1.0 and x.max() <= 1.0
+
+
+def test_classes_are_distinguishable():
+    """Mean intra-class L2 distance should be smaller than inter-class —
+    otherwise the dataset carries no signal to learn."""
+    x, y = data.generate(200, seed=9)
+    flat = x.reshape(200, -1)
+    intra, inter = [], []
+    for c in range(10):
+        xc = flat[y == c]
+        mu = xc.mean(0)
+        intra.append(np.mean(np.linalg.norm(xc - mu, axis=1)))
+    mus = np.stack([flat[y == c].mean(0) for c in range(10)])
+    for i in range(10):
+        for j in range(i + 1, 10):
+            inter.append(np.linalg.norm(mus[i] - mus[j]))
+    assert np.mean(inter) > np.mean(intra) * 0.5
+
+
+def test_batches_iterator():
+    tot = 0
+    for x, y in data.batches(70, 32, seed=3):
+        assert x.shape[0] in (32, 6)
+        tot += x.shape[0]
+    assert tot == 70
+
+
+def test_seed_changes_data():
+    a, _ = data.generate(10, seed=1)
+    b, _ = data.generate(10, seed=2)
+    assert np.abs(a - b).max() > 0.1

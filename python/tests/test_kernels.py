@@ -1,0 +1,170 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes/dtypes/tile sizes of the Pallas kernels and
+asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adder_conv, mult_conv, quant, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32) * 3.0
+    return jnp.asarray(x, dtype=dtype)
+
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-4),
+       jnp.bfloat16: dict(rtol=0.05, atol=0.5)}
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70), k=st.integers(1, 48), n=st.integers(1, 24),
+    bm=st.sampled_from([8, 16, 32]), bk=st.sampled_from([8, 16]),
+    bn=st.sampled_from([8, 16]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+def test_l1_gemm_matches_ref(m, k, n, bm, bk, bn, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (m, k), dtype)
+    b = _rand(rng, (k, n), dtype)
+    got = adder_conv.l1_gemm(a, b, bm=bm, bk=bk, bn=bn)
+    want = ref.l1_gemm_ref(a.astype(jnp.float32), b.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **TOL[dtype])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70), k=st.integers(1, 48), n=st.integers(1, 24),
+    bm=st.sampled_from([8, 16, 32]), bk=st.sampled_from([8, 16]),
+    bn=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_pallas_matmul_matches_ref(m, k, n, bm, bk, bn, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (m, k), jnp.float32)
+    b = _rand(rng, (k, n), jnp.float32)
+    got = mult_conv.matmul(a, b, bm=bm, bk=bk, bn=bn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3), hw=st.integers(5, 14),
+    cin=st.integers(1, 4), cout=st.integers(1, 6),
+    ksz=st.sampled_from([1, 3, 5]), stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    seed=st.integers(0, 2**16),
+)
+def test_adder_conv2d_matches_ref(b, hw, cin, cout, ksz, stride, padding,
+                                  seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (b, hw, hw, cin), jnp.float32)
+    w = _rand(rng, (ksz, ksz, cin, cout), jnp.float32)
+    got = adder_conv.adder_conv2d(x, w, stride, padding, bm=16, bk=8, bn=8)
+    want = ref.adder_conv2d_ref(x, w, stride, padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3), hw=st.integers(5, 14),
+    cin=st.integers(1, 4), cout=st.integers(1, 6),
+    ksz=st.sampled_from([1, 3, 5]), stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_mult_conv2d_matches_lax_conv(b, hw, cin, cout, ksz, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (b, hw, hw, cin), jnp.float32)
+    w = _rand(rng, (ksz, ksz, cin, cout), jnp.float32)
+    got = mult_conv.mult_conv2d(x, w, stride, "SAME", bm=16, bk=8, bn=8)
+    want = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 5000), exp=st.integers(-8, 2),
+    bits=st.sampled_from([4, 5, 6, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_quantize_matches_ref(n, exp, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n,)).astype(np.float32) * 4.0)
+    got = quant.quantize(x, float(exp), bits, block=512)
+    want = ref.quantize_ref(x, jnp.float32(exp), bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantize_is_integer_grid():
+    x = jnp.linspace(-9.0, 9.0, 1001)
+    q = quant.quantize(x, -2.0, 8)
+    assert np.all(np.asarray(q) == np.round(np.asarray(q)))
+    qmax = 2 ** 7 - 1
+    assert np.all(np.abs(np.asarray(q)) <= qmax)
+
+
+def test_shared_scale_exponent_covers_range():
+    for bits in (4, 6, 8, 16):
+        max_abs = jnp.float32(7.3)
+        e = float(ref.shared_scale_exp(max_abs, bits))
+        qmax = 2 ** (bits - 1) - 1
+        assert qmax * 2.0 ** e >= 7.3
+        # one exponent lower must NOT cover
+        assert qmax * 2.0 ** (e - 1) < 7.3
+
+
+def test_shared_scale_factors_out_of_l1():
+    """-|a-b| is 1-homogeneous: the shared scale factors out exactly —
+    the paper's no-point-alignment argument (§3.1)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 8, 8, 2)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((3, 3, 2, 4)).astype(np.float32))
+    e = float(ref.shared_scale_exp(
+        jnp.maximum(jnp.max(jnp.abs(x)), jnp.max(jnp.abs(w))), 8))
+    xq = ref.quantize_ref(x, jnp.float32(e), 8)
+    wq = ref.quantize_ref(w, jnp.float32(e), 8)
+    # integer conv then dequant == conv of dequantized tensors
+    lhs = ref.adder_conv2d_ref(xq, wq) * 2.0 ** e
+    rhs = ref.adder_conv2d_ref(xq * 2.0 ** e, wq * 2.0 ** e)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_l1_gemm_padding_is_neutral():
+    """Padded K entries must not change the distance sum."""
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.standard_normal((5, 7)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((7, 3)).astype(np.float32))
+    got = adder_conv.l1_gemm(a, b, bm=8, bk=8, bn=8)  # pads K 7->8
+    want = ref.l1_gemm_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_im2col_feature_order():
+    """Patch features must be (kh, kw, C) row-major — the order the Rust
+    functional simulator assumes."""
+    x = jnp.arange(1 * 4 * 4 * 2, dtype=jnp.float32).reshape(1, 4, 4, 2)
+    p = ref.im2col(x, 2, 2, 1, "VALID")
+    # patch at (0,0): pixels (0,0),(0,1),(1,0),(1,1), channels innermost
+    expect = jnp.stack([x[0, 0, 0, 0], x[0, 0, 0, 1],
+                        x[0, 0, 1, 0], x[0, 0, 1, 1],
+                        x[0, 1, 0, 0], x[0, 1, 0, 1],
+                        x[0, 1, 1, 0], x[0, 1, 1, 1]])
+    np.testing.assert_array_equal(np.asarray(p[0, 0, 0]), np.asarray(expect))

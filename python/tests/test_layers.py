@@ -1,0 +1,166 @@
+"""L2 layer tests: AdderNet surrogate gradients, STE projections, BN."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers
+from compile.kernels import ref
+
+
+def _rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+
+class TestAdderGradients:
+    """The AdderNet training rules (Chen et al. CVPR'20):
+    dW gets the full-precision (F - W) gradient, dX gets HardTanh."""
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 40), k=st.integers(1, 20), n=st.integers(1, 10),
+           seed=st.integers(0, 2**16))
+    def test_weight_grad_full_precision(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a, b = _rand(rng, (m, k)), _rand(rng, (k, n))
+        g = _rand(rng, (m, n))
+        _, vjp = jax.vjp(layers.l1_gemm_train, a, b)
+        _, db = vjp(g)
+        # manual: dB[k,n] = sum_m g[m,n] * (a[m,k] - b[k,n])
+        want = np.einsum("mn,mk->kn", np.asarray(g), np.asarray(a)) \
+            - np.asarray(b) * np.asarray(g).sum(0)[None, :]
+        np.testing.assert_allclose(np.asarray(db), want, rtol=1e-4,
+                                   atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 40), k=st.integers(1, 20), n=st.integers(1, 10),
+           seed=st.integers(0, 2**16))
+    def test_input_grad_hardtanh(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a, b = _rand(rng, (m, k), 2.0), _rand(rng, (k, n), 2.0)
+        g = _rand(rng, (m, n))
+        _, vjp = jax.vjp(layers.l1_gemm_train, a, b)
+        da, _ = vjp(g)
+        want = np.einsum(
+            "mn,mkn->mk", np.asarray(g),
+            np.clip(np.asarray(b)[None, :, :] - np.asarray(a)[:, :, None],
+                    -1.0, 1.0))
+        np.testing.assert_allclose(np.asarray(da), want, rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_forward_value_matches_ref(self):
+        rng = np.random.default_rng(0)
+        a, b = _rand(rng, (33, 17)), _rand(rng, (17, 9))
+        np.testing.assert_allclose(
+            np.asarray(layers.l1_gemm_train(a, b)),
+            np.asarray(ref.l1_gemm_ref(a, b)), rtol=1e-5, atol=1e-4)
+
+    def test_chunked_ref_matches_dense(self):
+        rng = np.random.default_rng(1)
+        a, b = _rand(rng, (2050, 13)), _rand(rng, (13, 7))
+        np.testing.assert_allclose(
+            np.asarray(layers._l1_gemm_chunked(a, b, cm=512)),
+            np.asarray(ref.l1_gemm_ref(a, b)), rtol=1e-5, atol=1e-4)
+
+    def test_input_grad_is_bounded(self):
+        """HardTanh clip => |dX| <= sum_n |g| regardless of magnitudes."""
+        rng = np.random.default_rng(2)
+        a, b = _rand(rng, (10, 5), 100.0), _rand(rng, (5, 4), 100.0)
+        g = jnp.ones((10, 4))
+        _, vjp = jax.vjp(layers.l1_gemm_train, a, b)
+        da, _ = vjp(g)
+        assert np.all(np.abs(np.asarray(da)) <= 4.0 + 1e-6)
+
+    def test_conv_grads_flow(self):
+        rng = np.random.default_rng(3)
+        x = _rand(rng, (2, 8, 8, 3))
+        w = _rand(rng, (3, 3, 3, 4))
+
+        def loss(x, w):
+            return jnp.sum(layers.adder_conv2d(x, w) ** 2)
+
+        gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+        assert gx.shape == x.shape and gw.shape == w.shape
+        assert float(jnp.max(jnp.abs(gw))) > 0.0
+        assert float(jnp.max(jnp.abs(gx))) > 0.0
+
+
+class TestShiftXnor:
+    def test_shift_weights_are_pow2(self):
+        rng = np.random.default_rng(0)
+        w = _rand(rng, (3, 3, 2, 4))
+        ws = np.abs(np.asarray(layers.shift_quantize_weights(w)))
+        exps = np.log2(ws)
+        np.testing.assert_allclose(exps, np.round(exps), atol=1e-6)
+        assert ws.max() <= 1.0 and ws.min() >= 2.0 ** -8
+
+    def test_shift_ste_passes_gradient(self):
+        w = jnp.asarray(np.linspace(-2, 2, 24).astype(np.float32)
+                        ).reshape(1, 1, 4, 6)
+        g = jax.grad(lambda w: jnp.sum(layers.shift_quantize_weights(w)))(w)
+        assert float(jnp.max(jnp.abs(g))) > 0.0
+
+    def test_xnor_weights_are_binary_scaled(self):
+        rng = np.random.default_rng(1)
+        w = _rand(rng, (3, 3, 2, 4))
+        wb = np.asarray(layers.xnor_binarize_weights(w))
+        for co in range(4):
+            vals = np.unique(np.abs(wb[..., co]))
+            assert len(vals) == 1  # single alpha per filter
+            alpha = np.mean(np.abs(np.asarray(w)[..., co]))
+            np.testing.assert_allclose(vals[0], alpha, rtol=1e-5)
+
+
+class TestBatchNormPooling:
+    def test_bn_train_normalizes(self):
+        rng = np.random.default_rng(0)
+        x = _rand(rng, (8, 4, 4, 3), 5.0) + 7.0
+        g = jnp.ones((3,))
+        b = jnp.zeros((3,))
+        y, m, v = layers.batch_norm_train(x, g, b, jnp.zeros(3), jnp.ones(3))
+        np.testing.assert_allclose(np.asarray(jnp.mean(y, (0, 1, 2))),
+                                   np.zeros(3), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(jnp.std(y, (0, 1, 2))),
+                                   np.ones(3), atol=1e-3)
+
+    def test_bn_running_stats_update(self):
+        x = jnp.ones((4, 2, 2, 1)) * 10.0
+        _, m, v = layers.batch_norm_train(
+            x, jnp.ones(1), jnp.zeros(1), jnp.zeros(1), jnp.ones(1),
+            momentum=0.9)
+        np.testing.assert_allclose(float(m[0]), 1.0, atol=1e-6)  # 0.9*0+0.1*10
+        np.testing.assert_allclose(float(v[0]), 0.9, atol=1e-6)  # 0.9*1+0.1*0
+
+    def test_bn_eval_uses_running_stats(self):
+        x = jnp.ones((2, 2, 2, 1)) * 3.0
+        y = layers.batch_norm_eval(x, jnp.ones(1), jnp.zeros(1),
+                                   jnp.asarray([1.0]), jnp.asarray([4.0]))
+        np.testing.assert_allclose(np.asarray(y), (3 - 1) / np.sqrt(4 + 1e-5),
+                                   rtol=1e-4)
+
+    def test_avg_pool(self):
+        x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+        y = layers.avg_pool(x, 2)
+        np.testing.assert_allclose(
+            np.asarray(y[0, :, :, 0]),
+            np.array([[2.5, 4.5], [10.5, 12.5]]))
+
+    def test_max_pool(self):
+        x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+        y = layers.max_pool(x, 2)
+        np.testing.assert_allclose(
+            np.asarray(y[0, :, :, 0]), np.array([[5.0, 7.0], [13.0, 15.0]]))
+
+
+def test_impl_toggle_equivalence():
+    """pallas vs ref forward impl must agree (the aot --impl contract)."""
+    rng = np.random.default_rng(5)
+    a, b = _rand(rng, (50, 30)), _rand(rng, (30, 12))
+    layers.set_impl("pallas")
+    y1 = layers.l1_gemm_train(a, b)
+    layers.set_impl("ref")
+    y2 = layers.l1_gemm_train(a, b)
+    layers.set_impl("pallas")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-4)

@@ -1,0 +1,128 @@
+"""L2 model tests: shapes, training dynamics, optimizer rules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, layers, model
+
+layers.set_impl("ref")  # fast path for model-level tests; equivalence is
+# pinned by test_layers.test_impl_toggle_equivalence
+
+
+@pytest.fixture(scope="module")
+def batch():
+    x, y = data.generate(16, seed=7)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("arch", model.ARCHS)
+@pytest.mark.parametrize("kernel", model.KERNELS)
+def test_forward_shapes(arch, kernel, batch):
+    if arch == "resnet20" and kernel != "adder":
+        pytest.skip("resnet20 covered for adder only (runtime)")
+    x, _ = batch
+    p = model.init_params(arch)
+    logits, ns = model.forward(p, x, arch, kernel, train=True)
+    assert logits.shape == (16, 10)
+    assert all(k.endswith(("/bn_mean", "/bn_var")) for k in ns)
+    logits_e, ns_e = model.forward(p, x, arch, kernel, train=False)
+    assert logits_e.shape == (16, 10) and not ns_e
+
+
+@pytest.mark.parametrize("kernel", ["adder", "mult"])
+def test_lenet_loss_decreases(kernel, batch):
+    x, y = batch
+    p = model.init_params("lenet5")
+    m = model.init_momenta(p)
+    step_fn = jax.jit(model.make_train_step("lenet5", kernel, base_lr=0.05,
+                                            total_steps=30))
+    losses = []
+    for i in range(12):
+        p, m, loss, acc = step_fn(p, m, x, y, jnp.int32(i))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_adder_resnet_loss_decreases(batch):
+    x, y = batch
+    p = model.init_params("resnet8")
+    m = model.init_momenta(p)
+    step_fn = jax.jit(model.make_train_step("resnet8", "adder",
+                                            base_lr=0.05, total_steps=30))
+    l0 = lN = None
+    for i in range(8):
+        p, m, loss, _ = step_fn(p, m, x, y, jnp.int32(i))
+        l0 = l0 if l0 is not None else float(loss)
+        lN = float(loss)
+    assert lN < l0
+
+
+def test_bn_state_updates_during_training(batch):
+    x, y = batch
+    p = model.init_params("lenet5")
+    m = model.init_momenta(p)
+    step_fn = jax.jit(model.make_train_step("lenet5", "adder"))
+    p2, _, _, _ = step_fn(p, m, x, y, jnp.int32(0))
+    assert float(jnp.max(jnp.abs(p2["conv1/bn_mean"]
+                                 - p["conv1/bn_mean"]))) > 0.0
+
+
+def test_momenta_only_trainable():
+    p = model.init_params("lenet5")
+    m = model.init_momenta(p)
+    assert all(model.is_trainable(k) for k in m)
+    assert len(m) == sum(model.is_trainable(k) for k in p)
+
+
+def test_cosine_lr_schedule():
+    lr0 = float(model.cosine_lr(jnp.int32(0), 0.1, 100))
+    lr_half = float(model.cosine_lr(jnp.int32(50), 0.1, 100))
+    lr_end = float(model.cosine_lr(jnp.int32(100), 0.1, 100))
+    assert abs(lr0 - 0.1) < 1e-6
+    assert abs(lr_half - 0.05) < 1e-6
+    assert lr_end < 1e-6
+
+
+def test_adaptive_lr_scales_adder_updates(batch):
+    """Adder conv weights must receive the sqrt(k)/||g|| scaled step:
+    after one step from zero momentum, ||delta W|| == lr * sqrt(k) (+wd)."""
+    x, y = batch
+    p = model.init_params("lenet5")
+    m = model.init_momenta(p)
+    lr, total = 0.01, 1000
+    step_fn = jax.jit(model.make_train_step(
+        "lenet5", "adder", base_lr=lr, total_steps=total, momentum=0.0,
+        weight_decay=0.0))
+    p2, _, _, _ = step_fn(p, m, x, y, jnp.int32(0))
+    dw = np.asarray(p2["conv1/conv_w"] - p["conv1/conv_w"])
+    k = dw.size
+    np.testing.assert_allclose(np.linalg.norm(dw), lr * np.sqrt(k),
+                               rtol=1e-3)
+
+
+def test_probe_layer_names_match_probe_outputs(batch):
+    x, _ = batch
+    for arch in ("lenet5", "resnet8"):
+        p = model.init_params(arch)
+        probe = model.make_probe(arch, "adder")
+        feats = probe(p, x)
+        # one flattened feature tensor per conv layer + the logits
+        assert len(feats) == len(model.probe_layer_names(arch)) + 1
+        assert all(f.ndim == 1 for f in feats[:-1])
+        assert feats[-1].shape == (x.shape[0], 10)
+
+
+def test_cross_entropy_known_value():
+    logits = jnp.asarray([[10.0, 0.0, 0.0]])
+    y = jnp.asarray([0])
+    assert float(model.cross_entropy(logits, y)) < 1e-3
+    y_wrong = jnp.asarray([1])
+    assert float(model.cross_entropy(logits, y_wrong)) > 5.0
+
+
+def test_accuracy_metric():
+    logits = jnp.asarray([[1.0, 0.0], [0.0, 1.0], [1.0, 0.0], [1.0, 0.0]])
+    y = jnp.asarray([0, 1, 1, 0])
+    assert abs(float(model.accuracy(logits, y)) - 0.75) < 1e-6

@@ -1,0 +1,37 @@
+//! Shared micro-bench harness (criterion is not in the offline vendored
+//! set): median-of-N wall-clock timing with warm-up.
+
+use std::time::Instant;
+
+/// Time `f` `iters` times after `warmup` runs; returns (median_s, mean_s).
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    (median, mean)
+}
+
+/// Pretty-print one benchmark line.
+pub fn report(name: &str, median_s: f64, work_items: f64, unit: &str) {
+    let rate = work_items / median_s;
+    let (val, scale) = if rate > 1e9 {
+        (rate / 1e9, "G")
+    } else if rate > 1e6 {
+        (rate / 1e6, "M")
+    } else if rate > 1e3 {
+        (rate / 1e3, "K")
+    } else {
+        (rate, "")
+    };
+    println!("  {name:44} {:>10.3} ms   {val:>8.2} {scale}{unit}/s",
+             median_s * 1e3);
+}

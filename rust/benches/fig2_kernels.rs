@@ -1,0 +1,34 @@
+//! Bench E1/E2 (Fig. 2): kernel comparison.
+//!
+//! * prints the Fig. 2(a/b) accuracy table (measured rows filled by
+//!   `repro train` / train_e2e) and the Fig. 2(c) energy table;
+//! * times the functional adder vs mult convolution on the LeNet-5
+//!   conv2 workload (the software analogue of the kernel-cost claim).
+
+mod common;
+
+use addernet::report::{kernels, Results};
+use addernet::sim::functional::{conv2d, ConvW, SimKernel, Tensor};
+use addernet::util::XorShift64;
+
+fn main() {
+    println!("=== bench fig2_kernels (E1/E2) ===");
+    kernels::fig2(&Results::load("artifacts")).print();
+    kernels::fig2c().print();
+
+    // functional-kernel throughput on the conv2 workload (B=32)
+    let mut rng = XorShift64::new(1);
+    let x = Tensor::new((32, 14, 14, 6),
+                        (0..32 * 14 * 14 * 6).map(|_| rng.next_f32_sym(1.0)).collect());
+    let wdat: Vec<f32> = (0..5 * 5 * 6 * 16).map(|_| rng.next_f32_sym(1.0)).collect();
+    let w = ConvW { data: &wdat, kh: 5, kw: 5, cin: 6, cout: 16 };
+    let macs = 32.0 * 10.0 * 10.0 * 5.0 * 5.0 * 6.0 * 16.0;
+    println!("functional conv2 (B=32, 5x5, 6->16):");
+    for (name, kind) in [("adder", SimKernel::Adder), ("mult", SimKernel::Mult)] {
+        let (med, _) = common::time_it(2, 10, || {
+            let y = conv2d(&x, &w, 1, addernet::nn::Padding::Valid, kind);
+            std::hint::black_box(y);
+        });
+        common::report(name, med, macs, "MAC");
+    }
+}

@@ -1,0 +1,52 @@
+//! Bench E4/E12/E13 (Fig. 3d, S6, S7): shared-scale quantization sweep —
+//! prints the accuracy tables and times the int8 functional datapath
+//! against fp32 (the software proxy for the hardware energy claim).
+//!
+//! Needs artifacts (+ trained weights for meaningful accuracy).
+
+mod common;
+
+use addernet::coordinator::Manifest;
+use addernet::quant::Mode;
+use addernet::report::quantrep;
+use addernet::sim::functional::{Arch, ExecMode, QuantCfg, Runner, SimKernel, Tensor};
+use addernet::data;
+
+fn main() {
+    println!("=== bench fig3_quant (E4/E12/E13) ===");
+    let art = std::path::Path::new("artifacts");
+    if Manifest::load(art).is_err() {
+        println!("no artifacts/ — run `make artifacts` first; skipping");
+        return;
+    }
+    match quantrep::fig3d(art, "lenet5", 192) {
+        Ok(t) => t.print(),
+        Err(e) => println!("fig3d skipped: {e:#}"),
+    }
+    match quantrep::s7(art, "lenet5", 192) {
+        Ok(t) => t.print(),
+        Err(e) => println!("s7 skipped: {e:#}"),
+    }
+
+    // datapath timing: fp32 vs int8 functional forward
+    let manifest = Manifest::load(art).unwrap();
+    let (params, _) = quantrep::load_params(&manifest, "lenet5", "adder").unwrap();
+    let (calib, _) = quantrep::calibrate(&params, Arch::Lenet5, SimKernel::Adder, 64);
+    let b = data::eval_set(64, 5);
+    let x = Tensor::new((64, 32, 32, 1), b.images);
+    println!("functional LeNet-5 forward (B=64):");
+    for (name, mode) in [
+        ("fp32", ExecMode::F32),
+        ("int8 shared", ExecMode::Quant(QuantCfg { bits: 8, mode: Mode::SharedScale })),
+        ("int16 shared", ExecMode::Quant(QuantCfg { bits: 16, mode: Mode::SharedScale })),
+    ] {
+        let (med, _) = common::time_it(1, 5, || {
+            let mut r = Runner {
+                params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+                mode, calib: Some(&calib), observe: None,
+            };
+            std::hint::black_box(r.forward(&x));
+        });
+        common::report(name, med, 64.0, "img");
+    }
+}

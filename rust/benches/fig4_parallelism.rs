@@ -1,0 +1,42 @@
+//! Bench E6/E7 (Fig. 4): parallelism sweep of the synthesized accelerator
+//! components + savings, for 16-bit and 8-bit datapaths, plus the Eq. 2/3
+//! closed-form vs precise-widths ablation (E16).
+
+mod common;
+
+use addernet::hw::array::PeArray;
+use addernet::hw::KernelKind;
+use addernet::report::fpga;
+use addernet::sim::accelerator::{self, AccelConfig};
+
+fn main() {
+    println!("=== bench fig4_parallelism (E6/E7/E16) ===");
+    for dw in [16u32, 8] {
+        fpga::fig4_components(dw, KernelKind::Mult).print();
+        fpga::fig4_components(dw, KernelKind::Adder2A).print();
+        fpga::fig4_savings(dw).print();
+    }
+    fpga::eq23().print();
+
+    // ablation: paper closed-form vs precise per-level tree widths
+    println!("Eq.2/3 ablation — closed form vs precise widths (saving delta):");
+    for (pin, dw) in [(64u64, 16u32), (64, 8), (128, 16)] {
+        let a = PeArray::new(pin, 1, dw, KernelKind::Adder2A);
+        let c = PeArray::new(pin, 1, dw, KernelKind::Mult);
+        let paper = 1.0 - a.luts_paper() as f64 / c.luts_paper() as f64;
+        let precise = 1.0 - a.luts() as f64 / c.luts() as f64;
+        println!("  Pin={pin:4} DW={dw:2}: paper {:.1}%  precise {:.1}%  delta {:+.1}pp",
+                 paper * 100.0, precise * 100.0, (precise - paper) * 100.0);
+    }
+
+    // model-evaluation throughput (the sweep itself is the workload)
+    let (med, _) = common::time_it(3, 20, || {
+        for p in [128u64, 512, 2048] {
+            for k in [KernelKind::Adder2A, KernelKind::Mult] {
+                std::hint::black_box(
+                    accelerator::resources(&AccelConfig::zcu104(p, 16, k)));
+            }
+        }
+    });
+    common::report("resource model (6 configs)", med, 6.0, "cfg");
+}

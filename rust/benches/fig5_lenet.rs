@@ -1,0 +1,33 @@
+//! Bench E9 (Fig. 5): fully on-chip LeNet-5 accelerator — per-layer LUT
+//! and energy savings at 16 and 8 bit, plus S1 scheme ablation.
+
+mod common;
+
+use addernet::hw::KernelKind;
+use addernet::report::{fpga, kernels};
+use addernet::sim::onchip;
+
+fn main() {
+    println!("=== bench fig5_lenet (E9/E16) ===");
+    for t in fpga::fig5() {
+        t.print();
+    }
+    kernels::s1().print();
+
+    // ablation: deploying 1C1A instead of 2A in the Fig. 5 design
+    println!("S1 ablation — Fig. 5 design with 1C1A vs 2A kernels (16-bit):");
+    let a2 = onchip::design(KernelKind::Adder2A, 16);
+    let c1a = onchip::design(KernelKind::Adder1C1A, 16);
+    println!("  2A  : {} LUTs, {:.1} nJ/inference", a2.total_luts(),
+             a2.total_energy_pj() / 1e3);
+    println!("  1C1A: {} LUTs, {:.1} nJ/inference  ({:.1}% fewer LUTs, \
+              longer critical path)",
+             c1a.total_luts(), c1a.total_energy_pj() / 1e3,
+             (1.0 - c1a.total_luts() as f64 / a2.total_luts() as f64) * 100.0);
+
+    let (med, _) = common::time_it(3, 20, || {
+        std::hint::black_box(onchip::savings(16));
+        std::hint::black_box(onchip::savings(8));
+    });
+    common::report("onchip design model (2 widths)", med, 2.0, "design");
+}

@@ -1,0 +1,73 @@
+//! §Perf hot-path microbenchmarks (the before/after log lives in
+//! EXPERIMENTS.md §Perf):
+//!
+//!   L3a: functional adder/mult conv (f32 + int) — the quantized-
+//!        inference datapath;
+//!   L3b: dataset generator (streams every training batch);
+//!   L3c: PJRT execute round-trip (train step + eval) when artifacts
+//!        are present — the training/serving hot loop.
+
+mod common;
+
+use addernet::coordinator::{Manifest, Trainer};
+use addernet::data;
+use addernet::quant::Mode;
+use addernet::runtime::Runtime;
+use addernet::sim::functional::{conv2d, conv2d_quant, ConvW, QuantCfg, SimKernel, Tensor};
+use addernet::quant::LayerCalib;
+use addernet::util::XorShift64;
+
+fn main() {
+    println!("=== bench hotpath (§Perf) ===");
+    let mut rng = XorShift64::new(1);
+
+    // L3a: resnet-shape conv (the heaviest functional-sim layer)
+    let x = Tensor::new((8, 32, 32, 16),
+                        (0..8 * 32 * 32 * 16).map(|_| rng.next_f32_sym(1.0)).collect());
+    let wdat: Vec<f32> = (0..3 * 3 * 16 * 16).map(|_| rng.next_f32_sym(1.0)).collect();
+    let w = ConvW { data: &wdat, kh: 3, kw: 3, cin: 16, cout: 16 };
+    let macs = 8.0 * 32.0 * 32.0 * 9.0 * 16.0 * 16.0;
+    println!("functional conv 3x3 16->16 (B=8, 32x32):");
+    for (name, kind) in [("f32 adder", SimKernel::Adder), ("f32 mult", SimKernel::Mult)] {
+        let (med, _) = common::time_it(2, 8, || {
+            std::hint::black_box(conv2d(&x, &w, 1, addernet::nn::Padding::Same, kind));
+        });
+        common::report(name, med, macs, "MAC");
+    }
+    let calib = LayerCalib { feat_max_abs: 1.0, weight_max_abs: 1.0 };
+    for (name, bits) in [("int8 adder", 8u32), ("int16 adder", 16)] {
+        let cfg = QuantCfg { bits, mode: Mode::SharedScale };
+        let (med, _) = common::time_it(2, 8, || {
+            std::hint::black_box(conv2d_quant(&x, &w, 1, addernet::nn::Padding::Same,
+                                              SimKernel::Adder, cfg, &calib));
+        });
+        common::report(name, med, macs, "MAC");
+    }
+
+    // L3b: dataset generator
+    let (med, _) = common::time_it(2, 10, || {
+        std::hint::black_box(data::generate(256, 7, 0));
+    });
+    common::report("dataset generator (256 imgs)", med, 256.0, "img");
+
+    // L3c: PJRT round-trips
+    let art = std::path::Path::new("artifacts");
+    if let Ok(manifest) = Manifest::load(art) {
+        let mut rt = Runtime::new(art).unwrap();
+        let mut trainer = Trainer::new(&manifest, &mut rt, "lenet5", "adder").unwrap();
+        let mut stream = data::BatchStream::new(9, trainer.batch_size);
+        let batch = stream.next_batch();
+        let (med, _) = common::time_it(2, 10, || {
+            trainer.train_step(&rt, &batch).unwrap();
+        });
+        common::report("PJRT train step (lenet5 adder, B=32)", med, 32.0, "img");
+
+        let ev = data::eval_set(32, 5);
+        let (med, _) = common::time_it(2, 10, || {
+            std::hint::black_box(trainer.evaluate(&rt, &ev.images, &ev.labels).unwrap());
+        });
+        common::report("PJRT eval (lenet5 adder, B=32)", med, 32.0, "img");
+    } else {
+        println!("  (no artifacts/ — PJRT round-trip benches skipped)");
+    }
+}

@@ -1,0 +1,33 @@
+//! Bench E8 (§4 on-board): ResNet-18 on the ZCU104 accelerator model —
+//! fmax / GOPs / power for CNN vs AdderNet, plus a parallelism-scaling
+//! series and simulator throughput.
+
+mod common;
+
+use addernet::hw::KernelKind;
+use addernet::nn;
+use addernet::report::fpga;
+use addernet::sim::accelerator::{self, AccelConfig};
+
+fn main() {
+    println!("=== bench onboard_resnet18 (E8) ===");
+    fpga::onboard().print();
+
+    // scaling series: throughput & power vs parallelism
+    let net = nn::resnet18();
+    println!("scaling (16-bit AdderNet, ResNet-18):");
+    println!("  {:>6} {:>10} {:>10} {:>10} {:>8}", "P", "conv GOPs", "total GOPs",
+             "lat ms", "power W");
+    for p in [256u64, 512, 1024, 2048] {
+        let r = accelerator::run(&AccelConfig::zcu104(p, 16, KernelKind::Adder2A), &net);
+        println!("  {:>6} {:>10.0} {:>10.0} {:>10.2} {:>8.2}",
+                 p, r.conv_gops(), r.total_gops(), r.latency_ms(),
+                 r.power.total_w());
+    }
+
+    let cfg = AccelConfig::zcu104(1024, 16, KernelKind::Adder2A);
+    let (med, _) = common::time_it(3, 20, || {
+        std::hint::black_box(accelerator::run(&cfg, &net));
+    });
+    common::report("cycle-level resnet18 simulation", med, 1.0, "run");
+}

@@ -1,0 +1,11 @@
+//! Bench E10/E11 (S4/S5): kernel energy and area tables, model vs the
+//! paper's anchor cells, across all five kernel families.
+
+use addernet::report::kernels;
+
+fn main() {
+    println!("=== bench s4_s5_tables (E10/E11) ===");
+    kernels::s4().print();
+    kernels::s5().print();
+    kernels::fig2c().print();
+}

@@ -1,0 +1,27 @@
+//! Bench E14 (S8/Fig. 13): FPGA accelerator comparison table — cited
+//! literature rows plus this repro's measured row from the simulator,
+//! for several candidate networks.
+
+use addernet::hw::KernelKind;
+use addernet::nn;
+use addernet::report::fpga;
+use addernet::sim::accelerator::{self, AccelConfig};
+use addernet::util::table::{f, Table};
+
+fn main() {
+    println!("=== bench s8_comparison (E14) ===");
+    fpga::s8().print();
+
+    // our simulator's rows for the other S8 workloads, for context
+    let mut t = Table::new(
+        "this repro's model across S8 workloads (AdderNet P=1024, 16-bit)",
+        &["model", "GOP", "latency ms", "GOPS", "power W"],
+    );
+    for name in ["alexnet", "vgg16", "resnet18", "resnet50"] {
+        let net = nn::by_name(name).unwrap();
+        let r = accelerator::run(&AccelConfig::zcu104(1024, 16, KernelKind::Adder2A), &net);
+        t.row(&[net.name.clone(), f(net.gops(), 2), f(r.latency_ms(), 2),
+                f(r.total_gops(), 1), f(r.power.total_w(), 2)]);
+    }
+    t.print();
+}

@@ -1,0 +1,273 @@
+//! Manifest loader: the single source of truth the AOT pipeline
+//! (python/compile/aot.py) writes about every exported graph — input and
+//! output orders, parameter layouts, training hyper-parameters.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::sim::functional::Params;
+use crate::util::json::Json;
+
+/// One tensor slot in the flat init/trained parameter file.
+#[derive(Debug, Clone)]
+pub struct ParamSlot {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in f32 elements.
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Parameter layout for one architecture.
+#[derive(Debug, Clone)]
+pub struct ParamLayout {
+    pub init_file: String,
+    pub slots: Vec<ParamSlot>,
+    pub trainable: Vec<String>,
+}
+
+impl ParamLayout {
+    pub fn total_elems(&self) -> usize {
+        self.slots.iter().map(|s| s.size).sum()
+    }
+
+    pub fn slot(&self, name: &str) -> Option<&ParamSlot> {
+        self.slots.iter().find(|s| s.name == name)
+    }
+}
+
+/// One exported graph.
+#[derive(Debug, Clone)]
+pub struct GraphInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub arch: String,
+    pub kernel: String,
+    pub batch: usize,
+    pub total_steps: usize,
+    pub base_lr: f64,
+    pub n_params: usize,
+    pub n_momenta: usize,
+    pub input_order: Vec<String>,
+    pub output_order: Vec<String>,
+    /// Output (shape, dtype) pairs.
+    pub outputs: Vec<(Vec<usize>, String)>,
+    /// Probe graphs: conv layer names in output order.
+    pub layers: Vec<String>,
+}
+
+/// The whole artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub graphs: BTreeMap<String, GraphInfo>,
+    pub params: BTreeMap<String, ParamLayout>,
+    pub impl_name: String,
+}
+
+fn str_list(j: Option<&Json>) -> Vec<String> {
+    j.and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+        .unwrap_or_default()
+}
+
+fn usize_list(j: &Json) -> Vec<usize> {
+    j.as_arr().map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut graphs = BTreeMap::new();
+        for (name, g) in j.get("graphs").and_then(|x| x.as_obj())
+            .context("manifest missing graphs")? {
+            let outputs = g.get("outputs").and_then(|x| x.as_arr()).map(|arr| {
+                arr.iter()
+                    .map(|o| {
+                        let shape = o.get("shape").map(usize_list).unwrap_or_default();
+                        let dt = o.get("dtype").and_then(|d| d.as_str())
+                            .unwrap_or("f32").to_string();
+                        (shape, dt)
+                    })
+                    .collect()
+            }).unwrap_or_default();
+            graphs.insert(name.clone(), GraphInfo {
+                name: name.clone(),
+                file: g.get("file").and_then(|x| x.as_str()).unwrap_or("").into(),
+                kind: g.get("kind").and_then(|x| x.as_str()).unwrap_or("").into(),
+                arch: g.get("arch").and_then(|x| x.as_str()).unwrap_or("").into(),
+                kernel: g.get("kernel").and_then(|x| x.as_str()).unwrap_or("").into(),
+                batch: g.get("batch").and_then(|x| x.as_usize()).unwrap_or(0),
+                total_steps: g.get("total_steps").and_then(|x| x.as_usize()).unwrap_or(0),
+                base_lr: g.get("base_lr").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                n_params: g.get("n_params").and_then(|x| x.as_usize()).unwrap_or(0),
+                n_momenta: g.get("n_momenta").and_then(|x| x.as_usize()).unwrap_or(0),
+                input_order: str_list(g.get("input_order")),
+                output_order: str_list(g.get("output_order")),
+                outputs,
+                layers: str_list(g.get("layers")),
+            });
+        }
+
+        let mut params = BTreeMap::new();
+        for (arch, p) in j.get("params").and_then(|x| x.as_obj())
+            .context("manifest missing params")? {
+            let slots = p.get("layout").and_then(|x| x.as_arr()).map(|arr| {
+                arr.iter()
+                    .map(|s| ParamSlot {
+                        name: s.get("name").and_then(|x| x.as_str()).unwrap_or("").into(),
+                        shape: s.get("shape").map(usize_list).unwrap_or_default(),
+                        offset: s.get("offset").and_then(|x| x.as_usize()).unwrap_or(0),
+                        size: s.get("size").and_then(|x| x.as_usize()).unwrap_or(0),
+                    })
+                    .collect::<Vec<_>>()
+            }).unwrap_or_default();
+            params.insert(arch.clone(), ParamLayout {
+                init_file: p.get("init_file").and_then(|x| x.as_str()).unwrap_or("").into(),
+                slots,
+                trainable: str_list(p.get("trainable")),
+            });
+        }
+
+        Ok(Manifest {
+            dir,
+            graphs,
+            params,
+            impl_name: j.get("impl").and_then(|x| x.as_str()).unwrap_or("?").into(),
+        })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphInfo> {
+        self.graphs.get(name)
+            .ok_or_else(|| anyhow::anyhow!("graph {name} not in manifest"))
+    }
+
+    pub fn layout(&self, arch: &str) -> Result<&ParamLayout> {
+        self.params.get(arch)
+            .ok_or_else(|| anyhow::anyhow!("arch {arch} not in manifest"))
+    }
+
+    /// Read a flat f32 parameter file into per-slot buffers.
+    pub fn read_param_file(&self, arch: &str, file: &str) -> Result<Vec<(String, Vec<usize>, Vec<f32>)>> {
+        let layout = self.layout(arch)?;
+        let bytes = fs::read(self.dir.join(file))
+            .with_context(|| format!("reading {file}"))?;
+        anyhow::ensure!(bytes.len() == layout.total_elems() * 4,
+                        "param file {} has {} bytes, expected {}",
+                        file, bytes.len(), layout.total_elems() * 4);
+        let mut out = Vec::with_capacity(layout.slots.len());
+        for s in &layout.slots {
+            let start = s.offset * 4;
+            let data: Vec<f32> = bytes[start..start + s.size * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            out.push((s.name.clone(), s.shape.clone(), data));
+        }
+        Ok(out)
+    }
+
+    /// Load a parameter file as the functional simulator's `Params` map.
+    pub fn read_params(&self, arch: &str, file: &str) -> Result<Params> {
+        Ok(self.read_param_file(arch, file)?
+            .into_iter()
+            .map(|(n, s, d)| (n, (s, d)))
+            .collect())
+    }
+
+    /// Write per-slot buffers back to a flat f32 file (trained weights).
+    pub fn write_param_file(&self, arch: &str, file: &str,
+                            bufs: &[(String, Vec<f32>)]) -> Result<()> {
+        let layout = self.layout(arch)?;
+        let mut flat = vec![0f32; layout.total_elems()];
+        for (name, data) in bufs {
+            let slot = layout.slot(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown slot {name}"))?;
+            anyhow::ensure!(data.len() == slot.size, "slot {name} size mismatch");
+            flat[slot.offset..slot.offset + slot.size].copy_from_slice(data);
+        }
+        let bytes: Vec<u8> = flat.iter().flat_map(|f| f.to_le_bytes()).collect();
+        fs::write(self.dir.join(file), bytes)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        art_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(art_dir()).unwrap();
+        assert!(m.graphs.contains_key("lenet5_adder_train"));
+        assert!(m.graphs.contains_key("l1gemm_demo"));
+        let g = m.graph("lenet5_adder_train").unwrap();
+        assert_eq!(g.kind, "train");
+        assert_eq!(g.input_order.len(), g.n_params + g.n_momenta + 3);
+        assert_eq!(g.output_order.last().unwrap(), "acc");
+    }
+
+    #[test]
+    fn param_layout_contiguous_and_loadable() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(art_dir()).unwrap();
+        let layout = m.layout("lenet5").unwrap();
+        let mut off = 0;
+        for s in &layout.slots {
+            assert_eq!(s.offset, off, "{}", s.name);
+            assert_eq!(s.size, s.shape.iter().product::<usize>());
+            off += s.size;
+        }
+        let init = m.read_params("lenet5", &layout.init_file.clone()).unwrap();
+        assert!(init.contains_key("conv1/conv_w"));
+        let (shape, data) = &init["conv1/conv_w"];
+        assert_eq!(shape, &vec![5, 5, 1, 6]);
+        assert_eq!(data.len(), 150);
+        // BN gammas must be exactly 1.0 at init
+        assert!(init["conv1/bn_gamma"].1.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn param_file_roundtrip() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(art_dir()).unwrap();
+        let layout = m.layout("lenet5").unwrap().clone();
+        let init = m.read_param_file("lenet5", &layout.init_file).unwrap();
+        let bufs: Vec<(String, Vec<f32>)> =
+            init.iter().map(|(n, _, d)| (n.clone(), d.clone())).collect();
+        m.write_param_file("lenet5", "test_roundtrip.bin", &bufs).unwrap();
+        let back = m.read_param_file("lenet5", "test_roundtrip.bin").unwrap();
+        for ((n1, _, d1), (n2, _, d2)) in init.iter().zip(&back) {
+            assert_eq!(n1, n2);
+            assert_eq!(d1, d2);
+        }
+        let _ = std::fs::remove_file(art_dir().join("test_roundtrip.bin"));
+    }
+}

@@ -1,0 +1,113 @@
+//! Latency/throughput metrics for the serving path.
+
+use std::time::Duration;
+
+/// Online latency histogram with fixed log-spaced buckets (µs scale).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i counts latencies in [2^i, 2^(i+1)) microseconds.
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 32], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum_us as f64 / self.count as f64 }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate quantile from the bucket upper edges.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Serving-side aggregate counters.
+#[derive(Debug, Clone, Default)]
+pub struct ServerMetrics {
+    pub requests: u64,
+    pub images: u64,
+    pub batches: u64,
+    pub queue_lat: LatencyHistogram,
+    pub exec_lat: LatencyHistogram,
+    pub e2e_lat: LatencyHistogram,
+}
+
+impl ServerMetrics {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 { 0.0 } else { self.images as f64 / self.batches as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records() {
+        let mut h = LatencyHistogram::new();
+        for us in [10u64, 100, 1000, 1000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean_us() > 1000.0 && h.mean_us() < 4000.0);
+        assert!(h.quantile_us(0.5) >= 512 && h.quantile_us(0.5) <= 2048);
+        assert_eq!(h.max_us(), 10_000);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn quantile_monotone() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.9));
+        assert!(h.quantile_us(0.9) <= h.quantile_us(0.999));
+    }
+}

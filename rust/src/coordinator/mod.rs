@@ -1,0 +1,12 @@
+//! Layer-3 coordinator: manifest loading, the training driver that owns
+//! all model state, the serving router + dynamic batcher, and metrics.
+
+pub mod manifest;
+pub mod metrics;
+pub mod server;
+pub mod trainer;
+
+pub use manifest::Manifest;
+pub use metrics::{LatencyHistogram, ServerMetrics};
+pub use server::{ServerHandle, VariantCfg};
+pub use trainer::Trainer;

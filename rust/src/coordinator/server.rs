@@ -1,0 +1,186 @@
+//! Inference serving: request router + dynamic batcher.
+//!
+//! Thread architecture (the vendored crate set has no async runtime, and
+//! PJRT handles are not `Send`, so each model variant gets a dedicated
+//! OS worker thread that *constructs its own* `Runtime`):
+//!
+//! ```text
+//!   clients -> ServerHandle.submit(variant, image)
+//!           -> router (HashMap<variant, mpsc::Sender>)
+//!           -> worker thread [dynamic batcher -> PJRT eval graph]
+//!           -> per-request response channel
+//! ```
+//!
+//! The dynamic batcher collects up to the graph's fixed batch size,
+//! waiting at most `batch_window` after the first request — the same
+//! latency/throughput trade the serving literature (and the vLLM-style
+//! router) makes.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::manifest::Manifest;
+use super::metrics::ServerMetrics;
+use crate::runtime::{self, Runtime};
+
+/// A single inference request: one 32x32x1 image.
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    respond: Sender<Response>,
+}
+
+/// The response: logits for the 10 classes.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub queue_time: Duration,
+    pub total_time: Duration,
+}
+
+/// Serving configuration for one variant.
+#[derive(Debug, Clone)]
+pub struct VariantCfg {
+    /// Graph base name, e.g. "lenet5_adder".
+    pub model: String,
+    /// Optional trained-weights file (relative to artifacts/); falls back
+    /// to the init file.
+    pub weights: Option<String>,
+}
+
+/// Handle clients use to submit work and read metrics.
+pub struct ServerHandle {
+    routes: HashMap<String, Sender<Request>>,
+    pub metrics: Arc<Mutex<HashMap<String, ServerMetrics>>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Submit one image to a variant; returns a receiver for the response.
+    pub fn submit(&self, variant: &str, image: Vec<f32>) -> Result<Receiver<Response>> {
+        let (tx, rx) = mpsc::channel();
+        let route = self.routes.get(variant)
+            .ok_or_else(|| anyhow::anyhow!("unknown variant {variant}"))?;
+        route.send(Request { image, enqueued: Instant::now(), respond: tx })
+            .map_err(|_| anyhow::anyhow!("variant {variant} worker gone"))?;
+        Ok(rx)
+    }
+
+    pub fn variants(&self) -> Vec<String> {
+        self.routes.keys().cloned().collect()
+    }
+
+    /// Drop the routes (workers drain + exit) and join the threads.
+    pub fn shutdown(mut self) {
+        self.routes.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Start the server: one worker thread per variant.
+pub fn start(manifest: &Manifest, variants: &[VariantCfg],
+             batch_window: Duration) -> Result<ServerHandle> {
+    let metrics: Arc<Mutex<HashMap<String, ServerMetrics>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let mut routes = HashMap::new();
+    let mut workers = Vec::new();
+    for v in variants {
+        let (tx, rx) = mpsc::channel::<Request>();
+        routes.insert(v.model.clone(), tx);
+        let m = metrics.clone();
+        let man = manifest.clone();
+        let cfg = v.clone();
+        workers.push(std::thread::Builder::new()
+            .name(format!("worker-{}", v.model))
+            .spawn(move || {
+                if let Err(e) = worker_loop(man, cfg.clone(), rx, m, batch_window) {
+                    eprintln!("[server] worker {} failed: {e:#}", cfg.model);
+                }
+            })?);
+    }
+    Ok(ServerHandle { routes, metrics, workers })
+}
+
+fn worker_loop(manifest: Manifest, cfg: VariantCfg, rx: Receiver<Request>,
+               metrics: Arc<Mutex<HashMap<String, ServerMetrics>>>,
+               batch_window: Duration) -> Result<()> {
+    // PJRT handles are not Send: the runtime lives and dies in this thread.
+    let mut rt = Runtime::new(manifest.dir.clone())?;
+    let gname = format!("{}_eval", cfg.model);
+    let ginfo = manifest.graph(&gname)?.clone();
+    rt.load(&gname, &ginfo.file)?;
+    let batch = ginfo.batch;
+
+    // model params: trained weights if configured, else init
+    let layout = manifest.layout(&ginfo.arch)?;
+    let wfile = cfg.weights.clone().unwrap_or_else(|| layout.init_file.clone());
+    let init = manifest.read_param_file(&ginfo.arch, &wfile)?;
+    let params: Vec<xla::Literal> = init.iter()
+        .map(|(_, shape, data)| runtime::literal_f32(shape, data))
+        .collect::<Result<_>>()?;
+
+    let mut pending: Vec<Request> = Vec::with_capacity(batch);
+    loop {
+        // blocking wait for the first request of a batch
+        match rx.recv() {
+            Ok(r) => pending.push(r),
+            Err(_) => return Ok(()), // all senders dropped: shutdown
+        }
+        let deadline = Instant::now() + batch_window;
+        while pending.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // assemble the fixed-size batch (pad with zeros)
+        let n = pending.len();
+        let mut images = vec![0f32; batch * 1024];
+        for (i, r) in pending.iter().enumerate() {
+            images[i * 1024..(i + 1) * 1024].copy_from_slice(&r.image);
+        }
+        let exec_start = Instant::now();
+        let x = runtime::literal_f32(&[batch, 32, 32, 1], &images)?;
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&x);
+        let outs = rt.execute(&gname, &inputs)?;
+        let logits = runtime::to_vec_f32(&outs[0])?;
+        let exec_time = exec_start.elapsed();
+
+        {
+            let mut mm = metrics.lock().unwrap();
+            let m = mm.entry(cfg.model.clone()).or_default();
+            m.batches += 1;
+            m.images += n as u64;
+            m.requests += n as u64;
+            m.exec_lat.record(exec_time);
+        }
+        for (i, r) in pending.drain(..).enumerate() {
+            let queue_time = exec_start.duration_since(r.enqueued);
+            let total_time = r.enqueued.elapsed();
+            {
+                let mut mm = metrics.lock().unwrap();
+                let m = mm.entry(cfg.model.clone()).or_default();
+                m.queue_lat.record(queue_time);
+                m.e2e_lat.record(total_time);
+            }
+            let _ = r.respond.send(Response {
+                logits: logits[i * 10..(i + 1) * 10].to_vec(),
+                queue_time,
+                total_time,
+            });
+        }
+    }
+}

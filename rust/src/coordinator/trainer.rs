@@ -1,0 +1,161 @@
+//! Training driver: the Rust coordinator owns ALL model state (params +
+//! momenta as PJRT literals) and drives the AOT-compiled fused train-step
+//! graph.  Python never runs here — the loop is
+//! `state <- train_step(state, batch, step)` against artifacts built once
+//! by `make artifacts`.
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use super::manifest::Manifest;
+use crate::data::Batch;
+use crate::runtime::{self, Runtime};
+
+/// One (step, loss, acc) record of the training history.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// Stateful trainer for one (arch, kernel) model.
+pub struct Trainer {
+    pub arch: String,
+    pub kernel: String,
+    graph_train: String,
+    graph_eval: String,
+    /// params + momenta literals, in the exact input order of the graph.
+    state: Vec<Literal>,
+    n_params: usize,
+    n_momenta: usize,
+    pub batch_size: usize,
+    pub step: usize,
+    pub history: Vec<StepRecord>,
+    /// Sorted parameter names (layout order == input order).
+    param_names: Vec<String>,
+    param_shapes: Vec<Vec<usize>>,
+}
+
+impl Trainer {
+    /// Build a trainer: loads + compiles the train/eval graphs and the
+    /// initial parameters.
+    pub fn new(manifest: &Manifest, rt: &mut Runtime, arch: &str,
+               kernel: &str) -> Result<Trainer> {
+        let gname = format!("{arch}_{kernel}_train");
+        let ename = format!("{arch}_{kernel}_eval");
+        let ginfo = manifest.graph(&gname)?.clone();
+        rt.load(&gname, &ginfo.file)?;
+        let einfo = manifest.graph(&ename)?.clone();
+        rt.load(&ename, &einfo.file)?;
+
+        let layout = manifest.layout(arch)?;
+        let init = manifest.read_param_file(arch, &layout.init_file)?;
+        let trainable: std::collections::BTreeSet<&String> =
+            layout.trainable.iter().collect();
+
+        let mut state = Vec::with_capacity(ginfo.n_params + ginfo.n_momenta);
+        let mut param_names = Vec::new();
+        let mut param_shapes = Vec::new();
+        // params first (sorted order == layout order)
+        for (name, shape, data) in &init {
+            state.push(runtime::literal_f32(shape, data)?);
+            param_names.push(name.clone());
+            param_shapes.push(shape.clone());
+        }
+        // zero momenta for trainable slots, same sorted order
+        for (name, shape, _) in &init {
+            if trainable.contains(name) {
+                let n: usize = shape.iter().product();
+                state.push(runtime::literal_f32(shape, &vec![0f32; n])?);
+            }
+        }
+        anyhow::ensure!(state.len() == ginfo.n_params + ginfo.n_momenta,
+                        "state arity {} vs manifest {}+{}",
+                        state.len(), ginfo.n_params, ginfo.n_momenta);
+
+        Ok(Trainer {
+            arch: arch.into(),
+            kernel: kernel.into(),
+            graph_train: gname,
+            graph_eval: ename,
+            state,
+            n_params: ginfo.n_params,
+            n_momenta: ginfo.n_momenta,
+            batch_size: ginfo.batch,
+            step: 0,
+            history: Vec::new(),
+            param_names,
+            param_shapes,
+        })
+    }
+
+    /// One fused train step; returns (loss, accuracy-on-batch).
+    pub fn train_step(&mut self, rt: &Runtime, batch: &Batch) -> Result<(f32, f32)> {
+        anyhow::ensure!(batch.n == self.batch_size,
+                        "batch {} != graph batch {}", batch.n, self.batch_size);
+        let x = runtime::literal_f32(&[batch.n, 32, 32, 1], &batch.images)?;
+        let y = runtime::literal_i32(&[batch.n], &batch.labels)?;
+        let step = runtime::literal_scalar_i32(self.step as i32);
+        let mut inputs: Vec<&Literal> = self.state.iter().collect();
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.push(&step);
+        let mut outs = rt.execute(&self.graph_train, &inputs)
+            .context("train step")?;
+        let n_state = self.n_params + self.n_momenta;
+        anyhow::ensure!(outs.len() == n_state + 2, "train outputs {}", outs.len());
+        let acc = runtime::scalar_f32(&outs[n_state + 1])?;
+        let loss = runtime::scalar_f32(&outs[n_state])?;
+        outs.truncate(n_state);
+        self.state = outs;
+        self.step += 1;
+        self.history.push(StepRecord { step: self.step, loss, acc });
+        Ok((loss, acc))
+    }
+
+    /// Evaluate accuracy over a dataset (chunked into graph-batch sizes;
+    /// a trailing partial chunk is dropped).
+    pub fn evaluate(&self, rt: &Runtime, images: &[f32], labels: &[i32]) -> Result<f64> {
+        let b = self.batch_size;
+        let n = labels.len() / b * b;
+        anyhow::ensure!(n > 0, "eval set smaller than one batch");
+        let mut correct = 0usize;
+        for c in 0..n / b {
+            let xs = &images[c * b * 1024..(c + 1) * b * 1024];
+            let x = runtime::literal_f32(&[b, 32, 32, 1], xs)?;
+            let mut inputs: Vec<&Literal> = self.state[..self.n_params].iter().collect();
+            inputs.push(&x);
+            let outs = rt.execute(&self.graph_eval, &inputs)?;
+            let logits = runtime::to_vec_f32(&outs[0])?;
+            for i in 0..b {
+                let row = &logits[i * 10..(i + 1) * 10];
+                let pred = row.iter().enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap().0;
+                if pred == labels[c * b + i] as usize {
+                    correct += 1;
+                }
+            }
+        }
+        Ok(correct as f64 / n as f64)
+    }
+
+    /// Extract current parameters as named f32 buffers (save / quantize).
+    pub fn params_f32(&self) -> Result<Vec<(String, Vec<f32>)>> {
+        let mut out = Vec::with_capacity(self.n_params);
+        for (i, name) in self.param_names.iter().enumerate() {
+            out.push((name.clone(), runtime::to_vec_f32(&self.state[i])?));
+        }
+        Ok(out)
+    }
+
+    /// Save current parameters to `<artifacts>/<file>` in layout order.
+    pub fn save_params(&self, manifest: &Manifest, file: &str) -> Result<()> {
+        manifest.write_param_file(&self.arch, file, &self.params_f32()?)
+    }
+
+    pub fn param_shapes(&self) -> (&[String], &[Vec<usize>]) {
+        (&self.param_names, &self.param_shapes)
+    }
+}

@@ -1,0 +1,162 @@
+//! The parallel convolution PE array: `pout` lanes, each reducing `pin`
+//! kernel outputs through an adder tree — the structure of paper Fig. 4(a)
+//! and the subject of Eq. (2) (AdderNet) and Eq. (3) (CNN).
+
+use super::adder_tree::AdderTree;
+use super::kernelcircuit::KernelKind;
+use super::units::UnitCost;
+
+/// Geometry + datapath of the compute array.
+#[derive(Debug, Clone, Copy)]
+pub struct PeArray {
+    /// Input channels summed in the tree per output channel (Pin).
+    pub pin: u64,
+    /// Parallel output channels (Pout).
+    pub pout: u64,
+    /// Data width of features/weights, bits (DW).
+    pub dw: u32,
+    /// Which similarity kernel each lane instantiates.
+    pub kernel: KernelKind,
+}
+
+impl PeArray {
+    pub fn new(pin: u64, pout: u64, dw: u32, kernel: KernelKind) -> Self {
+        Self { pin, pout, dw, kernel }
+    }
+
+    /// Total parallelism P = Pin * Pout (the x-axis of Fig. 4c/d).
+    pub fn parallelism(&self) -> u64 {
+        self.pin * self.pout
+    }
+
+    /// The adder tree each output lane instantiates.
+    pub fn tree(&self) -> AdderTree {
+        AdderTree::new(self.pin, self.kernel.output_bits(self.dw))
+    }
+
+    /// Paper Eq. (2): AdderNet logic consumption
+    /// `Pout * {Pin*DW*2 + [DW + log2(Pin)]*(Pin-1)}`.
+    pub fn eq2_addernet(pin: u64, pout: u64, dw: u32) -> u64 {
+        let log2pin = AdderTree::new(pin, 0).levels() as u64;
+        pout * (pin * dw as u64 * 2 + (dw as u64 + log2pin) * (pin - 1))
+    }
+
+    /// Paper Eq. (3): CNN logic consumption
+    /// `Pout * {Pin*DW*DW + [2*DW + log2(Pin) - 1]*(Pin-1)}`.
+    pub fn eq3_cnn(pin: u64, pout: u64, dw: u32) -> u64 {
+        let log2pin = AdderTree::new(pin, 0).levels() as u64;
+        pout * (pin * dw as u64 * dw as u64
+            + (2 * dw as u64 + log2pin - 1) * (pin - 1))
+    }
+
+    /// Theoretical AdderNet saving from Eq. (2)/(3):
+    /// `1 - eq2/eq3` (the "~81.6% off at DW=16, Pin=64" headline).
+    pub fn eq23_saving(pin: u64, dw: u32) -> f64 {
+        let a = Self::eq2_addernet(pin, 1, dw) as f64;
+        let c = Self::eq3_cnn(pin, 1, dw) as f64;
+        1.0 - a / c
+    }
+
+    /// Precise LUT count: per-lane kernel circuits + per-output-channel
+    /// widening trees (the synthesis-emulation currency of Fig. 4).
+    pub fn luts(&self) -> u64 {
+        let lane = self.kernel.lane_cost(self.dw).luts;
+        let tree = self.tree().luts_precise();
+        self.pout * (self.pin * lane + tree)
+    }
+
+    /// Paper-formula LUT count (kernel charged `DW*2` / `DW*DW`, tree at
+    /// full final width) — kept for the Eq-2/3 ablation.
+    pub fn luts_paper(&self) -> u64 {
+        match self.kernel {
+            KernelKind::Adder2A | KernelKind::Adder1C1A => {
+                Self::eq2_addernet(self.pin, self.pout, self.dw)
+            }
+            KernelKind::Mult => Self::eq3_cnn(self.pin, self.pout, self.dw),
+            _ => self.luts(),
+        }
+    }
+
+    /// Energy for one full array activation (all lanes + trees fire), pJ.
+    pub fn energy_per_cycle_pj(&self) -> f64 {
+        let lane = self.kernel.lane_energy_pj(self.dw);
+        let tree = self.tree().energy_pj();
+        self.pout as f64 * (self.pin as f64 * lane + tree)
+    }
+
+    /// Aggregate circuit cost (kernel stage + one pipelined tree stage).
+    pub fn cost(&self) -> UnitCost {
+        let lanes = self.kernel.lane_cost(self.dw).times(self.pin * self.pout);
+        let trees = self.tree().cost().times(self.pout);
+        // kernel stage and tree stage are separate pipeline stages: the
+        // array's combinational path is the max of the two.
+        lanes.parallel(trees)
+    }
+
+    /// MAC-equivalent operations per cycle (each lane = 1 MAC = 2 ops).
+    pub fn ops_per_cycle(&self) -> u64 {
+        2 * self.parallelism()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The headline claim: DW=16, Pin=64 => ~81.6% off (paper §4).
+    #[test]
+    fn eq23_headline_saving() {
+        let s = PeArray::eq23_saving(64, 16);
+        assert!((s - 0.816).abs() < 0.005, "saving {s}");
+    }
+
+    #[test]
+    fn eq2_eq3_exact_values() {
+        // By-hand values at Pin=64, Pout=1, DW=16:
+        // eq2 = 64*16*2 + (16+6)*63 = 2048 + 1386 = 3434
+        assert_eq!(PeArray::eq2_addernet(64, 1, 16), 3434);
+        // eq3 = 64*256 + (32+6-1)*63 = 16384 + 2331 = 18715
+        assert_eq!(PeArray::eq3_cnn(64, 1, 16), 18715);
+    }
+
+    #[test]
+    fn saving_grows_with_dw() {
+        assert!(PeArray::eq23_saving(64, 16) > PeArray::eq23_saving(64, 8));
+        assert!(PeArray::eq23_saving(64, 8) > 0.5);
+    }
+
+    #[test]
+    fn precise_luts_track_paper_formula() {
+        for (pin, pout, dw) in [(64u64, 16u64, 16u32), (64, 32, 8), (32, 4, 16)] {
+            let adder = PeArray::new(pin, pout, dw, KernelKind::Adder2A);
+            let cnn = PeArray::new(pin, pout, dw, KernelKind::Mult);
+            let precise = 1.0 - adder.luts() as f64 / cnn.luts() as f64;
+            let paper = 1.0 - adder.luts_paper() as f64 / cnn.luts_paper() as f64;
+            // same direction, within 12 points of the closed form
+            assert!((precise - paper).abs() < 0.12,
+                    "pin={pin} dw={dw}: precise {precise:.3} paper {paper:.3}");
+            assert!(precise > 0.5);
+        }
+    }
+
+    #[test]
+    fn energy_saving_matches_area_saving_scale() {
+        let adder = PeArray::new(64, 16, 16, KernelKind::Adder2A);
+        let cnn = PeArray::new(64, 16, 16, KernelKind::Mult);
+        let saving = 1.0 - adder.energy_per_cycle_pj() / cnn.energy_per_cycle_pj();
+        assert!(saving > 0.6 && saving < 0.95, "energy saving {saving}");
+    }
+
+    #[test]
+    fn ops_per_cycle() {
+        assert_eq!(PeArray::new(64, 16, 16, KernelKind::Adder2A).ops_per_cycle(),
+                   2 * 1024);
+    }
+
+    #[test]
+    fn scaling_linear_in_pout() {
+        let a1 = PeArray::new(64, 8, 16, KernelKind::Adder2A).luts();
+        let a2 = PeArray::new(64, 16, 16, KernelKind::Adder2A).luts();
+        assert_eq!(a2, 2 * a1);
+    }
+}

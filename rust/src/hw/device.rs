@@ -1,0 +1,90 @@
+//! FPGA device models: capacity limits the accelerator configurations the
+//! simulator will admit (the paper's "parallelism of CNN is restrained to
+//! 1024 on ZCU104" observation falls out of these numbers).
+
+/// Static capacities of an FPGA part.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Device {
+    pub name: &'static str,
+    /// 6-input LUT count.
+    pub luts: u64,
+    /// Flip-flops.
+    pub ffs: u64,
+    /// Block RAM capacity, kilobits (BRAM36 x 36 kb).
+    pub bram_kbits: u64,
+    /// DSP48 slices (unused in the paper's "fair comparison" builds, but
+    /// tracked for the S8 utilization row).
+    pub dsps: u64,
+    /// Static (leakage + PS-subsystem) power floor, W — the "~14 W
+    /// embedded system baseline" the paper subtracts.
+    pub static_power_w: f64,
+    /// Peak off-chip DRAM bandwidth, bytes/s.
+    pub dram_bw_bytes_per_s: f64,
+}
+
+/// Xilinx Zynq UltraScale+ MPSoC ZCU104 (XCZU7EV-2FFVC1156).
+pub const ZCU104: Device = Device {
+    name: "ZCU104 (XCZU7EV)",
+    luts: 230_400,
+    ffs: 460_800,
+    bram_kbits: 11_088, // 312 x BRAM36 = 11 Mb
+    dsps: 1_728,
+    static_power_w: 14.0,
+    dram_bw_bytes_per_s: 19.2e9, // PS DDR4-2400 64-bit
+};
+
+/// Xilinx Zynq-7020 (XC7Z020, the PYNQ-class part of Fig. 5).
+pub const Z7020: Device = Device {
+    name: "Zynq-7020 (XC7Z020)",
+    luts: 53_200,
+    ffs: 106_400,
+    bram_kbits: 4_480, // 140 x BRAM36 = 4.9 Mb
+    dsps: 220,
+    static_power_w: 2.5,
+    dram_bw_bytes_per_s: 4.2e9,
+};
+
+impl Device {
+    /// Fraction of LUTs a design uses; > 1.0 means it does not fit.
+    pub fn lut_utilization(&self, luts: u64) -> f64 {
+        luts as f64 / self.luts as f64
+    }
+
+    /// Whether a design fits with a routing-headroom margin (synthesis
+    /// practice: > ~85% LUT utilization fails timing closure).
+    pub fn fits(&self, luts: u64, bram_kbits: u64) -> bool {
+        self.lut_utilization(luts) <= 0.85
+            && bram_kbits as f64 <= self.bram_kbits as f64 * 0.95
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::array::PeArray;
+    use crate::hw::kernelcircuit::KernelKind;
+
+    #[test]
+    fn capacities_sane() {
+        assert!(ZCU104.luts > Z7020.luts);
+        assert!(ZCU104.bram_kbits > Z7020.bram_kbits);
+    }
+
+    /// Paper §4: on ZCU104 the CNN parallelism is "restrained to 1024";
+    /// our capacity model must agree that 16-bit CNN at P=2048 does NOT
+    /// fit while AdderNet-equivalent compute at the same P does (it's the
+    /// whole point of the minimalist kernel).
+    #[test]
+    fn zcu104_parallelism_restraint() {
+        let cnn_2048 = PeArray::new(64, 32, 16, KernelKind::Mult);
+        assert!(!ZCU104.fits(cnn_2048.luts(), 0));
+        let adder_2048 = PeArray::new(64, 32, 16, KernelKind::Adder2A);
+        assert!(ZCU104.fits(adder_2048.luts(), 0));
+    }
+
+    #[test]
+    fn utilization_fraction() {
+        assert!((ZCU104.lut_utilization(115_200) - 0.5).abs() < 1e-9);
+        assert!(!ZCU104.fits(230_400, 0));
+    }
+}

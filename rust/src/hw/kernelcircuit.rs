@@ -1,0 +1,187 @@
+//! The five convolution kernels of paper Fig. 1 as circuits.
+//!
+//! Per-kernel circuit structure (Supplemental S1-S3):
+//!
+//! * `Adder1C1A` — one comparator + one adder: compare A,B, subtract the
+//!   smaller from the larger.  Cheapest area, longer serial path.
+//! * `Adder2A`   — two parallel adders (A-B and B-A) + a mux selecting the
+//!   positive one.  Faster, slightly larger — the paper's deployed choice.
+//! * `Mult`      — one N x N multiplier (classical CNN).
+//! * `Shift`     — DeepShift: serial shift register + sign mux; for an
+//!   M-bit weight, (M-1) extra adders + M shift register groups.
+//! * `Xnor`      — XNOR + popcount bit-slice (binary network).
+//! * `Memristor` — differential 1T1R pair + per-lane DAC and shared-column
+//!   ADC periphery (the "hidden cost" paper §2.2 calls out).
+
+use super::units::{self, UnitCost};
+
+/// Which similarity circuit a PE lane instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// AdderNet, one-comparator-one-adder scheme (S1).
+    Adder1C1A,
+    /// AdderNet, two-adders scheme (S1) — the paper's deployed design.
+    Adder2A,
+    /// Classical multiply kernel.
+    Mult,
+    /// DeepShift with `weight_bits`-bit shift-encoded weights.
+    Shift { weight_bits: u32 },
+    /// XNOR binary kernel.
+    Xnor,
+    /// Analogue memristor MAC (1T1R differential).
+    Memristor,
+}
+
+impl KernelKind {
+    pub const ALL_DIGITAL: [KernelKind; 5] = [
+        KernelKind::Adder1C1A,
+        KernelKind::Adder2A,
+        KernelKind::Mult,
+        KernelKind::Shift { weight_bits: 6 },
+        KernelKind::Xnor,
+    ];
+
+    pub fn label(&self) -> String {
+        match self {
+            KernelKind::Adder1C1A => "AdderNet(1C1A)".into(),
+            KernelKind::Adder2A => "AdderNet(2A)".into(),
+            KernelKind::Mult => "CNN(mult)".into(),
+            KernelKind::Shift { weight_bits } => format!("DeepShift({weight_bits}b)"),
+            KernelKind::Xnor => "XNOR(BNN)".into(),
+            KernelKind::Memristor => "Memristor".into(),
+        }
+    }
+
+    /// True if the kernel computes the AdderNet -|a-b| similarity.
+    pub fn is_adder(&self) -> bool {
+        matches!(self, KernelKind::Adder1C1A | KernelKind::Adder2A)
+    }
+
+    /// Output width of one kernel op given `dw`-bit inputs.  The adder
+    /// kernel keeps `dw+1` bits; the multiplier doubles the width —
+    /// this is what widens the CNN adder tree (Eq. 3's `2*DW` term).
+    pub fn output_bits(&self, dw: u32) -> u32 {
+        match self {
+            KernelKind::Adder1C1A | KernelKind::Adder2A => dw + 1,
+            KernelKind::Mult => 2 * dw,
+            KernelKind::Shift { .. } => 2 * dw, // post-shift width
+            KernelKind::Xnor => 1,
+            KernelKind::Memristor => dw, // re-digitised by the ADC
+        }
+    }
+
+    /// Circuit cost of ONE kernel lane at data width `dw`.
+    pub fn lane_cost(&self, dw: u32) -> UnitCost {
+        match self {
+            KernelKind::Adder1C1A => {
+                // comparator gates the subtract order: serial path.
+                units::comparator(dw).series(units::adder(dw))
+            }
+            KernelKind::Adder2A => {
+                // two adders in parallel, mux picks the non-negative one.
+                units::adder(dw)
+                    .parallel(units::adder(dw))
+                    .series(units::mux2(dw + 1))
+            }
+            KernelKind::Mult => units::multiplier(dw),
+            KernelKind::Shift { weight_bits } => {
+                // M groups of shift registers + sign mux (+ (M-1) adders
+                // for multi-bit shift weights, paper §2.1).
+                let m = *weight_bits;
+                let mut c = units::shift_register(dw).times(m as u64)
+                    .series(units::mux2(dw));
+                if m > 1 {
+                    c = c.series(units::adder(dw).times((m - 1) as u64));
+                }
+                c
+            }
+            KernelKind::Xnor => units::xnor_cell(),
+            KernelKind::Memristor => units::memristor_cell().times(2), // differential
+        }
+    }
+
+    /// Per-op energy of a lane including conversion periphery, pJ.
+    /// For the memristor this adds the amortised DAC (per input) and ADC
+    /// (per output sample) energy the paper's §2.2 identifies as the real
+    /// cost of analogue kernels.
+    pub fn lane_energy_pj(&self, dw: u32) -> f64 {
+        let base = self.lane_cost(dw).energy_pj;
+        match self {
+            KernelKind::Memristor => {
+                base + super::gates::DAC_ENERGY_PJ + super::gates::ADC_ENERGY_PJ / 64.0
+            }
+            _ => base,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * b.abs().max(1e-9)
+    }
+
+    /// Reproduce the S4 energy table rows for the kernel circuits.
+    #[test]
+    fn s4_kernel_energy_rows() {
+        assert!(close(KernelKind::Adder1C1A.lane_cost(8).energy_pj, 0.04, 0.1));
+        assert!(close(KernelKind::Adder2A.lane_cost(8).energy_pj, 0.06, 0.05));
+        assert!(close(KernelKind::Mult.lane_cost(8).energy_pj, 0.2, 0.05));
+        assert!(close(KernelKind::Adder1C1A.lane_cost(16).energy_pj, 0.07, 0.07));
+        assert!(close(KernelKind::Adder2A.lane_cost(16).energy_pj, 0.10, 0.05));
+        assert!(close(KernelKind::Adder1C1A.lane_cost(32).energy_pj, 0.14, 0.05));
+        assert!(close(KernelKind::Mult.lane_cost(32).energy_pj, 3.1, 0.02));
+    }
+
+    /// Reproduce the S5 area table rows.
+    #[test]
+    fn s5_kernel_area_rows() {
+        assert!(close(KernelKind::Adder1C1A.lane_cost(8).area_units, 58.0, 0.15));
+        // 2A carries an extra word mux on top of the paper's bare "2 adders".
+        assert!(close(KernelKind::Adder2A.lane_cost(8).area_units, 72.0, 0.15));
+        assert!(close(KernelKind::Adder2A.lane_cost(16).area_units, 134.0, 0.15));
+        assert!(close(KernelKind::Mult.lane_cost(8).area_units, 282.0, 0.05));
+        assert!(close(KernelKind::Mult.lane_cost(32).area_units, 3495.0, 0.05));
+    }
+
+    /// S1 trade-off: 1C1A is smaller, 2A is faster.
+    #[test]
+    fn s1_scheme_tradeoff() {
+        for dw in [8, 16, 32] {
+            let c1a = KernelKind::Adder1C1A.lane_cost(dw);
+            let a2 = KernelKind::Adder2A.lane_cost(dw);
+            assert!(c1a.luts <= a2.luts, "1C1A should be smaller at {dw}b");
+            assert!(a2.delay_ns < c1a.delay_ns, "2A should be faster at {dw}b");
+        }
+    }
+
+    /// Paper Fig. 2c ordering: XNOR < memristor-cell < adder < mult.
+    #[test]
+    fn fig2c_energy_ordering() {
+        let dw = 16;
+        let xnor = KernelKind::Xnor.lane_energy_pj(1);
+        let adder = KernelKind::Adder2A.lane_energy_pj(dw);
+        let mult = KernelKind::Mult.lane_energy_pj(dw);
+        assert!(xnor < adder && adder < mult);
+        // memristor WITH periphery is no longer the cheapest (paper §2.2).
+        let mem = KernelKind::Memristor.lane_energy_pj(4);
+        assert!(mem > KernelKind::Memristor.lane_cost(4).energy_pj);
+    }
+
+    #[test]
+    fn output_width_widening() {
+        assert_eq!(KernelKind::Adder2A.output_bits(16), 17);
+        assert_eq!(KernelKind::Mult.output_bits(16), 32);
+        assert_eq!(KernelKind::Xnor.output_bits(16), 1);
+    }
+
+    #[test]
+    fn shift_multibit_needs_adders() {
+        let s1 = KernelKind::Shift { weight_bits: 1 }.lane_cost(16);
+        let s6 = KernelKind::Shift { weight_bits: 6 }.lane_cost(16);
+        assert!(s6.luts > s1.luts);
+        assert!(s6.energy_pj > 5.0 * s1.energy_pj); // paper: 6b ~6x 1b energy
+    }
+}

@@ -1,0 +1,23 @@
+//! FPGA hardware substrate (gate-level resource / energy / timing models).
+//!
+//! This is the substitute for the paper's Vivado synthesis + on-board
+//! measurements (DESIGN.md §2): a from-scratch model of the minimalist
+//! AdderNet accelerator and its CNN / shift / XNOR / memristor
+//! competitors, calibrated to the paper's own S4 (energy) and S5 (area)
+//! anchor tables and to Xilinx LUT6/CARRY4 packing rules.
+
+pub mod adder_tree;
+pub mod array;
+pub mod device;
+pub mod gates;
+pub mod kernelcircuit;
+pub mod memory;
+pub mod power;
+pub mod timing;
+pub mod units;
+
+pub use adder_tree::AdderTree;
+pub use array::PeArray;
+pub use device::{Device, Z7020, ZCU104};
+pub use kernelcircuit::KernelKind;
+pub use units::UnitCost;

@@ -1,0 +1,85 @@
+//! Static timing analysis: combinational critical path -> achievable fmax.
+//!
+//! The paper's observation (§4): "the multiplier owns much higher logic
+//! gate delay compared to adder, [so] the highest operation frequency of
+//! CNN is 214 MHz, and that of AdderNet is 250 MHz".  We model each
+//! pipeline stage (kernel stage, tree level stage, control) and take the
+//! slowest; frequency is additionally capped by the control/BRAM fabric
+//! limit `FMAX_FABRIC_CAP_MHZ` (250 MHz — the AdderNet path is *not*
+//! kernel-limited, exactly as in the paper).
+
+use super::adder_tree::AdderTree;
+use super::array::PeArray;
+use super::gates;
+
+/// Fabric cap from control logic, BRAM access time and clock management —
+/// the ceiling any design hits once the datapath is fast enough.
+pub const FMAX_FABRIC_CAP_MHZ: f64 = 250.0;
+
+/// Timing report for one accelerator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TimingReport {
+    /// Kernel pipeline stage delay, ns.
+    pub kernel_stage_ns: f64,
+    /// Widest adder-tree level stage delay, ns.
+    pub tree_stage_ns: f64,
+    /// Resulting critical path (with register + routing margins), ns.
+    pub critical_path_ns: f64,
+    /// Achievable clock, MHz (after the fabric cap).
+    pub fmax_mhz: f64,
+}
+
+/// Analyse one PE-array datapath.
+pub fn analyse(array: &PeArray) -> TimingReport {
+    let kernel_stage = array.kernel.lane_cost(array.dw).delay_ns;
+    let tree = AdderTree::new(array.pin, array.kernel.output_bits(array.dw));
+    let tree_stage = if array.pin > 1 { tree.level_delay_ns() } else { 0.0 };
+    let worst = kernel_stage.max(tree_stage);
+    let critical = worst + gates::T_REG_MARGIN_NS + gates::T_ROUTE_NS;
+    let fmax = (1000.0 / critical).min(FMAX_FABRIC_CAP_MHZ);
+    TimingReport {
+        kernel_stage_ns: kernel_stage,
+        tree_stage_ns: tree_stage,
+        critical_path_ns: critical,
+        fmax_mhz: fmax,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::kernelcircuit::KernelKind;
+
+    /// E8 anchor: 16-bit CNN ~214 MHz, 16-bit AdderNet hits the 250 MHz
+    /// fabric cap (paper §4, ZCU104, P=1024).
+    #[test]
+    fn onboard_fmax_anchors() {
+        let cnn = analyse(&PeArray::new(64, 16, 16, KernelKind::Mult));
+        let adder = analyse(&PeArray::new(64, 16, 16, KernelKind::Adder2A));
+        assert!((cnn.fmax_mhz - 214.0).abs() < 10.0, "CNN fmax {}", cnn.fmax_mhz);
+        assert!((adder.fmax_mhz - 250.0).abs() < 1e-9, "Adder fmax {}", adder.fmax_mhz);
+        // Speed-up ratio ~1.16x (paper conclusion).
+        let speedup = adder.fmax_mhz / cnn.fmax_mhz;
+        assert!(speedup > 1.10 && speedup < 1.25, "speedup {speedup}");
+    }
+
+    #[test]
+    fn adder_datapath_not_the_bottleneck() {
+        let r = analyse(&PeArray::new(64, 16, 16, KernelKind::Adder2A));
+        // The adder kernel's own path supports > 250 MHz; the cap binds.
+        assert!(1000.0 / r.critical_path_ns > FMAX_FABRIC_CAP_MHZ);
+    }
+
+    #[test]
+    fn wider_multiplier_slower() {
+        let m8 = analyse(&PeArray::new(64, 16, 8, KernelKind::Mult));
+        let m16 = analyse(&PeArray::new(64, 16, 16, KernelKind::Mult));
+        assert!(m8.fmax_mhz >= m16.fmax_mhz);
+    }
+
+    #[test]
+    fn pin_1_has_no_tree_stage() {
+        let r = analyse(&PeArray::new(1, 6, 16, KernelKind::Adder2A));
+        assert_eq!(r.tree_stage_ns, 0.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Datapath units: typed wrappers over the gate-level primitives.
+//!
+//! Each unit reports its cost in all three currencies (LUTs, S5 area
+//! units, pJ/op) plus its combinational delay, so the kernel circuits,
+//! adder trees and PE arrays can be composed without re-deriving packing
+//! rules.
+
+use super::gates;
+
+/// A hardware cost triple + timing for one datapath unit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UnitCost {
+    /// Xilinx LUT estimate (synthesis emulation currency).
+    pub luts: u64,
+    /// Paper-S5-scale technology-independent area units.
+    pub area_units: f64,
+    /// Switching energy per operation, pJ (ASIC scale; FPGA power model
+    /// multiplies by `gates::FPGA_DYNAMIC_FACTOR`).
+    pub energy_pj: f64,
+    /// Combinational delay, ns.
+    pub delay_ns: f64,
+}
+
+impl UnitCost {
+    pub const ZERO: UnitCost = UnitCost { luts: 0, area_units: 0.0, energy_pj: 0.0, delay_ns: 0.0 };
+
+    /// Series composition: areas add, delays add (same path).
+    pub fn series(self, other: UnitCost) -> UnitCost {
+        UnitCost {
+            luts: self.luts + other.luts,
+            area_units: self.area_units + other.area_units,
+            energy_pj: self.energy_pj + other.energy_pj,
+            delay_ns: self.delay_ns + other.delay_ns,
+        }
+    }
+
+    /// Parallel composition: areas add, delay is the max path.
+    pub fn parallel(self, other: UnitCost) -> UnitCost {
+        UnitCost {
+            luts: self.luts + other.luts,
+            area_units: self.area_units + other.area_units,
+            energy_pj: self.energy_pj + other.energy_pj,
+            delay_ns: self.delay_ns.max(other.delay_ns),
+        }
+    }
+
+    /// `n` identical instances operating in parallel.
+    pub fn times(self, n: u64) -> UnitCost {
+        UnitCost {
+            luts: self.luts * n,
+            area_units: self.area_units * n as f64,
+            energy_pj: self.energy_pj * n as f64,
+            delay_ns: self.delay_ns,
+        }
+    }
+}
+
+/// N-bit ripple/carry-chain adder (or subtractor — same fabric cost).
+pub fn adder(bits: u32) -> UnitCost {
+    UnitCost {
+        luts: gates::adder_luts(bits),
+        area_units: gates::adder_area_units(bits),
+        energy_pj: gates::adder_energy_pj(bits),
+        delay_ns: gates::adder_delay_ns(bits),
+    }
+}
+
+/// N-bit magnitude comparator.
+pub fn comparator(bits: u32) -> UnitCost {
+    UnitCost {
+        luts: gates::comparator_luts(bits),
+        area_units: gates::comparator_area_units(bits),
+        energy_pj: gates::comparator_energy_pj(bits),
+        delay_ns: gates::comparator_delay_ns(bits),
+    }
+}
+
+/// Whole-word 2:1 multiplexer.
+pub fn mux2(bits: u32) -> UnitCost {
+    UnitCost {
+        luts: gates::mux_luts(bits),
+        area_units: gates::mux_area_units(bits),
+        energy_pj: gates::mux_energy_pj(bits),
+        delay_ns: gates::MUX_DELAY_NS,
+    }
+}
+
+/// N x N LUT-fabric signed array multiplier (no DSP).
+pub fn multiplier(bits: u32) -> UnitCost {
+    UnitCost {
+        luts: gates::multiplier_luts(bits),
+        area_units: gates::multiplier_area_units(bits),
+        energy_pj: gates::multiplier_energy_pj(bits),
+        delay_ns: gates::multiplier_delay_ns(bits),
+    }
+}
+
+/// N-bit serial shift register (one stage of a DeepShift barrel path).
+pub fn shift_register(bits: u32) -> UnitCost {
+    UnitCost {
+        luts: gates::shift_register_luts(bits),
+        // area/energy scale like a half adder per bit
+        area_units: 1.6 * bits as f64,
+        energy_pj: 0.001 * bits as f64,
+        delay_ns: gates::T_LUT_NS,
+    }
+}
+
+/// 1-bit XNOR + popcount slice (binary network kernel).
+pub fn xnor_cell() -> UnitCost {
+    UnitCost {
+        luts: 1,
+        area_units: gates::XNOR_AREA_UNITS,
+        energy_pj: gates::XNOR_ENERGY_PJ,
+        delay_ns: gates::T_LUT_NS,
+    }
+}
+
+/// Differential 1T1R memristor pair performing one analogue MAC.
+/// Digital periphery (DAC/ADC) is accounted separately in kernelcircuit.
+pub fn memristor_cell() -> UnitCost {
+    UnitCost {
+        luts: 0, // not fabric logic
+        area_units: gates::MEMRISTOR_AREA_UNITS,
+        energy_pj: gates::MEMRISTOR_MAC_ENERGY_PJ,
+        delay_ns: 1.0, // analogue settling
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_adds_delay_parallel_maxes() {
+        let a = adder(16);
+        let c = comparator(16);
+        let s = a.series(c);
+        let p = a.parallel(c);
+        assert_eq!(s.luts, a.luts + c.luts);
+        assert!((s.delay_ns - (a.delay_ns + c.delay_ns)).abs() < 1e-12);
+        assert!((p.delay_ns - a.delay_ns.max(c.delay_ns)).abs() < 1e-12);
+        assert_eq!(p.luts, s.luts);
+    }
+
+    #[test]
+    fn times_scales_area_not_delay() {
+        let a = adder(8).times(64);
+        assert_eq!(a.luts, 64 * adder(8).luts);
+        assert!((a.delay_ns - adder(8).delay_ns).abs() < 1e-12);
+        assert!((a.energy_pj - 64.0 * adder(8).energy_pj).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifty_fold_energy_gap_at_16bit() {
+        // Paper §2.2: FIX16 multiply ~15.7x adder energy.
+        let ratio = multiplier(16).energy_pj / adder(16).energy_pj;
+        assert!(ratio > 10.0 && ratio < 20.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn mux_is_lightweight() {
+        // S1: "the MUX is much lightweight than other logic parts".
+        assert!(mux2(16).energy_pj < 0.1 * adder(16).energy_pj);
+        assert!(mux2(16).luts <= comparator(16).luts);
+    }
+
+    #[test]
+    fn memristor_has_no_fabric_luts() {
+        assert_eq!(memristor_cell().luts, 0);
+    }
+}

@@ -1,0 +1,23 @@
+//! # addernet — AdderNet + minimalist hardware, full-system reproduction
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **Layer 1/2** live in `python/` (Pallas kernels + JAX models) and are
+//!   AOT-lowered to HLO text by `make artifacts`.
+//! * **Layer 3** is this crate: the PJRT [`runtime`], the training/serving
+//!   [`coordinator`], and the paper's hardware contribution modelled by
+//!   [`hw`] (gate-level FPGA substrate) and [`sim`] (accelerator
+//!   simulator with a bit-accurate integer functional mode).
+//!
+//! Python never runs on the request path; the `repro` binary is
+//! self-contained once artifacts are built.
+
+pub mod coordinator;
+pub mod data;
+pub mod hw;
+pub mod nn;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

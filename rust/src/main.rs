@@ -1,0 +1,322 @@
+//! `repro` — the Layer-3 leader binary.
+//!
+//! Subcommands:
+//!   report <exp>       regenerate a paper table/figure (see DESIGN.md §4)
+//!   train              drive the AOT train-step graph, save weights
+//!   serve              start the batching inference server + load test
+//!   quantize           shared-scale quantized accuracy via functional sim
+//!   simulate           run the FPGA accelerator simulator on a network
+//!   info               list artifacts, graphs and networks
+//!
+//! No external CLI crate is vendored; parsing is a tiny flag scanner.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use addernet::coordinator::{server, Manifest, Trainer, VariantCfg};
+use addernet::hw::KernelKind;
+use addernet::report::{self, Results};
+use addernet::sim::accelerator::{self, AccelConfig};
+use addernet::util::table::{f, Table};
+use addernet::{data, nn, runtime};
+
+/// Minimal flag parser: positional args + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn art_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts", "artifacts"))
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let r = match cmd.as_str() {
+        "report" => cmd_report(&args),
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "quantize" => cmd_quantize(&args),
+        "simulate" => cmd_simulate(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other}");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "repro — AdderNet minimalist-hardware reproduction (see DESIGN.md)\n\
+         usage:\n  \
+         repro report <exp> [--arch lenet5] [--eval-n 256] [--artifacts DIR]\n    \
+         exps: {}\n  \
+         repro train [--arch lenet5] [--kernel adder] [--steps 400] [--eval-n 512]\n  \
+         repro serve [--models lenet5_adder,lenet5_mult] [--requests 512] [--window-ms 2]\n  \
+         repro quantize [--arch lenet5] [--kernel adder] [--bits 8] [--mode shared|separate]\n  \
+         repro simulate [--net resnet18] [--kernel adder|mult] [--dw 16] [--parallelism 1024]\n  \
+         repro info",
+        report::EXPERIMENTS.join(" ")
+    );
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let exp = args.positional.first()
+        .context("report needs an experiment id")?;
+    report::run(exp, &art_dir(args), &args.get("arch", "lenet5"),
+                args.get_usize("eval-n", 256))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let arch = args.get("arch", "lenet5");
+    let kernel = args.get("kernel", "adder");
+    let dir = art_dir(args);
+    let manifest = Manifest::load(&dir)?;
+    let mut rt = runtime::Runtime::new(&dir)?;
+    let mut trainer = Trainer::new(&manifest, &mut rt, &arch, &kernel)?;
+    let ginfo = manifest.graph(&format!("{arch}_{kernel}_train"))?;
+    let steps = args.get_usize("steps", ginfo.total_steps.max(1));
+    let eval_n = args.get_usize("eval-n", 512);
+    let seed = args.get_usize("seed", 1) as u64;
+
+    println!("[train] {arch}/{kernel}: {steps} steps, batch {}", trainer.batch_size);
+    let mut stream = data::BatchStream::new(seed, trainer.batch_size);
+    let t0 = std::time::Instant::now();
+    for s in 0..steps {
+        let batch = stream.next_batch();
+        let (loss, acc) = trainer.train_step(&rt, &batch)?;
+        if s % 20 == 0 || s + 1 == steps {
+            println!("  step {s:4}  loss {loss:.4}  batch-acc {acc:.3}");
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("[train] {steps} steps in {dt:.1}s ({:.1} steps/s)", steps as f64 / dt);
+
+    let ev = data::eval_set(eval_n, seed);
+    let acc = trainer.evaluate(&rt, &ev.images, &ev.labels)?;
+    println!("[train] eval accuracy over {eval_n}: {:.3}", acc);
+
+    let wfile = report::quantrep::trained_file(&arch, &kernel);
+    trainer.save_params(&manifest, &wfile)?;
+    println!("[train] weights saved to {}", dir.join(&wfile).display());
+
+    let mut results = Results::load(&dir);
+    results.set(&format!("acc/{arch}_{kernel}"), acc);
+    results.set(&format!("loss/{arch}_{kernel}"),
+                trainer.history.last().map(|r| r.loss as f64).unwrap_or(0.0));
+    results.save(&dir)?;
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = art_dir(args);
+    let manifest = Manifest::load(&dir)?;
+    let models = args.get("models", "lenet5_adder,lenet5_mult");
+    let n_req = args.get_usize("requests", 512);
+    let window = Duration::from_millis(args.get_usize("window-ms", 2) as u64);
+    let variants: Vec<VariantCfg> = models.split(',').map(|m| {
+        let m = m.trim().to_string();
+        let (arch, kernel) = m.split_once('_').unwrap_or((m.as_str(), "adder"));
+        let w = report::quantrep::trained_file(arch, kernel);
+        VariantCfg {
+            model: m.clone(),
+            weights: dir.join(&w).exists().then_some(w),
+        }
+    }).collect();
+
+    println!("[serve] starting {} variants, window {:?}", variants.len(), window);
+    let handle = server::start(&manifest, &variants, window)?;
+    let names = handle.variants();
+
+    // synthetic load: round-robin the variants
+    let eval = data::eval_set(n_req, 3);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n_req {
+        let img = eval.images[i * 1024..(i + 1) * 1024].to_vec();
+        let v = &names[i % names.len()];
+        pending.push((i, handle.submit(v, img)?));
+    }
+    let mut correct = 0usize;
+    for (i, rx) in pending {
+        let resp = rx.recv().context("response channel closed")?;
+        let pred = resp.logits.iter().enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        if pred == eval.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("[serve] {n_req} requests in {dt:.2}s = {:.0} img/s, acc {:.3}",
+             n_req as f64 / dt, correct as f64 / n_req as f64);
+
+    let metrics = handle.metrics.lock().unwrap().clone();
+    let mut t = Table::new("serving metrics", &[
+        "variant", "requests", "batches", "mean batch", "queue p50 us",
+        "exec p50 us", "e2e p99 us",
+    ]);
+    for (name, m) in &metrics {
+        t.row(&[
+            name.clone(),
+            m.requests.to_string(),
+            m.batches.to_string(),
+            f(m.mean_batch_size(), 1),
+            m.queue_lat.quantile_us(0.5).to_string(),
+            m.exec_lat.quantile_us(0.5).to_string(),
+            m.e2e_lat.quantile_us(0.99).to_string(),
+        ]);
+    }
+    drop(metrics);
+    t.print();
+    handle.shutdown();
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let dir = art_dir(args);
+    let arch = args.get("arch", "lenet5");
+    let bits: u32 = args.get("bits", "8").parse().context("--bits")?;
+    let kernel = args.get("kernel", "adder");
+    let mode = match args.get("mode", "shared").as_str() {
+        "shared" => addernet::quant::Mode::SharedScale,
+        "separate" => addernet::quant::Mode::SeparateScale,
+        m => anyhow::bail!("unknown mode {m}"),
+    };
+    let n_eval = args.get_usize("eval-n", 256);
+
+    let manifest = Manifest::load(&dir)?;
+    let sarch = addernet::sim::functional::Arch::parse(&arch)
+        .context("arch must be lenet5|resnet8|resnet20")?;
+    let kind = match kernel.as_str() {
+        "adder" => addernet::sim::functional::SimKernel::Adder,
+        "mult" => addernet::sim::functional::SimKernel::Mult,
+        k => anyhow::bail!("functional sim supports adder|mult, got {k}"),
+    };
+    let (params, trained) = report::quantrep::load_params(&manifest, &arch, &kernel)?;
+    let (calib, fp32) = report::quantrep::calibrate(&params, sarch, kind, n_eval);
+    let qacc = report::quantrep::quant_accuracy(
+        &params, sarch, kind, &calib,
+        addernet::sim::functional::QuantCfg { bits, mode }, n_eval);
+    println!("[quantize] {arch}/{kernel} trained={trained} mode={mode:?}");
+    println!("  fp32 acc {fp32:.3}  int{bits} acc {qacc:.3}  delta {:+.1}pp",
+             (qacc - fp32) * 100.0);
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let net_name = args.get("net", "resnet18");
+    let net = nn::by_name(&net_name)
+        .with_context(|| format!("unknown network {net_name}"))?;
+    let kernel = match args.get("kernel", "adder").as_str() {
+        "adder" => KernelKind::Adder2A,
+        "adder1c1a" => KernelKind::Adder1C1A,
+        "mult" => KernelKind::Mult,
+        "xnor" => KernelKind::Xnor,
+        k => anyhow::bail!("unknown kernel {k}"),
+    };
+    let dw: u32 = args.get("dw", "16").parse()?;
+    let p: u64 = args.get("parallelism", "1024").parse()?;
+    let cfg = AccelConfig::zcu104(p, dw, kernel);
+    let res = accelerator::resources(&cfg);
+    let run = accelerator::run(&cfg, &net);
+
+    println!("[simulate] {} on {} P={p} DW={dw} kernel={}",
+             net.name, cfg.device.name, kernel.label());
+    println!("  network: {:.2} GOP, {:.1}M params", net.gops(),
+             net.params() as f64 / 1e6);
+    println!("  LUTs: compute {} + other {} = {} ({:.1}% of device)",
+             res.compute_luts(), res.total() - res.compute_luts(), res.total(),
+             100.0 * cfg.device.lut_utilization(res.total()));
+    println!("  fmax {:.0} MHz | conv {:.0} GOPs | total {:.0} GOPs | \
+              latency {:.2} ms | DRAM {:.1} MB/img",
+             run.fmax_mhz, run.conv_gops(), run.total_gops(), run.latency_ms(),
+             run.dram_bytes as f64 / 1e6);
+    let p = &run.power;
+    println!("  power: compute {:.2} + bram {:.2} + dram {:.2} + clock {:.2} \
+              = {:.2} W", p.compute_w, p.bram_w, p.dram_w, p.clock_w, p.total_w());
+
+    let mut t = Table::new("per-layer schedule (top 12 by cycles)",
+                           &["layer", "ops", "compute cyc", "dma cyc", "cycles"]);
+    let mut layers = run.layers.clone();
+    layers.sort_by_key(|l| std::cmp::Reverse(l.cycles));
+    for l in layers.iter().take(12) {
+        t.row(&[l.name.clone(), l.ops.to_string(), l.compute_cycles.to_string(),
+                l.dma_cycles.to_string(), l.cycles.to_string()]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = art_dir(args);
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} ({} graphs, impl={})", dir.display(),
+                     m.graphs.len(), m.impl_name);
+            for (name, g) in &m.graphs {
+                println!("  {name:28} kind={:8} batch={}", g.kind, g.batch);
+            }
+        }
+        Err(e) => println!("no artifacts at {} ({e}); run `make artifacts`",
+                           dir.display()),
+    }
+    println!("\nnetworks:");
+    for n in ["lenet5", "resnet8", "resnet18", "resnet20", "resnet50", "vgg16",
+              "alexnet"] {
+        let net = nn::by_name(n).unwrap();
+        println!("  {:10} {:8.2} GOP {:8.1}M params", n, net.gops(),
+                 net.params() as f64 / 1e6);
+    }
+    Ok(())
+}

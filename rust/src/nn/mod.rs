@@ -1,0 +1,218 @@
+//! Network descriptors: shapes, MACs, parameter counts.
+//!
+//! These drive the FPGA accelerator simulator (which layers to tile, how
+//! many ops to schedule, how much data to move) and the S8 comparison
+//! table.  Descriptors cover the paper's evaluation workloads: LeNet-5
+//! (Fig. 5), ResNet-18 (on-board E8), ResNet-20/50 (quantization
+//! experiments) plus VGG-16/AlexNet (S8 comparison rows).
+
+pub mod builders;
+
+pub use builders::*;
+
+/// Spatial padding mode (mirrors the JAX layer conventions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+/// One convolution workload.
+#[derive(Debug, Clone)]
+pub struct ConvLayer {
+    pub name: String,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub stride: usize,
+    pub padding: Padding,
+}
+
+impl ConvLayer {
+    pub fn h_out(&self) -> usize {
+        match self.padding {
+            Padding::Same => self.h_in.div_ceil(self.stride),
+            Padding::Valid => (self.h_in - self.kh) / self.stride + 1,
+        }
+    }
+
+    pub fn w_out(&self) -> usize {
+        match self.padding {
+            Padding::Same => self.w_in.div_ceil(self.stride),
+            Padding::Valid => (self.w_in - self.kw) / self.stride + 1,
+        }
+    }
+
+    /// Multiply-accumulate (or add-accumulate) count for one image.
+    pub fn macs(&self) -> u64 {
+        (self.kh * self.kw * self.cin * self.cout * self.h_out() * self.w_out()) as u64
+    }
+
+    pub fn params(&self) -> u64 {
+        (self.kh * self.kw * self.cin * self.cout) as u64
+    }
+
+    /// Input feature bytes at data width `dw_bits`.
+    pub fn input_bytes(&self, dw_bits: u32) -> u64 {
+        (self.h_in * self.w_in * self.cin) as u64 * dw_bits as u64 / 8
+    }
+
+    pub fn output_bytes(&self, dw_bits: u32) -> u64 {
+        (self.h_out() * self.w_out() * self.cout) as u64 * dw_bits as u64 / 8
+    }
+
+    pub fn weight_bytes(&self, dw_bits: u32) -> u64 {
+        self.params() * dw_bits as u64 / 8
+    }
+}
+
+/// Non-conv layers tracked for op/traffic accounting.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    Conv(ConvLayer),
+    /// Window pooling (avg or max — same cost model).
+    Pool { name: String, window: usize, stride: usize, h_in: usize, w_in: usize, ch: usize },
+    Dense { name: String, din: usize, dout: usize },
+    GlobalPool { ch: usize, h_in: usize, w_in: usize },
+}
+
+impl Layer {
+    pub fn macs(&self) -> u64 {
+        match self {
+            Layer::Conv(c) => c.macs(),
+            Layer::Dense { din, dout, .. } => (din * dout) as u64,
+            Layer::Pool { window, h_in, w_in, ch, stride, .. } => {
+                ((h_in / stride) * (w_in / stride) * ch * window * window) as u64 / 2
+            }
+            Layer::GlobalPool { ch, h_in, w_in } => (ch * h_in * w_in) as u64 / 2,
+        }
+    }
+
+    pub fn params(&self) -> u64 {
+        match self {
+            Layer::Conv(c) => c.params() + c.cout as u64, // + BN scale
+            Layer::Dense { din, dout, .. } => (din * dout + dout) as u64,
+            _ => 0,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Conv(c) => &c.name,
+            Layer::Pool { name, .. } => name,
+            Layer::Dense { name, .. } => name,
+            Layer::GlobalPool { .. } => "gap",
+        }
+    }
+}
+
+/// A whole network workload.
+#[derive(Debug, Clone)]
+pub struct NetworkDesc {
+    pub name: String,
+    /// Input (h, w, c).
+    pub input: (usize, usize, usize),
+    pub layers: Vec<Layer>,
+}
+
+impl NetworkDesc {
+    /// Total operations per image, counting 1 MAC = 2 ops (paper's GOP).
+    pub fn ops(&self) -> u64 {
+        2 * self.layers.iter().map(|l| l.macs()).sum::<u64>()
+    }
+
+    pub fn gops(&self) -> f64 {
+        self.ops() as f64 / 1e9
+    }
+
+    pub fn params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    pub fn conv_layers(&self) -> impl Iterator<Item = &ConvLayer> {
+        self.layers.iter().filter_map(|l| match l {
+            Layer::Conv(c) => Some(c),
+            _ => None,
+        })
+    }
+
+    /// Share of ops in convolutions (the part the PE array accelerates).
+    pub fn conv_op_fraction(&self) -> f64 {
+        let conv: u64 = self.conv_layers().map(|c| c.macs()).sum();
+        let total: u64 = self.layers.iter().map(|l| l.macs()).sum();
+        conv as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shapes() {
+        let c = ConvLayer {
+            name: "c".into(), kh: 5, kw: 5, cin: 1, cout: 6,
+            h_in: 32, w_in: 32, stride: 1, padding: Padding::Valid,
+        };
+        assert_eq!(c.h_out(), 28);
+        assert_eq!(c.macs(), 5 * 5 * 6 * 28 * 28);
+        let s = ConvLayer { stride: 2, padding: Padding::Same, ..c };
+        assert_eq!(s.h_out(), 16);
+    }
+
+    /// S8 anchor: ResNet-18 at 224x224 is ~3.4-3.7 GOP, ~11.6M params.
+    #[test]
+    fn resnet18_matches_s8_row() {
+        let net = resnet18();
+        let gop = net.gops();
+        assert!((3.3..=3.8).contains(&gop), "resnet18 {gop} GOP");
+        let mp = net.params() as f64 / 1e6;
+        assert!((11.0..=12.2).contains(&mp), "resnet18 {mp}M params");
+    }
+
+    /// S8 anchors for the comparison rows.
+    #[test]
+    fn vgg16_alexnet_match_s8_rows() {
+        let v = vgg16();
+        assert!((29.0..=32.0).contains(&v.gops()), "vgg16 {} GOP", v.gops());
+        assert!((135.0..=140.0).contains(&(v.params() as f64 / 1e6)));
+        let a = alexnet();
+        assert!((1.2..=1.6).contains(&a.gops()), "alexnet {} GOP", a.gops());
+        assert!((58.0..=63.0).contains(&(a.params() as f64 / 1e6)),
+                "alexnet {}M", a.params() as f64 / 1e6);
+    }
+
+    #[test]
+    fn resnet50_scale() {
+        let n = resnet50();
+        assert!((7.0..=8.5).contains(&n.gops()), "resnet50 {} GOP", n.gops());
+        assert!((24.0..=27.0).contains(&(n.params() as f64 / 1e6)));
+    }
+
+    #[test]
+    fn lenet5_tiny() {
+        let n = lenet5();
+        assert!(n.ops() < 2_000_000);
+        assert_eq!(n.conv_layers().count(), 2);
+        let c: Vec<_> = n.conv_layers().collect();
+        assert_eq!((c[0].cin, c[0].cout), (1, 6));
+        assert_eq!((c[1].cin, c[1].cout), (6, 16));
+    }
+
+    #[test]
+    fn conv_dominates_big_nets() {
+        for net in [resnet18(), vgg16(), resnet50()] {
+            assert!(net.conv_op_fraction() > 0.95, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn resnet20_cifar_scale() {
+        let n = resnet20();
+        assert!((0.26..=0.30).contains(&(n.params() as f64 / 1e6)),
+                "{}M", n.params() as f64 / 1e6);
+    }
+}

@@ -1,0 +1,212 @@
+//! Shared-scaling-factor quantization (paper §3.1).
+//!
+//! AdderNet's L1 similarity is 1-homogeneous, so if features and weights
+//! share ONE power-of-two scale `2^e`, the integer datapath needs no
+//! point-alignment shifter: `-Σ|q(x) - q(w)| * 2^e` IS the quantized
+//! convolution.  CNN needs (and tolerates) separate per-tensor scales
+//! because products compose scales multiplicatively.  Both modes are
+//! implemented; the S7 experiment contrasts them.
+
+use std::collections::BTreeMap;
+
+/// Quantization mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// One scale shared by features and weights (the paper's method —
+    /// hardware-friendly for the adder kernel).
+    SharedScale,
+    /// Separate feature/weight scales (CNN-style). For the adder kernel
+    /// this forces a point-alignment shift that loses information.
+    SeparateScale,
+}
+
+/// Integer grid maximum for signed `bits` quantization.
+pub fn qmax(bits: u32) -> i32 {
+    (1 << (bits - 1)) - 1
+}
+
+/// Power-of-two scale exponent: smallest e with qmax * 2^e >= max_abs.
+pub fn scale_exp(max_abs: f32, bits: u32) -> i32 {
+    let m = (max_abs.max(1e-12) / qmax(bits) as f32).log2();
+    m.ceil() as i32
+}
+
+/// Round-half-to-even (matches numpy/jnp.round, keeping the Rust
+/// functional path bit-identical to the Python oracle).
+pub fn round_even(x: f32) -> f32 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        // halfway: pick the even neighbour
+        let down = x.trunc();
+        let up = down + x.signum();
+        if (down as i64) % 2 == 0 { down } else { up }
+    } else {
+        r
+    }
+}
+
+/// Quantize one value to the signed integer grid at scale 2^exp.
+pub fn quantize(x: f32, exp: i32, bits: u32) -> i32 {
+    let s = (exp as f32).exp2();
+    let q = round_even(x / s);
+    (q as i32).clamp(-qmax(bits), qmax(bits))
+}
+
+/// Dequantize.
+pub fn dequantize(q: i32, exp: i32) -> f32 {
+    q as f32 * (exp as f32).exp2()
+}
+
+/// Quantize a slice.
+pub fn quantize_slice(xs: &[f32], exp: i32, bits: u32) -> Vec<i32> {
+    xs.iter().map(|&x| quantize(x, exp, bits)).collect()
+}
+
+pub fn max_abs(xs: &[f32]) -> f32 {
+    xs.iter().fold(0f32, |m, &x| m.max(x.abs()))
+}
+
+/// Per-layer calibration record: observed feature range + weight range.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerCalib {
+    pub feat_max_abs: f32,
+    pub weight_max_abs: f32,
+}
+
+impl LayerCalib {
+    /// The paper's shared exponent: covers the JOINT range (Fig. 3c).
+    pub fn shared_exp(&self, bits: u32) -> i32 {
+        scale_exp(self.feat_max_abs.max(self.weight_max_abs), bits)
+    }
+
+    /// Separate exponents (feature, weight) for the CNN-style mode.
+    pub fn separate_exps(&self, bits: u32) -> (i32, i32) {
+        (scale_exp(self.feat_max_abs, bits), scale_exp(self.weight_max_abs, bits))
+    }
+}
+
+/// Calibration table for a whole model, keyed by conv-layer name.
+pub type Calibration = BTreeMap<String, LayerCalib>;
+
+/// Histogram of log2-magnitudes — regenerates Fig. 3(a)/(b): the paper's
+/// feature/weight distribution plots that justify the shared scale.
+#[derive(Debug, Clone)]
+pub struct Log2Histogram {
+    /// Bucket k counts values with 2^k <= |x| < 2^(k+1); range [lo, hi).
+    pub lo: i32,
+    pub hi: i32,
+    pub counts: Vec<u64>,
+    pub zero_or_tiny: u64,
+    pub total: u64,
+}
+
+impl Log2Histogram {
+    pub fn new(lo: i32, hi: i32) -> Self {
+        Self { lo, hi, counts: vec![0; (hi - lo) as usize], zero_or_tiny: 0, total: 0 }
+    }
+
+    pub fn add(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.total += 1;
+            let a = x.abs();
+            if a < (self.lo as f32).exp2() {
+                self.zero_or_tiny += 1;
+                continue;
+            }
+            let k = a.log2().floor() as i32;
+            let idx = (k.clamp(self.lo, self.hi - 1) - self.lo) as usize;
+            self.counts[idx] += 1;
+        }
+    }
+
+    /// Fraction of mass inside [2^a, 2^b) — the "96% of features within
+    /// the clip region" style statement of §3.1.
+    pub fn fraction_in(&self, a: i32, b: i32) -> f64 {
+        let s: u64 = self.counts.iter().enumerate()
+            .filter(|(i, _)| {
+                let k = self.lo + *i as i32;
+                k >= a && k < b
+            })
+            .map(|(_, c)| *c)
+            .sum();
+        s as f64 / self.total.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(8), 127);
+        assert_eq!(qmax(4), 7);
+        assert_eq!(qmax(16), 32767);
+    }
+
+    #[test]
+    fn scale_exp_covers() {
+        for bits in [4u32, 6, 8, 16] {
+            let e = scale_exp(7.3, bits);
+            assert!(qmax(bits) as f32 * (e as f32).exp2() >= 7.3);
+            assert!(qmax(bits) as f32 * ((e - 1) as f32).exp2() < 7.3);
+        }
+    }
+
+    #[test]
+    fn round_even_matches_numpy() {
+        assert_eq!(round_even(0.5), 0.0);
+        assert_eq!(round_even(1.5), 2.0);
+        assert_eq!(round_even(2.5), 2.0);
+        assert_eq!(round_even(-0.5), 0.0);
+        assert_eq!(round_even(-1.5), -2.0);
+        assert_eq!(round_even(1.4), 1.0);
+        assert_eq!(round_even(-1.6), -2.0);
+    }
+
+    #[test]
+    fn quantize_clamps() {
+        assert_eq!(quantize(1e9, 0, 8), 127);
+        assert_eq!(quantize(-1e9, 0, 8), -127);
+        assert_eq!(quantize(3.0, 0, 8), 3);
+        assert_eq!(quantize(3.0, 1, 8), 2); // 3/2 = 1.5 -> even -> 2
+    }
+
+    #[test]
+    fn quant_dequant_error_bounded() {
+        let exp = -4;
+        let s = (exp as f32).exp2();
+        for x in [-1.0f32, -0.3, 0.0, 0.11, 0.99] {
+            let q = quantize(x, exp, 8);
+            assert!((dequantize(q, exp) - x).abs() <= s / 2.0 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn shared_exp_covers_joint_range() {
+        let c = LayerCalib { feat_max_abs: 4.0, weight_max_abs: 8.0 };
+        let e = c.shared_exp(8);
+        assert!(qmax(8) as f32 * (e as f32).exp2() >= 8.0);
+        let (ef, ew) = c.separate_exps(8);
+        assert!(ef <= e && ew <= e);
+    }
+
+    #[test]
+    fn histogram_fractions() {
+        let mut h = Log2Histogram::new(-8, 4);
+        // values spanning 2^-4..2^2 like the paper's Fig 3a
+        let xs: Vec<f32> = (0..1000)
+            .map(|i| 0.0625 * 1.005f32.powi(i))
+            .collect();
+        h.add(&xs);
+        assert!(h.fraction_in(-5, 3) > 0.9);
+        assert_eq!(h.total, 1000);
+    }
+
+    #[test]
+    fn histogram_handles_zeros() {
+        let mut h = Log2Histogram::new(-8, 4);
+        h.add(&[0.0, 1e-12, 1.0]);
+        assert_eq!(h.zero_or_tiny, 2);
+    }
+}

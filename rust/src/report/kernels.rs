@@ -1,0 +1,150 @@
+//! Kernel-level reports: Fig. 2(b,c), S1, S4 (Fig. 11), S5 (Fig. 12).
+
+use crate::hw::kernelcircuit::KernelKind;
+use crate::util::table::{f, Table};
+
+use super::results::Results;
+
+/// Fig. 2(c): energy per kernel operation for each network kind.
+pub fn fig2c() -> Table {
+    let mut t = Table::new(
+        "Fig. 2c — energy per kernel operation (pJ, ASIC scale)",
+        &["kernel", "8bit", "16bit", "32bit", "paper anchor"],
+    );
+    let rows: Vec<(KernelKind, &str)> = vec![
+        (KernelKind::Xnor, "<0.01 (1bit)"),
+        (KernelKind::Memristor, "~0.01 excl. DAC/ADC"),
+        (KernelKind::Adder1C1A, "0.04 / 0.07 / 0.14"),
+        (KernelKind::Adder2A, "0.06 / 0.1 / 0.2"),
+        (KernelKind::Shift { weight_bits: 1 }, "0.054 / ~0.105 / 0.23"),
+        (KernelKind::Shift { weight_bits: 6 }, "0.324 / 0.63 / 1.38"),
+        (KernelKind::Mult, "0.2 / - / 3.1"),
+    ];
+    for (k, anchor) in rows {
+        t.row(&[
+            k.label(),
+            f(k.lane_energy_pj(8), 3),
+            f(k.lane_energy_pj(16), 3),
+            f(k.lane_energy_pj(32), 3),
+            anchor.into(),
+        ]);
+    }
+    t
+}
+
+/// S4 (Fig. 11): detailed energy table, model vs paper cells.
+pub fn s4() -> Table {
+    let mut t = Table::new(
+        "S4 / Fig. 11 — kernel energy (pJ): model vs paper",
+        &["data width", "1C1A model", "1C1A paper", "2A model", "2A paper",
+          "mult model", "mult paper"],
+    );
+    let paper: &[(u32, &str, &str, &str)] = &[
+        (8, "0.04", "0.06", "0.2"),
+        (16, "0.07", "0.1", "-"),
+        (32, "0.14", "0.2", "3.1"),
+    ];
+    for &(dw, p1, p2, pm) in paper {
+        t.row(&[
+            format!("{dw}bit"),
+            f(KernelKind::Adder1C1A.lane_energy_pj(dw), 3), p1.into(),
+            f(KernelKind::Adder2A.lane_energy_pj(dw), 3), p2.into(),
+            f(KernelKind::Mult.lane_energy_pj(dw), 3), pm.into(),
+        ]);
+    }
+    t
+}
+
+/// S5 (Fig. 12): circuit area table, model vs paper cells.
+pub fn s5() -> Table {
+    let mut t = Table::new(
+        "S5 / Fig. 12 — kernel circuit area (units): model vs paper",
+        &["data width", "1C1A model", "1C1A paper", "2A model", "2A paper",
+          "mult model", "mult paper"],
+    );
+    let paper: &[(u32, &str, &str, &str)] = &[
+        (8, "58", "72", "282"),
+        (16, "112", "134", "-"),
+        (32, "227", "274", "3495"),
+    ];
+    for &(dw, p1, p2, pm) in paper {
+        t.row(&[
+            format!("{dw}bit"),
+            f(KernelKind::Adder1C1A.lane_cost(dw).area_units, 0), p1.into(),
+            f(KernelKind::Adder2A.lane_cost(dw).area_units, 0), p2.into(),
+            f(KernelKind::Mult.lane_cost(dw).area_units, 0), pm.into(),
+        ]);
+    }
+    t
+}
+
+/// S1: the 1C1A vs 2A design trade-off (area vs speed).
+pub fn s1() -> Table {
+    let mut t = Table::new(
+        "S1 — adder kernel schemes: 1C1A (smaller) vs 2A (faster; deployed)",
+        &["scheme", "dw", "LUTs", "area units", "energy pJ", "delay ns"],
+    );
+    for dw in [8u32, 16, 32] {
+        for k in [KernelKind::Adder1C1A, KernelKind::Adder2A] {
+            let c = k.lane_cost(dw);
+            t.row(&[
+                k.label(),
+                dw.to_string(),
+                c.luts.to_string(),
+                f(c.area_units, 0),
+                f(c.energy_pj, 3),
+                f(c.delay_ns, 2),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 2(a/b): recognition accuracy of the trained kernels.  Measured
+/// rows come from `repro train` results on synthetic-10; the paper's
+/// ImageNet/CIFAR numbers are reproduced as citation columns.
+pub fn fig2(results: &Results) -> Table {
+    let mut t = Table::new(
+        "Fig. 2a/b — kernel accuracy: measured (synthetic-10) vs paper (cited)",
+        &["kernel", "LeNet-5 (meas)", "ResNet-8 (meas)",
+          "paper ResNet-50 ImageNet top-1", "paper note"],
+    );
+    let rows = [
+        ("adder", "76.8%", "AdderNet == or > CNN"),
+        ("mult", "76.13%", "CNN baseline"),
+        ("shift", "~75%", "DeepShift ~1% drop (6b)"),
+        ("xnor", "51.2%", "XNOR large drop"),
+    ];
+    for (k, paper, note) in rows {
+        t.row(&[
+            k.into(),
+            results.fmt_acc(&format!("acc/lenet5_{k}")),
+            results.fmt_acc(&format!("acc/resnet8_{k}")),
+            paper.into(),
+            note.into(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render() {
+        for t in [fig2c(), s4(), s5(), s1()] {
+            let s = t.render();
+            assert!(s.len() > 100);
+            assert!(t.rows_len() >= 3);
+        }
+    }
+
+    #[test]
+    fn fig2_uses_results() {
+        let mut r = Results::default();
+        r.set("acc/lenet5_adder", 0.912);
+        let t = fig2(&r);
+        assert!(t.render().contains("91.2%"));
+    }
+}

@@ -1,0 +1,71 @@
+//! Paper-style report renderers: one entry point per table/figure
+//! (DESIGN.md §4 experiment index).  `repro report <exp>` dispatches here.
+
+pub mod evalrt;
+pub mod fpga;
+pub mod kernels;
+pub mod quantrep;
+pub mod results;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+pub use results::Results;
+
+/// All experiment ids `repro report` accepts.
+pub const EXPERIMENTS: &[&str] = &[
+    "fig2", "fig2c", "fig3ab", "fig3d", "s6", "s7", "eq23", "fig4c", "fig4d",
+    "fig5", "onboard", "s1", "s4", "s5", "s8", "hw-all",
+];
+
+/// Render one experiment to stdout.
+pub fn run(exp: &str, art_dir: &Path, arch: &str, n_eval: usize) -> Result<()> {
+    match exp {
+        "fig2" => match evalrt::fig2_measured(art_dir, n_eval) {
+            Ok(t) => t.print(),
+            Err(e) => {
+                eprintln!("[report] runtime fig2 unavailable ({e}); using results.json");
+                kernels::fig2(&Results::load(art_dir)).print();
+            }
+        },
+        "fig2c" => kernels::fig2c().print(),
+        "s1" => kernels::s1().print(),
+        "s4" => kernels::s4().print(),
+        "s5" => kernels::s5().print(),
+        "eq23" => fpga::eq23().print(),
+        "fig4c" => {
+            fpga::fig4_components(16, crate::hw::KernelKind::Mult).print();
+            fpga::fig4_components(16, crate::hw::KernelKind::Adder2A).print();
+            fpga::fig4_savings(16).print();
+        }
+        "fig4d" => {
+            fpga::fig4_components(8, crate::hw::KernelKind::Mult).print();
+            fpga::fig4_components(8, crate::hw::KernelKind::Adder2A).print();
+            fpga::fig4_savings(8).print();
+        }
+        "fig5" => {
+            for t in fpga::fig5() {
+                t.print();
+            }
+        }
+        "onboard" => fpga::onboard().print(),
+        "s8" => fpga::s8().print(),
+        "fig3ab" => {
+            for t in quantrep::fig3ab(art_dir, arch)? {
+                t.print();
+            }
+        }
+        "fig3d" => quantrep::fig3d(art_dir, arch, n_eval)?.print(),
+        "s6" => quantrep::fig3d(art_dir, "resnet8", n_eval)?.print(),
+        "s7" => quantrep::s7(art_dir, arch, n_eval)?.print(),
+        "hw-all" => {
+            for e in ["fig2c", "s1", "s4", "s5", "eq23", "fig4c", "fig4d",
+                      "fig5", "onboard", "s8"] {
+                run(e, art_dir, arch, n_eval)?;
+            }
+        }
+        other => anyhow::bail!("unknown experiment {other}; choose from {EXPERIMENTS:?}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,194 @@
+//! Quantization reports: Fig. 3(a/b) distributions, Fig. 3(d) bit sweep,
+//! S6 (deeper net sweep) and S7 (AdderNet-vs-CNN quantized contrast).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Manifest;
+use crate::quant::{self, Calibration, Log2Histogram, Mode};
+use crate::runtime::{self, Runtime};
+use crate::sim::functional::{self, Arch, ExecMode, QuantCfg, Runner, SimKernel, Tensor};
+use crate::util::table::{pct, Table};
+use crate::{data, util::table::f};
+
+/// Weights file naming convention shared with `repro train`.
+pub fn trained_file(arch: &str, kernel: &str) -> String {
+    format!("{arch}_{kernel}_trained.bin")
+}
+
+/// Load trained weights if present, else fall back to init (with a note).
+pub fn load_params(manifest: &Manifest, arch: &str, kernel: &str)
+                   -> Result<(functional::Params, bool)> {
+    let file = trained_file(arch, kernel);
+    if manifest.dir.join(&file).exists() {
+        Ok((manifest.read_params(arch, &file)?, true))
+    } else {
+        let layout = manifest.layout(arch)?;
+        eprintln!("[report] no {file}; using INIT weights — run `repro train \
+                   --arch {arch} --kernel {kernel}` first for meaningful accuracy");
+        Ok((manifest.read_params(arch, &layout.init_file.clone())?, false))
+    }
+}
+
+fn eval_tensor(n: usize) -> (Tensor, Vec<i32>) {
+    let b = data::eval_set(n, 7);
+    (Tensor::new((b.n, 32, 32, 1), b.images), b.labels)
+}
+
+/// Calibration pass: run f32 forward over a calibration set, recording
+/// per-layer feature/weight ranges.
+pub fn calibrate(params: &functional::Params, arch: Arch, kind: SimKernel,
+                 n: usize) -> (Calibration, f64) {
+    let (x, labels) = eval_tensor(n);
+    let mut calib = Calibration::new();
+    let acc = {
+        let mut runner = Runner {
+            params,
+            arch,
+            kind,
+            mode: ExecMode::F32,
+            calib: None,
+            observe: Some(&mut calib),
+        };
+        functional::accuracy(&mut runner, &x, &labels)
+    };
+    (calib, acc)
+}
+
+/// Accuracy at a given quantization config.
+pub fn quant_accuracy(params: &functional::Params, arch: Arch, kind: SimKernel,
+                      calib: &Calibration, cfg: QuantCfg, n: usize) -> f64 {
+    let (x, labels) = eval_tensor(n);
+    let mut runner = Runner {
+        params,
+        arch,
+        kind,
+        mode: ExecMode::Quant(cfg),
+        calib: Some(calib),
+        observe: None,
+    };
+    functional::accuracy(&mut runner, &x, &labels)
+}
+
+/// Fig. 3(d): quantized AdderNet accuracy vs bit width (+ S6 for the
+/// deeper variant via `arch`).
+pub fn fig3d(art_dir: &Path, arch_name: &str, n_eval: usize) -> Result<Table> {
+    let manifest = Manifest::load(art_dir)?;
+    let arch = Arch::parse(arch_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown arch {arch_name}"))?;
+    let (params, trained) = load_params(&manifest, arch_name, "adder")?;
+    let (calib, fp32_acc) = calibrate(&params, arch, SimKernel::Adder, n_eval);
+
+    let paper = "paper ResNet-18 top-1: fp32 68.8, 8b 68.8, 5b 65.5, 4b degrades";
+    let mut t = Table::new(
+        &format!("Fig. 3d — shared-scale quantized AdderNet {arch_name} \
+                  (trained={trained}; {paper})"),
+        &["precision", "accuracy (synthetic-10)", "delta vs fp32"],
+    );
+    t.row(&["fp32".into(), pct(fp32_acc), "-".into()]);
+    for bits in [16u32, 8, 7, 6, 5, 4] {
+        let acc = quant_accuracy(&params, arch, SimKernel::Adder, &calib,
+                                 QuantCfg { bits, mode: Mode::SharedScale }, n_eval);
+        t.row(&[format!("int{bits}"), pct(acc), format!("{:+.1}pp", (acc - fp32_acc) * 100.0)]);
+    }
+    Ok(t)
+}
+
+/// S7: AdderNet (shared scale) vs CNN (separate scale) at 8/4 bit.
+pub fn s7(art_dir: &Path, arch_name: &str, n_eval: usize) -> Result<Table> {
+    let manifest = Manifest::load(art_dir)?;
+    let arch = Arch::parse(arch_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown arch {arch_name}"))?;
+    let mut t = Table::new(
+        &format!("S7 — quantized AdderNet vs CNN on {arch_name} \
+                  (paper ResNet-20: CNN 91.76/89.54, AdderNet 91.78/87.57 at 8/4 bit)"),
+        &["kernel", "mode", "fp32", "int8", "int4", "4bit drop"],
+    );
+    for (kname, kind, mode) in [
+        ("adder", SimKernel::Adder, Mode::SharedScale),
+        ("mult", SimKernel::Mult, Mode::SeparateScale),
+    ] {
+        let (params, _) = load_params(&manifest, arch_name, kname)?;
+        let (calib, fp32_acc) = calibrate(&params, arch, kind, n_eval);
+        let a8 = quant_accuracy(&params, arch, kind, &calib,
+                                QuantCfg { bits: 8, mode }, n_eval);
+        let a4 = quant_accuracy(&params, arch, kind, &calib,
+                                QuantCfg { bits: 4, mode }, n_eval);
+        t.row(&[
+            kname.into(),
+            format!("{mode:?}"),
+            pct(fp32_acc),
+            pct(a8),
+            pct(a4),
+            format!("{:+.1}pp", (a4 - fp32_acc) * 100.0),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Fig. 3(a/b): per-layer feature and weight log2-magnitude distributions
+/// of the trained AdderNet, via the AOT probe graph (features) and the
+/// parameter buffers (weights).
+pub fn fig3ab(art_dir: &Path, arch_name: &str) -> Result<Vec<Table>> {
+    let manifest = Manifest::load(art_dir)?;
+    let gname = format!("{arch_name}_adder_probe");
+    let ginfo = manifest.graph(&gname)?.clone();
+    let mut rt = Runtime::new(art_dir)?;
+    rt.load(&gname, &ginfo.file).context("loading probe graph")?;
+
+    let (params, _) = load_params(&manifest, arch_name, "adder")?;
+    // probe inputs: params (sorted) + x
+    let layout = manifest.layout(arch_name)?;
+    let wfile = trained_file(arch_name, "adder");
+    let pfile = if manifest.dir.join(&wfile).exists() { wfile } else { layout.init_file.clone() };
+    let raw = manifest.read_param_file(arch_name, &pfile)?;
+    let lits: Vec<xla::Literal> = raw.iter()
+        .map(|(_, s, d)| runtime::literal_f32(s, d))
+        .collect::<Result<_>>()?;
+    let batch = data::generate(ginfo.batch, 7, 2_000_000);
+    let x = runtime::literal_f32(&[ginfo.batch, 32, 32, 1], &batch.images)?;
+    let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+    inputs.push(&x);
+    let feats = rt.execute(&gname, &inputs)?;
+
+    // feature histogram table (Fig. 3a)
+    let lo = -8;
+    let hi = 5;
+    let mut ta = Table::new(
+        &format!("Fig. 3a — {arch_name} AdderNet input-feature |x| log2 distribution \
+                  (paper: >90% within 2^-4..2^2)"),
+        &["layer", "in [2^-4,2^2)", "in clip [2^-5,2^3)", "zero/tiny"],
+    );
+    for (i, lname) in ginfo.layers.iter().enumerate() {
+        let v = runtime::to_vec_f32(&feats[i])?;
+        let mut h = Log2Histogram::new(lo, hi);
+        h.add(&v);
+        ta.row(&[
+            lname.clone(),
+            pct(h.fraction_in(-4, 2)),
+            pct(h.fraction_in(-5, 3)),
+            pct(h.zero_or_tiny as f64 / h.total as f64),
+        ]);
+    }
+
+    // weight histogram table (Fig. 3b)
+    let mut tb = Table::new(
+        &format!("Fig. 3b — {arch_name} AdderNet weight |w| log2 distribution \
+                  (paper: majority within 2^-2..2^3)"),
+        &["layer", "in [2^-2,2^3)", "in clip [2^-5,2^3)", "max |w|"],
+    );
+    for lname in &ginfo.layers {
+        if let Some((_, d)) = params.get(&format!("{lname}/conv_w")) {
+            let mut h = Log2Histogram::new(lo, hi);
+            h.add(d);
+            tb.row(&[
+                lname.clone(),
+                pct(h.fraction_in(-2, 3)),
+                pct(h.fraction_in(-5, 3)),
+                f(quant::max_abs(d) as f64, 3),
+            ]);
+        }
+    }
+    Ok(vec![ta, tb])
+}

@@ -1,0 +1,85 @@
+//! Tiny persistent results store (`artifacts/results.json`): measured
+//! numbers flow from `repro train` / examples into the report tables.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Flat key -> number store.
+#[derive(Debug, Clone, Default)]
+pub struct Results {
+    pub values: BTreeMap<String, f64>,
+}
+
+impl Results {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Results {
+        let path = dir.as_ref().join("results.json");
+        let mut out = Results::default();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(Json::Obj(m)) = Json::parse(&text) {
+                for (k, v) in m {
+                    if let Some(n) = v.as_f64() {
+                        out.values.insert(k, n);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, dir: P) -> Result<()> {
+        let mut s = String::from("{\n");
+        for (i, (k, v)) in self.values.iter().enumerate() {
+            s.push_str(&format!(" \"{}\": {}{}\n", k, v,
+                                if i + 1 == self.values.len() { "" } else { "," }));
+        }
+        s.push('}');
+        std::fs::write(dir.as_ref().join("results.json"), s)?;
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, v: f64) {
+        self.values.insert(key.to_string(), v);
+    }
+
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.values.get(key).copied()
+    }
+
+    /// Format a stored accuracy as "93.1%" or "-" if absent.
+    pub fn fmt_acc(&self, key: &str) -> String {
+        match self.get(key) {
+            Some(v) => format!("{:.1}%", v * 100.0),
+            None => "-".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("addernet_res_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut r = Results::default();
+        r.set("acc/lenet5_adder", 0.93);
+        r.set("loss/final", 0.21);
+        r.save(&dir).unwrap();
+        let r2 = Results::load(&dir);
+        assert_eq!(r2.get("acc/lenet5_adder"), Some(0.93));
+        assert_eq!(r2.fmt_acc("acc/lenet5_adder"), "93.0%");
+        assert_eq!(r2.fmt_acc("missing"), "-");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_missing_is_empty() {
+        let r = Results::load("/nonexistent_dir_xyz");
+        assert!(r.values.is_empty());
+    }
+}

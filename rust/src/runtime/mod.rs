@@ -1,0 +1,146 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once, execute from
+//! the Layer-3 hot path.
+//!
+//! Interchange format is HLO **text** (not serialized proto): jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Global execute lock: entry into the xla_extension FFI is serialized
+/// across serving workers as a precaution (the 0.5.1 C bindings make no
+/// thread-safety promises for concurrent `execute` from multiple
+/// clients).  PJRT still parallelises *inside* each computation via its
+/// own thread pool, so on CPU this costs little.
+static EXECUTE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Compile-once executable cache over a PJRT CPU client.
+pub struct Runtime {
+    client: PjRtClient,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+    art_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a runtime rooted at the artifacts directory.
+    pub fn new<P: AsRef<Path>>(art_dir: P) -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, exes: HashMap::new(), art_dir: art_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn art_dir(&self) -> &Path {
+        &self.art_dir
+    }
+
+    /// Load + compile `file` (HLO text) under key `name`; no-op if cached.
+    pub fn load(&mut self, name: &str, file: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.art_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute a loaded graph.  All our graphs are lowered with
+    /// `return_tuple=True`, so the single output literal is a tuple that
+    /// gets decomposed into per-leaf literals.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self, name: &str, inputs: &[L],
+    ) -> Result<Vec<Literal>> {
+        let exe = self.exes.get(name)
+            .ok_or_else(|| anyhow::anyhow!("graph {name} not loaded"))?;
+        let _guard = EXECUTE_LOCK.lock().unwrap();
+        let bufs = exe.execute::<L>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let mut out = bufs[0][0].to_literal_sync()?;
+        out.decompose_tuple().map_err(Into::into)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal conversion helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} vs {} elements", shape, data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)
+        .map_err(Into::into)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} vs {} elements", shape, data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)
+        .map_err(Into::into)
+}
+
+/// Scalar i32 literal (e.g. the train-step counter).
+pub fn literal_scalar_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(l: &Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(Into::into)
+}
+
+/// Extract the single f32 scalar from a literal.
+pub fn scalar_f32(l: &Literal) -> Result<f32> {
+    l.get_first_element::<f32>().map_err(Into::into)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0, 7.5, -0.125];
+        let l = literal_f32(&[2, 3], &data).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(to_vec_f32(&l).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let data = vec![1i32, -2, 3];
+        let l = literal_i32(&[3], &data).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(literal_f32(&[2, 2], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let l = literal_scalar_i32(42);
+        assert_eq!(l.get_first_element::<i32>().unwrap(), 42);
+    }
+}

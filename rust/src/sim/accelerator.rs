@@ -1,0 +1,369 @@
+//! General-purpose accelerator simulator (paper Fig. 4 + §4 on-board run).
+//!
+//! Models the ZCU104-class design: a Pin x Pout PE array fed by on-chip
+//! ping/pong buffers over AXI from DRAM.  Produces
+//!
+//! * a **resource breakdown** (conv kernels / adder tree / storage /
+//!   control / others) — the component bars of Fig. 4(c1)(c2)(d1)(d2);
+//! * a **cycle-level schedule** of a network: per-layer compute vs DMA
+//!   cycles with double-buffer overlap — GOPs, latency, utilization
+//!   (the §4 on-board numbers and the S8 "this work" row);
+//! * a **power report** via `hw::power` — the 2.57 W vs 1.34 W contrast.
+//!
+//! Scheduling model: convolutions are tiled `ceil(cin*kh*kw / pin)` input
+//! groups x `ceil(cout / pout)` output groups; kernel taps are mapped
+//! across the Pin lanes (this is how the paper sustains ~97% utilization
+//! on layers whose cin is below Pin).
+
+use crate::hw::array::PeArray;
+use crate::hw::device::Device;
+use crate::hw::kernelcircuit::KernelKind;
+use crate::hw::memory::{AxiBus, ZCU104_AXI};
+use crate::hw::power::{self, PowerReport};
+use crate::hw::timing;
+use crate::nn::{Layer, NetworkDesc};
+
+/// Accelerator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct AccelConfig {
+    pub pin: u64,
+    pub pout: u64,
+    pub dw: u32,
+    pub kernel: KernelKind,
+    pub device: Device,
+    /// Off-chip weights/features (the Fig. 4 design). False = everything
+    /// resident on chip (the Fig. 5 regime).
+    pub use_dram: bool,
+}
+
+impl AccelConfig {
+    pub fn zcu104(parallelism: u64, dw: u32, kernel: KernelKind) -> Self {
+        // paper geometry: Pin fixed at 64, Pout scales.
+        let pin = 64.min(parallelism);
+        Self {
+            pin,
+            pout: (parallelism / pin).max(1),
+            dw,
+            kernel,
+            device: crate::hw::device::ZCU104,
+            use_dram: true,
+        }
+    }
+
+    pub fn array(&self) -> PeArray {
+        PeArray::new(self.pin, self.pout, self.dw, self.kernel)
+    }
+
+    pub fn parallelism(&self) -> u64 {
+        self.pin * self.pout
+    }
+}
+
+/// LUT breakdown matching the component bars of Fig. 4(c1)/(c2).
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceBreakdown {
+    pub conv_kernel_luts: u64,
+    pub adder_tree_luts: u64,
+    pub storage_luts: u64,
+    pub control_luts: u64,
+    pub other_luts: u64,
+}
+
+impl ResourceBreakdown {
+    pub fn compute_luts(&self) -> u64 {
+        self.conv_kernel_luts + self.adder_tree_luts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.compute_luts() + self.storage_luts + self.control_luts + self.other_luts
+    }
+
+    /// Fraction of the whole design occupied by the computation unit
+    /// (paper: 50.48% at P=128 -> 83.9% at P=2048 for 16-bit CNN).
+    pub fn compute_share(&self) -> f64 {
+        self.compute_luts() as f64 / self.total() as f64
+    }
+}
+
+/// Non-datapath LUTs (buffers, AXI/control FSMs, pool/BN units).
+/// Calibrated at DW=16 to the paper's Fig. 4(c1) shares: 50.48% compute
+/// at P=128 and 83.9% at P=2048 for the CNN imply a fixed ~31.6 kLUT
+/// base plus ~40.7 LUT per lane; narrower datapaths scale the
+/// width-proportional part.
+fn non_compute_luts(parallelism: u64, dw: u32) -> (u64, u64, u64) {
+    let width_scale = 0.35 + 0.65 * dw as f64 / 16.0;
+    let base = 31_600.0 * width_scale;
+    let per_lane = 40.7 * width_scale;
+    let total = base + per_lane * parallelism as f64;
+    let storage = (0.60 * total) as u64;
+    let control = (0.25 * total) as u64;
+    let other = (0.15 * total) as u64;
+    (storage, control, other)
+}
+
+/// Synthesize the design: full component breakdown.
+pub fn resources(cfg: &AccelConfig) -> ResourceBreakdown {
+    let arr = cfg.array();
+    let lane = cfg.kernel.lane_cost(cfg.dw).luts;
+    let conv_kernel_luts = arr.pin * arr.pout * lane;
+    let adder_tree_luts = arr.pout * arr.tree().luts_precise();
+    let (storage_luts, control_luts, other_luts) =
+        non_compute_luts(cfg.parallelism(), cfg.dw);
+    ResourceBreakdown {
+        conv_kernel_luts,
+        adder_tree_luts,
+        storage_luts,
+        control_luts,
+        other_luts,
+    }
+}
+
+/// Per-layer schedule record.
+#[derive(Debug, Clone)]
+pub struct LayerRun {
+    pub name: String,
+    pub ops: u64,
+    pub compute_cycles: u64,
+    pub dma_cycles: u64,
+    /// max(compute, dma) under double buffering + fixed pipeline fill.
+    pub cycles: u64,
+    pub dram_bytes: u64,
+}
+
+/// Whole-network run report (the §4 on-board numbers).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub layers: Vec<LayerRun>,
+    pub fmax_mhz: f64,
+    pub conv_ops: u64,
+    pub total_ops: u64,
+    pub conv_cycles: u64,
+    pub total_cycles: u64,
+    pub dram_bytes: u64,
+    pub power: PowerReport,
+}
+
+impl RunReport {
+    pub fn latency_ms(&self) -> f64 {
+        self.total_cycles as f64 / (self.fmax_mhz * 1e3)
+    }
+
+    /// Convolution-only throughput (paper: "424 GOPs for the convolution
+    /// calculation").
+    pub fn conv_gops(&self) -> f64 {
+        self.conv_ops as f64 / (self.conv_cycles as f64 / (self.fmax_mhz * 1e6)) / 1e9
+    }
+
+    /// Whole-network throughput ("307 GOPs for the whole network").
+    pub fn total_gops(&self) -> f64 {
+        self.total_ops as f64 / (self.total_cycles as f64 / (self.fmax_mhz * 1e6)) / 1e9
+    }
+
+    /// Compute-array duty cycle over the run.
+    pub fn duty(&self) -> f64 {
+        self.conv_cycles as f64 / self.total_cycles as f64
+    }
+}
+
+const PIPELINE_FILL_CYCLES: u64 = 256;
+
+/// Simulate one image through `net` on the configured accelerator.
+pub fn run(cfg: &AccelConfig, net: &NetworkDesc) -> RunReport {
+    let axi: AxiBus = ZCU104_AXI;
+    let fmax = timing::analyse(&cfg.array()).fmax_mhz;
+    let bytes_per_el = cfg.dw as u64 / 8;
+    // DRAM bandwidth in bytes/cycle at this clock (AXI width also caps).
+    let dram_bpc = (cfg.device.dram_bw_bytes_per_s / (fmax * 1e6))
+        .min(axi.effective_bytes_per_cycle());
+
+    let mut layers = Vec::new();
+    let (mut conv_ops, mut conv_cycles) = (0u64, 0u64);
+    let (mut total_ops, mut total_cycles) = (0u64, 0u64);
+    let mut dram_total = 0u64;
+
+    for layer in &net.layers {
+        let (name, ops, compute, bytes) = match layer {
+            Layer::Conv(c) => {
+                let taps = (c.cin * c.kh * c.kw) as u64;
+                let in_groups = taps.div_ceil(cfg.pin);
+                let out_groups = (c.cout as u64).div_ceil(cfg.pout);
+                let compute = (c.h_out() * c.w_out()) as u64 * in_groups * out_groups;
+                let bytes = if cfg.use_dram {
+                    // Weights stream ONCE (tile double-buffered); the
+                    // input stays resident if it fits the on-chip
+                    // buffers, otherwise it is re-fetched per output
+                    // group (the memory-hierarchy trade the paper's §4
+                    // deviation discussion is about).
+                    let bram_bytes = cfg.device.bram_kbits * 1024 / 8;
+                    let reload = if c.input_bytes(cfg.dw) <= bram_bytes * 8 / 10 {
+                        1
+                    } else {
+                        out_groups
+                    };
+                    c.weight_bytes(cfg.dw)
+                        + c.input_bytes(cfg.dw) * reload
+                        + c.output_bytes(cfg.dw)
+                } else {
+                    0
+                };
+                (c.name.clone(), 2 * c.macs(), compute, bytes)
+            }
+            Layer::Dense { name, din, dout } => {
+                // runs on the same array, memory-bound on weights.
+                let macs = (din * dout) as u64;
+                let compute = macs.div_ceil(cfg.parallelism());
+                let bytes = if cfg.use_dram { macs * bytes_per_el } else { 0 };
+                (name.clone(), 2 * macs, compute, bytes)
+            }
+            Layer::Pool { name, h_in, w_in, ch, stride, window } => {
+                let outs = ((h_in / stride) * (w_in / stride) * ch) as u64;
+                let ops = outs * (window * window) as u64;
+                // pool unit processes Pout values per cycle
+                (name.clone(), ops, outs.div_ceil(cfg.pout), 0)
+            }
+            Layer::GlobalPool { ch, h_in, w_in } => {
+                let ops = (ch * h_in * w_in) as u64;
+                ("gap".into(), ops, ops.div_ceil(cfg.parallelism()), 0)
+            }
+        };
+        let dma = if bytes == 0 { 0 } else { ((bytes as f64) / dram_bpc).ceil() as u64 };
+        // Double buffering overlaps compute and DMA, but per-tile sync
+        // and buffer turnaround leave ~15% of the shorter phase exposed.
+        let exposed = (0.15 * compute.min(dma) as f64) as u64;
+        let cycles = compute.max(dma) + exposed + PIPELINE_FILL_CYCLES;
+        if let Layer::Conv(c) = layer {
+            conv_ops += ops;
+            conv_cycles += cycles;
+            // BN + activation (+ residual add) pass over the outputs runs
+            // after the conv at Pout elements/cycle — part of the
+            // whole-network time but not of the conv-GOPs measure (this
+            // models the paper's 424->307 / 495->358.6 gap).
+            let post = (c.h_out() * c.w_out() * c.cout) as u64 / cfg.pout.max(1);
+            total_cycles += post;
+        }
+        total_ops += ops;
+        total_cycles += cycles;
+        dram_total += bytes;
+        layers.push(LayerRun { name, ops, compute_cycles: compute, dma_cycles: dma, cycles, dram_bytes: bytes });
+    }
+
+    let runtime_s = total_cycles as f64 / (fmax * 1e6);
+    let duty = conv_cycles as f64 / total_cycles as f64;
+    let res = resources(cfg);
+    // buffer traffic per cycle: Pin features broadcast to the lanes +
+    // Pout partial sums written back (weights are stationary per tile).
+    let bram_bps = (cfg.pin + cfg.pout) as f64 * bytes_per_el as f64
+        * fmax * 1e6 * duty * 2.0;
+    let dram_bps = if runtime_s > 0.0 { dram_total as f64 / runtime_s } else { 0.0 };
+    let pw = power::power(&cfg.array(), fmax, duty, bram_bps, dram_bps, res.total());
+
+    RunReport {
+        layers,
+        fmax_mhz: fmax,
+        conv_ops,
+        total_ops,
+        conv_cycles,
+        total_cycles,
+        dram_bytes: dram_total,
+        power: pw,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn;
+
+    fn cfg(kernel: KernelKind, dw: u32) -> AccelConfig {
+        AccelConfig::zcu104(1024, dw, kernel)
+    }
+
+    /// Fig. 4(c1) anchors: CNN 16-bit compute share ~50% at P=128 and
+    /// ~84% at P=2048.
+    #[test]
+    fn fig4_compute_share_anchors() {
+        let share = |p: u64| {
+            resources(&AccelConfig::zcu104(p, 16, KernelKind::Mult)).compute_share()
+        };
+        assert!((share(128) - 0.5048).abs() < 0.03, "P=128 share {}", share(128));
+        assert!((share(2048) - 0.839).abs() < 0.03, "P=2048 share {}", share(2048));
+        assert!(share(2048) > share(512));
+    }
+
+    /// Fig. 4(c3): at P=2048, conv-part saving ~80%, total ~67.6%.
+    #[test]
+    fn fig4_savings_anchors() {
+        let a = resources(&AccelConfig::zcu104(2048, 16, KernelKind::Adder2A));
+        let c = resources(&AccelConfig::zcu104(2048, 16, KernelKind::Mult));
+        let conv_saving = 1.0 - a.compute_luts() as f64 / c.compute_luts() as f64;
+        let total_saving = 1.0 - a.total() as f64 / c.total() as f64;
+        assert!((conv_saving - 0.80).abs() < 0.05, "conv {conv_saving:.3}");
+        assert!((total_saving - 0.676).abs() < 0.06, "total {total_saving:.3}");
+    }
+
+    /// Fig. 4(d): 8-bit savings are smaller than 16-bit (shape claim).
+    #[test]
+    fn fig4_8bit_smaller_savings() {
+        let sav = |dw: u32| {
+            let a = resources(&AccelConfig::zcu104(2048, dw, KernelKind::Adder2A));
+            let c = resources(&AccelConfig::zcu104(2048, dw, KernelKind::Mult));
+            1.0 - a.total() as f64 / c.total() as f64
+        };
+        assert!(sav(8) < sav(16));
+        assert!(sav(8) > 0.40, "8-bit total saving {}", sav(8));
+    }
+
+    /// §4 on-board anchors: ResNet-18, P=1024. CNN ~424/307 GOPs at
+    /// 214 MHz; AdderNet ~495/358.6 GOPs at 250 MHz; latency ~9.5 ms.
+    #[test]
+    fn onboard_resnet18_anchors() {
+        let net = nn::resnet18();
+        let c = run(&cfg(KernelKind::Mult, 16), &net);
+        let a = run(&cfg(KernelKind::Adder2A, 16), &net);
+        assert!((c.fmax_mhz - 214.0).abs() < 10.0);
+        assert!((a.fmax_mhz - 250.0).abs() < 1.0);
+        assert!((c.conv_gops() - 424.0).abs() / 424.0 < 0.12, "cnn conv {}", c.conv_gops());
+        assert!((a.conv_gops() - 495.0).abs() / 495.0 < 0.12, "adder conv {}", a.conv_gops());
+        assert!((c.total_gops() - 307.0).abs() / 307.0 < 0.25, "cnn total {}", c.total_gops());
+        assert!((a.total_gops() - 358.6).abs() / 358.6 < 0.25, "adder total {}", a.total_gops());
+        assert!((a.latency_ms() - 9.47).abs() / 9.47 < 0.35, "latency {}", a.latency_ms());
+    }
+
+    /// §4 power anchors: CNN ~2.57 W vs AdderNet ~1.34 W -> ~48% saving.
+    #[test]
+    fn onboard_power_saving() {
+        let net = nn::resnet18();
+        let c = run(&cfg(KernelKind::Mult, 16), &net);
+        let a = run(&cfg(KernelKind::Adder2A, 16), &net);
+        let saving = 1.0 - a.power.total_w() / c.power.total_w();
+        assert!((saving - 0.4785).abs() < 0.15, "power saving {saving:.3}");
+    }
+
+    #[test]
+    fn utilization_high_on_big_convs() {
+        let net = nn::resnet18();
+        let r = run(&cfg(KernelKind::Adder2A, 16), &net);
+        let peak = 2.0 * 1024.0 * r.fmax_mhz / 1e3; // GOPs
+        assert!(r.conv_gops() / peak > 0.9, "conv util {}", r.conv_gops() / peak);
+    }
+
+    #[test]
+    fn dram_traffic_zero_when_onchip() {
+        let mut c = cfg(KernelKind::Adder2A, 16);
+        c.use_dram = false;
+        let r = run(&c, &nn::lenet5());
+        assert_eq!(r.dram_bytes, 0);
+        assert_eq!(r.power.dram_w, 0.0);
+    }
+
+    #[test]
+    fn report_math_consistent() {
+        let r = run(&cfg(KernelKind::Adder2A, 16), &nn::lenet5());
+        // total includes per-conv post-processing passes on top of the
+        // per-layer cycles.
+        let sum: u64 = r.layers.iter().map(|l| l.cycles).sum();
+        assert!(r.total_cycles >= sum);
+        assert!(r.total_cycles < sum + sum / 2);
+        assert!(r.latency_ms() > 0.0);
+    }
+}

@@ -1,0 +1,655 @@
+//! Bit-accurate functional model of the accelerator datapath.
+//!
+//! Executes LeNet-5 / ResNet-8/20 forward passes in two modes:
+//!
+//! * **f32** — mirrors `python/compile/model.py` eval semantics exactly
+//!   (cross-validated against the AOT HLO eval graphs in
+//!   `rust/tests/integration.rs`), and doubles as the calibration pass
+//!   that records per-layer feature ranges.
+//! * **quantized** — integer arithmetic through the same widened
+//!   accumulator the RTL datapath would use (i32 covers DW + log2(K) for
+//!   every supported width, see conv2d_quant), with the paper's
+//!   shared-scaling-factor mode or the CNN-style separate-scale mode
+//!   (S7 contrast).
+//!
+//! This module is the Layer-3 hot path the §Perf pass optimizes.
+
+use std::collections::BTreeMap;
+
+use crate::nn::Padding;
+use crate::quant::{self, Calibration, LayerCalib, Mode};
+
+/// Dense NHWC tensor (n = batch).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    /// (n, h, w, c); dense activations use (n, 1, 1, c).
+    pub shape: (usize, usize, usize, usize),
+}
+
+impl Tensor {
+    pub fn new(shape: (usize, usize, usize, usize), data: Vec<f32>) -> Self {
+        let (n, h, w, c) = shape;
+        assert_eq!(data.len(), n * h * w * c, "tensor size mismatch");
+        Self { data, shape }
+    }
+
+    pub fn zeros(shape: (usize, usize, usize, usize)) -> Self {
+        let (n, h, w, c) = shape;
+        Self { data: vec![0.0; n * h * w * c], shape }
+    }
+
+    #[inline]
+    pub fn at(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        let (_, hh, ww, cc) = self.shape;
+        self.data[((n * hh + h) * ww + w) * cc + c]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Which similarity the conv kernel computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimKernel {
+    /// AdderNet: out = -sum |x - w|.
+    Adder,
+    /// CNN: out = sum x * w.
+    Mult,
+}
+
+/// Quantization configuration for the integer mode.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantCfg {
+    pub bits: u32,
+    pub mode: Mode,
+}
+
+fn same_pad(in_sz: usize, k: usize, stride: usize) -> (usize, usize) {
+    let out = in_sz.div_ceil(stride);
+    let total = ((out - 1) * stride + k).saturating_sub(in_sz);
+    (total / 2, total - total / 2)
+}
+
+/// Convolution weights: (kh, kw, cin, cout) row-major — the layout the
+/// manifest records (HWIO, same as the JAX side).
+#[derive(Debug, Clone)]
+pub struct ConvW<'a> {
+    pub data: &'a [f32],
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+/// f32 convolution (both kernels), NHWC x HWIO -> NHWC.
+pub fn conv2d(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
+              kind: SimKernel) -> Tensor {
+    let (n, h, ww_in, cin) = x.shape;
+    assert_eq!(cin, w.cin);
+    let (pt, _pb, pl, _pr, ho, wo) = conv_geom(h, ww_in, w.kh, w.kw, stride, padding);
+    let mut out = Tensor::zeros((n, ho, wo, w.cout));
+    let cout = w.cout;
+    // §Perf: for the adder kernel, a zero-padded tap contributes exactly
+    // -sum_ci |w[ky,kx,ci,:]|; precompute those per-tap column sums once
+    // so padded border pixels cost O(cout) instead of O(cin*cout).
+    let pad_tap: Vec<f32> = if matches!(kind, SimKernel::Adder) {
+        let mut v = vec![0f32; w.kh * w.kw * cout];
+        for t in 0..w.kh * w.kw {
+            for ci in 0..cin {
+                let row = &w.data[(t * cin + ci) * cout..(t * cin + ci + 1) * cout];
+                for (s, &wv) in v[t * cout..(t + 1) * cout].iter_mut().zip(row) {
+                    *s += wv.abs();
+                }
+            }
+        }
+        v
+    } else {
+        Vec::new()
+    };
+    let mut acc = vec![0f32; cout];
+    for b in 0..n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                acc.iter_mut().for_each(|a| *a = 0.0);
+                for ky in 0..w.kh {
+                    let iy = (oh * stride + ky) as isize - pt as isize;
+                    let row_inside = iy >= 0 && iy < h as isize;
+                    for kx in 0..w.kw {
+                        let ix = (ow * stride + kx) as isize - pl as isize;
+                        if !row_inside || ix < 0 || ix >= ww_in as isize {
+                            // SAME zero padding: x = 0 contributes
+                            // -|0-w| for adder, nothing for mult.
+                            if matches!(kind, SimKernel::Adder) {
+                                let t = ky * w.kw + kx;
+                                for (a, &s) in acc.iter_mut()
+                                    .zip(&pad_tap[t * cout..(t + 1) * cout]) {
+                                    *a -= s;
+                                }
+                            }
+                            continue;
+                        }
+                        let xoff = ((b * h + iy as usize) * ww_in + ix as usize) * cin;
+                        let xrow = &x.data[xoff..xoff + cin];
+                        for (ci, &xv) in xrow.iter().enumerate() {
+                            let wo_ = ((ky * w.kw + kx) * cin + ci) * cout;
+                            let wrow = &w.data[wo_..wo_ + cout];
+                            match kind {
+                                SimKernel::Adder => {
+                                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                        *a -= (xv - wv).abs();
+                                    }
+                                }
+                                SimKernel::Mult => {
+                                    if xv != 0.0 {
+                                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                            *a += xv * wv;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                let base = ((b * ho + oh) * wo + ow) * cout;
+                out.data[base..base + cout].copy_from_slice(&acc);
+            }
+        }
+    }
+    out
+}
+
+fn conv_geom(h: usize, w: usize, kh: usize, kw: usize, stride: usize,
+             padding: Padding) -> (usize, usize, usize, usize, usize, usize) {
+    match padding {
+        Padding::Same => {
+            let (pt, pb) = same_pad(h, kh, stride);
+            let (pl, pr) = same_pad(w, kw, stride);
+            (pt, pb, pl, pr, h.div_ceil(stride), w.div_ceil(stride))
+        }
+        Padding::Valid => (0, 0, 0, 0, (h - kh) / stride + 1, (w - kw) / stride + 1),
+    }
+}
+
+/// Integer convolution through the widened datapath.  Inputs are
+/// quantized per `cfg` using the layer's calibration; the result is
+/// dequantized back to f32 for the downstream (BN/pool) float stages,
+/// mirroring the FPGA design where BN runs in a wide fixed-point unit.
+pub fn conv2d_quant(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
+                    kind: SimKernel, cfg: QuantCfg, calib: &LayerCalib) -> Tensor {
+    let (n, h, ww_in, cin) = x.shape;
+    let cout = w.cout;
+    // --- quantize operands -------------------------------------------------
+    let (xe, we) = match cfg.mode {
+        Mode::SharedScale => {
+            let e = calib.shared_exp(cfg.bits);
+            (e, e)
+        }
+        Mode::SeparateScale => calib.separate_exps(cfg.bits),
+    };
+    let xq = quant::quantize_slice(&x.data, xe, cfg.bits);
+    let mut wq = quant::quantize_slice(w.data, we, cfg.bits);
+    // For the adder kernel with separate scales the datapath must
+    // point-align before subtracting: re-grid the finer operand onto the
+    // coarser grid (this throws away bits — the §3.1 motivation).
+    let (xq, out_e, prod_e) = if matches!(kind, SimKernel::Adder) && xe != we {
+        let coarse = xe.max(we);
+        let xq2 = if xe < we { regrid(&xq, we - xe) } else { xq };
+        if we < xe {
+            wq = regrid(&wq, xe - we);
+        }
+        (xq2, coarse, 0)
+    } else {
+        (xq, xe, xe + we)
+    };
+    let _ = prod_e;
+    let (pt, _pb, pl, _pr, ho, wo) = conv_geom(h, ww_in, w.kh, w.kw, stride, padding);
+    let mut out = Tensor::zeros((n, ho, wo, cout));
+    // §Perf: i64 accumulation is only needed when |x op w| * K can
+    // overflow i32 — never for the supported widths (<= 16 bit inputs,
+    // K <= 2^14 taps => |acc| <= 2*32767*2^14 < 2^31).  Widened-datapath
+    // semantics are identical; the RTL analogue is the adder tree's
+    // exact DW + log2(K) bits.
+    let mut acc = vec![0i32; cout];
+    let pre_scale = match kind {
+        SimKernel::Adder => (out_e as f32).exp2(),
+        SimKernel::Mult => ((xe + we) as f32).exp2(),
+    };
+    for b in 0..n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                acc.iter_mut().for_each(|a| *a = 0);
+                for ky in 0..w.kh {
+                    let iy = (oh * stride + ky) as isize - pt as isize;
+                    let row_inside = iy >= 0 && iy < h as isize;
+                    for kx in 0..w.kw {
+                        let ix = (ow * stride + kx) as isize - pl as isize;
+                        let inside = row_inside && ix >= 0 && ix < ww_in as isize;
+                        if !inside && matches!(kind, SimKernel::Mult) {
+                            continue; // 0 * w adds nothing
+                        }
+                        let xrow: &[i32] = if inside {
+                            let o = ((b * h + iy as usize) * ww_in + ix as usize) * cin;
+                            &xq[o..o + cin]
+                        } else {
+                            &[]
+                        };
+                        for ci in 0..cin {
+                            let xv = if inside { xrow[ci] } else { 0 };
+                            let wo_ = ((ky * w.kw + kx) * cin + ci) * cout;
+                            let wrow = &wq[wo_..wo_ + cout];
+                            match kind {
+                                SimKernel::Adder => {
+                                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                        *a -= (xv - wv).abs();
+                                    }
+                                }
+                                SimKernel::Mult => {
+                                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                        *a += xv * wv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                let base = ((b * ho + oh) * wo + ow) * cout;
+                for (o, &a) in out.data[base..base + cout].iter_mut().zip(acc.iter()) {
+                    *o = a as f32 * pre_scale;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Re-grid integers onto a grid `shift` bits coarser, rounding to even.
+fn regrid(q: &[i32], shift: i32) -> Vec<i32> {
+    let s = (shift as f32).exp2();
+    q.iter().map(|&v| quant::round_even(v as f32 / s) as i32).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Float glue layers (mirror layers.py eval semantics)
+// ---------------------------------------------------------------------------
+
+pub fn batch_norm_eval(x: &mut Tensor, gamma: &[f32], beta: &[f32],
+                       mean: &[f32], var: &[f32]) {
+    let (_, _, _, c) = x.shape;
+    let eps = 1e-5f32;
+    let scale: Vec<f32> = (0..c).map(|i| gamma[i] / (var[i] + eps).sqrt()).collect();
+    let shift: Vec<f32> = (0..c).map(|i| beta[i] - mean[i] * scale[i]).collect();
+    for (i, v) in x.data.iter_mut().enumerate() {
+        let ci = i % c;
+        *v = *v * scale[ci] + shift[ci];
+    }
+}
+
+pub fn relu(x: &mut Tensor) {
+    for v in x.data.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+pub fn avg_pool2(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = x.shape;
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = Tensor::zeros((n, ho, wo, c));
+    for b in 0..n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                for ci in 0..c {
+                    let s = x.at(b, 2 * oh, 2 * ow, ci)
+                        + x.at(b, 2 * oh, 2 * ow + 1, ci)
+                        + x.at(b, 2 * oh + 1, 2 * ow, ci)
+                        + x.at(b, 2 * oh + 1, 2 * ow + 1, ci);
+                    out.data[((b * ho + oh) * wo + ow) * c + ci] = s / 4.0;
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = x.shape;
+    let mut out = Tensor::zeros((n, 1, 1, c));
+    for b in 0..n {
+        for ci in 0..c {
+            let mut s = 0.0;
+            for hh in 0..h {
+                for ww in 0..w {
+                    s += x.at(b, hh, ww, ci);
+                }
+            }
+            out.data[b * c + ci] = s / (h * w) as f32;
+        }
+    }
+    out
+}
+
+/// Dense: x (n, 1, 1, din) @ w (din, dout) + b.
+pub fn dense(x: &Tensor, w: &[f32], bias: &[f32], dout: usize) -> Tensor {
+    let (n, h, ww, c) = x.shape;
+    let din = h * ww * c;
+    assert_eq!(w.len(), din * dout);
+    let mut out = Tensor::zeros((n, 1, 1, dout));
+    for b in 0..n {
+        let xrow = &x.data[b * din..(b + 1) * din];
+        let orow = &mut out.data[b * dout..(b + 1) * dout];
+        orow.copy_from_slice(bias);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * dout..(i + 1) * dout];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+pub fn argmax_rows(x: &Tensor) -> Vec<usize> {
+    let (n, _, _, c) = x.shape;
+    (0..n)
+        .map(|b| {
+            let row = &x.data[b * c..(b + 1) * c];
+            row.iter().enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Whole-model runner
+// ---------------------------------------------------------------------------
+
+/// Named parameter store (loaded from the manifest init/trained bin).
+pub type Params = BTreeMap<String, (Vec<usize>, Vec<f32>)>;
+
+/// Model architectures the functional runner executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Lenet5,
+    Resnet8,
+    Resnet20,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Option<Arch> {
+        match s {
+            "lenet5" => Some(Arch::Lenet5),
+            "resnet8" => Some(Arch::Resnet8),
+            "resnet20" => Some(Arch::Resnet20),
+            _ => None,
+        }
+    }
+
+    pub fn stages(&self) -> usize {
+        match self {
+            Arch::Lenet5 => 0,
+            Arch::Resnet8 => 1,
+            Arch::Resnet20 => 3,
+        }
+    }
+}
+
+/// How the conv layers execute.
+#[derive(Debug, Clone, Copy)]
+pub enum ExecMode {
+    F32,
+    Quant(QuantCfg),
+}
+
+/// Forward runner over named params; optionally records per-layer input
+/// feature ranges (the calibration pass / Fig. 3a probe).
+pub struct Runner<'a> {
+    pub params: &'a Params,
+    pub arch: Arch,
+    pub kind: SimKernel,
+    pub mode: ExecMode,
+    pub calib: Option<&'a Calibration>,
+    /// When set, feature max-abs (and optional full copies) are recorded.
+    pub observe: Option<&'a mut Calibration>,
+}
+
+fn lookup<'p>(params: &'p Params, name: &str) -> (&'p [usize], &'p [f32]) {
+    let (s, d) = params.get(name)
+        .unwrap_or_else(|| panic!("missing param {name}"));
+    (s, d)
+}
+
+impl<'a> Runner<'a> {
+    fn p(&self, name: &str) -> (&'a [usize], &'a [f32]) {
+        lookup(self.params, name)
+    }
+
+    fn conv_block(&mut self, name: &str, x: Tensor, stride: usize,
+                  padding: Padding) -> Tensor {
+        let (ws, wd) = lookup(self.params, &format!("{name}/conv_w"));
+        let w = ConvW { data: wd, kh: ws[0], kw: ws[1], cin: ws[2], cout: ws[3] };
+        if let Some(obs) = self.observe.as_deref_mut() {
+            let e = obs.entry(name.to_string()).or_default();
+            e.feat_max_abs = e.feat_max_abs.max(quant::max_abs(&x.data));
+            e.weight_max_abs = quant::max_abs(w.data);
+        }
+        let mut y = match self.mode {
+            ExecMode::F32 => conv2d(&x, &w, stride, padding, self.kind),
+            ExecMode::Quant(cfg) => {
+                let calib = self.calib.expect("quant mode requires calibration");
+                let lc = calib.get(name)
+                    .unwrap_or_else(|| panic!("no calibration for {name}"));
+                conv2d_quant(&x, &w, stride, padding, self.kind, cfg, lc)
+            }
+        };
+        let (_, g) = self.p(&format!("{name}/bn_gamma"));
+        let g = g.to_vec();
+        let (_, b) = self.p(&format!("{name}/bn_beta"));
+        let b = b.to_vec();
+        let (_, m) = self.p(&format!("{name}/bn_mean"));
+        let m = m.to_vec();
+        let (_, v) = self.p(&format!("{name}/bn_var"));
+        let v = v.to_vec();
+        batch_norm_eval(&mut y, &g, &b, &m, &v);
+        y
+    }
+
+    fn dense_layer(&self, name: &str, x: &Tensor) -> Tensor {
+        let (ws, wd) = self.p(&format!("{name}/dense_w"));
+        let (_, bd) = self.p(&format!("{name}/dense_b"));
+        dense(x, wd, bd, ws[1])
+    }
+
+    /// Run the forward pass; returns logits (n, 1, 1, 10).
+    pub fn forward(&mut self, x: &Tensor) -> Tensor {
+        match self.arch {
+            Arch::Lenet5 => {
+                let mut y = self.conv_block("conv1", x.clone(), 1, Padding::Valid);
+                relu(&mut y);
+                let mut y = avg_pool2(&y);
+                y = self.conv_block("conv2", y, 1, Padding::Valid);
+                relu(&mut y);
+                let y = avg_pool2(&y);
+                // flatten (NHWC row-major == jax reshape)
+                let (n, h, w, c) = y.shape;
+                let y = Tensor::new((n, 1, 1, h * w * c), y.data);
+                let mut y = self.dense_layer("fc1", &y);
+                relu(&mut y);
+                let mut y = self.dense_layer("fc2", &y);
+                relu(&mut y);
+                self.dense_layer("fc3", &y)
+            }
+            Arch::Resnet8 | Arch::Resnet20 => {
+                let n_blocks = self.arch.stages();
+                let mut y = self.conv_block("stem", x.clone(), 1, Padding::Same);
+                relu(&mut y);
+                let mut cin = 16;
+                for (s, cout) in [16usize, 32, 64].into_iter().enumerate() {
+                    for b in 0..n_blocks {
+                        let pre = format!("s{s}b{b}");
+                        let stride = if s > 0 && b == 0 { 2 } else { 1 };
+                        let mut h = self.conv_block(&format!("{pre}/c1"),
+                                                    y.clone(), stride, Padding::Same);
+                        relu(&mut h);
+                        let h = self.conv_block(&format!("{pre}/c2"), h, 1,
+                                                Padding::Same);
+                        let sc = if cin != cout {
+                            self.conv_block(&format!("{pre}/sc"), y.clone(),
+                                            stride, Padding::Same)
+                        } else {
+                            y.clone()
+                        };
+                        let mut sum = h;
+                        for (v, s) in sum.data.iter_mut().zip(&sc.data) {
+                            *v += s;
+                        }
+                        relu(&mut sum);
+                        y = sum;
+                        cin = cout;
+                    }
+                }
+                let y = global_avg_pool(&y);
+                self.dense_layer("fc", &y)
+            }
+        }
+    }
+}
+
+/// Classification accuracy of a runner over (images, labels).
+pub fn accuracy(runner: &mut Runner, images: &Tensor, labels: &[i32]) -> f64 {
+    let logits = runner.forward(images);
+    let preds = argmax_rows(&logits);
+    let correct = preds.iter().zip(labels)
+        .filter(|(p, l)| **p == **l as usize)
+        .count();
+    correct as f64 / labels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: (usize, usize, usize, usize), data: Vec<f32>) -> Tensor {
+        Tensor::new(shape, data)
+    }
+
+    #[test]
+    fn adder_conv_known_value() {
+        // 1x1 kernel, 1 channel: out = -|x - w|
+        let x = t((1, 2, 2, 1), vec![1.0, 2.0, 3.0, 4.0]);
+        let wdat = vec![2.5f32];
+        let w = ConvW { data: &wdat, kh: 1, kw: 1, cin: 1, cout: 1 };
+        let y = conv2d(&x, &w, 1, Padding::Same, SimKernel::Adder);
+        assert_eq!(y.data, vec![-1.5, -0.5, -0.5, -1.5]);
+    }
+
+    #[test]
+    fn mult_conv_matches_manual() {
+        // 2x2 valid conv, identity-ish weights
+        let x = t((1, 2, 2, 1), vec![1.0, 2.0, 3.0, 4.0]);
+        let wdat = vec![1.0f32, 0.0, 0.0, 1.0]; // picks x[0,0] + x[1,1]
+        let w = ConvW { data: &wdat, kh: 2, kw: 2, cin: 1, cout: 1 };
+        let y = conv2d(&x, &w, 1, Padding::Valid, SimKernel::Mult);
+        assert_eq!(y.data, vec![5.0]);
+    }
+
+    #[test]
+    fn adder_conv_same_padding_counts_pad_weights() {
+        // at a padded tap, x=0 contributes -|0 - w| = -|w|
+        let x = t((1, 1, 1, 1), vec![0.0]);
+        let wdat = vec![1.0f32; 9];
+        let w = ConvW { data: &wdat, kh: 3, kw: 3, cin: 1, cout: 1 };
+        let y = conv2d(&x, &w, 1, Padding::Same, SimKernel::Adder);
+        assert_eq!(y.data, vec![-9.0]);
+    }
+
+    #[test]
+    fn quant_shared_scale_exact_for_grid_values() {
+        // if x and w already sit on the shared grid, int conv == f32 conv
+        let x = t((1, 3, 3, 1), (0..9).map(|i| (i as f32) * 0.25 - 1.0).collect());
+        let wdat: Vec<f32> = (0..9).map(|i| (i as f32) * 0.25 - 1.0).collect();
+        let w = ConvW { data: &wdat, kh: 3, kw: 3, cin: 1, cout: 1 };
+        let calib = LayerCalib { feat_max_abs: 1.0, weight_max_abs: 1.0 };
+        let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        let q = conv2d_quant(&x, &w, 1, Padding::Valid, SimKernel::Adder, cfg, &calib);
+        let f = conv2d(&x, &w, 1, Padding::Valid, SimKernel::Adder);
+        for (a, b) in q.data.iter().zip(&f.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quant_error_shrinks_with_bits() {
+        let mut rng = crate::util::XorShift64::new(9);
+        let x = t((1, 8, 8, 3), (0..192).map(|_| rng.next_f32_sym(2.0)).collect());
+        let wdat: Vec<f32> = (0..3 * 3 * 3 * 4).map(|_| rng.next_f32_sym(1.5)).collect();
+        let w = ConvW { data: &wdat, kh: 3, kw: 3, cin: 3, cout: 4 };
+        let fref = conv2d(&x, &w, 1, Padding::Same, SimKernel::Adder);
+        let calib = LayerCalib { feat_max_abs: 2.0, weight_max_abs: 1.5 };
+        let mut prev = f64::INFINITY;
+        for bits in [4u32, 6, 8, 12] {
+            let cfg = QuantCfg { bits, mode: Mode::SharedScale };
+            let q = conv2d_quant(&x, &w, 1, Padding::Same, SimKernel::Adder, cfg, &calib);
+            let err: f64 = q.data.iter().zip(&fref.data)
+                .map(|(a, b)| ((a - b) as f64).abs())
+                .sum::<f64>() / q.data.len() as f64;
+            assert!(err < prev, "bits={bits} err={err} prev={prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn adder_separate_scale_loses_information() {
+        // Ranges differ by 8x: separate scales misalign and the aligned
+        // adder result is no better than shared (usually worse).
+        let mut rng = crate::util::XorShift64::new(5);
+        let x = t((1, 6, 6, 2), (0..72).map(|_| rng.next_f32_sym(0.25)).collect());
+        let wdat: Vec<f32> = (0..3 * 3 * 2 * 3).map(|_| rng.next_f32_sym(2.0)).collect();
+        let w = ConvW { data: &wdat, kh: 3, kw: 3, cin: 2, cout: 3 };
+        let fref = conv2d(&x, &w, 1, Padding::Same, SimKernel::Adder);
+        let calib = LayerCalib { feat_max_abs: 0.25, weight_max_abs: 2.0 };
+        let err = |mode: Mode| -> f64 {
+            let cfg = QuantCfg { bits: 6, mode };
+            let q = conv2d_quant(&x, &w, 1, Padding::Same, SimKernel::Adder, cfg, &calib);
+            q.data.iter().zip(&fref.data)
+                .map(|(a, b)| ((a - b) as f64).abs())
+                .sum::<f64>() / q.data.len() as f64
+        };
+        // separate-then-align must not beat shared for the adder kernel
+        assert!(err(Mode::SeparateScale) >= 0.8 * err(Mode::SharedScale));
+    }
+
+    #[test]
+    fn bn_eval_formula() {
+        let mut x = t((1, 1, 1, 2), vec![3.0, -1.0]);
+        batch_norm_eval(&mut x, &[2.0, 1.0], &[0.5, 0.0], &[1.0, 0.0], &[4.0, 1.0]);
+        let want0 = (3.0 - 1.0) / (4.0f32 + 1e-5).sqrt() * 2.0 + 0.5;
+        assert!((x.data[0] - want0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn pool_and_gap() {
+        let x = t((1, 2, 2, 1), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(avg_pool2(&x).data, vec![2.5]);
+        assert_eq!(global_avg_pool(&x).data, vec![2.5]);
+    }
+
+    #[test]
+    fn dense_known() {
+        let x = t((1, 1, 1, 2), vec![1.0, 2.0]);
+        let w = vec![1.0, 0.0, 0.0, 1.0]; // (2, 2) row-major (din, dout)
+        let y = dense(&x, &w, &[0.5, -0.5], 2);
+        assert_eq!(y.data, vec![1.5, 1.5]);
+    }
+
+    #[test]
+    fn argmax() {
+        let x = t((2, 1, 1, 3), vec![0.0, 2.0, 1.0, 5.0, -1.0, 0.0]);
+        assert_eq!(argmax_rows(&x), vec![1, 0]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Accelerator simulation: cycle/resource/power models (Fig. 4/5, §4)
+//! plus the bit-accurate functional datapath (quantized inference).
+
+pub mod accelerator;
+pub mod functional;
+pub mod onchip;
+
+pub use accelerator::{AccelConfig, ResourceBreakdown, RunReport};
+pub use functional::{Arch, ExecMode, QuantCfg, Runner, SimKernel, Tensor};

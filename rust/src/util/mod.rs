@@ -1,0 +1,10 @@
+//! In-tree utilities: JSON parsing, deterministic RNGs, table rendering
+//! (the offline vendored crate set has no serde/rand/prettytable).
+
+pub mod json;
+pub mod rng;
+pub mod table;
+
+pub use json::Json;
+pub use rng::{Lcg31, XorShift64};
+pub use table::Table;

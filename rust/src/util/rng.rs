@@ -1,0 +1,117 @@
+//! Small deterministic RNGs (the `rand` crate is not vendored).
+//!
+//! * [`Lcg31`] — the 31-bit LCG shared bit-exactly with
+//!   `python/compile/data.py` for dataset generation.
+//! * [`XorShift64`] — fast general-purpose generator for shuffling,
+//!   workload synthesis and benchmark inputs.
+
+/// The dataset LCG: `state = (state * 1103515245 + 12345) mod 2^31`.
+#[derive(Debug, Clone, Copy)]
+pub struct Lcg31 {
+    pub state: u64,
+}
+
+pub const LCG_A: u64 = 1_103_515_245;
+pub const LCG_C: u64 = 12_345;
+pub const LCG_M: u64 = 1 << 31;
+
+impl Lcg31 {
+    pub fn new(state: u64) -> Self {
+        Self { state: state % LCG_M }
+    }
+
+    /// Advance and return the new state (matches data.py `_lcg_next`).
+    pub fn next_state(&mut self) -> u64 {
+        self.state = (self.state.wrapping_mul(LCG_A).wrapping_add(LCG_C)) % LCG_M;
+        self.state
+    }
+}
+
+/// xorshift64* — fast, good-enough distribution for benchmarks/shuffles.
+#[derive(Debug, Clone, Copy)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in [-scale, scale).
+    pub fn next_f32_sym(&mut self, scale: f32) -> f32 {
+        (self.next_f64() as f32 * 2.0 - 1.0) * scale
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lcg_matches_python_constants() {
+        // First two steps from state 1:
+        // (1*1103515245 + 12345) % 2^31 = 1103527590
+        let mut l = Lcg31::new(1);
+        assert_eq!(l.next_state(), 1_103_527_590);
+        let expect = (1_103_527_590u64 * LCG_A + LCG_C) % LCG_M;
+        assert_eq!(l.next_state(), expect);
+    }
+
+    #[test]
+    fn xorshift_deterministic_and_distributed() {
+        let mut a = XorShift64::new(7);
+        let mut b = XorShift64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut r = XorShift64::new(42);
+        let mean = (0..10_000).map(|_| r.next_f64()).sum::<f64>() / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = XorShift64::new(3);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / xs.len() as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut r = XorShift64::new(1);
+        for _ in 0..1000 {
+            assert!(r.next_below(10) < 10);
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! Integration tests across the three layers.  These need artifacts
+//! (`make artifacts`); every test degrades to a skip-with-message when
+//! they are absent so `cargo test` stays green on a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use addernet::coordinator::{Manifest, Trainer};
+use addernet::data;
+use addernet::report::quantrep;
+use addernet::runtime::{self, Runtime};
+use addernet::sim::functional::{self, Arch, ExecMode, Runner, SimKernel, Tensor};
+use addernet::util::XorShift64;
+
+fn art_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !art_dir().join("manifest.json").exists() {
+            eprintln!("SKIP: no artifacts (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+/// L1 <-> L3: the Pallas L1-GEMM demo graph must match the Rust oracle.
+#[test]
+fn pallas_l1gemm_matches_rust_oracle() {
+    require_artifacts!();
+    let manifest = Manifest::load(art_dir()).unwrap();
+    let mut rt = Runtime::new(art_dir()).unwrap();
+    let g = manifest.graph("l1gemm_demo").unwrap().clone();
+    rt.load("l1gemm_demo", &g.file).unwrap();
+    let (m, k, n) = (16usize, 32, 8);
+    let mut rng = XorShift64::new(3);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.next_f32_sym(3.0)).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.next_f32_sym(3.0)).collect();
+    let outs = rt.execute("l1gemm_demo", &[
+        runtime::literal_f32(&[m, k], &a).unwrap(),
+        runtime::literal_f32(&[k, n], &b).unwrap(),
+    ]).unwrap();
+    let got = runtime::to_vec_f32(&outs[0]).unwrap();
+    for i in 0..m {
+        for j in 0..n {
+            let want: f32 = -(0..k).map(|kk| (a[i * k + kk] - b[kk * n + j]).abs()).sum::<f32>();
+            assert!((got[i * n + j] - want).abs() < 1e-3,
+                    "({i},{j}): {} vs {want}", got[i * n + j]);
+        }
+    }
+}
+
+/// Matmul demo graph vs naive Rust matmul.
+#[test]
+fn pallas_matmul_matches_rust_oracle() {
+    require_artifacts!();
+    let manifest = Manifest::load(art_dir()).unwrap();
+    let mut rt = Runtime::new(art_dir()).unwrap();
+    let g = manifest.graph("matmul_demo").unwrap().clone();
+    rt.load("matmul_demo", &g.file).unwrap();
+    let (m, k, n) = (16usize, 32, 8);
+    let mut rng = XorShift64::new(5);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.next_f32_sym(1.0)).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.next_f32_sym(1.0)).collect();
+    let outs = rt.execute("matmul_demo", &[
+        runtime::literal_f32(&[m, k], &a).unwrap(),
+        runtime::literal_f32(&[k, n], &b).unwrap(),
+    ]).unwrap();
+    let got = runtime::to_vec_f32(&outs[0]).unwrap();
+    for i in 0..m {
+        for j in 0..n {
+            let want: f32 = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
+            assert!((got[i * n + j] - want).abs() < 1e-3);
+        }
+    }
+}
+
+/// L2 <-> L3: the Rust functional simulator's f32 forward must match the
+/// AOT HLO eval graph on the SAME parameters and inputs — this pins the
+/// bit-accurate datapath to the JAX model for both kernels.
+#[test]
+fn functional_forward_matches_hlo_eval() {
+    require_artifacts!();
+    let manifest = Manifest::load(art_dir()).unwrap();
+    let mut rt = Runtime::new(art_dir()).unwrap();
+    for kernel in ["adder", "mult"] {
+        let gname = format!("lenet5_{kernel}_eval");
+        let g = manifest.graph(&gname).unwrap().clone();
+        rt.load(&gname, &g.file).unwrap();
+        let layout = manifest.layout("lenet5").unwrap().clone();
+        let raw = manifest.read_param_file("lenet5", &layout.init_file).unwrap();
+        let lits: Vec<xla::Literal> = raw.iter()
+            .map(|(_, s, d)| runtime::literal_f32(s, d).unwrap())
+            .collect();
+        let batch = data::eval_set(g.batch, 13);
+        let x = runtime::literal_f32(&[g.batch, 32, 32, 1], &batch.images).unwrap();
+        let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+        inputs.push(&x);
+        let hlo_logits = runtime::to_vec_f32(&rt.execute(&gname, &inputs).unwrap()[0]).unwrap();
+
+        let params = manifest.read_params("lenet5", &layout.init_file).unwrap();
+        let xt = Tensor::new((g.batch, 32, 32, 1), batch.images.clone());
+        let kind = if kernel == "adder" { SimKernel::Adder } else { SimKernel::Mult };
+        let mut runner = Runner {
+            params: &params, arch: Arch::Lenet5, kind,
+            mode: ExecMode::F32, calib: None, observe: None,
+        };
+        let rust_logits = runner.forward(&xt);
+        let mut max_err = 0f32;
+        for (a, b) in hlo_logits.iter().zip(&rust_logits.data) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 2e-3, "{kernel}: max logits err {max_err}");
+    }
+}
+
+/// L3 trainer: loss decreases over a few steps and state feeds back.
+#[test]
+fn trainer_loss_decreases() {
+    require_artifacts!();
+    let manifest = Manifest::load(art_dir()).unwrap();
+    let mut rt = Runtime::new(art_dir()).unwrap();
+    let mut trainer = Trainer::new(&manifest, &mut rt, "lenet5", "adder").unwrap();
+    let mut stream = data::BatchStream::new(21, trainer.batch_size);
+    let batch = stream.next_batch();
+    let (l0, _) = trainer.train_step(&rt, &batch).unwrap();
+    let mut last = l0;
+    for _ in 0..8 {
+        let (l, _) = trainer.train_step(&rt, &batch).unwrap();
+        last = l;
+    }
+    assert!(last < l0 * 0.7, "loss {l0} -> {last}");
+    assert_eq!(trainer.history.len(), 9);
+    assert_eq!(trainer.step, 9);
+}
+
+/// Trainer evaluate() matches manual argmax over the eval graph.
+#[test]
+fn trainer_eval_matches_direct_graph_eval() {
+    require_artifacts!();
+    let manifest = Manifest::load(art_dir()).unwrap();
+    let mut rt = Runtime::new(art_dir()).unwrap();
+    let trainer = Trainer::new(&manifest, &mut rt, "lenet5", "mult").unwrap();
+    let ev = data::eval_set(trainer.batch_size, 17);
+    let acc = trainer.evaluate(&rt, &ev.images, &ev.labels).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+/// Quantization pipeline end-to-end on init weights: monotone-ish in bits
+/// and int16 ~= fp32.
+#[test]
+fn quant_pipeline_int16_close_to_fp32() {
+    require_artifacts!();
+    let manifest = Manifest::load(art_dir()).unwrap();
+    let layout = manifest.layout("lenet5").unwrap().clone();
+    let params = manifest.read_params("lenet5", &layout.init_file).unwrap();
+    let (calib, fp32) = quantrep::calibrate(&params, Arch::Lenet5,
+                                            SimKernel::Adder, 96);
+    assert!(!calib.is_empty());
+    let a16 = quantrep::quant_accuracy(
+        &params, Arch::Lenet5, SimKernel::Adder, &calib,
+        functional::QuantCfg { bits: 16, mode: addernet::quant::Mode::SharedScale },
+        96);
+    assert!((a16 - fp32).abs() < 0.05, "fp32 {fp32} int16 {a16}");
+}
+
+/// Probe graph layer count matches the manifest's layer list.
+#[test]
+fn probe_graph_layer_arity() {
+    require_artifacts!();
+    let manifest = Manifest::load(art_dir()).unwrap();
+    let g = manifest.graph("lenet5_adder_probe").unwrap().clone();
+    assert_eq!(g.layers, vec!["conv1".to_string(), "conv2".to_string()]);
+    let mut rt = Runtime::new(art_dir()).unwrap();
+    rt.load("probe", &g.file).unwrap();
+    let layout = manifest.layout("lenet5").unwrap().clone();
+    let raw = manifest.read_param_file("lenet5", &layout.init_file).unwrap();
+    let lits: Vec<xla::Literal> = raw.iter()
+        .map(|(_, s, d)| runtime::literal_f32(s, d).unwrap())
+        .collect();
+    let b = data::eval_set(g.batch, 23);
+    let x = runtime::literal_f32(&[g.batch, 32, 32, 1], &b.images).unwrap();
+    let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+    inputs.push(&x);
+    // outputs: one flattened feature tensor per conv layer + the logits
+    let feats = rt.execute("probe", &inputs).unwrap();
+    assert_eq!(feats.len(), g.layers.len() + 1);
+    // conv1 input is the image batch itself
+    assert_eq!(feats[0].element_count(), g.batch * 32 * 32);
+    // last output is the logits
+    assert_eq!(feats.last().unwrap().element_count(), g.batch * 10);
+}
+
+/// The serving stack answers correctly routed batched requests.
+#[test]
+fn server_round_trip() {
+    require_artifacts!();
+    let manifest = Manifest::load(art_dir()).unwrap();
+    let variants = vec![addernet::coordinator::VariantCfg {
+        model: "lenet5_mult".into(),
+        weights: None,
+    }];
+    let handle = addernet::coordinator::server::start(
+        &manifest, &variants, std::time::Duration::from_millis(1)).unwrap();
+    let b = data::eval_set(8, 31);
+    let mut rxs = Vec::new();
+    for i in 0..8 {
+        rxs.push(handle.submit("lenet5_mult",
+                               b.images[i * 1024..(i + 1) * 1024].to_vec()).unwrap());
+    }
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+    }
+    assert!(handle.submit("nope", vec![0.0; 1024]).is_err());
+    handle.shutdown();
+}
+
+/// Whole-flow smoke: train a few steps, save, reload via manifest, and
+/// check the functional sim accepts the saved parameters.
+#[test]
+fn save_reload_roundtrip() {
+    require_artifacts!();
+    let manifest = Manifest::load(art_dir()).unwrap();
+    let mut rt = Runtime::new(art_dir()).unwrap();
+    let mut trainer = Trainer::new(&manifest, &mut rt, "lenet5", "adder").unwrap();
+    let mut stream = data::BatchStream::new(77, trainer.batch_size);
+    for _ in 0..3 {
+        let b = stream.next_batch();
+        trainer.train_step(&rt, &b).unwrap();
+    }
+    trainer.save_params(&manifest, "test_ckpt.bin").unwrap();
+    let params = manifest.read_params("lenet5", "test_ckpt.bin").unwrap();
+    let ev = data::eval_set(16, 41);
+    let x = Tensor::new((16, 32, 32, 1), ev.images);
+    let mut runner = Runner {
+        params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+        mode: ExecMode::F32, calib: None, observe: None,
+    };
+    let acc = functional::accuracy(&mut runner, &x, &ev.labels);
+    assert!((0.0..=1.0).contains(&acc));
+    let _ = std::fs::remove_file(art_dir().join("test_ckpt.bin"));
+}
