@@ -9,6 +9,7 @@ mod common;
 
 use addernet::report::{kernels, Results};
 use addernet::sim::functional::{conv2d, ConvW, SimKernel, Tensor};
+use addernet::sim::reference;
 use addernet::util::XorShift64;
 
 fn main() {
@@ -30,5 +31,10 @@ fn main() {
             std::hint::black_box(y);
         });
         common::report(name, med, macs, "MAC");
+        let (naive, _) = common::time_it(1, 5, || {
+            let y = reference::conv2d(&x, &w, 1, addernet::nn::Padding::Valid, kind);
+            std::hint::black_box(y);
+        });
+        common::report(&format!("{name} (naive reference)"), naive, macs, "MAC");
     }
 }

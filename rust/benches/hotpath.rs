@@ -2,46 +2,59 @@
 //! EXPERIMENTS.md §Perf):
 //!
 //!   L3a: functional adder/mult conv (f32 + int) — the quantized-
-//!        inference datapath;
+//!        inference datapath, measured as tiled parallel engine vs the
+//!        retained naive reference (the oracle of
+//!        tests/functional_oracle.rs); the speedup is recorded here;
 //!   L3b: dataset generator (streams every training batch);
 //!   L3c: PJRT execute round-trip (train step + eval) when artifacts
-//!        are present — the training/serving hot loop.
+//!        are present and the crate is built with --features pjrt — the
+//!        training/serving hot loop.
 
 mod common;
 
-use addernet::coordinator::{Manifest, Trainer};
-use addernet::data;
-use addernet::quant::Mode;
-use addernet::runtime::Runtime;
+use addernet::quant::{LayerCalib, Mode};
 use addernet::sim::functional::{conv2d, conv2d_quant, ConvW, QuantCfg, SimKernel, Tensor};
-use addernet::quant::LayerCalib;
+use addernet::sim::reference;
 use addernet::util::XorShift64;
+use addernet::{data, nn};
 
 fn main() {
     println!("=== bench hotpath (§Perf) ===");
     let mut rng = XorShift64::new(1);
 
-    // L3a: resnet-shape conv (the heaviest functional-sim layer)
+    // L3a: resnet-shape conv (the heaviest functional-sim layer),
+    // engine vs naive reference.
     let x = Tensor::new((8, 32, 32, 16),
                         (0..8 * 32 * 32 * 16).map(|_| rng.next_f32_sym(1.0)).collect());
     let wdat: Vec<f32> = (0..3 * 3 * 16 * 16).map(|_| rng.next_f32_sym(1.0)).collect();
     let w = ConvW { data: &wdat, kh: 3, kw: 3, cin: 16, cout: 16 };
     let macs = 8.0 * 32.0 * 32.0 * 9.0 * 16.0 * 16.0;
-    println!("functional conv 3x3 16->16 (B=8, 32x32):");
+    println!("functional conv 3x3 16->16 (B=8, 32x32), engine vs naive reference:");
     for (name, kind) in [("f32 adder", SimKernel::Adder), ("f32 mult", SimKernel::Mult)] {
-        let (med, _) = common::time_it(2, 8, || {
-            std::hint::black_box(conv2d(&x, &w, 1, addernet::nn::Padding::Same, kind));
+        let (naive, _) = common::time_it(1, 5, || {
+            std::hint::black_box(reference::conv2d(&x, &w, 1, nn::Padding::Same, kind));
         });
-        common::report(name, med, macs, "MAC");
+        let (engine, _) = common::time_it(2, 8, || {
+            std::hint::black_box(conv2d(&x, &w, 1, nn::Padding::Same, kind));
+        });
+        common::report(&format!("{name} (naive reference)"), naive, macs, "MAC");
+        common::report(&format!("{name} (tiled engine)"), engine, macs, "MAC");
+        println!("  {name:44} speedup {:>8.1}x", naive / engine);
     }
     let calib = LayerCalib { feat_max_abs: 1.0, weight_max_abs: 1.0 };
     for (name, bits) in [("int8 adder", 8u32), ("int16 adder", 16)] {
         let cfg = QuantCfg { bits, mode: Mode::SharedScale };
-        let (med, _) = common::time_it(2, 8, || {
-            std::hint::black_box(conv2d_quant(&x, &w, 1, addernet::nn::Padding::Same,
+        let (naive, _) = common::time_it(1, 5, || {
+            std::hint::black_box(reference::conv2d_quant(
+                &x, &w, 1, nn::Padding::Same, SimKernel::Adder, cfg, &calib));
+        });
+        let (engine, _) = common::time_it(2, 8, || {
+            std::hint::black_box(conv2d_quant(&x, &w, 1, nn::Padding::Same,
                                               SimKernel::Adder, cfg, &calib));
         });
-        common::report(name, med, macs, "MAC");
+        common::report(&format!("{name} (naive reference)"), naive, macs, "MAC");
+        common::report(&format!("{name} (tiled engine)"), engine, macs, "MAC");
+        println!("  {name:44} speedup {:>8.1}x", naive / engine);
     }
 
     // L3b: dataset generator
@@ -51,6 +64,14 @@ fn main() {
     common::report("dataset generator (256 imgs)", med, 256.0, "img");
 
     // L3c: PJRT round-trips
+    pjrt_round_trips();
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_round_trips() {
+    use addernet::coordinator::{Manifest, Trainer};
+    use addernet::runtime::Runtime;
+
     let art = std::path::Path::new("artifacts");
     if let Ok(manifest) = Manifest::load(art) {
         let mut rt = Runtime::new(art).unwrap();
@@ -70,4 +91,9 @@ fn main() {
     } else {
         println!("  (no artifacts/ — PJRT round-trip benches skipped)");
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_round_trips() {
+    println!("  (built without --features pjrt — PJRT round-trip benches skipped)");
 }

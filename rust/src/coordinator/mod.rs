@@ -1,12 +1,19 @@
 //! Layer-3 coordinator: manifest loading, the training driver that owns
 //! all model state, the serving router + dynamic batcher, and metrics.
+//!
+//! The trainer and the PJRT serving backend need the `pjrt` feature; the
+//! functional-sim serving backend is always available.
 
 pub mod manifest;
 pub mod metrics;
 pub mod server;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use manifest::Manifest;
 pub use metrics::{LatencyHistogram, ServerMetrics};
-pub use server::{ServerHandle, VariantCfg};
+pub use server::{FunctionalVariantCfg, ServerHandle};
+#[cfg(feature = "pjrt")]
+pub use server::VariantCfg;
+#[cfg(feature = "pjrt")]
 pub use trainer::Trainer;

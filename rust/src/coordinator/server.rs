@@ -1,18 +1,28 @@
 //! Inference serving: request router + dynamic batcher.
 //!
-//! Thread architecture (the vendored crate set has no async runtime, and
-//! PJRT handles are not `Send`, so each model variant gets a dedicated
-//! OS worker thread that *constructs its own* `Runtime`):
+//! Thread architecture (the vendored crate set has no async runtime, so
+//! each model variant gets a dedicated OS worker thread):
 //!
 //! ```text
 //!   clients -> ServerHandle.submit(variant, image)
 //!           -> router (HashMap<variant, mpsc::Sender>)
-//!           -> worker thread [dynamic batcher -> PJRT eval graph]
+//!           -> worker thread [dynamic batcher -> backend]
 //!           -> per-request response channel
 //! ```
 //!
-//! The dynamic batcher collects up to the graph's fixed batch size,
-//! waiting at most `batch_window` after the first request — the same
+//! Two backends share the router, the batcher and the metrics:
+//!
+//! * **functional** ([`start_functional`]) — the tiled multi-threaded
+//!   functional-sim engine; queued requests are stacked into ONE
+//!   [`Runner::forward_many`] pass, so dispatch, patch gathers and
+//!   weight streaming amortize across the whole queue.  Needs no
+//!   artifacts and no XLA.
+//! * **pjrt** ([`start`], `pjrt` feature) — the AOT-compiled eval graph
+//!   through the PJRT runtime; PJRT handles are not `Send`, so each
+//!   worker constructs its own `Runtime`.
+//!
+//! The dynamic batcher collects up to the backend's batch size, waiting
+//! at most `batch_window` after the first request — the same
 //! latency/throughput trade the serving literature (and the vLLM-style
 //! router) makes.
 
@@ -24,11 +34,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::manifest::Manifest;
 use super::metrics::ServerMetrics;
+use crate::quant::Calibration;
+use crate::sim::functional::{self, Arch, ExecMode, Params, Runner, SimKernel};
+
+#[cfg(feature = "pjrt")]
+use super::manifest::Manifest;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{self, Runtime};
 
-/// A single inference request: one 32x32x1 image.
+/// A single inference request: one NHWC image.
 struct Request {
     image: Vec<f32>,
     enqueued: Instant,
@@ -41,16 +56,6 @@ pub struct Response {
     pub logits: Vec<f32>,
     pub queue_time: Duration,
     pub total_time: Duration,
-}
-
-/// Serving configuration for one variant.
-#[derive(Debug, Clone)]
-pub struct VariantCfg {
-    /// Graph base name, e.g. "lenet5_adder".
-    pub model: String,
-    /// Optional trained-weights file (relative to artifacts/); falls back
-    /// to the init file.
-    pub weights: Option<String>,
 }
 
 /// Handle clients use to submit work and read metrics.
@@ -84,7 +89,169 @@ impl ServerHandle {
     }
 }
 
-/// Start the server: one worker thread per variant.
+/// Collect a batch: blocking wait for the first request, then drain up
+/// to `max_batch` within `batch_window`.  Returns false on shutdown.
+fn collect_batch(rx: &Receiver<Request>, pending: &mut Vec<Request>,
+                 max_batch: usize, batch_window: Duration) -> bool {
+    match rx.recv() {
+        Ok(r) => pending.push(r),
+        Err(_) => return false, // all senders dropped: shutdown
+    }
+    let deadline = Instant::now() + batch_window;
+    while pending.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => pending.push(r),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    true
+}
+
+fn record_batch(metrics: &Arc<Mutex<HashMap<String, ServerMetrics>>>,
+                name: &str, n: usize, exec_time: Duration) {
+    let mut mm = metrics.lock().unwrap();
+    let m = mm.entry(name.to_string()).or_default();
+    m.batches += 1;
+    m.images += n as u64;
+    m.requests += n as u64;
+    m.exec_lat.record(exec_time);
+}
+
+fn respond_all(metrics: &Arc<Mutex<HashMap<String, ServerMetrics>>>,
+               name: &str, pending: &mut Vec<Request>, exec_start: Instant,
+               logits: impl Fn(usize) -> Vec<f32>) {
+    let mut mm = metrics.lock().unwrap();
+    let m = mm.entry(name.to_string()).or_default();
+    for (i, r) in pending.drain(..).enumerate() {
+        let queue_time = exec_start.duration_since(r.enqueued);
+        let total_time = r.enqueued.elapsed();
+        m.queue_lat.record(queue_time);
+        m.e2e_lat.record(total_time);
+        let _ = r.respond.send(Response { logits: logits(i), queue_time, total_time });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Functional-sim backend (always available)
+// ---------------------------------------------------------------------------
+
+/// Serving configuration for one functional-sim variant.
+#[derive(Debug, Clone)]
+pub struct FunctionalVariantCfg {
+    /// Route name clients submit to, e.g. "lenet5_adder".
+    pub name: String,
+    pub arch: Arch,
+    pub kind: SimKernel,
+    /// Model parameters (manifest-loaded or synthetic).
+    pub params: Params,
+    /// f32 or shared-scale quantized execution.
+    pub mode: ExecMode,
+    /// Required when `mode` is quantized.
+    pub calib: Option<Calibration>,
+    /// Input (h, w, c); requests must carry h*w*c floats.
+    pub input_hwc: (usize, usize, usize),
+    /// Dynamic-batch cap (the functional engine takes any batch size;
+    /// this bounds per-batch latency).
+    pub max_batch: usize,
+}
+
+impl FunctionalVariantCfg {
+    /// Variant backed by deterministic synthetic weights — lets the
+    /// server run with no Python artifacts (demos, tests, load rigs).
+    pub fn synthetic(name: &str, arch: Arch, kind: SimKernel, seed: u64) -> Self {
+        Self {
+            name: name.into(),
+            arch,
+            kind,
+            params: functional::synth_params(arch, seed),
+            mode: ExecMode::F32,
+            calib: None,
+            input_hwc: (32, 32, 1),
+            max_batch: 32,
+        }
+    }
+}
+
+/// Start the functional-sim server: one worker thread per variant.
+pub fn start_functional(variants: Vec<FunctionalVariantCfg>,
+                        batch_window: Duration) -> Result<ServerHandle> {
+    let metrics: Arc<Mutex<HashMap<String, ServerMetrics>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let mut routes = HashMap::new();
+    let mut workers = Vec::new();
+    for v in variants {
+        anyhow::ensure!(v.max_batch > 0, "variant {}: max_batch must be > 0", v.name);
+        anyhow::ensure!(
+            matches!(v.mode, ExecMode::F32) || v.calib.is_some(),
+            "variant {}: quantized mode requires calibration", v.name);
+        let (tx, rx) = mpsc::channel::<Request>();
+        routes.insert(v.name.clone(), tx);
+        let m = metrics.clone();
+        workers.push(std::thread::Builder::new()
+            .name(format!("fsim-{}", v.name))
+            .spawn(move || functional_worker(v, rx, m, batch_window))?);
+    }
+    Ok(ServerHandle { routes, metrics, workers })
+}
+
+fn functional_worker(cfg: FunctionalVariantCfg, rx: Receiver<Request>,
+                     metrics: Arc<Mutex<HashMap<String, ServerMetrics>>>,
+                     batch_window: Duration) {
+    let (h, w, c) = cfg.input_hwc;
+    let px = h * w * c;
+    let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+    loop {
+        if !collect_batch(&rx, &mut pending, cfg.max_batch, batch_window) {
+            return;
+        }
+        // malformed requests are dropped; their response channel closes,
+        // surfacing a recv error to the submitter.
+        pending.retain(|r| r.image.len() == px);
+        let n = pending.len();
+        if n == 0 {
+            continue;
+        }
+        let exec_start = Instant::now();
+        let images: Vec<&[f32]> = pending.iter().map(|r| r.image.as_slice()).collect();
+        let mut runner = Runner {
+            params: &cfg.params,
+            arch: cfg.arch,
+            kind: cfg.kind,
+            mode: cfg.mode,
+            calib: cfg.calib.as_ref(),
+            observe: None,
+        };
+        let logits = runner.forward_many(&images, cfg.input_hwc);
+        drop(images);
+        let exec_time = exec_start.elapsed();
+        record_batch(&metrics, &cfg.name, n, exec_time);
+        respond_all(&metrics, &cfg.name, &mut pending, exec_start,
+                    |i| logits[i].clone());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend (`pjrt` feature)
+// ---------------------------------------------------------------------------
+
+/// Serving configuration for one PJRT graph variant.
+#[cfg(feature = "pjrt")]
+#[derive(Debug, Clone)]
+pub struct VariantCfg {
+    /// Graph base name, e.g. "lenet5_adder".
+    pub model: String,
+    /// Optional trained-weights file (relative to artifacts/); falls back
+    /// to the init file.
+    pub weights: Option<String>,
+}
+
+/// Start the PJRT server: one worker thread per variant.
+#[cfg(feature = "pjrt")]
 pub fn start(manifest: &Manifest, variants: &[VariantCfg],
              batch_window: Duration) -> Result<ServerHandle> {
     let metrics: Arc<Mutex<HashMap<String, ServerMetrics>>> =
@@ -100,7 +267,7 @@ pub fn start(manifest: &Manifest, variants: &[VariantCfg],
         workers.push(std::thread::Builder::new()
             .name(format!("worker-{}", v.model))
             .spawn(move || {
-                if let Err(e) = worker_loop(man, cfg.clone(), rx, m, batch_window) {
+                if let Err(e) = pjrt_worker(man, cfg.clone(), rx, m, batch_window) {
                     eprintln!("[server] worker {} failed: {e:#}", cfg.model);
                 }
             })?);
@@ -108,7 +275,8 @@ pub fn start(manifest: &Manifest, variants: &[VariantCfg],
     Ok(ServerHandle { routes, metrics, workers })
 }
 
-fn worker_loop(manifest: Manifest, cfg: VariantCfg, rx: Receiver<Request>,
+#[cfg(feature = "pjrt")]
+fn pjrt_worker(manifest: Manifest, cfg: VariantCfg, rx: Receiver<Request>,
                metrics: Arc<Mutex<HashMap<String, ServerMetrics>>>,
                batch_window: Duration) -> Result<()> {
     // PJRT handles are not Send: the runtime lives and dies in this thread.
@@ -128,22 +296,8 @@ fn worker_loop(manifest: Manifest, cfg: VariantCfg, rx: Receiver<Request>,
 
     let mut pending: Vec<Request> = Vec::with_capacity(batch);
     loop {
-        // blocking wait for the first request of a batch
-        match rx.recv() {
-            Ok(r) => pending.push(r),
-            Err(_) => return Ok(()), // all senders dropped: shutdown
-        }
-        let deadline = Instant::now() + batch_window;
-        while pending.len() < batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
+        if !collect_batch(&rx, &mut pending, batch, batch_window) {
+            return Ok(());
         }
         // assemble the fixed-size batch (pad with zeros)
         let n = pending.len();
@@ -159,28 +313,8 @@ fn worker_loop(manifest: Manifest, cfg: VariantCfg, rx: Receiver<Request>,
         let logits = runtime::to_vec_f32(&outs[0])?;
         let exec_time = exec_start.elapsed();
 
-        {
-            let mut mm = metrics.lock().unwrap();
-            let m = mm.entry(cfg.model.clone()).or_default();
-            m.batches += 1;
-            m.images += n as u64;
-            m.requests += n as u64;
-            m.exec_lat.record(exec_time);
-        }
-        for (i, r) in pending.drain(..).enumerate() {
-            let queue_time = exec_start.duration_since(r.enqueued);
-            let total_time = r.enqueued.elapsed();
-            {
-                let mut mm = metrics.lock().unwrap();
-                let m = mm.entry(cfg.model.clone()).or_default();
-                m.queue_lat.record(queue_time);
-                m.e2e_lat.record(total_time);
-            }
-            let _ = r.respond.send(Response {
-                logits: logits[i * 10..(i + 1) * 10].to_vec(),
-                queue_time,
-                total_time,
-            });
-        }
+        record_batch(&metrics, &cfg.model, n, exec_time);
+        respond_all(&metrics, &cfg.model, &mut pending, exec_start,
+                    |i| logits[i * 10..(i + 1) * 10].to_vec());
     }
 }

@@ -11,6 +11,11 @@
 //!
 //! Python never runs on the request path; the `repro` binary is
 //! self-contained once artifacts are built.
+//!
+//! The PJRT/XLA layer ([`runtime`], the trainer, the graph-backed
+//! reports) is optional: it compiles only with the `pjrt` feature so the
+//! crate builds, tests and serves (through the functional-sim backend)
+//! on machines with no XLA toolchain.
 
 pub mod coordinator;
 pub mod data;
@@ -18,6 +23,7 @@ pub mod hw;
 pub mod nn;
 pub mod quant;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod util;

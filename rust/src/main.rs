@@ -16,12 +16,17 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use addernet::coordinator::{server, Manifest, Trainer, VariantCfg};
+use addernet::coordinator::{server, Manifest};
+#[cfg(feature = "pjrt")]
+use addernet::coordinator::{Trainer, VariantCfg};
 use addernet::hw::KernelKind;
-use addernet::report::{self, Results};
+use addernet::report;
+#[cfg(feature = "pjrt")]
+use addernet::runtime;
 use addernet::sim::accelerator::{self, AccelConfig};
+use addernet::sim::functional::{Arch, SimKernel};
 use addernet::util::table::{f, Table};
-use addernet::{data, nn, runtime};
+use addernet::{data, nn};
 
 /// Minimal flag parser: positional args + `--key value` pairs.
 struct Args {
@@ -103,7 +108,8 @@ fn usage() {
          repro report <exp> [--arch lenet5] [--eval-n 256] [--artifacts DIR]\n    \
          exps: {}\n  \
          repro train [--arch lenet5] [--kernel adder] [--steps 400] [--eval-n 512]\n  \
-         repro serve [--models lenet5_adder,lenet5_mult] [--requests 512] [--window-ms 2]\n  \
+         repro serve [--backend functional|pjrt] [--models lenet5_adder,lenet5_mult] \
+                     [--requests 512] [--window-ms 2] [--max-batch 32]\n  \
          repro quantize [--arch lenet5] [--kernel adder] [--bits 8] [--mode shared|separate]\n  \
          repro simulate [--net resnet18] [--kernel adder|mult] [--dw 16] [--parallelism 1024]\n  \
          repro info",
@@ -118,7 +124,17 @@ fn cmd_report(args: &Args) -> Result<()> {
                 args.get_usize("eval-n", 256))
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    anyhow::bail!("`repro train` drives the AOT train-step graph and needs \
+                   the PJRT runtime: uncomment the xla dependency in \
+                   rust/Cargo.toml and rebuild with --features pjrt")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
+    use addernet::report::Results;
+
     let arch = args.get("arch", "lenet5");
     let kernel = args.get("kernel", "adder");
     let dir = art_dir(args);
@@ -160,6 +176,65 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    match args.get("backend", "functional").as_str() {
+        "functional" => serve_functional(args),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => serve_pjrt(args),
+        other => anyhow::bail!(
+            "unknown serve backend {other} (functional is always available; \
+             pjrt needs the xla dependency uncommented in rust/Cargo.toml \
+             and a build with --features pjrt)"),
+    }
+}
+
+/// Serve through the tiled functional-sim engine: batched Runner
+/// inference, no artifacts or XLA required (synthetic weights stand in
+/// when no parameter files exist).
+fn serve_functional(args: &Args) -> Result<()> {
+    let dir = art_dir(args);
+    let models = args.get("models", "lenet5_adder,lenet5_mult");
+    let n_req = args.get_usize("requests", 512);
+    let window = Duration::from_millis(args.get_usize("window-ms", 2) as u64);
+    let max_batch = args.get_usize("max-batch", 32);
+    let manifest = Manifest::load(&dir).ok();
+    let mut variants = Vec::new();
+    for m in models.split(',') {
+        let name = m.trim().to_string();
+        let (arch_s, kernel_s) = name.split_once('_').unwrap_or((name.as_str(), "adder"));
+        let arch = Arch::parse(arch_s).with_context(
+            || format!("functional backend serves lenet5|resnet8|resnet20, got {arch_s}"))?;
+        let kind = match kernel_s {
+            "adder" => SimKernel::Adder,
+            "mult" => SimKernel::Mult,
+            k => anyhow::bail!("functional backend serves adder|mult kernels, got {k}"),
+        };
+        let mut cfg = server::FunctionalVariantCfg::synthetic(&name, arch, kind, 42);
+        cfg.max_batch = max_batch.max(1);
+        let loaded = manifest.as_ref().and_then(|man| {
+            let wfile = report::quantrep::trained_file(arch_s, kernel_s);
+            let file = if man.dir.join(&wfile).exists() {
+                Some(wfile)
+            } else {
+                man.params.get(arch_s).map(|l| l.init_file.clone())
+            };
+            file.and_then(|f2| man.read_params(arch_s, &f2).ok())
+        });
+        match loaded {
+            Some(p) => cfg.params = p,
+            None => eprintln!("[serve] {name}: no parameter file under {}; \
+                               using synthetic weights", dir.display()),
+        }
+        variants.push(cfg);
+    }
+    println!("[serve] functional backend: {} variants, window {:?}, max batch {}",
+             variants.len(), window, max_batch);
+    let handle = server::start_functional(variants, window)?;
+    drive_load(handle, n_req)
+}
+
+/// Serve through the AOT eval graphs on the PJRT runtime.
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(args: &Args) -> Result<()> {
     let dir = art_dir(args);
     let manifest = Manifest::load(&dir)?;
     let models = args.get("models", "lenet5_adder,lenet5_mult");
@@ -175,11 +250,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }).collect();
 
-    println!("[serve] starting {} variants, window {:?}", variants.len(), window);
+    println!("[serve] pjrt backend: {} variants, window {:?}", variants.len(), window);
     let handle = server::start(&manifest, &variants, window)?;
-    let names = handle.variants();
+    drive_load(handle, n_req)
+}
 
-    // synthetic load: round-robin the variants
+/// Fire a synthetic round-robin load at a running server and print the
+/// latency/throughput metrics table.
+fn drive_load(handle: server::ServerHandle, n_req: usize) -> Result<()> {
+    let names = handle.variants();
     let eval = data::eval_set(n_req, 3);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
@@ -217,7 +296,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
             m.e2e_lat.quantile_us(0.99).to_string(),
         ]);
     }
-    drop(metrics);
     t.print();
     handle.shutdown();
     Ok(())

@@ -17,6 +17,40 @@ pub enum Padding {
     Valid,
 }
 
+/// Output extent of one spatial dimension under `padding`.
+pub fn conv_out_dim(in_sz: usize, k: usize, stride: usize, padding: Padding) -> usize {
+    match padding {
+        Padding::Same => in_sz.div_ceil(stride),
+        Padding::Valid => (in_sz - k) / stride + 1,
+    }
+}
+
+/// (before, after) zero padding for one spatial dimension — SAME mode
+/// centres the kernel the way JAX/TF do (extra pad goes after).
+pub fn same_pad(in_sz: usize, k: usize, stride: usize) -> (usize, usize) {
+    let out = in_sz.div_ceil(stride);
+    let total = ((out - 1) * stride + k).saturating_sub(in_sz);
+    (total / 2, total - total / 2)
+}
+
+/// Full 2-D conv geometry: (pad_top, pad_left, h_out, w_out).  The single
+/// source of truth shared by the layer descriptors below and the
+/// functional-sim engine.
+pub fn conv_geometry(
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padding: Padding,
+) -> (usize, usize, usize, usize) {
+    let (pt, pl) = match padding {
+        Padding::Same => (same_pad(h, kh, stride).0, same_pad(w, kw, stride).0),
+        Padding::Valid => (0, 0),
+    };
+    (pt, pl, conv_out_dim(h, kh, stride, padding), conv_out_dim(w, kw, stride, padding))
+}
+
 /// One convolution workload.
 #[derive(Debug, Clone)]
 pub struct ConvLayer {
@@ -33,17 +67,11 @@ pub struct ConvLayer {
 
 impl ConvLayer {
     pub fn h_out(&self) -> usize {
-        match self.padding {
-            Padding::Same => self.h_in.div_ceil(self.stride),
-            Padding::Valid => (self.h_in - self.kh) / self.stride + 1,
-        }
+        conv_out_dim(self.h_in, self.kh, self.stride, self.padding)
     }
 
     pub fn w_out(&self) -> usize {
-        match self.padding {
-            Padding::Same => self.w_in.div_ceil(self.stride),
-            Padding::Valid => (self.w_in - self.kw) / self.stride + 1,
-        }
+        conv_out_dim(self.w_in, self.kw, self.stride, self.padding)
     }
 
     /// Multiply-accumulate (or add-accumulate) count for one image.
@@ -150,6 +178,17 @@ impl NetworkDesc {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn geometry_helpers() {
+        assert_eq!(conv_out_dim(32, 3, 1, Padding::Same), 32);
+        assert_eq!(conv_out_dim(32, 5, 1, Padding::Valid), 28);
+        assert_eq!(same_pad(32, 3, 1), (1, 1));
+        assert_eq!(same_pad(5, 2, 2), (0, 1));
+        let (pt, pl, ho, wo) = conv_geometry(9, 7, 3, 3, 2, Padding::Same);
+        assert_eq!((ho, wo), (5, 4));
+        assert_eq!((pt, pl), (1, 1));
+    }
 
     #[test]
     fn conv_shapes() {

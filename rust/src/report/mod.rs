@@ -1,6 +1,7 @@
 //! Paper-style report renderers: one entry point per table/figure
 //! (DESIGN.md §4 experiment index).  `repro report <exp>` dispatches here.
 
+#[cfg(feature = "pjrt")]
 pub mod evalrt;
 pub mod fpga;
 pub mod kernels;
@@ -22,6 +23,7 @@ pub const EXPERIMENTS: &[&str] = &[
 /// Render one experiment to stdout.
 pub fn run(exp: &str, art_dir: &Path, arch: &str, n_eval: usize) -> Result<()> {
     match exp {
+        #[cfg(feature = "pjrt")]
         "fig2" => match evalrt::fig2_measured(art_dir, n_eval) {
             Ok(t) => t.print(),
             Err(e) => {
@@ -29,6 +31,11 @@ pub fn run(exp: &str, art_dir: &Path, arch: &str, n_eval: usize) -> Result<()> {
                 kernels::fig2(&Results::load(art_dir)).print();
             }
         },
+        #[cfg(not(feature = "pjrt"))]
+        "fig2" => {
+            eprintln!("[report] built without the pjrt feature; fig2 uses results.json");
+            kernels::fig2(&Results::load(art_dir)).print();
+        }
         "fig2c" => kernels::fig2c().print(),
         "s1" => kernels::s1().print(),
         "s4" => kernels::s4().print(),
@@ -51,11 +58,16 @@ pub fn run(exp: &str, art_dir: &Path, arch: &str, n_eval: usize) -> Result<()> {
         }
         "onboard" => fpga::onboard().print(),
         "s8" => fpga::s8().print(),
+        #[cfg(feature = "pjrt")]
         "fig3ab" => {
             for t in quantrep::fig3ab(art_dir, arch)? {
                 t.print();
             }
         }
+        #[cfg(not(feature = "pjrt"))]
+        "fig3ab" => anyhow::bail!(
+            "fig3ab needs the probe graph: uncomment the xla dependency in \
+             rust/Cargo.toml and rebuild with --features pjrt"),
         "fig3d" => quantrep::fig3d(art_dir, arch, n_eval)?.print(),
         "s6" => quantrep::fig3d(art_dir, "resnet8", n_eval)?.print(),
         "s7" => quantrep::s7(art_dir, arch, n_eval)?.print(),

@@ -3,14 +3,15 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::coordinator::Manifest;
-use crate::quant::{self, Calibration, Log2Histogram, Mode};
+use crate::data;
+use crate::quant::{Calibration, Mode};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{self, Runtime};
 use crate::sim::functional::{self, Arch, ExecMode, QuantCfg, Runner, SimKernel, Tensor};
 use crate::util::table::{pct, Table};
-use crate::{data, util::table::f};
 
 /// Weights file naming convention shared with `repro train`.
 pub fn trained_file(arch: &str, kernel: &str) -> String {
@@ -129,8 +130,14 @@ pub fn s7(art_dir: &Path, arch_name: &str, n_eval: usize) -> Result<Table> {
 
 /// Fig. 3(a/b): per-layer feature and weight log2-magnitude distributions
 /// of the trained AdderNet, via the AOT probe graph (features) and the
-/// parameter buffers (weights).
+/// parameter buffers (weights).  Needs the PJRT runtime.
+#[cfg(feature = "pjrt")]
 pub fn fig3ab(art_dir: &Path, arch_name: &str) -> Result<Vec<Table>> {
+    use anyhow::Context;
+
+    use crate::quant::{self, Log2Histogram};
+    use crate::util::table::f;
+
     let manifest = Manifest::load(art_dir)?;
     let gname = format!("{arch_name}_adder_probe");
     let ginfo = manifest.graph(&gname)?.clone();

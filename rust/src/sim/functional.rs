@@ -8,16 +8,26 @@
 //!   that records per-layer feature ranges.
 //! * **quantized** — integer arithmetic through the same widened
 //!   accumulator the RTL datapath would use (i32 covers DW + log2(K) for
-//!   every supported width, see conv2d_quant), with the paper's
+//!   every supported width, see [`conv2d_quant`]), with the paper's
 //!   shared-scaling-factor mode or the CNN-style separate-scale mode
 //!   (S7 contrast).
 //!
-//! This module is the Layer-3 hot path the §Perf pass optimizes.
+//! This module is the Layer-3 hot path.  Convolutions run through a
+//! tiled engine: an im2col-style patch gather per output row, a
+//! cache-blocked inner kernel (`OW_TILE` output columns x `COUT_TILE`
+//! output channels), parallelized across batch x output-rows on a scoped
+//! worker pool ([`crate::util::threads`]).  The original scalar loop
+//! nests live on in [`super::reference`] as the oracle the engine is
+//! tested against — bit-exactly for the integer path (i32 accumulation
+//! is order-independent), and bit-compatibly for f32 (per-output taps
+//! accumulate in the same (ky, kx, ci) order).
 
 use std::collections::BTreeMap;
 
-use crate::nn::Padding;
+use crate::nn::{self, Padding};
 use crate::quant::{self, Calibration, LayerCalib, Mode};
+use crate::util::threads::parallel_chunks;
+use crate::util::XorShift64;
 
 /// Dense NHWC tensor (n = batch).
 #[derive(Debug, Clone, PartialEq)]
@@ -66,12 +76,6 @@ pub struct QuantCfg {
     pub mode: Mode,
 }
 
-fn same_pad(in_sz: usize, k: usize, stride: usize) -> (usize, usize) {
-    let out = in_sz.div_ceil(stride);
-    let total = ((out - 1) * stride + k).saturating_sub(in_sz);
-    (total / 2, total - total / 2)
-}
-
 /// Convolution weights: (kh, kw, cin, cout) row-major — the layout the
 /// manifest records (HWIO, same as the JAX side).
 #[derive(Debug, Clone)]
@@ -83,104 +87,182 @@ pub struct ConvW<'a> {
     pub cout: usize,
 }
 
-/// f32 convolution (both kernels), NHWC x HWIO -> NHWC.
-pub fn conv2d(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
-              kind: SimKernel) -> Tensor {
-    let (n, h, ww_in, cin) = x.shape;
-    assert_eq!(cin, w.cin);
-    let (pt, _pb, pl, _pr, ho, wo) = conv_geom(h, ww_in, w.kh, w.kw, stride, padding);
-    let mut out = Tensor::zeros((n, ho, wo, w.cout));
-    let cout = w.cout;
-    // §Perf: for the adder kernel, a zero-padded tap contributes exactly
-    // -sum_ci |w[ky,kx,ci,:]|; precompute those per-tap column sums once
-    // so padded border pixels cost O(cout) instead of O(cin*cout).
-    let pad_tap: Vec<f32> = if matches!(kind, SimKernel::Adder) {
-        let mut v = vec![0f32; w.kh * w.kw * cout];
-        for t in 0..w.kh * w.kw {
-            for ci in 0..cin {
-                let row = &w.data[(t * cin + ci) * cout..(t * cin + ci + 1) * cout];
-                for (s, &wv) in v[t * cout..(t + 1) * cout].iter_mut().zip(row) {
-                    *s += wv.abs();
+// ---------------------------------------------------------------------------
+// Tiled conv engine
+// ---------------------------------------------------------------------------
+
+/// Output-channel tile of the inner kernel (accumulators live on the
+/// stack; 64 f32 = two cache lines).
+const COUT_TILE: usize = 64;
+/// Output-column register blocking: four columns share each streamed
+/// weight row, quartering weight bandwidth in the inner loop.
+const OW_TILE: usize = 4;
+/// Below this many inner-kernel ops the conv runs single-threaded (spawn
+/// overhead would dominate — covers the unit-test-sized shapes).
+const PAR_MIN_OPS: usize = 1 << 15;
+
+fn max_threads_for(ops: usize) -> usize {
+    if ops < PAR_MIN_OPS { 1 } else { usize::MAX }
+}
+
+/// Gather the im2col patches for one (batch, output-row) pair:
+/// `rowbuf[ow * k_taps + (ky * kw + kx) * cin + ci]`, zero-filled at the
+/// SAME-padding border.  Interior rows copy whole kw x cin runs.
+#[allow(clippy::too_many_arguments)]
+fn gather_row<T: Copy + Default>(
+    data: &[T], h: usize, w_in: usize, cin: usize, kh: usize, kw: usize,
+    b: usize, oh: usize, stride: usize, pt: usize, pl: usize, wo: usize,
+    rowbuf: &mut [T],
+) {
+    let k_taps = kh * kw * cin;
+    for ow in 0..wo {
+        let patch = &mut rowbuf[ow * k_taps..(ow + 1) * k_taps];
+        let x0 = (ow * stride) as isize - pl as isize;
+        for ky in 0..kh {
+            let iy = (oh * stride + ky) as isize - pt as isize;
+            let dst = &mut patch[ky * kw * cin..(ky + 1) * kw * cin];
+            if iy < 0 || iy >= h as isize {
+                dst.iter_mut().for_each(|v| *v = T::default());
+                continue;
+            }
+            let row_off = (b * h + iy as usize) * w_in;
+            if x0 >= 0 && x0 + kw as isize <= w_in as isize {
+                let off = (row_off + x0 as usize) * cin;
+                dst.copy_from_slice(&data[off..off + kw * cin]);
+            } else {
+                for kx in 0..kw {
+                    let ix = x0 + kx as isize;
+                    let d = &mut dst[kx * cin..(kx + 1) * cin];
+                    if ix < 0 || ix >= w_in as isize {
+                        d.iter_mut().for_each(|v| *v = T::default());
+                    } else {
+                        let off = (row_off + ix as usize) * cin;
+                        d.copy_from_slice(&data[off..off + cin]);
+                    }
                 }
             }
         }
-        v
-    } else {
-        Vec::new()
-    };
-    let mut acc = vec![0f32; cout];
-    for b in 0..n {
-        for oh in 0..ho {
-            for ow in 0..wo {
-                acc.iter_mut().for_each(|a| *a = 0.0);
-                for ky in 0..w.kh {
-                    let iy = (oh * stride + ky) as isize - pt as isize;
-                    let row_inside = iy >= 0 && iy < h as isize;
-                    for kx in 0..w.kw {
-                        let ix = (ow * stride + kx) as isize - pl as isize;
-                        if !row_inside || ix < 0 || ix >= ww_in as isize {
-                            // SAME zero padding: x = 0 contributes
-                            // -|0-w| for adder, nothing for mult.
-                            if matches!(kind, SimKernel::Adder) {
-                                let t = ky * w.kw + kx;
-                                for (a, &s) in acc.iter_mut()
-                                    .zip(&pad_tap[t * cout..(t + 1) * cout]) {
-                                    *a -= s;
+    }
+}
+
+macro_rules! conv_row_kernel {
+    ($name:ident, $t:ty, $zero:expr, $adder:expr, $mult:expr) => {
+        /// Blocked inner kernel over one gathered output row: OW_TILE
+        /// columns x COUT_TILE channels per pass, taps in ascending
+        /// (ky, kx, ci) order (the reference order).
+        fn $name(rowbuf: &[$t], k_taps: usize, wdat: &[$t], cout: usize,
+                 kind: SimKernel, out_row: &mut [$t]) {
+            let wo = out_row.len() / cout;
+            let mut co0 = 0;
+            while co0 < cout {
+                let cb = COUT_TILE.min(cout - co0);
+                let mut ow = 0;
+                while ow + OW_TILE <= wo {
+                    let p0 = &rowbuf[ow * k_taps..(ow + 1) * k_taps];
+                    let p1 = &rowbuf[(ow + 1) * k_taps..(ow + 2) * k_taps];
+                    let p2 = &rowbuf[(ow + 2) * k_taps..(ow + 3) * k_taps];
+                    let p3 = &rowbuf[(ow + 3) * k_taps..(ow + 4) * k_taps];
+                    let mut a0 = [$zero; COUT_TILE];
+                    let mut a1 = [$zero; COUT_TILE];
+                    let mut a2 = [$zero; COUT_TILE];
+                    let mut a3 = [$zero; COUT_TILE];
+                    for k in 0..k_taps {
+                        let wrow = &wdat[k * cout + co0..k * cout + co0 + cb];
+                        let (x0, x1, x2, x3) = (p0[k], p1[k], p2[k], p3[k]);
+                        match kind {
+                            SimKernel::Adder => {
+                                for (j, &wv) in wrow.iter().enumerate() {
+                                    a0[j] = $adder(a0[j], x0, wv);
+                                    a1[j] = $adder(a1[j], x1, wv);
+                                    a2[j] = $adder(a2[j], x2, wv);
+                                    a3[j] = $adder(a3[j], x3, wv);
                                 }
                             }
-                            continue;
-                        }
-                        let xoff = ((b * h + iy as usize) * ww_in + ix as usize) * cin;
-                        let xrow = &x.data[xoff..xoff + cin];
-                        for (ci, &xv) in xrow.iter().enumerate() {
-                            let wo_ = ((ky * w.kw + kx) * cin + ci) * cout;
-                            let wrow = &w.data[wo_..wo_ + cout];
-                            match kind {
-                                SimKernel::Adder => {
-                                    for (a, &wv) in acc.iter_mut().zip(wrow) {
-                                        *a -= (xv - wv).abs();
-                                    }
-                                }
-                                SimKernel::Mult => {
-                                    if xv != 0.0 {
-                                        for (a, &wv) in acc.iter_mut().zip(wrow) {
-                                            *a += xv * wv;
-                                        }
-                                    }
+                            SimKernel::Mult => {
+                                for (j, &wv) in wrow.iter().enumerate() {
+                                    a0[j] = $mult(a0[j], x0, wv);
+                                    a1[j] = $mult(a1[j], x1, wv);
+                                    a2[j] = $mult(a2[j], x2, wv);
+                                    a3[j] = $mult(a3[j], x3, wv);
                                 }
                             }
                         }
                     }
+                    for (t, acc) in [&a0, &a1, &a2, &a3].into_iter().enumerate() {
+                        let base = (ow + t) * cout + co0;
+                        out_row[base..base + cb].copy_from_slice(&acc[..cb]);
+                    }
+                    ow += OW_TILE;
                 }
-                let base = ((b * ho + oh) * wo + ow) * cout;
-                out.data[base..base + cout].copy_from_slice(&acc);
+                while ow < wo {
+                    let p = &rowbuf[ow * k_taps..(ow + 1) * k_taps];
+                    let mut acc = [$zero; COUT_TILE];
+                    for (k, &xv) in p.iter().enumerate() {
+                        let wrow = &wdat[k * cout + co0..k * cout + co0 + cb];
+                        match kind {
+                            SimKernel::Adder => {
+                                for (j, &wv) in wrow.iter().enumerate() {
+                                    acc[j] = $adder(acc[j], xv, wv);
+                                }
+                            }
+                            SimKernel::Mult => {
+                                for (j, &wv) in wrow.iter().enumerate() {
+                                    acc[j] = $mult(acc[j], xv, wv);
+                                }
+                            }
+                        }
+                    }
+                    let base = ow * cout + co0;
+                    out_row[base..base + cb].copy_from_slice(&acc[..cb]);
+                    ow += 1;
+                }
+                co0 += cb;
             }
         }
+    };
+}
+
+conv_row_kernel!(conv_row_f32, f32, 0f32,
+                 |a: f32, x: f32, w: f32| a - (x - w).abs(),
+                 |a: f32, x: f32, w: f32| a + x * w);
+conv_row_kernel!(conv_row_i32, i32, 0i32,
+                 |a: i32, x: i32, w: i32| a - (x - w).abs(),
+                 |a: i32, x: i32, w: i32| a + x * w);
+
+/// f32 convolution (both kernels), NHWC x HWIO -> NHWC, via the tiled
+/// parallel engine.
+pub fn conv2d(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
+              kind: SimKernel) -> Tensor {
+    let (n, h, w_in, cin) = x.shape;
+    assert_eq!(cin, w.cin, "cin mismatch");
+    let (pt, pl, ho, wo) = nn::conv_geometry(h, w_in, w.kh, w.kw, stride, padding);
+    let cout = w.cout;
+    let k_taps = w.kh * w.kw * cin;
+    let mut out = Tensor::zeros((n, ho, wo, cout));
+    if out.data.is_empty() {
+        return out;
     }
+    let threads = max_threads_for(n * ho * wo * k_taps * cout);
+    let (kh, kw) = (w.kh, w.kw);
+    let wdat = w.data;
+    parallel_chunks(&mut out.data, wo * cout, threads, |row, chunk| {
+        let (b, oh) = (row / ho, row % ho);
+        let mut rowbuf = vec![0f32; wo * k_taps];
+        gather_row(&x.data, h, w_in, cin, kh, kw, b, oh, stride, pt, pl, wo,
+                   &mut rowbuf);
+        conv_row_f32(&rowbuf, k_taps, wdat, cout, kind, chunk);
+    });
     out
 }
 
-fn conv_geom(h: usize, w: usize, kh: usize, kw: usize, stride: usize,
-             padding: Padding) -> (usize, usize, usize, usize, usize, usize) {
-    match padding {
-        Padding::Same => {
-            let (pt, pb) = same_pad(h, kh, stride);
-            let (pl, pr) = same_pad(w, kw, stride);
-            (pt, pb, pl, pr, h.div_ceil(stride), w.div_ceil(stride))
-        }
-        Padding::Valid => (0, 0, 0, 0, (h - kh) / stride + 1, (w - kw) / stride + 1),
-    }
-}
-
-/// Integer convolution through the widened datapath.  Inputs are
-/// quantized per `cfg` using the layer's calibration; the result is
-/// dequantized back to f32 for the downstream (BN/pool) float stages,
-/// mirroring the FPGA design where BN runs in a wide fixed-point unit.
-pub fn conv2d_quant(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
-                    kind: SimKernel, cfg: QuantCfg, calib: &LayerCalib) -> Tensor {
-    let (n, h, ww_in, cin) = x.shape;
-    let cout = w.cout;
-    // --- quantize operands -------------------------------------------------
+/// Quantize both conv operands per `cfg` + `calib`.  For the adder
+/// kernel with separate scales the datapath must point-align before
+/// subtracting: re-grid the finer operand onto the coarser grid (this
+/// throws away bits — the §3.1 motivation).  Returns (xq, wq,
+/// dequantization scale).  Shared by the engine and the naive oracle so
+/// both see identical integer operands.
+pub(crate) fn quant_operands(x: &[f32], w: &[f32], kind: SimKernel, cfg: QuantCfg,
+                             calib: &LayerCalib) -> (Vec<i32>, Vec<i32>, f32) {
     let (xe, we) = match cfg.mode {
         Mode::SharedScale => {
             let e = calib.shared_exp(cfg.bits);
@@ -188,79 +270,59 @@ pub fn conv2d_quant(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
         }
         Mode::SeparateScale => calib.separate_exps(cfg.bits),
     };
-    let xq = quant::quantize_slice(&x.data, xe, cfg.bits);
-    let mut wq = quant::quantize_slice(w.data, we, cfg.bits);
-    // For the adder kernel with separate scales the datapath must
-    // point-align before subtracting: re-grid the finer operand onto the
-    // coarser grid (this throws away bits — the §3.1 motivation).
-    let (xq, out_e, prod_e) = if matches!(kind, SimKernel::Adder) && xe != we {
+    let xq = quant::quantize_slice(x, xe, cfg.bits);
+    let mut wq = quant::quantize_slice(w, we, cfg.bits);
+    let (xq, out_e) = if matches!(kind, SimKernel::Adder) && xe != we {
         let coarse = xe.max(we);
         let xq2 = if xe < we { regrid(&xq, we - xe) } else { xq };
         if we < xe {
             wq = regrid(&wq, xe - we);
         }
-        (xq2, coarse, 0)
+        (xq2, coarse)
     } else {
-        (xq, xe, xe + we)
+        (xq, xe)
     };
-    let _ = prod_e;
-    let (pt, _pb, pl, _pr, ho, wo) = conv_geom(h, ww_in, w.kh, w.kw, stride, padding);
-    let mut out = Tensor::zeros((n, ho, wo, cout));
-    // §Perf: i64 accumulation is only needed when |x op w| * K can
-    // overflow i32 — never for the supported widths (<= 16 bit inputs,
-    // K <= 2^14 taps => |acc| <= 2*32767*2^14 < 2^31).  Widened-datapath
-    // semantics are identical; the RTL analogue is the adder tree's
-    // exact DW + log2(K) bits.
-    let mut acc = vec![0i32; cout];
     let pre_scale = match kind {
         SimKernel::Adder => (out_e as f32).exp2(),
         SimKernel::Mult => ((xe + we) as f32).exp2(),
     };
-    for b in 0..n {
-        for oh in 0..ho {
-            for ow in 0..wo {
-                acc.iter_mut().for_each(|a| *a = 0);
-                for ky in 0..w.kh {
-                    let iy = (oh * stride + ky) as isize - pt as isize;
-                    let row_inside = iy >= 0 && iy < h as isize;
-                    for kx in 0..w.kw {
-                        let ix = (ow * stride + kx) as isize - pl as isize;
-                        let inside = row_inside && ix >= 0 && ix < ww_in as isize;
-                        if !inside && matches!(kind, SimKernel::Mult) {
-                            continue; // 0 * w adds nothing
-                        }
-                        let xrow: &[i32] = if inside {
-                            let o = ((b * h + iy as usize) * ww_in + ix as usize) * cin;
-                            &xq[o..o + cin]
-                        } else {
-                            &[]
-                        };
-                        for ci in 0..cin {
-                            let xv = if inside { xrow[ci] } else { 0 };
-                            let wo_ = ((ky * w.kw + kx) * cin + ci) * cout;
-                            let wrow = &wq[wo_..wo_ + cout];
-                            match kind {
-                                SimKernel::Adder => {
-                                    for (a, &wv) in acc.iter_mut().zip(wrow) {
-                                        *a -= (xv - wv).abs();
-                                    }
-                                }
-                                SimKernel::Mult => {
-                                    for (a, &wv) in acc.iter_mut().zip(wrow) {
-                                        *a += xv * wv;
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-                let base = ((b * ho + oh) * wo + ow) * cout;
-                for (o, &a) in out.data[base..base + cout].iter_mut().zip(acc.iter()) {
-                    *o = a as f32 * pre_scale;
-                }
-            }
-        }
+    (xq, wq, pre_scale)
+}
+
+/// Integer convolution through the widened datapath.  Inputs are
+/// quantized per `cfg` using the layer's calibration; the result is
+/// dequantized back to f32 for the downstream (BN/pool) float stages,
+/// mirroring the FPGA design where BN runs in a wide fixed-point unit.
+///
+/// i64 accumulation is never needed: |x op w| * K cannot overflow i32
+/// for the supported widths (<= 16 bit inputs, K <= 2^14 taps =>
+/// |acc| <= 2*32767*2^14 < 2^31) — the RTL analogue is the adder tree's
+/// exact DW + log2(K) bits.
+pub fn conv2d_quant(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
+                    kind: SimKernel, cfg: QuantCfg, calib: &LayerCalib) -> Tensor {
+    let (n, h, w_in, cin) = x.shape;
+    assert_eq!(cin, w.cin, "cin mismatch");
+    let cout = w.cout;
+    let (xq, wq, pre_scale) = quant_operands(&x.data, w.data, kind, cfg, calib);
+    let (pt, pl, ho, wo) = nn::conv_geometry(h, w_in, w.kh, w.kw, stride, padding);
+    let k_taps = w.kh * w.kw * cin;
+    let mut out = Tensor::zeros((n, ho, wo, cout));
+    if out.data.is_empty() {
+        return out;
     }
+    let threads = max_threads_for(n * ho * wo * k_taps * cout);
+    let (kh, kw) = (w.kh, w.kw);
+    parallel_chunks(&mut out.data, wo * cout, threads, |row, chunk| {
+        let (b, oh) = (row / ho, row % ho);
+        let mut rowbuf = vec![0i32; wo * k_taps];
+        gather_row(&xq, h, w_in, cin, kh, kw, b, oh, stride, pt, pl, wo,
+                   &mut rowbuf);
+        let mut irow = vec![0i32; chunk.len()];
+        conv_row_i32(&rowbuf, k_taps, &wq, cout, kind, &mut irow);
+        for (o, &a) in chunk.iter_mut().zip(&irow) {
+            *o = a as f32 * pre_scale;
+        }
+    });
     out
 }
 
@@ -329,26 +391,38 @@ pub fn global_avg_pool(x: &Tensor) -> Tensor {
     out
 }
 
-/// Dense: x (n, 1, 1, din) @ w (din, dout) + b.
+/// Dense: x (n, 1, 1, din) @ w (din, dout) + b, output-blocked and
+/// parallel over the batch.
 pub fn dense(x: &Tensor, w: &[f32], bias: &[f32], dout: usize) -> Tensor {
     let (n, h, ww, c) = x.shape;
     let din = h * ww * c;
-    assert_eq!(w.len(), din * dout);
+    assert_eq!(w.len(), din * dout, "dense weight size mismatch");
+    assert_eq!(bias.len(), dout, "dense bias size mismatch");
     let mut out = Tensor::zeros((n, 1, 1, dout));
-    for b in 0..n {
-        let xrow = &x.data[b * din..(b + 1) * din];
-        let orow = &mut out.data[b * dout..(b + 1) * dout];
-        orow.copy_from_slice(bias);
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[i * dout..(i + 1) * dout];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
-            }
-        }
+    if out.data.is_empty() {
+        return out;
     }
+    let threads = max_threads_for(n * din * dout);
+    parallel_chunks(&mut out.data, dout, threads, |b, orow| {
+        let xrow = &x.data[b * din..(b + 1) * din];
+        let mut co0 = 0;
+        while co0 < dout {
+            let cb = COUT_TILE.min(dout - co0);
+            let mut acc = [0f32; COUT_TILE];
+            acc[..cb].copy_from_slice(&bias[co0..co0 + cb]);
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[i * dout + co0..i * dout + co0 + cb];
+                for (j, &wv) in wrow.iter().enumerate() {
+                    acc[j] += xv * wv;
+                }
+            }
+            orow[co0..co0 + cb].copy_from_slice(&acc[..cb]);
+            co0 += cb;
+        }
+    });
     out
 }
 
@@ -518,6 +592,31 @@ impl<'a> Runner<'a> {
             }
         }
     }
+
+    /// Batched inference over independently-queued images: stack them
+    /// into ONE forward pass — amortizing dispatch, patch gathers and
+    /// weight streaming across the whole queue (the serving hot path) —
+    /// then split the logits back per request.  Each image is `h*w*c`
+    /// floats in NHWC order.
+    pub fn forward_many(&mut self, images: &[&[f32]],
+                        hwc: (usize, usize, usize)) -> Vec<Vec<f32>> {
+        if images.is_empty() {
+            return Vec::new();
+        }
+        let (h, w, c) = hwc;
+        let px = h * w * c;
+        let mut data = Vec::with_capacity(images.len() * px);
+        for img in images {
+            assert_eq!(img.len(), px, "request image size mismatch");
+            data.extend_from_slice(img);
+        }
+        let x = Tensor::new((images.len(), h, w, c), data);
+        let logits = self.forward(&x);
+        let classes = logits.shape.3;
+        (0..images.len())
+            .map(|i| logits.data[i * classes..(i + 1) * classes].to_vec())
+            .collect()
+    }
 }
 
 /// Classification accuracy of a runner over (images, labels).
@@ -528,6 +627,66 @@ pub fn accuracy(runner: &mut Runner, images: &Tensor, labels: &[i32]) -> f64 {
         .filter(|(p, l)| **p == **l as usize)
         .count();
     correct as f64 / labels.len() as f64
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic parameters (artifact-free operation)
+// ---------------------------------------------------------------------------
+
+fn synth_conv(p: &mut Params, rng: &mut XorShift64, name: &str,
+              kh: usize, kw: usize, cin: usize, cout: usize) {
+    let n = kh * kw * cin * cout;
+    let w: Vec<f32> = (0..n).map(|_| rng.next_f32_sym(0.5)).collect();
+    p.insert(format!("{name}/conv_w"), (vec![kh, kw, cin, cout], w));
+    p.insert(format!("{name}/bn_gamma"), (vec![cout], vec![1.0; cout]));
+    p.insert(format!("{name}/bn_beta"), (vec![cout], vec![0.0; cout]));
+    p.insert(format!("{name}/bn_mean"), (vec![cout], vec![0.0; cout]));
+    p.insert(format!("{name}/bn_var"), (vec![cout], vec![1.0; cout]));
+}
+
+fn synth_dense(p: &mut Params, rng: &mut XorShift64, name: &str,
+               din: usize, dout: usize) {
+    let w: Vec<f32> = (0..din * dout).map(|_| rng.next_f32_sym(0.5)).collect();
+    let b: Vec<f32> = (0..dout).map(|_| rng.next_f32_sym(0.1)).collect();
+    p.insert(format!("{name}/dense_w"), (vec![din, dout], w));
+    p.insert(format!("{name}/dense_b"), (vec![dout], b));
+}
+
+/// Deterministic synthetic parameter set for `arch` (random weights +
+/// identity BN stats), shaped for the 32x32x1 synthetic-10 input.  Lets
+/// the engine, the functional serving backend and the offline test/bench
+/// tiers run with no Python-built artifacts.
+pub fn synth_params(arch: Arch, seed: u64) -> Params {
+    let mut rng = XorShift64::new(seed);
+    let mut p = Params::new();
+    match arch {
+        Arch::Lenet5 => {
+            synth_conv(&mut p, &mut rng, "conv1", 5, 5, 1, 6);
+            synth_conv(&mut p, &mut rng, "conv2", 5, 5, 6, 16);
+            synth_dense(&mut p, &mut rng, "fc1", 400, 120);
+            synth_dense(&mut p, &mut rng, "fc2", 120, 84);
+            synth_dense(&mut p, &mut rng, "fc3", 84, 10);
+        }
+        Arch::Resnet8 | Arch::Resnet20 => {
+            let n_blocks = arch.stages();
+            synth_conv(&mut p, &mut rng, "stem", 3, 3, 1, 16);
+            let mut cin = 16;
+            for (s, cout) in [16usize, 32, 64].into_iter().enumerate() {
+                for b in 0..n_blocks {
+                    let pre = format!("s{s}b{b}");
+                    synth_conv(&mut p, &mut rng, &format!("{pre}/c1"), 3, 3, cin, cout);
+                    synth_conv(&mut p, &mut rng, &format!("{pre}/c2"), 3, 3, cout, cout);
+                    if cin != cout {
+                        synth_conv(&mut p, &mut rng, &format!("{pre}/sc"), 1, 1,
+                                   cin, cout);
+                    }
+                    cin = cout;
+                }
+            }
+            synth_dense(&mut p, &mut rng, "fc", 64, 10);
+        }
+    }
+    p
 }
 
 #[cfg(test)]
@@ -651,5 +810,44 @@ mod tests {
     fn argmax() {
         let x = t((2, 1, 1, 3), vec![0.0, 2.0, 1.0, 5.0, -1.0, 0.0]);
         assert_eq!(argmax_rows(&x), vec![1, 0]);
+    }
+
+    #[test]
+    fn synth_params_run_every_arch() {
+        for arch in [Arch::Lenet5, Arch::Resnet8] {
+            let params = synth_params(arch, 11);
+            let x = Tensor::zeros((2, 32, 32, 1));
+            let mut r = Runner {
+                params: &params, arch, kind: SimKernel::Adder,
+                mode: ExecMode::F32, calib: None, observe: None,
+            };
+            let y = r.forward(&x);
+            assert_eq!(y.shape, (2, 1, 1, 10));
+            assert!(y.data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn forward_many_splits_logits() {
+        let params = synth_params(Arch::Lenet5, 3);
+        let mut rng = crate::util::XorShift64::new(8);
+        let imgs: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..1024).map(|_| rng.next_f32_sym(1.0)).collect())
+            .collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let mut r = Runner {
+            params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+            mode: ExecMode::F32, calib: None, observe: None,
+        };
+        let many = r.forward_many(&refs, (32, 32, 1));
+        assert_eq!(many.len(), 3);
+        for (i, img) in imgs.iter().enumerate() {
+            let x = Tensor::new((1, 32, 32, 1), img.clone());
+            let single = r.forward(&x);
+            for (a, b) in many[i].iter().zip(&single.data) {
+                assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0),
+                        "req {i}: {a} vs {b}");
+            }
+        }
     }
 }

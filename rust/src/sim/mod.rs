@@ -1,9 +1,15 @@
 //! Accelerator simulation: cycle/resource/power models (Fig. 4/5, §4)
 //! plus the bit-accurate functional datapath (quantized inference).
+//!
+//! The functional datapath has two implementations: the tiled parallel
+//! engine in [`functional`] (the serving hot path) and the naive scalar
+//! loops in [`reference`] (the in-crate oracle the engine is tested
+//! against — see `rust/tests/functional_oracle.rs`).
 
 pub mod accelerator;
 pub mod functional;
 pub mod onchip;
+pub mod reference;
 
 pub use accelerator::{AccelConfig, ResourceBreakdown, RunReport};
 pub use functional::{Arch, ExecMode, QuantCfg, Runner, SimKernel, Tensor};

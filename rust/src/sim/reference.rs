@@ -1,0 +1,147 @@
+//! Naive scalar reference implementations of the functional datapath.
+//!
+//! These are the original 7-deep loop nests the optimized engine in
+//! [`super::functional`] replaced.  They are deliberately unclever — one
+//! output at a time, taps in (ky, kx, ci) order — and serve as the
+//! in-crate oracle: `rust/tests/functional_oracle.rs` checks the tiled
+//! multi-threaded kernels against them across a shape grid (f32 within
+//! tolerance, integer path bit-identical), and `benches/hotpath.rs`
+//! records the engine-vs-naive speedup.  Not used on any serving path.
+
+use crate::nn::{self, Padding};
+use crate::quant::LayerCalib;
+
+use super::functional::{self, ConvW, QuantCfg, SimKernel, Tensor};
+
+/// f32 convolution (both kernels), NHWC x HWIO -> NHWC.  Zero padding
+/// contributes `-|0 - w|` per tap for the adder kernel and nothing for
+/// the mult kernel, exactly like the optimized engine.
+pub fn conv2d(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
+              kind: SimKernel) -> Tensor {
+    let (n, h, w_in, cin) = x.shape;
+    assert_eq!(cin, w.cin, "cin mismatch");
+    let (pt, pl, ho, wo) = nn::conv_geometry(h, w_in, w.kh, w.kw, stride, padding);
+    let cout = w.cout;
+    let mut out = Tensor::zeros((n, ho, wo, cout));
+    let mut acc = vec![0f32; cout];
+    for b in 0..n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                acc.iter_mut().for_each(|a| *a = 0.0);
+                for ky in 0..w.kh {
+                    let iy = (oh * stride + ky) as isize - pt as isize;
+                    let row_inside = iy >= 0 && iy < h as isize;
+                    for kx in 0..w.kw {
+                        let ix = (ow * stride + kx) as isize - pl as isize;
+                        let inside = row_inside && ix >= 0 && ix < w_in as isize;
+                        for ci in 0..cin {
+                            let xv = if inside {
+                                x.data[((b * h + iy as usize) * w_in + ix as usize)
+                                    * cin + ci]
+                            } else {
+                                0.0
+                            };
+                            let off = ((ky * w.kw + kx) * cin + ci) * cout;
+                            let wrow = &w.data[off..off + cout];
+                            match kind {
+                                SimKernel::Adder => {
+                                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                        *a -= (xv - wv).abs();
+                                    }
+                                }
+                                SimKernel::Mult => {
+                                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                        *a += xv * wv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                let base = ((b * ho + oh) * wo + ow) * cout;
+                out.data[base..base + cout].copy_from_slice(&acc);
+            }
+        }
+    }
+    out
+}
+
+/// Integer convolution through the widened i32 datapath, naive loops.
+/// Shares the operand-quantization step with the optimized engine so any
+/// divergence the oracle tests catch is in the compute loops themselves.
+pub fn conv2d_quant(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
+                    kind: SimKernel, cfg: QuantCfg, calib: &LayerCalib) -> Tensor {
+    let (n, h, w_in, cin) = x.shape;
+    assert_eq!(cin, w.cin, "cin mismatch");
+    let cout = w.cout;
+    let (xq, wq, pre_scale) =
+        functional::quant_operands(&x.data, w.data, kind, cfg, calib);
+    let (pt, pl, ho, wo) = nn::conv_geometry(h, w_in, w.kh, w.kw, stride, padding);
+    let mut out = Tensor::zeros((n, ho, wo, cout));
+    let mut acc = vec![0i32; cout];
+    for b in 0..n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                acc.iter_mut().for_each(|a| *a = 0);
+                for ky in 0..w.kh {
+                    let iy = (oh * stride + ky) as isize - pt as isize;
+                    let row_inside = iy >= 0 && iy < h as isize;
+                    for kx in 0..w.kw {
+                        let ix = (ow * stride + kx) as isize - pl as isize;
+                        let inside = row_inside && ix >= 0 && ix < w_in as isize;
+                        for ci in 0..cin {
+                            let xv = if inside {
+                                xq[((b * h + iy as usize) * w_in + ix as usize)
+                                    * cin + ci]
+                            } else {
+                                0
+                            };
+                            let off = ((ky * w.kw + kx) * cin + ci) * cout;
+                            let wrow = &wq[off..off + cout];
+                            match kind {
+                                SimKernel::Adder => {
+                                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                        *a -= (xv - wv).abs();
+                                    }
+                                }
+                                SimKernel::Mult => {
+                                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                        *a += xv * wv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                let base = ((b * ho + oh) * wo + ow) * cout;
+                for (o, &a) in out.data[base..base + cout].iter_mut().zip(acc.iter()) {
+                    *o = a as f32 * pre_scale;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Dense: x (n, 1, 1, din) @ w (din, dout) + b, naive row loop.
+pub fn dense(x: &Tensor, w: &[f32], bias: &[f32], dout: usize) -> Tensor {
+    let (n, h, ww, c) = x.shape;
+    let din = h * ww * c;
+    assert_eq!(w.len(), din * dout, "dense weight size mismatch");
+    let mut out = Tensor::zeros((n, 1, 1, dout));
+    for b in 0..n {
+        let xrow = &x.data[b * din..(b + 1) * din];
+        let orow = &mut out.data[b * dout..(b + 1) * dout];
+        orow.copy_from_slice(bias);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * dout..(i + 1) * dout];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}

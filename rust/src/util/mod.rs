@@ -4,6 +4,7 @@
 pub mod json;
 pub mod rng;
 pub mod table;
+pub mod threads;
 
 pub use json::Json;
 pub use rng::{Lcg31, XorShift64};

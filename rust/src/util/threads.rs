@@ -1,0 +1,90 @@
+//! Minimal scoped worker pool (the offline vendored crate set has no
+//! rayon): fan a list of equally-sized output chunks out to OS threads.
+//!
+//! The functional-sim engine parallelizes convolutions across
+//! batch x output-row tasks; each task owns one disjoint `&mut` chunk of
+//! the output buffer, so the pool needs no unsafe code — a `Mutex` over
+//! the `chunks_mut` iterator hands every worker exclusive slices.
+
+use std::sync::Mutex;
+
+/// Threads the engine may use: `ADDERNET_THREADS` override, else the
+/// machine's available parallelism.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("ADDERNET_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+/// Split `data` into `chunk_len`-sized pieces and run `f(chunk_index,
+/// chunk)` over them on up to `max_threads` scoped worker threads.
+///
+/// `data.len()` must be a multiple of `chunk_len`.  With one effective
+/// thread (small task counts, `max_threads == 1`, single-core hosts) the
+/// work runs inline with zero spawn overhead.  Chunks are claimed
+/// dynamically, so uneven per-chunk costs still balance.
+pub fn parallel_chunks<T, F>(data: &mut [T], chunk_len: usize, max_threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    assert_eq!(data.len() % chunk_len, 0, "data not a multiple of chunk_len");
+    let n_chunks = data.len() / chunk_len;
+    let threads = num_threads().min(max_threads).min(n_chunks).max(1);
+    if threads <= 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let work = Mutex::new(data.chunks_mut(chunk_len).enumerate());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let item = work.lock().unwrap().next();
+                match item {
+                    Some((i, chunk)) => f(i, chunk),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_chunk_once() {
+        let mut data = vec![0u32; 64 * 7];
+        parallel_chunks(&mut data, 7, usize::MAX, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v += i as u32 + 1;
+            }
+        });
+        for (i, chunk) in data.chunks(7).enumerate() {
+            assert!(chunk.iter().all(|&v| v == i as u32 + 1), "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn single_thread_path_matches() {
+        let mut a = vec![0i64; 24];
+        let mut b = vec![0i64; 24];
+        parallel_chunks(&mut a, 3, 1, |i, c| c.iter_mut().for_each(|v| *v = i as i64));
+        parallel_chunks(&mut b, 3, usize::MAX, |i, c| {
+            c.iter_mut().for_each(|v| *v = i as i64)
+        });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

@@ -1,0 +1,188 @@
+//! Oracle tests: the tiled multi-threaded functional engine vs the
+//! retained naive reference (`addernet::sim::reference`) across a grid
+//! of shapes — kernels 1x1/3x3/5x5, strides 1-2, Same/Valid padding,
+//! channel counts that do and don't divide the engine tiles, batch 1
+//! and 8.  f32 within 1e-5 (relative), integer path bit-identical.
+
+use addernet::nn::Padding;
+use addernet::quant::{LayerCalib, Mode};
+use addernet::sim::functional::{
+    self, conv2d, conv2d_quant, dense, Arch, ConvW, ExecMode, QuantCfg, Runner,
+    SimKernel, Tensor,
+};
+use addernet::sim::reference;
+use addernet::util::XorShift64;
+
+fn rand_vec(rng: &mut XorShift64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32_sym(scale)).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0),
+                "{what}: element {i}: engine {x} vs reference {y}");
+    }
+}
+
+/// Shape grid shared by the f32 and integer sweeps.  Channel pairs
+/// include counts far below, equal to, and not divisible by the
+/// engine's 64-wide output tile and 4-wide column tile.
+fn shape_grid() -> Vec<(usize, usize, usize, usize, usize, usize, Padding)> {
+    // (h, w, k, stride, cin, cout, padding)
+    let mut grid = Vec::new();
+    for &k in &[1usize, 3, 5] {
+        for &stride in &[1usize, 2] {
+            for &padding in &[Padding::Same, Padding::Valid] {
+                for &(cin, cout) in &[(1usize, 1usize), (3, 5), (16, 16), (7, 13)] {
+                    grid.push((8, 8, k, stride, cin, cout, padding));
+                }
+            }
+        }
+    }
+    // odd spatial extents exercise the SAME-padding borders + remainders
+    grid.push((9, 7, 3, 2, 4, 66, Padding::Same));
+    grid.push((11, 5, 5, 1, 2, 65, Padding::Valid));
+    grid
+}
+
+#[test]
+fn conv2d_f32_matches_reference_grid() {
+    let mut rng = XorShift64::new(101);
+    for (h, w, k, stride, cin, cout, padding) in shape_grid() {
+        for batch in [1usize, 8] {
+            let x = Tensor::new((batch, h, w, cin),
+                                rand_vec(&mut rng, batch * h * w * cin, 1.5));
+            let wdat = rand_vec(&mut rng, k * k * cin * cout, 1.0);
+            let cw = ConvW { data: &wdat, kh: k, kw: k, cin, cout };
+            for kind in [SimKernel::Adder, SimKernel::Mult] {
+                let got = conv2d(&x, &cw, stride, padding, kind);
+                let want = reference::conv2d(&x, &cw, stride, padding, kind);
+                assert_eq!(got.shape, want.shape);
+                assert_close(&got.data, &want.data,
+                             &format!("f32 {kind:?} k{k} s{stride} {padding:?} \
+                                       {cin}->{cout} b{batch}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn conv2d_quant_bit_identical_to_reference() {
+    let mut rng = XorShift64::new(202);
+    let calib = LayerCalib { feat_max_abs: 1.5, weight_max_abs: 1.0 };
+    for (h, w, k, stride, cin, cout, padding) in shape_grid() {
+        for batch in [1usize, 8] {
+            let x = Tensor::new((batch, h, w, cin),
+                                rand_vec(&mut rng, batch * h * w * cin, 1.5));
+            let wdat = rand_vec(&mut rng, k * k * cin * cout, 1.0);
+            let cw = ConvW { data: &wdat, kh: k, kw: k, cin, cout };
+            for kind in [SimKernel::Adder, SimKernel::Mult] {
+                for bits in [8u32, 16] {
+                    let cfg = QuantCfg { bits, mode: Mode::SharedScale };
+                    let got = conv2d_quant(&x, &cw, stride, padding, kind, cfg, &calib);
+                    let want = reference::conv2d_quant(&x, &cw, stride, padding,
+                                                       kind, cfg, &calib);
+                    assert_eq!(got.shape, want.shape);
+                    // integer accumulation is order-independent: the
+                    // engine must be EXACTLY the reference.
+                    assert_eq!(got.data, want.data,
+                               "int{bits} {kind:?} k{k} s{stride} {padding:?} \
+                                {cin}->{cout} b{batch}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn conv2d_quant_separate_scale_bit_identical() {
+    // The point-alignment (regrid) path of the separate-scale adder mode
+    // must also agree bit-exactly between engine and reference.
+    let mut rng = XorShift64::new(303);
+    let calib = LayerCalib { feat_max_abs: 0.25, weight_max_abs: 2.0 };
+    let x = Tensor::new((2, 8, 8, 3), rand_vec(&mut rng, 2 * 8 * 8 * 3, 0.25));
+    let wdat = rand_vec(&mut rng, 3 * 3 * 3 * 7, 2.0);
+    let cw = ConvW { data: &wdat, kh: 3, kw: 3, cin: 3, cout: 7 };
+    for kind in [SimKernel::Adder, SimKernel::Mult] {
+        for bits in [6u32, 8] {
+            let cfg = QuantCfg { bits, mode: Mode::SeparateScale };
+            let got = conv2d_quant(&x, &cw, 1, Padding::Same, kind, cfg, &calib);
+            let want = reference::conv2d_quant(&x, &cw, 1, Padding::Same, kind,
+                                               cfg, &calib);
+            assert_eq!(got.data, want.data, "separate {kind:?} int{bits}");
+        }
+    }
+}
+
+#[test]
+fn dense_matches_reference() {
+    let mut rng = XorShift64::new(404);
+    for (n, din, dout) in [(1usize, 37usize, 13usize), (8, 400, 120), (3, 64, 130)] {
+        let x = Tensor::new((n, 1, 1, din), rand_vec(&mut rng, n * din, 1.0));
+        let w = rand_vec(&mut rng, din * dout, 0.7);
+        let bias = rand_vec(&mut rng, dout, 0.3);
+        let got = dense(&x, &w, &bias, dout);
+        let want = reference::dense(&x, &w, &bias, dout);
+        assert_eq!(got.shape, want.shape);
+        assert_close(&got.data, &want.data, &format!("dense {n}x{din}->{dout}"));
+    }
+}
+
+#[test]
+fn dense_handles_zero_activations() {
+    // The sparse-skip in the reference and the engine must agree when
+    // activations contain exact zeros (post-ReLU reality).
+    let x = Tensor::new((2, 1, 1, 6),
+                        vec![0.0, 1.0, 0.0, -2.0, 0.0, 0.5,
+                             0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    let mut rng = XorShift64::new(505);
+    let w = rand_vec(&mut rng, 6 * 9, 1.0);
+    let bias = rand_vec(&mut rng, 9, 1.0);
+    let got = dense(&x, &w, &bias, 9);
+    let want = reference::dense(&x, &w, &bias, 9);
+    assert_close(&got.data, &want.data, "dense with zeros");
+    // the all-zero row must reduce to the bias
+    assert_close(&got.data[9..], &bias, "all-zero row == bias");
+}
+
+#[test]
+fn engine_thread_count_does_not_change_results() {
+    // Same conv on the parallel path vs a big enough workload to engage
+    // multiple threads: determinism is part of the engine contract.
+    let mut rng = XorShift64::new(606);
+    let x = Tensor::new((4, 32, 32, 16), rand_vec(&mut rng, 4 * 32 * 32 * 16, 1.0));
+    let wdat = rand_vec(&mut rng, 3 * 3 * 16 * 16, 1.0);
+    let cw = ConvW { data: &wdat, kh: 3, kw: 3, cin: 16, cout: 16 };
+    let a = conv2d(&x, &cw, 1, Padding::Same, SimKernel::Adder);
+    let b = conv2d(&x, &cw, 1, Padding::Same, SimKernel::Adder);
+    assert_eq!(a.data, b.data);
+    let want = reference::conv2d(&x, &cw, 1, Padding::Same, SimKernel::Adder);
+    assert_close(&a.data, &want.data, "large parallel conv");
+}
+
+#[test]
+fn quantized_forward_runs_on_synthetic_params() {
+    // End-to-end: calibrate + quantized forward through the engine on
+    // synthetic weights, fully offline.
+    let params = functional::synth_params(Arch::Lenet5, 77);
+    let mut rng = XorShift64::new(707);
+    let x = Tensor::new((4, 32, 32, 1), rand_vec(&mut rng, 4 * 1024, 1.0));
+    let mut calib = addernet::quant::Calibration::new();
+    {
+        let mut r = Runner {
+            params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+            mode: ExecMode::F32, calib: None, observe: Some(&mut calib),
+        };
+        r.forward(&x);
+    }
+    assert!(calib.contains_key("conv1") && calib.contains_key("conv2"));
+    let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+    let mut rq = Runner {
+        params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+        mode: ExecMode::Quant(cfg), calib: Some(&calib), observe: None,
+    };
+    let y = rq.forward(&x);
+    assert_eq!(y.shape, (4, 1, 1, 10));
+    assert!(y.data.iter().all(|v| v.is_finite()));
+}
