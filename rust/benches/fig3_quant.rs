@@ -10,7 +10,8 @@ use addernet::coordinator::Manifest;
 use addernet::data;
 use addernet::quant::Mode;
 use addernet::report::quantrep;
-use addernet::sim::functional::{self, Arch, ExecMode, QuantCfg, Runner, SimKernel, Tensor};
+use addernet::sim::functional::{self, Arch, ExecMode, KernelStrategy, QuantCfg,
+                                Runner, SimKernel, Tensor};
 
 fn main() {
     println!("=== bench fig3_quant (E4/E12/E13) ===");
@@ -49,6 +50,7 @@ fn main() {
         let (med, _) = common::time_it(1, 5, || {
             let mut r = Runner {
                 params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+                strategy: KernelStrategy::Auto,
                 mode, calib: Some(&calib), observe: None,
             };
             std::hint::black_box(r.forward(&x));

@@ -2,60 +2,77 @@
 //! EXPERIMENTS.md §Perf):
 //!
 //!   L3a: functional adder/mult conv (f32 + int) — the quantized-
-//!        inference datapath, measured as tiled parallel engine vs the
-//!        retained naive reference (the oracle of
-//!        tests/functional_oracle.rs); the speedup is recorded here;
+//!        inference datapath, measured per kernel strategy: the naive
+//!        reference (the oracle of tests/functional_oracle.rs), the
+//!        tiled cache-blocked engine and the lane-structured simd
+//!        kernel.  Records tiled-vs-naive AND simd-vs-tiled speedups —
+//!        the simd-vs-tiled median on the ResNet-shape layer is the
+//!        kernel-strategy acceptance number (target >= 1.3x);
 //!   L3b: dataset generator (streams every training batch);
 //!   L3c: PJRT execute round-trip (train step + eval) when artifacts
 //!        are present and the crate is built with --features pjrt — the
 //!        training/serving hot loop.
+//!
+//! The per-strategy medians are also written as JSON (default
+//! `target/hotpath.json`, override with `HOTPATH_JSON`) so CI can
+//! persist the record as an artifact.
 
 mod common;
 
 use addernet::quant::{LayerCalib, Mode};
-use addernet::sim::functional::{conv2d, conv2d_quant, ConvW, QuantCfg, SimKernel, Tensor};
-use addernet::sim::reference;
+use addernet::sim::functional::{conv2d_quant_with, conv2d_with, ConvW,
+                                KernelStrategy, QuantCfg, SimKernel, Tensor};
 use addernet::util::XorShift64;
 use addernet::{data, nn};
+
+/// One measured row: (json_key, naive_s, tiled_s, simd_s).
+type Row = (String, f64, f64, f64);
+
+fn bench_strategy_trio(name: &str, json_key: &str,
+                       mut run: impl FnMut(KernelStrategy), macs: f64,
+                       rows: &mut Vec<Row>) {
+    let (naive, _) = common::time_it(1, 5, || run(KernelStrategy::Naive));
+    let (tiled, _) = common::time_it(2, 9, || run(KernelStrategy::Tiled));
+    let (simd, _) = common::time_it(2, 9, || run(KernelStrategy::Simd));
+    common::report(&format!("{name} (naive reference)"), naive, macs, "MAC");
+    common::report(&format!("{name} (tiled engine)"), tiled, macs, "MAC");
+    common::report(&format!("{name} (simd kernel)"), simd, macs, "MAC");
+    println!("  {name:44} tiled vs naive {:>6.1}x | simd vs tiled {:>5.2}x",
+             naive / tiled, tiled / simd);
+    rows.push((json_key.to_string(), naive, tiled, simd));
+}
 
 fn main() {
     println!("=== bench hotpath (§Perf) ===");
     let mut rng = XorShift64::new(1);
+    let mut rows: Vec<Row> = Vec::new();
 
     // L3a: resnet-shape conv (the heaviest functional-sim layer),
-    // engine vs naive reference.
+    // per kernel strategy.
     let x = Tensor::new((8, 32, 32, 16),
                         (0..8 * 32 * 32 * 16).map(|_| rng.next_f32_sym(1.0)).collect());
     let wdat: Vec<f32> = (0..3 * 3 * 16 * 16).map(|_| rng.next_f32_sym(1.0)).collect();
     let w = ConvW { data: &wdat, kh: 3, kw: 3, cin: 16, cout: 16 };
     let macs = 8.0 * 32.0 * 32.0 * 9.0 * 16.0 * 16.0;
-    println!("functional conv 3x3 16->16 (B=8, 32x32), engine vs naive reference:");
-    for (name, kind) in [("f32 adder", SimKernel::Adder), ("f32 mult", SimKernel::Mult)] {
-        let (naive, _) = common::time_it(1, 5, || {
-            std::hint::black_box(reference::conv2d(&x, &w, 1, nn::Padding::Same, kind));
-        });
-        let (engine, _) = common::time_it(2, 8, || {
-            std::hint::black_box(conv2d(&x, &w, 1, nn::Padding::Same, kind));
-        });
-        common::report(&format!("{name} (naive reference)"), naive, macs, "MAC");
-        common::report(&format!("{name} (tiled engine)"), engine, macs, "MAC");
-        println!("  {name:44} speedup {:>8.1}x", naive / engine);
+    println!("functional conv 3x3 16->16 (B=8, 32x32), naive vs tiled vs simd:");
+    for (name, key, kind) in [("f32 adder", "f32_adder", SimKernel::Adder),
+                              ("f32 mult", "f32_mult", SimKernel::Mult)] {
+        bench_strategy_trio(name, key, |strat| {
+            std::hint::black_box(conv2d_with(strat, &x, &w, 1, nn::Padding::Same,
+                                             kind));
+        }, macs, &mut rows);
     }
     let calib = LayerCalib { feat_max_abs: 1.0, weight_max_abs: 1.0 };
-    for (name, bits) in [("int8 adder", 8u32), ("int16 adder", 16)] {
+    for (name, key, bits) in [("int8 adder", "int8_adder", 8u32),
+                              ("int16 adder", "int16_adder", 16)] {
         let cfg = QuantCfg { bits, mode: Mode::SharedScale };
-        let (naive, _) = common::time_it(1, 5, || {
-            std::hint::black_box(reference::conv2d_quant(
-                &x, &w, 1, nn::Padding::Same, SimKernel::Adder, cfg, &calib));
-        });
-        let (engine, _) = common::time_it(2, 8, || {
-            std::hint::black_box(conv2d_quant(&x, &w, 1, nn::Padding::Same,
-                                              SimKernel::Adder, cfg, &calib));
-        });
-        common::report(&format!("{name} (naive reference)"), naive, macs, "MAC");
-        common::report(&format!("{name} (tiled engine)"), engine, macs, "MAC");
-        println!("  {name:44} speedup {:>8.1}x", naive / engine);
+        bench_strategy_trio(name, key, |strat| {
+            std::hint::black_box(conv2d_quant_with(
+                strat, &x, &w, 1, nn::Padding::Same, SimKernel::Adder, cfg,
+                &calib));
+        }, macs, &mut rows);
     }
+    write_json(&rows);
 
     // L3b: dataset generator
     let (med, _) = common::time_it(2, 10, || {
@@ -65,6 +82,35 @@ fn main() {
 
     // L3c: PJRT round-trips
     pjrt_round_trips();
+}
+
+/// Persist the per-strategy medians (seconds) + derived speedups.  No
+/// JSON writer is vendored, so the record is assembled by hand — keys
+/// and shape are part of the CI artifact contract.
+fn write_json(rows: &[Row]) {
+    let path = std::env::var("HOTPATH_JSON")
+        .unwrap_or_else(|_| "target/hotpath.json".to_string());
+    let mut entries = Vec::new();
+    for (key, naive, tiled, simd) in rows {
+        entries.push(format!(
+            "    \"{key}\": {{\"naive_s\": {naive:.6e}, \"tiled_s\": {tiled:.6e}, \
+             \"simd_s\": {simd:.6e}, \"tiled_vs_naive\": {:.3}, \
+             \"simd_vs_tiled\": {:.3}}}",
+            naive / tiled, tiled / simd));
+    }
+    let doc = format!(
+        "{{\n  \"bench\": \"hotpath\",\n  \
+         \"layer\": \"conv3x3 16->16 B=8 32x32 (resnet shape)\",\n  \
+         \"kernel_env\": \"{}\",\n  \"results\": {{\n{}\n  }}\n}}\n",
+        KernelStrategy::from_env().label(),
+        entries.join(",\n"));
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match std::fs::write(&path, doc) {
+        Ok(()) => println!("  (per-strategy medians written to {path})"),
+        Err(e) => eprintln!("  (could not write {path}: {e})"),
+    }
 }
 
 #[cfg(feature = "pjrt")]

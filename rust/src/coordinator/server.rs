@@ -36,7 +36,8 @@ use anyhow::Result;
 
 use super::metrics::ServerMetrics;
 use crate::quant::Calibration;
-use crate::sim::functional::{self, Arch, ExecMode, Params, Runner, SimKernel};
+use crate::sim::functional::{self, Arch, ExecMode, KernelStrategy, Params, Runner,
+                             SimKernel};
 
 #[cfg(feature = "pjrt")]
 use super::manifest::Manifest;
@@ -147,6 +148,9 @@ pub struct FunctionalVariantCfg {
     pub name: String,
     pub arch: Arch,
     pub kind: SimKernel,
+    /// Inner-kernel strategy the variant's forward passes run under
+    /// (`repro serve --kernel` / `ADDERNET_KERNEL` select it).
+    pub strategy: KernelStrategy,
     /// Model parameters (manifest-loaded or synthetic).
     pub params: Params,
     /// f32 or shared-scale quantized execution.
@@ -168,6 +172,7 @@ impl FunctionalVariantCfg {
             name: name.into(),
             arch,
             kind,
+            strategy: KernelStrategy::Auto,
             params: functional::synth_params(arch, seed),
             mode: ExecMode::F32,
             calib: None,
@@ -222,6 +227,7 @@ fn functional_worker(cfg: FunctionalVariantCfg, rx: Receiver<Request>,
             params: &cfg.params,
             arch: cfg.arch,
             kind: cfg.kind,
+            strategy: cfg.strategy,
             mode: cfg.mode,
             calib: cfg.calib.as_ref(),
             observe: None,

@@ -24,7 +24,7 @@ use addernet::report;
 #[cfg(feature = "pjrt")]
 use addernet::runtime;
 use addernet::sim::accelerator::{self, AccelConfig};
-use addernet::sim::functional::{Arch, SimKernel};
+use addernet::sim::functional::{Arch, KernelStrategy, SimKernel};
 use addernet::util::table::{f, Table};
 use addernet::{data, nn};
 
@@ -109,7 +109,8 @@ fn usage() {
          exps: {}\n  \
          repro train [--arch lenet5] [--kernel adder] [--steps 400] [--eval-n 512]\n  \
          repro serve [--backend functional|pjrt] [--models lenet5_adder,lenet5_mult] \
-                     [--requests 512] [--window-ms 2] [--max-batch 32]\n  \
+                     [--kernel naive|tiled|simd|auto] [--requests 512] \
+                     [--window-ms 2] [--max-batch 32]\n  \
          repro quantize [--arch lenet5] [--kernel adder] [--bits 8] [--mode shared|separate]\n  \
          repro simulate [--net resnet18] [--kernel adder|mult] [--dw 16] [--parallelism 1024]\n  \
          repro info",
@@ -196,6 +197,15 @@ fn serve_functional(args: &Args) -> Result<()> {
     let n_req = args.get_usize("requests", 512);
     let window = Duration::from_millis(args.get_usize("window-ms", 2) as u64);
     let max_batch = args.get_usize("max-batch", 32);
+    // --kernel pins the inner-kernel strategy; default Auto defers to
+    // the ADDERNET_KERNEL env override and then the shape heuristic.
+    let strategy = match args.flags.get("kernel") {
+        Some(s) => KernelStrategy::parse(s).with_context(
+            || format!("serve's --kernel selects the inner-kernel STRATEGY \
+                        (naive|tiled|simd|auto), got {s}; adder-vs-mult is \
+                        chosen per model via --models (e.g. lenet5_mult)"))?,
+        None => KernelStrategy::Auto,
+    };
     let manifest = Manifest::load(&dir).ok();
     let mut variants = Vec::new();
     for m in models.split(',') {
@@ -209,6 +219,7 @@ fn serve_functional(args: &Args) -> Result<()> {
             k => anyhow::bail!("functional backend serves adder|mult kernels, got {k}"),
         };
         let mut cfg = server::FunctionalVariantCfg::synthetic(&name, arch, kind, 42);
+        cfg.strategy = strategy;
         cfg.max_batch = max_batch.max(1);
         let loaded = manifest.as_ref().and_then(|man| {
             let wfile = report::quantrep::trained_file(arch_s, kernel_s);
@@ -226,8 +237,9 @@ fn serve_functional(args: &Args) -> Result<()> {
         }
         variants.push(cfg);
     }
-    println!("[serve] functional backend: {} variants, window {:?}, max batch {}",
-             variants.len(), window, max_batch);
+    println!("[serve] functional backend: {} variants, kernel {}, window {:?}, \
+              max batch {}",
+             variants.len(), strategy.label(), window, max_batch);
     let handle = server::start_functional(variants, window)?;
     drive_load(handle, n_req)
 }

@@ -17,11 +17,14 @@ pub enum Padding {
     Valid,
 }
 
-/// Output extent of one spatial dimension under `padding`.
+/// Output extent of one spatial dimension under `padding`.  A VALID
+/// kernel larger than the input yields zero outputs (the degenerate
+/// all-padding case the oracle's edge grid exercises) rather than a
+/// usize underflow.
 pub fn conv_out_dim(in_sz: usize, k: usize, stride: usize, padding: Padding) -> usize {
     match padding {
         Padding::Same => in_sz.div_ceil(stride),
-        Padding::Valid => (in_sz - k) / stride + 1,
+        Padding::Valid => in_sz.checked_sub(k).map_or(0, |d| d / stride + 1),
     }
 }
 
@@ -188,6 +191,18 @@ mod tests {
         let (pt, pl, ho, wo) = conv_geometry(9, 7, 3, 3, 2, Padding::Same);
         assert_eq!((ho, wo), (5, 4));
         assert_eq!((pt, pl), (1, 1));
+    }
+
+    #[test]
+    fn kernel_larger_than_input() {
+        // VALID with k > input: zero outputs, no underflow.
+        assert_eq!(conv_out_dim(3, 5, 1, Padding::Valid), 0);
+        assert_eq!(conv_out_dim(3, 5, 2, Padding::Valid), 0);
+        let (_, _, ho, wo) = conv_geometry(3, 3, 5, 5, 1, Padding::Valid);
+        assert_eq!((ho, wo), (0, 0));
+        // SAME keeps the spatial grid; the border rows are all padding.
+        assert_eq!(conv_out_dim(3, 5, 1, Padding::Same), 3);
+        assert_eq!(same_pad(3, 5, 1), (2, 2));
     }
 
     #[test]

@@ -10,7 +10,8 @@ use crate::data;
 use crate::quant::{Calibration, Mode};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{self, Runtime};
-use crate::sim::functional::{self, Arch, ExecMode, QuantCfg, Runner, SimKernel, Tensor};
+use crate::sim::functional::{self, Arch, ExecMode, KernelStrategy, QuantCfg, Runner,
+                             SimKernel, Tensor};
 use crate::util::table::{pct, Table};
 
 /// Weights file naming convention shared with `repro train`.
@@ -48,6 +49,7 @@ pub fn calibrate(params: &functional::Params, arch: Arch, kind: SimKernel,
             params,
             arch,
             kind,
+            strategy: KernelStrategy::Auto,
             mode: ExecMode::F32,
             calib: None,
             observe: Some(&mut calib),
@@ -65,6 +67,7 @@ pub fn quant_accuracy(params: &functional::Params, arch: Arch, kind: SimKernel,
         params,
         arch,
         kind,
+        strategy: KernelStrategy::Auto,
         mode: ExecMode::Quant(cfg),
         calib: Some(calib),
         observe: None,

@@ -12,15 +12,19 @@
 //!   shared-scaling-factor mode or the CNN-style separate-scale mode
 //!   (S7 contrast).
 //!
-//! This module is the Layer-3 hot path.  Convolutions run through a
-//! tiled engine: an im2col-style patch gather per output row, a
-//! cache-blocked inner kernel (`OW_TILE` output columns x `COUT_TILE`
-//! output channels), parallelized across batch x output-rows on a scoped
-//! worker pool ([`crate::util::threads`]).  The original scalar loop
-//! nests live on in [`super::reference`] as the oracle the engine is
-//! tested against — bit-exactly for the integer path (i32 accumulation
-//! is order-independent), and bit-compatibly for f32 (per-output taps
-//! accumulate in the same (ky, kx, ci) order).
+//! This module is the Layer-3 hot path.  Convolutions run through an
+//! im2col-style patch gather per output row plus a swappable inner row
+//! kernel — the [`super::kernels`] strategy subsystem: `Tiled`
+//! (cache-blocked scalar), `Simd` (lane-structured autovectorizing),
+//! `Naive` (the [`super::reference`] oracle loops) or `Auto`
+//! (env/heuristic selection) — parallelized across batch x output-rows
+//! on a scoped worker pool ([`crate::util::threads`]).
+//! [`conv2d_with`], [`conv2d_quant_with`] and [`dense_with`] are the
+//! single dispatch point every caller (the [`Runner`], the serving
+//! backend, the CLI, the benches) routes through.  All strategies
+//! accumulate taps in the same ascending (ky, kx, ci) order, so the
+//! integer path is bit-identical across strategies (i32 accumulation is
+//! order-independent) and the f32 path is bit-compatible.
 
 use std::collections::BTreeMap;
 
@@ -28,6 +32,11 @@ use crate::nn::{self, Padding};
 use crate::quant::{self, Calibration, LayerCalib, Mode};
 use crate::util::threads::parallel_chunks;
 use crate::util::XorShift64;
+
+use super::kernels::{self, gather_row, ConvRow, DenseRow, Resolved};
+use super::reference;
+
+pub use super::kernels::{KernelStrategy, SimKernel};
 
 /// Dense NHWC tensor (n = batch).
 #[derive(Debug, Clone, PartialEq)]
@@ -60,15 +69,6 @@ impl Tensor {
     }
 }
 
-/// Which similarity the conv kernel computes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SimKernel {
-    /// AdderNet: out = -sum |x - w|.
-    Adder,
-    /// CNN: out = sum x * w.
-    Mult,
-}
-
 /// Quantization configuration for the integer mode.
 #[derive(Debug, Clone, Copy)]
 pub struct QuantCfg {
@@ -88,15 +88,9 @@ pub struct ConvW<'a> {
 }
 
 // ---------------------------------------------------------------------------
-// Tiled conv engine
+// Conv engine: gather + strategy-dispatched row kernels
 // ---------------------------------------------------------------------------
 
-/// Output-channel tile of the inner kernel (accumulators live on the
-/// stack; 64 f32 = two cache lines).
-const COUT_TILE: usize = 64;
-/// Output-column register blocking: four columns share each streamed
-/// weight row, quartering weight bandwidth in the inner loop.
-const OW_TILE: usize = 4;
 /// Below this many inner-kernel ops the conv runs single-threaded (spawn
 /// overhead would dominate — covers the unit-test-sized shapes).
 const PAR_MIN_OPS: usize = 1 << 15;
@@ -105,134 +99,24 @@ fn max_threads_for(ops: usize) -> usize {
     if ops < PAR_MIN_OPS { 1 } else { usize::MAX }
 }
 
-/// Gather the im2col patches for one (batch, output-row) pair:
-/// `rowbuf[ow * k_taps + (ky * kw + kx) * cin + ci]`, zero-filled at the
-/// SAME-padding border.  Interior rows copy whole kw x cin runs.
-#[allow(clippy::too_many_arguments)]
-fn gather_row<T: Copy + Default>(
-    data: &[T], h: usize, w_in: usize, cin: usize, kh: usize, kw: usize,
-    b: usize, oh: usize, stride: usize, pt: usize, pl: usize, wo: usize,
-    rowbuf: &mut [T],
-) {
-    let k_taps = kh * kw * cin;
-    for ow in 0..wo {
-        let patch = &mut rowbuf[ow * k_taps..(ow + 1) * k_taps];
-        let x0 = (ow * stride) as isize - pl as isize;
-        for ky in 0..kh {
-            let iy = (oh * stride + ky) as isize - pt as isize;
-            let dst = &mut patch[ky * kw * cin..(ky + 1) * kw * cin];
-            if iy < 0 || iy >= h as isize {
-                dst.iter_mut().for_each(|v| *v = T::default());
-                continue;
-            }
-            let row_off = (b * h + iy as usize) * w_in;
-            if x0 >= 0 && x0 + kw as isize <= w_in as isize {
-                let off = (row_off + x0 as usize) * cin;
-                dst.copy_from_slice(&data[off..off + kw * cin]);
-            } else {
-                for kx in 0..kw {
-                    let ix = x0 + kx as isize;
-                    let d = &mut dst[kx * cin..(kx + 1) * cin];
-                    if ix < 0 || ix >= w_in as isize {
-                        d.iter_mut().for_each(|v| *v = T::default());
-                    } else {
-                        let off = (row_off + ix as usize) * cin;
-                        d.copy_from_slice(&data[off..off + cin]);
-                    }
-                }
-            }
-        }
-    }
-}
-
-macro_rules! conv_row_kernel {
-    ($name:ident, $t:ty, $zero:expr, $adder:expr, $mult:expr) => {
-        /// Blocked inner kernel over one gathered output row: OW_TILE
-        /// columns x COUT_TILE channels per pass, taps in ascending
-        /// (ky, kx, ci) order (the reference order).
-        fn $name(rowbuf: &[$t], k_taps: usize, wdat: &[$t], cout: usize,
-                 kind: SimKernel, out_row: &mut [$t]) {
-            let wo = out_row.len() / cout;
-            let mut co0 = 0;
-            while co0 < cout {
-                let cb = COUT_TILE.min(cout - co0);
-                let mut ow = 0;
-                while ow + OW_TILE <= wo {
-                    let p0 = &rowbuf[ow * k_taps..(ow + 1) * k_taps];
-                    let p1 = &rowbuf[(ow + 1) * k_taps..(ow + 2) * k_taps];
-                    let p2 = &rowbuf[(ow + 2) * k_taps..(ow + 3) * k_taps];
-                    let p3 = &rowbuf[(ow + 3) * k_taps..(ow + 4) * k_taps];
-                    let mut a0 = [$zero; COUT_TILE];
-                    let mut a1 = [$zero; COUT_TILE];
-                    let mut a2 = [$zero; COUT_TILE];
-                    let mut a3 = [$zero; COUT_TILE];
-                    for k in 0..k_taps {
-                        let wrow = &wdat[k * cout + co0..k * cout + co0 + cb];
-                        let (x0, x1, x2, x3) = (p0[k], p1[k], p2[k], p3[k]);
-                        match kind {
-                            SimKernel::Adder => {
-                                for (j, &wv) in wrow.iter().enumerate() {
-                                    a0[j] = $adder(a0[j], x0, wv);
-                                    a1[j] = $adder(a1[j], x1, wv);
-                                    a2[j] = $adder(a2[j], x2, wv);
-                                    a3[j] = $adder(a3[j], x3, wv);
-                                }
-                            }
-                            SimKernel::Mult => {
-                                for (j, &wv) in wrow.iter().enumerate() {
-                                    a0[j] = $mult(a0[j], x0, wv);
-                                    a1[j] = $mult(a1[j], x1, wv);
-                                    a2[j] = $mult(a2[j], x2, wv);
-                                    a3[j] = $mult(a3[j], x3, wv);
-                                }
-                            }
-                        }
-                    }
-                    for (t, acc) in [&a0, &a1, &a2, &a3].into_iter().enumerate() {
-                        let base = (ow + t) * cout + co0;
-                        out_row[base..base + cb].copy_from_slice(&acc[..cb]);
-                    }
-                    ow += OW_TILE;
-                }
-                while ow < wo {
-                    let p = &rowbuf[ow * k_taps..(ow + 1) * k_taps];
-                    let mut acc = [$zero; COUT_TILE];
-                    for (k, &xv) in p.iter().enumerate() {
-                        let wrow = &wdat[k * cout + co0..k * cout + co0 + cb];
-                        match kind {
-                            SimKernel::Adder => {
-                                for (j, &wv) in wrow.iter().enumerate() {
-                                    acc[j] = $adder(acc[j], xv, wv);
-                                }
-                            }
-                            SimKernel::Mult => {
-                                for (j, &wv) in wrow.iter().enumerate() {
-                                    acc[j] = $mult(acc[j], xv, wv);
-                                }
-                            }
-                        }
-                    }
-                    let base = ow * cout + co0;
-                    out_row[base..base + cb].copy_from_slice(&acc[..cb]);
-                    ow += 1;
-                }
-                co0 += cb;
-            }
-        }
-    };
-}
-
-conv_row_kernel!(conv_row_f32, f32, 0f32,
-                 |a: f32, x: f32, w: f32| a - (x - w).abs(),
-                 |a: f32, x: f32, w: f32| a + x * w);
-conv_row_kernel!(conv_row_i32, i32, 0i32,
-                 |a: i32, x: i32, w: i32| a - (x - w).abs(),
-                 |a: i32, x: i32, w: i32| a + x * w);
-
-/// f32 convolution (both kernels), NHWC x HWIO -> NHWC, via the tiled
-/// parallel engine.
+/// f32 convolution (both kernels), NHWC x HWIO -> NHWC, under the
+/// default [`KernelStrategy::Auto`] selection (`ADDERNET_KERNEL`
+/// override, else shape heuristic).
 pub fn conv2d(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
               kind: SimKernel) -> Tensor {
+    conv2d_with(KernelStrategy::Auto, x, w, stride, padding, kind)
+}
+
+/// f32 convolution under an explicit kernel strategy — THE dispatch
+/// point: `Naive` routes to the reference loop nests, `Tiled`/`Simd`
+/// run the parallel gather engine with that strategy's row kernel.
+pub fn conv2d_with(strategy: KernelStrategy, x: &Tensor, w: &ConvW,
+                   stride: usize, padding: Padding, kind: SimKernel) -> Tensor {
+    let krow: ConvRow<f32> = match strategy.resolve(w.cout) {
+        Resolved::Naive => return reference::conv2d(x, w, stride, padding, kind),
+        Resolved::Tiled => kernels::tiled::conv_row_f32,
+        Resolved::Simd => kernels::simd::conv_row_f32,
+    };
     let (n, h, w_in, cin) = x.shape;
     assert_eq!(cin, w.cin, "cin mismatch");
     let (pt, pl, ho, wo) = nn::conv_geometry(h, w_in, w.kh, w.kw, stride, padding);
@@ -250,7 +134,7 @@ pub fn conv2d(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
         let mut rowbuf = vec![0f32; wo * k_taps];
         gather_row(&x.data, h, w_in, cin, kh, kw, b, oh, stride, pt, pl, wo,
                    &mut rowbuf);
-        conv_row_f32(&rowbuf, k_taps, wdat, cout, kind, chunk);
+        krow(&rowbuf, k_taps, wdat, cout, kind, chunk);
     });
     out
 }
@@ -300,6 +184,24 @@ pub(crate) fn quant_operands(x: &[f32], w: &[f32], kind: SimKernel, cfg: QuantCf
 /// exact DW + log2(K) bits.
 pub fn conv2d_quant(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
                     kind: SimKernel, cfg: QuantCfg, calib: &LayerCalib) -> Tensor {
+    conv2d_quant_with(KernelStrategy::Auto, x, w, stride, padding, kind, cfg, calib)
+}
+
+/// Integer convolution under an explicit kernel strategy.  All
+/// strategies share [`quant_operands`], so they see identical integer
+/// operands and (i32 accumulation being order-independent) must produce
+/// bit-identical outputs — the cross-strategy oracle contract.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_quant_with(strategy: KernelStrategy, x: &Tensor, w: &ConvW,
+                         stride: usize, padding: Padding, kind: SimKernel,
+                         cfg: QuantCfg, calib: &LayerCalib) -> Tensor {
+    let krow: ConvRow<i32> = match strategy.resolve(w.cout) {
+        Resolved::Naive => {
+            return reference::conv2d_quant(x, w, stride, padding, kind, cfg, calib)
+        }
+        Resolved::Tiled => kernels::tiled::conv_row_i32,
+        Resolved::Simd => kernels::simd::conv_row_i32,
+    };
     let (n, h, w_in, cin) = x.shape;
     assert_eq!(cin, w.cin, "cin mismatch");
     let cout = w.cout;
@@ -318,7 +220,7 @@ pub fn conv2d_quant(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
         gather_row(&xq, h, w_in, cin, kh, kw, b, oh, stride, pt, pl, wo,
                    &mut rowbuf);
         let mut irow = vec![0i32; chunk.len()];
-        conv_row_i32(&rowbuf, k_taps, &wq, cout, kind, &mut irow);
+        krow(&rowbuf, k_taps, &wq, cout, kind, &mut irow);
         for (o, &a) in chunk.iter_mut().zip(&irow) {
             *o = a as f32 * pre_scale;
         }
@@ -391,9 +293,20 @@ pub fn global_avg_pool(x: &Tensor) -> Tensor {
     out
 }
 
-/// Dense: x (n, 1, 1, din) @ w (din, dout) + b, output-blocked and
-/// parallel over the batch.
+/// Dense: x (n, 1, 1, din) @ w (din, dout) + b, under the default
+/// [`KernelStrategy::Auto`] selection, parallel over the batch.
 pub fn dense(x: &Tensor, w: &[f32], bias: &[f32], dout: usize) -> Tensor {
+    dense_with(KernelStrategy::Auto, x, w, bias, dout)
+}
+
+/// Dense under an explicit kernel strategy.
+pub fn dense_with(strategy: KernelStrategy, x: &Tensor, w: &[f32],
+                  bias: &[f32], dout: usize) -> Tensor {
+    let krow: DenseRow = match strategy.resolve(dout) {
+        Resolved::Naive => return reference::dense(x, w, bias, dout),
+        Resolved::Tiled => kernels::tiled::dense_row,
+        Resolved::Simd => kernels::simd::dense_row,
+    };
     let (n, h, ww, c) = x.shape;
     let din = h * ww * c;
     assert_eq!(w.len(), din * dout, "dense weight size mismatch");
@@ -405,23 +318,7 @@ pub fn dense(x: &Tensor, w: &[f32], bias: &[f32], dout: usize) -> Tensor {
     let threads = max_threads_for(n * din * dout);
     parallel_chunks(&mut out.data, dout, threads, |b, orow| {
         let xrow = &x.data[b * din..(b + 1) * din];
-        let mut co0 = 0;
-        while co0 < dout {
-            let cb = COUT_TILE.min(dout - co0);
-            let mut acc = [0f32; COUT_TILE];
-            acc[..cb].copy_from_slice(&bias[co0..co0 + cb]);
-            for (i, &xv) in xrow.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let wrow = &w[i * dout + co0..i * dout + co0 + cb];
-                for (j, &wv) in wrow.iter().enumerate() {
-                    acc[j] += xv * wv;
-                }
-            }
-            orow[co0..co0 + cb].copy_from_slice(&acc[..cb]);
-            co0 += cb;
-        }
+        krow(xrow, w, bias, dout, orow);
     });
     out
 }
@@ -486,6 +383,9 @@ pub struct Runner<'a> {
     pub params: &'a Params,
     pub arch: Arch,
     pub kind: SimKernel,
+    /// Inner-kernel strategy every conv/dense layer dispatches through
+    /// (`Auto` honours the `ADDERNET_KERNEL` override).
+    pub strategy: KernelStrategy,
     pub mode: ExecMode,
     pub calib: Option<&'a Calibration>,
     /// When set, feature max-abs (and optional full copies) are recorded.
@@ -513,12 +413,15 @@ impl<'a> Runner<'a> {
             e.weight_max_abs = quant::max_abs(w.data);
         }
         let mut y = match self.mode {
-            ExecMode::F32 => conv2d(&x, &w, stride, padding, self.kind),
+            ExecMode::F32 => {
+                conv2d_with(self.strategy, &x, &w, stride, padding, self.kind)
+            }
             ExecMode::Quant(cfg) => {
                 let calib = self.calib.expect("quant mode requires calibration");
                 let lc = calib.get(name)
                     .unwrap_or_else(|| panic!("no calibration for {name}"));
-                conv2d_quant(&x, &w, stride, padding, self.kind, cfg, lc)
+                conv2d_quant_with(self.strategy, &x, &w, stride, padding,
+                                  self.kind, cfg, lc)
             }
         };
         let (_, g) = self.p(&format!("{name}/bn_gamma"));
@@ -536,7 +439,7 @@ impl<'a> Runner<'a> {
     fn dense_layer(&self, name: &str, x: &Tensor) -> Tensor {
         let (ws, wd) = self.p(&format!("{name}/dense_w"));
         let (_, bd) = self.p(&format!("{name}/dense_b"));
-        dense(x, wd, bd, ws[1])
+        dense_with(self.strategy, x, wd, bd, ws[1])
     }
 
     /// Run the forward pass; returns logits (n, 1, 1, 10).
@@ -819,6 +722,7 @@ mod tests {
             let x = Tensor::zeros((2, 32, 32, 1));
             let mut r = Runner {
                 params: &params, arch, kind: SimKernel::Adder,
+                strategy: KernelStrategy::Auto,
                 mode: ExecMode::F32, calib: None, observe: None,
             };
             let y = r.forward(&x);
@@ -837,6 +741,7 @@ mod tests {
         let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
         let mut r = Runner {
             params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+            strategy: KernelStrategy::Auto,
             mode: ExecMode::F32, calib: None, observe: None,
         };
         let many = r.forward_many(&refs, (32, 32, 1));

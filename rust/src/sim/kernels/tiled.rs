@@ -1,0 +1,125 @@
+//! Cache-blocked scalar row kernels — the PR-1 engine's inner loops,
+//! moved here verbatim when the kernel-strategy subsystem landed.
+//!
+//! Blocking: `OW_TILE` output columns share each streamed weight row
+//! (quartering weight bandwidth) and `COUT_TILE` output channels keep
+//! their accumulators on the stack.  Taps run in ascending (ky, kx, ci)
+//! order — the reference order — so the f32 path accumulates in exactly
+//! the sequence the naive oracle does.
+
+use super::SimKernel;
+
+/// Output-channel tile of the inner kernel (accumulators live on the
+/// stack; 64 f32 = two cache lines).
+pub(crate) const COUT_TILE: usize = 64;
+/// Output-column register blocking: four columns share each streamed
+/// weight row, quartering weight bandwidth in the inner loop.
+pub(crate) const OW_TILE: usize = 4;
+
+macro_rules! conv_row_kernel {
+    ($name:ident, $t:ty, $zero:expr, $adder:expr, $mult:expr) => {
+        /// Blocked inner kernel over one gathered output row: OW_TILE
+        /// columns x COUT_TILE channels per pass, taps in ascending
+        /// (ky, kx, ci) order (the reference order).
+        pub(crate) fn $name(rowbuf: &[$t], k_taps: usize, wdat: &[$t], cout: usize,
+                            kind: SimKernel, out_row: &mut [$t]) {
+            let wo = out_row.len() / cout;
+            let mut co0 = 0;
+            while co0 < cout {
+                let cb = COUT_TILE.min(cout - co0);
+                let mut ow = 0;
+                while ow + OW_TILE <= wo {
+                    let p0 = &rowbuf[ow * k_taps..(ow + 1) * k_taps];
+                    let p1 = &rowbuf[(ow + 1) * k_taps..(ow + 2) * k_taps];
+                    let p2 = &rowbuf[(ow + 2) * k_taps..(ow + 3) * k_taps];
+                    let p3 = &rowbuf[(ow + 3) * k_taps..(ow + 4) * k_taps];
+                    let mut a0 = [$zero; COUT_TILE];
+                    let mut a1 = [$zero; COUT_TILE];
+                    let mut a2 = [$zero; COUT_TILE];
+                    let mut a3 = [$zero; COUT_TILE];
+                    for k in 0..k_taps {
+                        let wrow = &wdat[k * cout + co0..k * cout + co0 + cb];
+                        let (x0, x1, x2, x3) = (p0[k], p1[k], p2[k], p3[k]);
+                        match kind {
+                            SimKernel::Adder => {
+                                for (j, &wv) in wrow.iter().enumerate() {
+                                    a0[j] = $adder(a0[j], x0, wv);
+                                    a1[j] = $adder(a1[j], x1, wv);
+                                    a2[j] = $adder(a2[j], x2, wv);
+                                    a3[j] = $adder(a3[j], x3, wv);
+                                }
+                            }
+                            SimKernel::Mult => {
+                                for (j, &wv) in wrow.iter().enumerate() {
+                                    a0[j] = $mult(a0[j], x0, wv);
+                                    a1[j] = $mult(a1[j], x1, wv);
+                                    a2[j] = $mult(a2[j], x2, wv);
+                                    a3[j] = $mult(a3[j], x3, wv);
+                                }
+                            }
+                        }
+                    }
+                    for (t, acc) in [&a0, &a1, &a2, &a3].into_iter().enumerate() {
+                        let base = (ow + t) * cout + co0;
+                        out_row[base..base + cb].copy_from_slice(&acc[..cb]);
+                    }
+                    ow += OW_TILE;
+                }
+                while ow < wo {
+                    let p = &rowbuf[ow * k_taps..(ow + 1) * k_taps];
+                    let mut acc = [$zero; COUT_TILE];
+                    for (k, &xv) in p.iter().enumerate() {
+                        let wrow = &wdat[k * cout + co0..k * cout + co0 + cb];
+                        match kind {
+                            SimKernel::Adder => {
+                                for (j, &wv) in wrow.iter().enumerate() {
+                                    acc[j] = $adder(acc[j], xv, wv);
+                                }
+                            }
+                            SimKernel::Mult => {
+                                for (j, &wv) in wrow.iter().enumerate() {
+                                    acc[j] = $mult(acc[j], xv, wv);
+                                }
+                            }
+                        }
+                    }
+                    let base = ow * cout + co0;
+                    out_row[base..base + cb].copy_from_slice(&acc[..cb]);
+                    ow += 1;
+                }
+                co0 += cb;
+            }
+        }
+    };
+}
+
+conv_row_kernel!(conv_row_f32, f32, 0f32,
+                 |a: f32, x: f32, w: f32| a - (x - w).abs(),
+                 |a: f32, x: f32, w: f32| a + x * w);
+conv_row_kernel!(conv_row_i32, i32, 0i32,
+                 |a: i32, x: i32, w: i32| a - (x - w).abs(),
+                 |a: i32, x: i32, w: i32| a + x * w);
+
+/// Dense inner kernel for one batch row: output-blocked (COUT_TILE wide)
+/// with the post-ReLU zero-skip, accumulating inputs in ascending order
+/// (the reference order).
+pub(crate) fn dense_row(xrow: &[f32], w: &[f32], bias: &[f32], dout: usize,
+                        orow: &mut [f32]) {
+    let mut co0 = 0;
+    while co0 < dout {
+        let cb = COUT_TILE.min(dout - co0);
+        let mut acc = [0f32; COUT_TILE];
+        acc[..cb].copy_from_slice(&bias[co0..co0 + cb]);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * dout + co0..i * dout + co0 + cb];
+            for (j, &wv) in wrow.iter().enumerate() {
+                acc[j] += xv * wv;
+            }
+        }
+        orow[co0..co0 + cb].copy_from_slice(&acc[..cb]);
+        co0 += cb;
+    }
+}

@@ -1,15 +1,19 @@
 //! Accelerator simulation: cycle/resource/power models (Fig. 4/5, §4)
 //! plus the bit-accurate functional datapath (quantized inference).
 //!
-//! The functional datapath has two implementations: the tiled parallel
-//! engine in [`functional`] (the serving hot path) and the naive scalar
-//! loops in [`reference`] (the in-crate oracle the engine is tested
-//! against — see `rust/tests/functional_oracle.rs`).
+//! The functional datapath runs through the [`kernels`] strategy
+//! subsystem: a tiled cache-blocked kernel, a lane-structured SIMD
+//! kernel, and the naive scalar loops in [`reference`] (the in-crate
+//! oracle every strategy is tested against — see
+//! `rust/tests/functional_oracle.rs`).  [`functional`] owns the parallel
+//! gather engine and the single dispatch point.
 
 pub mod accelerator;
 pub mod functional;
+pub mod kernels;
 pub mod onchip;
 pub mod reference;
 
 pub use accelerator::{AccelConfig, ResourceBreakdown, RunReport};
-pub use functional::{Arch, ExecMode, QuantCfg, Runner, SimKernel, Tensor};
+pub use functional::{Arch, ExecMode, QuantCfg, Runner, Tensor};
+pub use kernels::{KernelStrategy, SimKernel};

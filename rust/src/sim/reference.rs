@@ -4,9 +4,13 @@
 //! [`super::functional`] replaced.  They are deliberately unclever — one
 //! output at a time, taps in (ky, kx, ci) order — and serve as the
 //! in-crate oracle: `rust/tests/functional_oracle.rs` checks the tiled
-//! multi-threaded kernels against them across a shape grid (f32 within
-//! tolerance, integer path bit-identical), and `benches/hotpath.rs`
-//! records the engine-vs-naive speedup.  Not used on any serving path.
+//! and simd strategies of [`super::kernels`] against them across a
+//! shape grid plus a randomized fuzz pass (f32 within tolerance,
+//! integer path bit-identical), and `benches/hotpath.rs` records the
+//! per-strategy speedup.  [`crate::sim::KernelStrategy::Naive`]
+//! dispatches here, so the oracle is also runnable end-to-end (CI runs
+//! the full suite under `ADDERNET_KERNEL=naive`); it is never selected
+//! by `Auto`.
 
 use crate::nn::{self, Padding};
 use crate::quant::LayerCalib;

@@ -87,4 +87,37 @@ mod tests {
     fn num_threads_positive() {
         assert!(num_threads() >= 1);
     }
+
+    #[test]
+    fn empty_data_is_a_no_op() {
+        // zero chunks: the split must not panic or spawn anything.
+        let mut data: Vec<u8> = Vec::new();
+        parallel_chunks(&mut data, 4, usize::MAX, |_, _| panic!("no chunks"));
+        parallel_chunks(&mut data, 4, 1, |_, _| panic!("no chunks"));
+    }
+
+    #[test]
+    fn oversubscribed_thread_request_clamps_to_chunk_count() {
+        // far more threads than chunks: every chunk still runs exactly
+        // once and the call returns (no idle-worker deadlock).
+        let mut data = vec![0u32; 3 * 5];
+        parallel_chunks(&mut data, 5, 1000, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v += i as u32 + 1;
+            }
+        });
+        for (i, chunk) in data.chunks(5).enumerate() {
+            assert!(chunk.iter().all(|&v| v == i as u32 + 1), "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn single_chunk_runs_inline() {
+        let mut data = vec![0u64; 8];
+        parallel_chunks(&mut data, 8, usize::MAX, |i, chunk| {
+            assert_eq!(i, 0);
+            chunk.iter_mut().for_each(|v| *v = 7);
+        });
+        assert!(data.iter().all(|&v| v == 7));
+    }
 }

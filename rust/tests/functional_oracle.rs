@@ -1,33 +1,86 @@
-//! Oracle tests: the tiled multi-threaded functional engine vs the
-//! retained naive reference (`addernet::sim::reference`) across a grid
-//! of shapes — kernels 1x1/3x3/5x5, strides 1-2, Same/Valid padding,
-//! channel counts that do and don't divide the engine tiles, batch 1
-//! and 8.  f32 within 1e-5 (relative), integer path bit-identical.
+//! Oracle tests: every kernel strategy (`Naive`, `Tiled`, `Simd`, plus
+//! the `Auto` selector) vs the retained naive reference
+//! (`addernet::sim::reference`).
+//!
+//! Three tiers:
+//! * a deterministic shape grid — kernels 1x1/3x3/5x5, strides 1-2,
+//!   Same/Valid padding, channel counts that do and don't divide the
+//!   tiled 64-wide and simd 8-wide blocks, batch 1 and 8;
+//! * an edge grid — 1x1 kernels, stride 3, kernels larger than the
+//!   input (all-padding rows / zero-output VALID), single-channel and
+//!   single-batch degenerates;
+//! * a randomized LCG-driven fuzz pass (~50 configs, no external
+//!   deps) over shape/stride/padding/bit-width.
+//!
+//! Contract: f32 within 1e-4 of the reference (all strategies
+//! accumulate taps in the same (ky, kx, ci) order, so in practice they
+//! are far tighter), integer path **bit-identical** for every
+//! `SimKernel` kind.
 
 use addernet::nn::Padding;
 use addernet::quant::{LayerCalib, Mode};
 use addernet::sim::functional::{
-    self, conv2d, conv2d_quant, dense, Arch, ConvW, ExecMode, QuantCfg, Runner,
-    SimKernel, Tensor,
+    self, conv2d_quant_with, conv2d_with, dense, dense_with, Arch, ConvW, ExecMode,
+    KernelStrategy, QuantCfg, Runner, SimKernel, Tensor,
 };
 use addernet::sim::reference;
 use addernet::util::XorShift64;
+
+/// The concrete strategies pinned against the reference.  `Naive`
+/// dispatches *to* the reference, so its rows double as a dispatch
+/// test; `Tiled` and `Simd` are the real subjects.
+const STRATEGIES: [KernelStrategy; 4] = [
+    KernelStrategy::Naive,
+    KernelStrategy::Tiled,
+    KernelStrategy::Simd,
+    KernelStrategy::Auto,
+];
 
 fn rand_vec(rng: &mut XorShift64, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.next_f32_sym(scale)).collect()
 }
 
-fn assert_close(a: &[f32], b: &[f32], what: &str) {
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
     assert_eq!(a.len(), b.len(), "{what}: length mismatch");
     for (i, (x, y)) in a.iter().zip(b).enumerate() {
-        assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0),
-                "{what}: element {i}: engine {x} vs reference {y}");
+        assert!((x - y).abs() <= tol * y.abs().max(1.0),
+                "{what}: element {i}: strategy {x} vs reference {y}");
+    }
+}
+
+/// One conv case checked across every strategy: f32 within `tol`,
+/// integer path (for each of `bits`) bit-identical.  The single
+/// comparison loop every test tier (grids, edge cases, fuzz) goes
+/// through.
+#[allow(clippy::too_many_arguments)]
+fn check_all_strategies(x: &Tensor, cw: &ConvW, stride: usize, padding: Padding,
+                        kind: SimKernel, tol: f32, bits: &[u32], mode: Mode,
+                        calib: &LayerCalib, what: &str) {
+    let want = reference::conv2d(x, cw, stride, padding, kind);
+    for strat in STRATEGIES {
+        let got = conv2d_with(strat, x, cw, stride, padding, kind);
+        assert_eq!(got.shape, want.shape, "{what} [{}]", strat.label());
+        assert_close(&got.data, &want.data, tol,
+                     &format!("{what} [f32 {}]", strat.label()));
+    }
+    for &b in bits {
+        let cfg = QuantCfg { bits: b, mode };
+        let want = reference::conv2d_quant(x, cw, stride, padding, kind, cfg, calib);
+        for strat in STRATEGIES {
+            let got = conv2d_quant_with(strat, x, cw, stride, padding, kind,
+                                        cfg, calib);
+            assert_eq!(got.shape, want.shape, "{what} [int{b} {}]", strat.label());
+            // integer accumulation is order-independent: every strategy
+            // must be EXACTLY the reference.
+            assert_eq!(got.data, want.data, "{what} [int{b} {}]", strat.label());
+        }
     }
 }
 
 /// Shape grid shared by the f32 and integer sweeps.  Channel pairs
-/// include counts far below, equal to, and not divisible by the
-/// engine's 64-wide output tile and 4-wide column tile.
+/// include counts far below, equal to, and not divisible by the tiled
+/// 64-wide output tile, the tiled 4-wide column tile and the simd
+/// 8-wide lane group.
 fn shape_grid() -> Vec<(usize, usize, usize, usize, usize, usize, Padding)> {
     // (h, w, k, stride, cin, cout, padding)
     let mut grid = Vec::new();
@@ -49,6 +102,7 @@ fn shape_grid() -> Vec<(usize, usize, usize, usize, usize, usize, Padding)> {
 #[test]
 fn conv2d_f32_matches_reference_grid() {
     let mut rng = XorShift64::new(101);
+    let calib = LayerCalib { feat_max_abs: 1.5, weight_max_abs: 1.0 };
     for (h, w, k, stride, cin, cout, padding) in shape_grid() {
         for batch in [1usize, 8] {
             let x = Tensor::new((batch, h, w, cin),
@@ -56,12 +110,11 @@ fn conv2d_f32_matches_reference_grid() {
             let wdat = rand_vec(&mut rng, k * k * cin * cout, 1.0);
             let cw = ConvW { data: &wdat, kh: k, kw: k, cin, cout };
             for kind in [SimKernel::Adder, SimKernel::Mult] {
-                let got = conv2d(&x, &cw, stride, padding, kind);
-                let want = reference::conv2d(&x, &cw, stride, padding, kind);
-                assert_eq!(got.shape, want.shape);
-                assert_close(&got.data, &want.data,
-                             &format!("f32 {kind:?} k{k} s{stride} {padding:?} \
-                                       {cin}->{cout} b{batch}"));
+                check_all_strategies(
+                    &x, &cw, stride, padding, kind, 1e-5, &[],
+                    Mode::SharedScale, &calib,
+                    &format!("f32 {kind:?} k{k} s{stride} {padding:?} \
+                              {cin}->{cout} b{batch}"));
             }
         }
     }
@@ -78,18 +131,11 @@ fn conv2d_quant_bit_identical_to_reference() {
             let wdat = rand_vec(&mut rng, k * k * cin * cout, 1.0);
             let cw = ConvW { data: &wdat, kh: k, kw: k, cin, cout };
             for kind in [SimKernel::Adder, SimKernel::Mult] {
-                for bits in [8u32, 16] {
-                    let cfg = QuantCfg { bits, mode: Mode::SharedScale };
-                    let got = conv2d_quant(&x, &cw, stride, padding, kind, cfg, &calib);
-                    let want = reference::conv2d_quant(&x, &cw, stride, padding,
-                                                       kind, cfg, &calib);
-                    assert_eq!(got.shape, want.shape);
-                    // integer accumulation is order-independent: the
-                    // engine must be EXACTLY the reference.
-                    assert_eq!(got.data, want.data,
-                               "int{bits} {kind:?} k{k} s{stride} {padding:?} \
-                                {cin}->{cout} b{batch}");
-                }
+                check_all_strategies(
+                    &x, &cw, stride, padding, kind, 1e-5, &[8, 16],
+                    Mode::SharedScale, &calib,
+                    &format!("quant {kind:?} k{k} s{stride} {padding:?} \
+                              {cin}->{cout} b{batch}"));
             }
         }
     }
@@ -98,91 +144,252 @@ fn conv2d_quant_bit_identical_to_reference() {
 #[test]
 fn conv2d_quant_separate_scale_bit_identical() {
     // The point-alignment (regrid) path of the separate-scale adder mode
-    // must also agree bit-exactly between engine and reference.
+    // must also agree bit-exactly between every strategy and the
+    // reference.
     let mut rng = XorShift64::new(303);
     let calib = LayerCalib { feat_max_abs: 0.25, weight_max_abs: 2.0 };
     let x = Tensor::new((2, 8, 8, 3), rand_vec(&mut rng, 2 * 8 * 8 * 3, 0.25));
     let wdat = rand_vec(&mut rng, 3 * 3 * 3 * 7, 2.0);
     let cw = ConvW { data: &wdat, kh: 3, kw: 3, cin: 3, cout: 7 };
     for kind in [SimKernel::Adder, SimKernel::Mult] {
-        for bits in [6u32, 8] {
-            let cfg = QuantCfg { bits, mode: Mode::SeparateScale };
-            let got = conv2d_quant(&x, &cw, 1, Padding::Same, kind, cfg, &calib);
-            let want = reference::conv2d_quant(&x, &cw, 1, Padding::Same, kind,
-                                               cfg, &calib);
-            assert_eq!(got.data, want.data, "separate {kind:?} int{bits}");
+        check_all_strategies(&x, &cw, 1, Padding::Same, kind, 1e-5, &[6, 8],
+                             Mode::SeparateScale, &calib,
+                             &format!("separate-scale {kind:?}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Edge-case shape grid: the tail-handling paths the base grid misses
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conv2d_edge_shapes_all_strategies() {
+    let mut rng = XorShift64::new(404);
+    let calib = LayerCalib { feat_max_abs: 1.5, weight_max_abs: 1.0 };
+    // (batch, h, w, kh, kw, stride, cin, cout, padding)
+    let cases: &[(usize, usize, usize, usize, usize, usize, usize, usize, Padding)] = &[
+        // 1x1 kernel: pure channel mixing, no spatial window
+        (2, 7, 7, 1, 1, 1, 3, 9, Padding::Same),
+        (1, 6, 6, 1, 1, 2, 8, 8, Padding::Valid),
+        // stride 3: output grids that skip most input columns
+        (2, 9, 9, 3, 3, 3, 2, 10, Padding::Same),
+        (1, 10, 7, 3, 3, 3, 4, 5, Padding::Valid),
+        (1, 12, 12, 5, 5, 3, 1, 17, Padding::Same),
+        // kernel larger than the input: SAME keeps the grid and every
+        // window includes all-padding rows
+        (1, 3, 3, 5, 5, 1, 2, 9, Padding::Same),
+        (2, 2, 4, 5, 3, 1, 3, 8, Padding::Same),
+        (1, 1, 1, 3, 3, 1, 4, 11, Padding::Same),
+        // non-square kernels hit the kh != kw gather paths
+        (1, 8, 8, 1, 5, 2, 2, 12, Padding::Same),
+        (1, 8, 8, 5, 1, 1, 2, 6, Padding::Valid),
+        // single-channel / single-batch / single-pixel degenerates
+        (1, 5, 5, 3, 3, 1, 1, 1, Padding::Same),
+        (1, 1, 9, 1, 3, 1, 1, 8, Padding::Same),
+        (3, 4, 1, 3, 1, 2, 5, 3, Padding::Same),
+    ];
+    for &(batch, h, w, kh, kw, stride, cin, cout, padding) in cases {
+        let x = Tensor::new((batch, h, w, cin),
+                            rand_vec(&mut rng, batch * h * w * cin, 1.5));
+        let wdat = rand_vec(&mut rng, kh * kw * cin * cout, 1.0);
+        let cw = ConvW { data: &wdat, kh, kw, cin, cout };
+        for kind in [SimKernel::Adder, SimKernel::Mult] {
+            check_all_strategies(
+                &x, &cw, stride, padding, kind, 1e-4, &[8, 16],
+                Mode::SharedScale, &calib,
+                &format!("edge {kind:?} b{batch} {h}x{w} k{kh}x{kw} s{stride} \
+                          {cin}->{cout} {padding:?}"));
         }
     }
 }
 
 #[test]
-fn dense_matches_reference() {
-    let mut rng = XorShift64::new(404);
-    for (n, din, dout) in [(1usize, 37usize, 13usize), (8, 400, 120), (3, 64, 130)] {
+fn conv2d_valid_kernel_larger_than_input_yields_empty() {
+    // VALID with k > input: zero outputs, identical (empty) results
+    // everywhere instead of a usize-underflow panic.
+    let mut rng = XorShift64::new(505);
+    let x = Tensor::new((2, 3, 3, 2), rand_vec(&mut rng, 2 * 3 * 3 * 2, 1.0));
+    let wdat = rand_vec(&mut rng, 5 * 5 * 2 * 4, 1.0);
+    let cw = ConvW { data: &wdat, kh: 5, kw: 5, cin: 2, cout: 4 };
+    let want = reference::conv2d(&x, &cw, 1, Padding::Valid, SimKernel::Adder);
+    assert_eq!(want.shape, (2, 0, 0, 4));
+    assert!(want.data.is_empty());
+    for strat in STRATEGIES {
+        let got = conv2d_with(strat, &x, &cw, 1, Padding::Valid, SimKernel::Adder);
+        assert_eq!(got.shape, want.shape, "{}", strat.label());
+        assert!(got.data.is_empty(), "{}", strat.label());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Randomized cross-strategy oracle (deterministic LCG, no new deps)
+// ---------------------------------------------------------------------------
+
+/// Knuth MMIX LCG — deliberately independent of `util::XorShift64` so
+/// the fuzz stream is not correlated with the data stream.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next_u64(&mut self) -> u64 {
+        self.0 = self.0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 11
+    }
+
+    /// Uniform in `lo..=hi`.
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    fn coin(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+#[test]
+fn randomized_cross_strategy_oracle() {
+    let mut lcg = Lcg(0x5eed_2024);
+    let mut rng = XorShift64::new(909);
+    let mut zero_output_cases = 0usize;
+    for case in 0..50 {
+        let batch = lcg.range(1, 3);
+        let h = lcg.range(1, 12);
+        let w = lcg.range(1, 12);
+        let kh = lcg.range(1, 5);
+        let kw = lcg.range(1, 5);
+        let stride = lcg.range(1, 3);
+        let padding = if lcg.coin() { Padding::Same } else { Padding::Valid };
+        let cin = lcg.range(1, 8);
+        let cout = lcg.range(1, 70);
+        let bits = [4u32, 8, 16][lcg.range(0, 2)];
+        let mode = if lcg.coin() { Mode::SharedScale } else { Mode::SeparateScale };
+        let feat_scale = [0.25f32, 1.0, 2.0][lcg.range(0, 2)];
+        let calib = LayerCalib { feat_max_abs: feat_scale, weight_max_abs: 1.0 };
+
+        let x = Tensor::new((batch, h, w, cin),
+                            rand_vec(&mut rng, batch * h * w * cin, feat_scale));
+        let wdat = rand_vec(&mut rng, kh * kw * cin * cout, 1.0);
+        let cw = ConvW { data: &wdat, kh, kw, cin, cout };
+        if reference::conv2d(&x, &cw, stride, padding, SimKernel::Adder)
+            .data.is_empty()
+        {
+            zero_output_cases += 1;
+        }
+        for kind in [SimKernel::Adder, SimKernel::Mult] {
+            check_all_strategies(
+                &x, &cw, stride, padding, kind, 1e-4, &[bits], mode, &calib,
+                &format!("fuzz#{case} {kind:?} b{batch} {h}x{w} k{kh}x{kw} \
+                          s{stride} {cin}->{cout} {padding:?} {mode:?}"));
+        }
+    }
+    // the sampler must keep most cases non-degenerate
+    assert!(zero_output_cases < 25, "sampler degenerated: {zero_output_cases}/50");
+}
+
+// ---------------------------------------------------------------------------
+// Dense
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dense_matches_reference_all_strategies() {
+    let mut rng = XorShift64::new(606);
+    for (n, din, dout) in [(1usize, 37usize, 13usize), (8, 400, 120), (3, 64, 130),
+                           (2, 16, 7), (1, 5, 1)] {
         let x = Tensor::new((n, 1, 1, din), rand_vec(&mut rng, n * din, 1.0));
         let w = rand_vec(&mut rng, din * dout, 0.7);
         let bias = rand_vec(&mut rng, dout, 0.3);
-        let got = dense(&x, &w, &bias, dout);
         let want = reference::dense(&x, &w, &bias, dout);
-        assert_eq!(got.shape, want.shape);
-        assert_close(&got.data, &want.data, &format!("dense {n}x{din}->{dout}"));
+        for strat in STRATEGIES {
+            let got = dense_with(strat, &x, &w, &bias, dout);
+            assert_eq!(got.shape, want.shape);
+            assert_close(&got.data, &want.data, 1e-5,
+                         &format!("dense {} {n}x{din}->{dout}", strat.label()));
+        }
     }
 }
 
 #[test]
 fn dense_handles_zero_activations() {
-    // The sparse-skip in the reference and the engine must agree when
-    // activations contain exact zeros (post-ReLU reality).
+    // The sparse-skip in the reference and every strategy must agree
+    // when activations contain exact zeros (post-ReLU reality).
     let x = Tensor::new((2, 1, 1, 6),
                         vec![0.0, 1.0, 0.0, -2.0, 0.0, 0.5,
                              0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
     let mut rng = XorShift64::new(505);
     let w = rand_vec(&mut rng, 6 * 9, 1.0);
     let bias = rand_vec(&mut rng, 9, 1.0);
-    let got = dense(&x, &w, &bias, 9);
     let want = reference::dense(&x, &w, &bias, 9);
-    assert_close(&got.data, &want.data, "dense with zeros");
-    // the all-zero row must reduce to the bias
-    assert_close(&got.data[9..], &bias, "all-zero row == bias");
+    for strat in STRATEGIES {
+        let got = dense_with(strat, &x, &w, &bias, 9);
+        assert_close(&got.data, &want.data, 1e-5,
+                     &format!("dense with zeros [{}]", strat.label()));
+        // the all-zero row must reduce to the bias
+        assert_close(&got.data[9..], &bias, 1e-5,
+                     &format!("all-zero row == bias [{}]", strat.label()));
+    }
+    // the default-strategy wrapper routes through the same dispatch
+    let got = dense(&x, &w, &bias, 9);
+    assert_close(&got.data, &want.data, 1e-5, "dense default wrapper");
 }
+
+// ---------------------------------------------------------------------------
+// Engine determinism + end-to-end
+// ---------------------------------------------------------------------------
 
 #[test]
 fn engine_thread_count_does_not_change_results() {
-    // Same conv on the parallel path vs a big enough workload to engage
-    // multiple threads: determinism is part of the engine contract.
-    let mut rng = XorShift64::new(606);
+    // Same conv twice on a workload big enough to engage multiple
+    // threads: determinism is part of the engine contract, for every
+    // strategy.
+    let mut rng = XorShift64::new(707);
     let x = Tensor::new((4, 32, 32, 16), rand_vec(&mut rng, 4 * 32 * 32 * 16, 1.0));
     let wdat = rand_vec(&mut rng, 3 * 3 * 16 * 16, 1.0);
     let cw = ConvW { data: &wdat, kh: 3, kw: 3, cin: 16, cout: 16 };
-    let a = conv2d(&x, &cw, 1, Padding::Same, SimKernel::Adder);
-    let b = conv2d(&x, &cw, 1, Padding::Same, SimKernel::Adder);
-    assert_eq!(a.data, b.data);
     let want = reference::conv2d(&x, &cw, 1, Padding::Same, SimKernel::Adder);
-    assert_close(&a.data, &want.data, "large parallel conv");
+    for strat in STRATEGIES {
+        let a = conv2d_with(strat, &x, &cw, 1, Padding::Same, SimKernel::Adder);
+        let b = conv2d_with(strat, &x, &cw, 1, Padding::Same, SimKernel::Adder);
+        assert_eq!(a.data, b.data, "{}", strat.label());
+        assert_close(&a.data, &want.data, 1e-5,
+                     &format!("large parallel conv [{}]", strat.label()));
+    }
 }
 
 #[test]
 fn quantized_forward_runs_on_synthetic_params() {
     // End-to-end: calibrate + quantized forward through the engine on
-    // synthetic weights, fully offline.
+    // synthetic weights, fully offline; every strategy produces the
+    // same logits because the integer path is bit-identical and the
+    // float glue layers are shared.
     let params = functional::synth_params(Arch::Lenet5, 77);
-    let mut rng = XorShift64::new(707);
+    let mut rng = XorShift64::new(808);
     let x = Tensor::new((4, 32, 32, 1), rand_vec(&mut rng, 4 * 1024, 1.0));
     let mut calib = addernet::quant::Calibration::new();
     {
         let mut r = Runner {
             params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+            strategy: KernelStrategy::Auto,
             mode: ExecMode::F32, calib: None, observe: Some(&mut calib),
         };
         r.forward(&x);
     }
     assert!(calib.contains_key("conv1") && calib.contains_key("conv2"));
     let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
-    let mut rq = Runner {
-        params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
-        mode: ExecMode::Quant(cfg), calib: Some(&calib), observe: None,
-    };
-    let y = rq.forward(&x);
-    assert_eq!(y.shape, (4, 1, 1, 10));
-    assert!(y.data.iter().all(|v| v.is_finite()));
+    let mut logits_by_strategy = Vec::new();
+    for strat in STRATEGIES {
+        let mut rq = Runner {
+            params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+            strategy: strat,
+            mode: ExecMode::Quant(cfg), calib: Some(&calib), observe: None,
+        };
+        let y = rq.forward(&x);
+        assert_eq!(y.shape, (4, 1, 1, 10));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        logits_by_strategy.push(y.data);
+    }
+    for (i, l) in logits_by_strategy.iter().enumerate().skip(1) {
+        assert_close(l, &logits_by_strategy[0], 1e-4,
+                     &format!("whole-model logits [{}]", STRATEGIES[i].label()));
+    }
 }

@@ -15,7 +15,8 @@ use std::path::{Path, PathBuf};
 use addernet::coordinator::{server, Manifest};
 use addernet::data;
 use addernet::report::quantrep;
-use addernet::sim::functional::{self, Arch, ExecMode, Runner, SimKernel, Tensor};
+use addernet::sim::functional::{self, Arch, ExecMode, KernelStrategy, Runner,
+                                SimKernel, Tensor};
 
 #[cfg(feature = "pjrt")]
 use addernet::coordinator::Trainer;
@@ -119,6 +120,7 @@ fn functional_forward_matches_hlo_eval() {
         let kind = if kernel == "adder" { SimKernel::Adder } else { SimKernel::Mult };
         let mut runner = Runner {
             params: &params, arch: Arch::Lenet5, kind,
+            strategy: KernelStrategy::Auto,
             mode: ExecMode::F32, calib: None, observe: None,
         };
         let rust_logits = runner.forward(&xt);
@@ -257,6 +259,7 @@ fn save_reload_roundtrip() {
     let x = Tensor::new((16, 32, 32, 1), ev.images);
     let mut runner = Runner {
         params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+        strategy: KernelStrategy::Auto,
         mode: ExecMode::F32, calib: None, observe: None,
     };
     let acc = functional::accuracy(&mut runner, &x, &ev.labels);
@@ -323,6 +326,7 @@ fn functional_server_matches_direct_forward() {
                             b.images[i * 1024..(i + 1) * 1024].to_vec());
         let mut runner = Runner {
             params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+            strategy: KernelStrategy::Auto,
             mode: ExecMode::F32, calib: None, observe: None,
         };
         let direct = runner.forward(&x);

@@ -1,0 +1,79 @@
+//! Thread-pool edge cases: `ADDERNET_THREADS` overrides must never
+//! change results or deadlock, including the degenerate settings —
+//! a single thread, a thread count far above the row count (the pool
+//! must clamp to the chunk count instead of parking idle workers), an
+//! explicit `0` (clamps to 1) and garbage (falls back to the machine
+//! parallelism).
+//!
+//! Everything lives in ONE `#[test]` because the cases mutate the
+//! process environment; the test harness would otherwise interleave
+//! them with each other (and with any other test in this binary).
+
+use addernet::nn::Padding;
+use addernet::sim::functional::{conv2d_with, dense_with, ConvW, KernelStrategy,
+                                SimKernel, Tensor};
+use addernet::sim::reference;
+use addernet::util::XorShift64;
+
+fn rand_vec(rng: &mut XorShift64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32_sym(scale)).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0),
+                "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn thread_overrides_do_not_change_results_or_deadlock() {
+    let mut rng = XorShift64::new(4242);
+
+    // Large enough to cross the engine's parallel threshold, with only
+    // 8 output rows — so "64 threads" heavily oversubscribes the row
+    // count and the pool must clamp.
+    let x_big = Tensor::new((1, 8, 32, 16), rand_vec(&mut rng, 8 * 32 * 16, 1.0));
+    let w_big = rand_vec(&mut rng, 3 * 3 * 16 * 32, 1.0);
+    let cw_big = ConvW { data: &w_big, kh: 3, kw: 3, cin: 16, cout: 32 };
+    // Small enough to stay on the inline path regardless of settings.
+    let x_small = Tensor::new((1, 4, 4, 2), rand_vec(&mut rng, 4 * 4 * 2, 1.0));
+    let w_small = rand_vec(&mut rng, 3 * 3 * 2 * 9, 1.0);
+    let cw_small = ConvW { data: &w_small, kh: 3, kw: 3, cin: 2, cout: 9 };
+    // Dense: batch 3 = 3 chunks, another easy-to-oversubscribe split.
+    let xd = Tensor::new((3, 1, 1, 64), rand_vec(&mut rng, 3 * 64, 1.0));
+    let wd = rand_vec(&mut rng, 64 * 40, 0.5);
+    let bd = rand_vec(&mut rng, 40, 0.3);
+
+    let want_big = reference::conv2d(&x_big, &cw_big, 1, Padding::Same,
+                                     SimKernel::Adder);
+    let want_small = reference::conv2d(&x_small, &cw_small, 1, Padding::Same,
+                                       SimKernel::Adder);
+    let want_dense = reference::dense(&xd, &wd, &bd, 40);
+
+    // None = unset (machine default); the rest exercise the clamps.
+    let settings: [Option<&str>; 5] = [None, Some("1"), Some("64"), Some("0"),
+                                       Some("not-a-number")];
+    for setting in settings {
+        match setting {
+            Some(v) => std::env::set_var("ADDERNET_THREADS", v),
+            None => std::env::remove_var("ADDERNET_THREADS"),
+        }
+        let label = setting.unwrap_or("<unset>");
+        for strat in [KernelStrategy::Tiled, KernelStrategy::Simd] {
+            let got = conv2d_with(strat, &x_big, &cw_big, 1, Padding::Same,
+                                  SimKernel::Adder);
+            assert_close(&got.data, &want_big.data,
+                         &format!("big conv [{} threads={label}]", strat.label()));
+            let got = conv2d_with(strat, &x_small, &cw_small, 1, Padding::Same,
+                                  SimKernel::Adder);
+            assert_close(&got.data, &want_small.data,
+                         &format!("small conv [{} threads={label}]", strat.label()));
+            let got = dense_with(strat, &xd, &wd, &bd, 40);
+            assert_close(&got.data, &want_dense.data,
+                         &format!("dense [{} threads={label}]", strat.label()));
+        }
+    }
+    std::env::remove_var("ADDERNET_THREADS");
+}
