@@ -7,21 +7,31 @@
 //!        tiled cache-blocked engine and the lane-structured simd
 //!        kernel.  Records tiled-vs-naive AND simd-vs-tiled speedups —
 //!        the simd-vs-tiled median on the ResNet-shape layer is the
-//!        kernel-strategy acceptance number (target >= 1.3x);
+//!        kernel-strategy acceptance number (target >= 1.3x) — plus the
+//!        int8/int16-vs-f32 throughput ratios on the tiled and simd
+//!        strategies (the quantized-serving acceptance number:
+//!        int8 >= f32);
+//!   L3a2: whole-model serving comparison — f32 vs per-call int8 vs
+//!        the plan-compiled int8 path (weights quantized once,
+//!        activations i32 across the conv stack);
 //!   L3b: dataset generator (streams every training batch);
 //!   L3c: PJRT execute round-trip (train step + eval) when artifacts
 //!        are present and the crate is built with --features pjrt — the
 //!        training/serving hot loop.
 //!
-//! The per-strategy medians are also written as JSON (default
-//! `target/hotpath.json`, override with `HOTPATH_JSON`) so CI can
-//! persist the record as an artifact.
+//! The per-strategy medians and the derived ratios are also written as
+//! JSON (default `target/hotpath.json`, override with `HOTPATH_JSON`)
+//! so CI can persist the record as an artifact.
 
 mod common;
 
+use addernet::quant::plan::QuantPlan;
 use addernet::quant::{LayerCalib, Mode};
-use addernet::sim::functional::{conv2d_quant_with, conv2d_with, ConvW,
-                                KernelStrategy, QuantCfg, SimKernel, Tensor};
+use addernet::report::quantrep;
+use addernet::sim::functional::{conv2d_quant_with, conv2d_with, synth_params,
+                                Arch, ConvW, ExecMode, KernelStrategy, QuantCfg,
+                                Runner, SimKernel, Tensor};
+use addernet::sim::intpath::PlanRunner;
 use addernet::util::XorShift64;
 use addernet::{data, nn};
 
@@ -72,7 +82,63 @@ fn main() {
                 &calib));
         }, macs, &mut rows);
     }
-    write_json(&rows);
+
+    // derived: int-vs-f32 throughput on the engine strategies — the
+    // quantized-serving acceptance ratio (int8 >= 1.0x means the int
+    // datapath is at least as fast as f32).
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    let find = |k: &str| rows.iter().find(|r| r.0 == k).cloned().unwrap();
+    let f32a = find("f32_adder");
+    for (key, row) in [("int8", find("int8_adder")), ("int16", find("int16_adder"))] {
+        println!("  {key} vs f32 adder conv: tiled {:>5.2}x | simd {:>5.2}x",
+                 f32a.2 / row.2, f32a.3 / row.3);
+        derived.push((format!("{key}_vs_f32_tiled"), f32a.2 / row.2));
+        derived.push((format!("{key}_vs_f32_simd"), f32a.3 / row.3));
+    }
+
+    // L3a2: whole-model serving — f32 vs per-call int8 vs the compiled
+    // QuantPlan int8 path (no per-call weight requantization,
+    // activations i32 across the conv stack).
+    let params = synth_params(Arch::Lenet5, 42);
+    let (mcalib, _) = quantrep::calibrate(&params, Arch::Lenet5, SimKernel::Adder, 32);
+    let ev = data::eval_set(64, 5);
+    let xin = Tensor::new((64, 32, 32, 1), ev.images);
+    let qcfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+    let plan = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder, qcfg,
+                                &mcalib).unwrap();
+    println!("whole-model LeNet-5 forward (B=64):");
+    let (f32_s, _) = common::time_it(1, 7, || {
+        let mut r = Runner {
+            params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+            strategy: KernelStrategy::Auto, mode: ExecMode::F32,
+            calib: None, observe: None,
+        };
+        std::hint::black_box(r.forward(&xin));
+    });
+    common::report("f32 engine", f32_s, 64.0, "img");
+    let (percall_s, _) = common::time_it(1, 7, || {
+        let mut r = Runner {
+            params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+            strategy: KernelStrategy::Auto, mode: ExecMode::Quant(qcfg),
+            calib: Some(&mcalib), observe: None,
+        };
+        std::hint::black_box(r.forward(&xin));
+    });
+    common::report("int8 per-call (requantizes weights)", percall_s, 64.0, "img");
+    let (plan_s, _) = common::time_it(1, 7, || {
+        let r = PlanRunner { plan: &plan, strategy: KernelStrategy::Auto };
+        std::hint::black_box(r.forward(&xin));
+    });
+    common::report("int8 plan (i32 end-to-end)", plan_s, 64.0, "img");
+    println!("  plan vs per-call {:>5.2}x | plan vs f32 {:>5.2}x",
+             percall_s / plan_s, f32_s / plan_s);
+    derived.push(("e2e_f32_s".to_string(), f32_s));
+    derived.push(("e2e_int8_percall_s".to_string(), percall_s));
+    derived.push(("e2e_int8_plan_s".to_string(), plan_s));
+    derived.push(("plan_vs_percall".to_string(), percall_s / plan_s));
+    derived.push(("plan_vs_f32".to_string(), f32_s / plan_s));
+
+    write_json(&rows, &derived);
 
     // L3b: dataset generator
     let (med, _) = common::time_it(2, 10, || {
@@ -84,10 +150,11 @@ fn main() {
     pjrt_round_trips();
 }
 
-/// Persist the per-strategy medians (seconds) + derived speedups.  No
-/// JSON writer is vendored, so the record is assembled by hand — keys
-/// and shape are part of the CI artifact contract.
-fn write_json(rows: &[Row]) {
+/// Persist the per-strategy medians (seconds) + derived speedups
+/// (int-vs-f32 per strategy, whole-model plan-vs-per-call).  No JSON
+/// writer is vendored, so the record is assembled by hand — keys and
+/// shape are part of the CI artifact contract.
+fn write_json(rows: &[Row], derived: &[(String, f64)]) {
     let path = std::env::var("HOTPATH_JSON")
         .unwrap_or_else(|_| "target/hotpath.json".to_string());
     let mut entries = Vec::new();
@@ -98,12 +165,17 @@ fn write_json(rows: &[Row]) {
              \"simd_vs_tiled\": {:.3}}}",
             naive / tiled, tiled / simd));
     }
+    let dentries: Vec<String> = derived.iter()
+        .map(|(k, v)| format!("    \"{k}\": {v:.6e}"))
+        .collect();
     let doc = format!(
         "{{\n  \"bench\": \"hotpath\",\n  \
          \"layer\": \"conv3x3 16->16 B=8 32x32 (resnet shape)\",\n  \
-         \"kernel_env\": \"{}\",\n  \"results\": {{\n{}\n  }}\n}}\n",
+         \"kernel_env\": \"{}\",\n  \"results\": {{\n{}\n  }},\n  \
+         \"derived\": {{\n{}\n  }}\n}}\n",
         KernelStrategy::from_env().label(),
-        entries.join(",\n"));
+        entries.join(",\n"),
+        dentries.join(",\n"));
     if let Some(dir) = std::path::Path::new(&path).parent() {
         let _ = std::fs::create_dir_all(dir);
     }

@@ -14,9 +14,11 @@
 //!
 //! * **functional** ([`start_functional`]) — the tiled multi-threaded
 //!   functional-sim engine; queued requests are stacked into ONE
-//!   [`Runner::forward_many`] pass, so dispatch, patch gathers and
-//!   weight streaming amortize across the whole queue.  Needs no
-//!   artifacts and no XLA.
+//!   batched forward pass, so dispatch, patch gathers and weight
+//!   streaming amortize across the whole queue.  Needs no artifacts and
+//!   no XLA.  Variants with a quantized [`ExecMode`] are compiled to a
+//!   [`QuantPlan`] at startup and served by the i32-domain
+//!   [`PlanRunner`] (`repro serve --mode int8`).
 //! * **pjrt** ([`start`], `pjrt` feature) — the AOT-compiled eval graph
 //!   through the PJRT runtime; PJRT handles are not `Send`, so each
 //!   worker constructs its own `Runtime`.
@@ -32,12 +34,14 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::metrics::ServerMetrics;
+use crate::quant::plan::QuantPlan;
 use crate::quant::Calibration;
 use crate::sim::functional::{self, Arch, ExecMode, KernelStrategy, Params, Runner,
                              SimKernel};
+use crate::sim::intpath::PlanRunner;
 
 #[cfg(feature = "pjrt")]
 use super::manifest::Manifest;
@@ -153,9 +157,14 @@ pub struct FunctionalVariantCfg {
     pub strategy: KernelStrategy,
     /// Model parameters (manifest-loaded or synthetic).
     pub params: Params,
-    /// f32 or shared-scale quantized execution.
+    /// f32 or quantized execution.  Quantized variants are compiled to
+    /// a [`QuantPlan`] at [`start_functional`] time (weights quantized
+    /// once, BN folded, activations i32 end-to-end through the conv
+    /// stack) and served by the plan executor — never the per-call
+    /// requantizing path.
     pub mode: ExecMode,
-    /// Required when `mode` is quantized.
+    /// Required when `mode` is quantized (`repro calibrate` produces
+    /// one; a missing or incomplete table fails `start_functional`).
     pub calib: Option<Calibration>,
     /// Input (h, w, c); requests must carry h*w*c floats.
     pub input_hwc: (usize, usize, usize),
@@ -183,6 +192,12 @@ impl FunctionalVariantCfg {
 }
 
 /// Start the functional-sim server: one worker thread per variant.
+///
+/// Quantized variants are compiled here, up front: building the
+/// [`QuantPlan`] validates the calibration table against the model
+/// (every conv layer must be covered) and quantizes the weights ONCE —
+/// a misconfigured variant therefore fails this call with a proper
+/// error instead of panicking a worker thread later.
 pub fn start_functional(variants: Vec<FunctionalVariantCfg>,
                         batch_window: Duration) -> Result<ServerHandle> {
     let metrics: Arc<Mutex<HashMap<String, ServerMetrics>>> =
@@ -191,20 +206,29 @@ pub fn start_functional(variants: Vec<FunctionalVariantCfg>,
     let mut workers = Vec::new();
     for v in variants {
         anyhow::ensure!(v.max_batch > 0, "variant {}: max_batch must be > 0", v.name);
-        anyhow::ensure!(
-            matches!(v.mode, ExecMode::F32) || v.calib.is_some(),
-            "variant {}: quantized mode requires calibration", v.name);
+        let plan = match v.mode {
+            ExecMode::F32 => None,
+            ExecMode::Quant(cfg) => {
+                let calib = v.calib.as_ref().ok_or_else(|| anyhow::anyhow!(
+                    "variant {}: quantized mode requires a calibration table \
+                     (run `repro calibrate`, or serve with --calib)", v.name))?;
+                Some(QuantPlan::build(&v.params, v.arch, v.kind, cfg, calib)
+                    .with_context(|| format!(
+                        "variant {}: compiling the quantization plan", v.name))?)
+            }
+        };
         let (tx, rx) = mpsc::channel::<Request>();
         routes.insert(v.name.clone(), tx);
         let m = metrics.clone();
         workers.push(std::thread::Builder::new()
             .name(format!("fsim-{}", v.name))
-            .spawn(move || functional_worker(v, rx, m, batch_window))?);
+            .spawn(move || functional_worker(v, plan, rx, m, batch_window))?);
     }
     Ok(ServerHandle { routes, metrics, workers })
 }
 
-fn functional_worker(cfg: FunctionalVariantCfg, rx: Receiver<Request>,
+fn functional_worker(cfg: FunctionalVariantCfg, plan: Option<QuantPlan>,
+                     rx: Receiver<Request>,
                      metrics: Arc<Mutex<HashMap<String, ServerMetrics>>>,
                      batch_window: Duration) {
     let (h, w, c) = cfg.input_hwc;
@@ -223,16 +247,24 @@ fn functional_worker(cfg: FunctionalVariantCfg, rx: Receiver<Request>,
         }
         let exec_start = Instant::now();
         let images: Vec<&[f32]> = pending.iter().map(|r| r.image.as_slice()).collect();
-        let mut runner = Runner {
-            params: &cfg.params,
-            arch: cfg.arch,
-            kind: cfg.kind,
-            strategy: cfg.strategy,
-            mode: cfg.mode,
-            calib: cfg.calib.as_ref(),
-            observe: None,
+        let logits = match plan.as_ref() {
+            // int serving: the pre-compiled plan keeps activations i32
+            // across the conv stack; no per-call weight requantization.
+            Some(p) => PlanRunner { plan: p, strategy: cfg.strategy }
+                .forward_many(&images, cfg.input_hwc),
+            None => {
+                let mut runner = Runner {
+                    params: &cfg.params,
+                    arch: cfg.arch,
+                    kind: cfg.kind,
+                    strategy: cfg.strategy,
+                    mode: ExecMode::F32,
+                    calib: None,
+                    observe: None,
+                };
+                runner.forward_many(&images, cfg.input_hwc)
+            }
         };
-        let logits = runner.forward_many(&images, cfg.input_hwc);
         drop(images);
         let exec_time = exec_start.elapsed();
         record_batch(&metrics, &cfg.name, n, exec_time);

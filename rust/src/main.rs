@@ -4,6 +4,8 @@
 //!   report <exp>       regenerate a paper table/figure (see DESIGN.md §4)
 //!   train              drive the AOT train-step graph, save weights
 //!   serve              start the batching inference server + load test
+//!                      (--mode int8|int16 serves plan-compiled variants)
+//!   calibrate          record per-layer ranges, write a calibration JSON
 //!   quantize           shared-scale quantized accuracy via functional sim
 //!   simulate           run the FPGA accelerator simulator on a network
 //!   info               list artifacts, graphs and networks
@@ -23,8 +25,9 @@ use addernet::hw::KernelKind;
 use addernet::report;
 #[cfg(feature = "pjrt")]
 use addernet::runtime;
+use addernet::quant;
 use addernet::sim::accelerator::{self, AccelConfig};
-use addernet::sim::functional::{Arch, KernelStrategy, SimKernel};
+use addernet::sim::functional::{Arch, ExecMode, KernelStrategy, QuantCfg, SimKernel};
 use addernet::util::table::{f, Table};
 use addernet::{data, nn};
 
@@ -82,6 +85,7 @@ fn main() {
         "report" => cmd_report(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "calibrate" => cmd_calibrate(&args),
         "quantize" => cmd_quantize(&args),
         "simulate" => cmd_simulate(&args),
         "info" => cmd_info(&args),
@@ -109,8 +113,11 @@ fn usage() {
          exps: {}\n  \
          repro train [--arch lenet5] [--kernel adder] [--steps 400] [--eval-n 512]\n  \
          repro serve [--backend functional|pjrt] [--models lenet5_adder,lenet5_mult] \
-                     [--kernel naive|tiled|simd|auto] [--requests 512] \
+                     [--kernel naive|tiled|simd|auto] [--mode f32|int8|int16] \
+                     [--calib FILE.json] [--requests 512] \
                      [--window-ms 2] [--max-batch 32]\n  \
+         repro calibrate [--arch lenet5] [--kernel adder] [--calib-n 256] \
+                     [--out target/calibration.json]\n  \
          repro quantize [--arch lenet5] [--kernel adder] [--bits 8] [--mode shared|separate]\n  \
          repro simulate [--net resnet18] [--kernel adder|mult] [--dw 16] [--parallelism 1024]\n  \
          repro info",
@@ -190,7 +197,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// Serve through the tiled functional-sim engine: batched Runner
 /// inference, no artifacts or XLA required (synthetic weights stand in
-/// when no parameter files exist).
+/// when no parameter files exist).  `--mode int8|int16` compiles each
+/// variant into a `QuantPlan` (weights quantized once, activations i32
+/// through the conv stack) from `--calib FILE.json` — or, without a
+/// file, from a fresh calibration pass over the synthetic eval set.
 fn serve_functional(args: &Args) -> Result<()> {
     let dir = art_dir(args);
     let models = args.get("models", "lenet5_adder,lenet5_mult");
@@ -205,6 +215,20 @@ fn serve_functional(args: &Args) -> Result<()> {
                         (naive|tiled|simd|auto), got {s}; adder-vs-mult is \
                         chosen per model via --models (e.g. lenet5_mult)"))?,
         None => KernelStrategy::Auto,
+    };
+    let mode = args.get("mode", "f32");
+    let qcfg = match mode.as_str() {
+        "f32" => None,
+        "int8" => Some(QuantCfg { bits: 8, mode: quant::Mode::SharedScale }),
+        "int16" => Some(QuantCfg { bits: 16, mode: quant::Mode::SharedScale }),
+        m => anyhow::bail!("serve's --mode takes f32|int8|int16, got {m}"),
+    };
+    let calib_table = match args.flags.get("calib") {
+        Some(path) => Some(quant::plan::calibration_from_json(
+            &std::fs::read_to_string(path)
+                .with_context(|| format!("reading calibration table {path}"))?)
+            .with_context(|| format!("parsing calibration table {path}"))?),
+        None => None,
     };
     let manifest = Manifest::load(&dir).ok();
     let mut variants = Vec::new();
@@ -235,13 +259,75 @@ fn serve_functional(args: &Args) -> Result<()> {
             None => eprintln!("[serve] {name}: no parameter file under {}; \
                                using synthetic weights", dir.display()),
         }
+        if let Some(q) = qcfg {
+            // skip variants the plan compiler cannot serve at this
+            // width instead of failing the whole server — the default
+            // model list pairs an adder and a mult variant.
+            if !quant::QuantPlan::supports(kind, q.bits) {
+                eprintln!("[serve] {name}: skipped — no int{} plan for this \
+                           kernel (mult caps at 8-bit operands)", q.bits);
+                continue;
+            }
+            let calib = match &calib_table {
+                Some(c) => c.clone(),
+                None => {
+                    eprintln!("[serve] {name}: no --calib table; calibrating \
+                               on 128 synthetic eval images");
+                    report::quantrep::calibrate(&cfg.params, arch, kind, 128).0
+                }
+            };
+            cfg.mode = ExecMode::Quant(q);
+            cfg.calib = Some(calib);
+        }
         variants.push(cfg);
     }
-    println!("[serve] functional backend: {} variants, kernel {}, window {:?}, \
-              max batch {}",
-             variants.len(), strategy.label(), window, max_batch);
+    anyhow::ensure!(!variants.is_empty(),
+                    "no servable variants left for --mode {mode} (mult-kernel \
+                     plans cap at int8; try --models lenet5_adder)");
+    println!("[serve] functional backend: {} variants, kernel {}, mode {}, \
+              window {:?}, max batch {}",
+             variants.len(), strategy.label(), mode, window, max_batch);
     let handle = server::start_functional(variants, window)?;
     drive_load(handle, n_req)
+}
+
+/// Record per-layer feature/weight ranges over the synthetic eval set
+/// and write them as a calibration JSON — the build input `repro serve
+/// --mode int8 --calib FILE` compiles into a serving plan.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let dir = art_dir(args);
+    let arch_name = args.get("arch", "lenet5");
+    let kernel = args.get("kernel", "adder");
+    let n = args.get_usize("calib-n", 256);
+    let out = args.get("out", "target/calibration.json");
+    let arch = Arch::parse(&arch_name)
+        .context("arch must be lenet5|resnet8|resnet20")?;
+    let kind = match kernel.as_str() {
+        "adder" => SimKernel::Adder,
+        "mult" => SimKernel::Mult,
+        k => anyhow::bail!("functional sim supports adder|mult, got {k}"),
+    };
+    let (params, trained, synthetic) =
+        report::quantrep::params_or_synth(&dir, arch, &arch_name, &kernel);
+    let (calib, fp32) = report::quantrep::calibrate(&params, arch, kind, n);
+    let doc = quant::plan::calibration_to_json(&calib);
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    std::fs::write(&out, &doc).with_context(|| format!("writing {out}"))?;
+    println!("[calibrate] {arch_name}/{kernel}: {} conv layers over {n} images \
+              (trained={trained} synthetic={synthetic}, fp32 acc {fp32:.3})",
+             calib.len());
+    let mut t = Table::new("per-layer calibration (int8 shared exponents)",
+                           &["layer", "feat max|x|", "weight max|w|", "2^e"]);
+    for (name, lc) in &calib {
+        t.row(&[name.clone(), f(lc.feat_max_abs as f64, 4),
+                f(lc.weight_max_abs as f64, 4),
+                format!("2^{}", lc.shared_exp(8))]);
+    }
+    t.print();
+    println!("[calibrate] table written to {out}");
+    Ok(())
 }
 
 /// Serve through the AOT eval graphs on the PJRT runtime.

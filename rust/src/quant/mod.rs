@@ -7,7 +7,11 @@
 //! because products compose scales multiplicatively.  Both modes are
 //! implemented; the S7 experiment contrasts them.
 
+pub mod plan;
+
 use std::collections::BTreeMap;
+
+pub use plan::QuantPlan;
 
 /// Quantization mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

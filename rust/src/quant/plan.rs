@@ -1,0 +1,600 @@
+//! Quantization plans: compile `Params` + `Calibration` + `QuantCfg`
+//! into an executable integer-serving artifact.
+//!
+//! The per-call quantized path (`sim::functional::conv2d_quant`) re-grids
+//! the SAME weights on every forward pass and round-trips activations
+//! through f32 between layers.  A [`QuantPlan`] does the whole
+//! compilation once, up front:
+//!
+//! * **weights** are quantized a single time onto the paper's shared
+//!   power-of-two grid (§3.1) and stored as `i32` in HWIO layout;
+//! * **batch-norm** is folded into a per-channel integer multiplier +
+//!   bias ([`BnFold`]) applied directly to the widened conv
+//!   accumulators — the FPGA design's wide fixed-point BN unit;
+//! * **inter-layer requantization** is a power-of-two shift
+//!   ([`requant_shift`], round-half-to-even): each layer's BN stage
+//!   lands activations straight on the NEXT layer's operand grid, so
+//!   the datapath between convolutions is shift-only — no multipliers,
+//!   mirroring the shift-not-multiply hardware argument the `hw/`
+//!   gate-count model quantifies.
+//!
+//! [`crate::sim::intpath`] executes a plan keeping activations in the
+//! i32 domain across the whole conv→BN→ReLU→pool chain; the f32
+//! classifier head (a negligible slice of the compute) dequantizes at
+//! the logits.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::nn::Padding;
+use crate::quant::{self, Calibration, LayerCalib, Mode};
+use crate::sim::functional::{Arch, Params, QuantCfg, SimKernel};
+use crate::util::Json;
+
+/// Default fractional bits of the folded BN multiplier.  [`fold_bn`]
+/// narrows this per layer when needed so `acc(i32) * mul` always fits
+/// i64 with headroom.
+pub const BN_FRAC_BITS: u32 = 16;
+
+/// Integer division rounding half to even (`d > 0`) — the integer twin
+/// of [`quant::round_even`], exact at every requantization boundary.
+pub fn div_round_even(n: i64, d: i64) -> i64 {
+    debug_assert!(d > 0, "div_round_even needs a positive divisor");
+    let q = n.div_euclid(d);
+    let r = n.rem_euclid(d); // 0 <= r < d
+    match (2 * r).cmp(&d) {
+        std::cmp::Ordering::Greater => q + 1,
+        std::cmp::Ordering::Less => q,
+        // halfway: land on the even neighbour of {q, q+1}
+        std::cmp::Ordering::Equal => q + (q & 1),
+    }
+}
+
+/// Move an integer onto a grid `shift` bits coarser (positive shift,
+/// round-half-to-even) or finer (negative shift, exact) — the pow2
+/// inter-layer requantization primitive of the int path.  The
+/// finer-grid direction saturates instead of wrapping, so absurd
+/// exponent gaps (a corrupt hand-edited calibration table) degrade to
+/// clamped activations rather than panics or wrapped values.
+pub fn requant_shift(v: i64, shift: i32) -> i64 {
+    if shift <= 0 {
+        let k = (-shift).min(63) as u32;
+        ((v as i128) << k).clamp(i64::MIN as i128, i64::MAX as i128) as i64
+    } else {
+        div_round_even(v, 1i64 << shift.min(62))
+    }
+}
+
+/// Batch-norm folded for the integer domain: for a conv accumulator
+/// `acc` on grid `2^acc_exp`, channel `c`'s normalized activation on
+/// the target grid `2^out_exp` is
+///
+/// ```text
+///   out_q = clamp( (acc * mul[c] + add[c]) >> shift )
+/// ```
+///
+/// with round-half-to-even at the shift.  `mul` carries the BN scale
+/// AND the inter-layer grid change, so requantization costs nothing
+/// extra; power-of-two BN scales fold to exact powers of two (the
+/// exactness property `tests/quant_props.rs` pins).
+#[derive(Debug, Clone)]
+pub struct BnFold {
+    pub mul: Vec<i64>,
+    pub add: Vec<i64>,
+    pub shift: u32,
+}
+
+impl BnFold {
+    /// Apply to one accumulator; `qmax` is the activation-register
+    /// bound the result saturates to (the executor passes the DW+2
+    /// inter-stage register width — see `sim::intpath::HEADROOM_BITS`;
+    /// the strict DW clamp happens where operands enter a conv).
+    #[inline]
+    pub fn apply(&self, acc: i32, c: usize, qmax: i32) -> i32 {
+        let v = acc as i64 * self.mul[c] + self.add[c];
+        requant_shift(v, self.shift as i32)
+            .clamp(-(qmax as i64), qmax as i64) as i32
+    }
+}
+
+/// Fold eval-mode batch-norm (the exact `batch_norm_eval` f32 formula)
+/// into integer per-channel multiplier/bias for accumulators on
+/// `2^acc_exp`, producing activations on `2^out_exp`.
+pub fn fold_bn(gamma: &[f32], beta: &[f32], mean: &[f32], var: &[f32],
+               acc_exp: i32, out_exp: i32) -> Result<BnFold> {
+    let c = gamma.len();
+    anyhow::ensure!(beta.len() == c && mean.len() == c && var.len() == c,
+                    "BN parameter arity mismatch ({c} channels)");
+    let eps = 1e-5f32;
+    // f32 scale/shift EXACTLY as the f32 path computes them, widened to
+    // f64 only for the fold arithmetic.
+    let scale: Vec<f32> = (0..c).map(|i| gamma[i] / (var[i] + eps).sqrt()).collect();
+    let shift_c: Vec<f32> = (0..c).map(|i| beta[i] - mean[i] * scale[i]).collect();
+    let rel = 2f64.powi(acc_exp - out_exp);
+    let max_scaled = scale.iter().fold(0f64, |m, &s| m.max((s as f64 * rel).abs()));
+    // Widest fractional shift keeping |mul| <= 2^30: acc * mul then
+    // stays under 2^61, leaving i64 headroom for the bias.
+    let mut s = BN_FRAC_BITS as i32;
+    if max_scaled > 0.0 {
+        s = s.min(30 - max_scaled.log2().ceil() as i32);
+    }
+    anyhow::ensure!(s >= 0,
+                    "BN fold overflow: |scale| up to {max_scaled:.3e} relating \
+                     2^{acc_exp} accumulators to 2^{out_exp} activations");
+    let sf = 2f64.powi(s);
+    let mul = scale.iter().map(|&v| round_even_i64(v as f64 * rel * sf)).collect();
+    let out_step = 2f64.powi(-out_exp);
+    let add = shift_c.iter().map(|&v| round_even_i64(v as f64 * sf * out_step)).collect();
+    Ok(BnFold { mul, add, shift: s as u32 })
+}
+
+/// f64 round-half-to-even to i64 (mirrors [`quant::round_even`]).
+fn round_even_i64(x: f64) -> i64 {
+    if (x - x.trunc()).abs() == 0.5 {
+        let down = x.trunc();
+        if (down as i64) % 2 == 0 {
+            down as i64
+        } else {
+            (down + x.signum()) as i64
+        }
+    } else {
+        x.round() as i64
+    }
+}
+
+/// One conv layer compiled for integer execution.
+#[derive(Debug, Clone)]
+pub struct ConvPlan {
+    pub name: String,
+    /// Weights quantized once at build time, HWIO, on `2^w_exp`.
+    pub wq: Vec<i32>,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub padding: Padding,
+    /// Grid incoming activations must sit on (== `w_exp` for the
+    /// paper's shared-scale adder mode — no point-alignment shifter).
+    pub in_exp: i32,
+    pub w_exp: i32,
+    /// Accumulator grid: adder = the operand grid (1-homogeneous L1);
+    /// mult = `in_exp + w_exp` (products compose scales).
+    pub acc_exp: i32,
+    /// Activation grid after BN+requant == the consumer's operand grid.
+    pub out_exp: i32,
+    pub bn: BnFold,
+}
+
+/// The f32 classifier head, copied out of `Params` so a plan serves
+/// without them.
+#[derive(Debug, Clone)]
+pub struct DensePlan {
+    pub name: String,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub din: usize,
+    pub dout: usize,
+}
+
+/// A fully-compiled integer inference pipeline for one model.
+#[derive(Debug, Clone)]
+pub struct QuantPlan {
+    pub arch: Arch,
+    pub kind: SimKernel,
+    pub cfg: QuantCfg,
+    pub convs: BTreeMap<String, ConvPlan>,
+    pub dense: BTreeMap<String, DensePlan>,
+    /// Grid the input image is quantized on (the first conv's operand
+    /// grid) — the only f32->int boundary of the conv stack.
+    pub input_exp: i32,
+}
+
+struct Builder<'a> {
+    params: &'a Params,
+    kind: SimKernel,
+    cfg: QuantCfg,
+    calib: &'a Calibration,
+}
+
+fn p<'p>(params: &'p Params, name: &str) -> Result<(&'p [usize], &'p [f32])> {
+    params.get(name)
+        .map(|(s, d)| (s.as_slice(), d.as_slice()))
+        .ok_or_else(|| anyhow::anyhow!("missing parameter {name}"))
+}
+
+impl Builder<'_> {
+    fn lc(&self, name: &str) -> Result<&LayerCalib> {
+        self.calib.get(name).ok_or_else(|| anyhow::anyhow!(
+            "no calibration entry for conv layer {name} (run `repro calibrate`)"))
+    }
+
+    /// (in_exp, w_exp, acc_exp) for one conv layer.
+    fn grids(&self, name: &str) -> Result<(i32, i32, i32)> {
+        let lc = self.lc(name)?;
+        Ok(match self.cfg.mode {
+            Mode::SharedScale => {
+                let e = lc.shared_exp(self.cfg.bits);
+                let acc = match self.kind {
+                    SimKernel::Adder => e,
+                    SimKernel::Mult => 2 * e,
+                };
+                (e, e, acc)
+            }
+            Mode::SeparateScale => {
+                let (ef, ew) = lc.separate_exps(self.cfg.bits);
+                match self.kind {
+                    // the adder datapath must point-align: everything
+                    // lands on the coarse grid (the §3.1 info loss)
+                    SimKernel::Adder => {
+                        let coarse = ef.max(ew);
+                        (coarse, coarse, coarse)
+                    }
+                    SimKernel::Mult => (ef, ew, ef + ew),
+                }
+            }
+        })
+    }
+
+    fn conv_plan(&self, name: &str, stride: usize, padding: Padding,
+                 out_exp: i32) -> Result<ConvPlan> {
+        let (ws, wd) = p(self.params, &format!("{name}/conv_w"))?;
+        anyhow::ensure!(ws.len() == 4, "conv weight for {name} must be HWIO");
+        let (in_exp, w_exp, acc_exp) = self.grids(name)?;
+        // Both operands are single-rounded straight onto their plan
+        // grid.  For SeparateScale adder plans this differs from the
+        // per-call experiment path, which quantizes on the fine grid
+        // and then re-grids (double rounding) to model the §3.1
+        // alignment loss — a compiled plan has no fine-grid
+        // intermediate, so it rounds once and is marginally MORE
+        // accurate.  Bit-parity with `conv2d_quant` is guaranteed (and
+        // oracle-tested) for SharedScale, the paper's serving mode.
+        let wq = quant::quantize_slice(wd, w_exp, self.cfg.bits);
+        let (_, gamma) = p(self.params, &format!("{name}/bn_gamma"))?;
+        let (_, beta) = p(self.params, &format!("{name}/bn_beta"))?;
+        let (_, mean) = p(self.params, &format!("{name}/bn_mean"))?;
+        let (_, var) = p(self.params, &format!("{name}/bn_var"))?;
+        let bn = fold_bn(gamma, beta, mean, var, acc_exp, out_exp)
+            .with_context(|| format!("folding BN for {name}"))?;
+        Ok(ConvPlan {
+            name: name.into(),
+            wq,
+            kh: ws[0],
+            kw: ws[1],
+            cin: ws[2],
+            cout: ws[3],
+            stride,
+            padding,
+            in_exp,
+            w_exp,
+            acc_exp,
+            out_exp,
+            bn,
+        })
+    }
+
+    fn dense_plan(&self, name: &str) -> Result<DensePlan> {
+        let (ws, wd) = p(self.params, &format!("{name}/dense_w"))?;
+        let (_, bd) = p(self.params, &format!("{name}/dense_b"))?;
+        anyhow::ensure!(ws.len() == 2, "dense weight for {name} must be (din, dout)");
+        Ok(DensePlan {
+            name: name.into(),
+            w: wd.to_vec(),
+            b: bd.to_vec(),
+            din: ws[0],
+            dout: ws[1],
+        })
+    }
+}
+
+impl QuantPlan {
+    /// Compile a plan.  Errors (never panics) on missing parameters,
+    /// missing calibration entries or a BN fold that cannot be
+    /// represented — `coordinator::server::start_functional` surfaces
+    /// these to the caller instead of bringing a worker down.
+    pub fn build(params: &Params, arch: Arch, kind: SimKernel, cfg: QuantCfg,
+                 calib: &Calibration) -> Result<QuantPlan> {
+        anyhow::ensure!((2..=16).contains(&cfg.bits),
+                        "plan supports 2..=16-bit grids, got {}", cfg.bits);
+        anyhow::ensure!(
+            Self::supports(kind, cfg.bits),
+            "mult-kernel plans support at most 8-bit operands (the i32 conv \
+             accumulator overflows at int{}); the adder kernel serves all \
+             widths", cfg.bits);
+        let b = Builder { params, kind, cfg, calib };
+        let mut convs = BTreeMap::new();
+        let mut dense = BTreeMap::new();
+        match arch {
+            Arch::Lenet5 => {
+                // conv1's BN lands straight on conv2's operand grid
+                // (avg-pool preserves the grid); conv2, feeding only
+                // the f32 head, keeps its own grid.
+                let (in2, _, _) = b.grids("conv2")?;
+                convs.insert("conv1".to_string(),
+                             b.conv_plan("conv1", 1, Padding::Valid, in2)?);
+                convs.insert("conv2".to_string(),
+                             b.conv_plan("conv2", 1, Padding::Valid, in2)?);
+                for d in ["fc1", "fc2", "fc3"] {
+                    dense.insert(d.to_string(), b.dense_plan(d)?);
+                }
+            }
+            Arch::Resnet8 | Arch::Resnet20 => {
+                let n_blocks = arch.stages();
+                // (prefix, cin, cout, stride) in forward order
+                let mut blocks = Vec::new();
+                let mut cin = 16usize;
+                for (s, cout) in [16usize, 32, 64].into_iter().enumerate() {
+                    for blk in 0..n_blocks {
+                        let stride = if s > 0 && blk == 0 { 2 } else { 1 };
+                        blocks.push((format!("s{s}b{blk}"), cin, cout, stride));
+                        cin = cout;
+                    }
+                }
+                let first_e = b.grids(&format!("{}/c1", blocks[0].0))?.0;
+                convs.insert("stem".to_string(),
+                             b.conv_plan("stem", 1, Padding::Same, first_e)?);
+                for i in 0..blocks.len() {
+                    let (pre, cin, cout, stride) = &blocks[i];
+                    // activation grid after this block's residual+ReLU:
+                    // the next block's c1 operand grid, or — terminal —
+                    // this c2's own grid (the head dequantizes next).
+                    let next_e = if i + 1 < blocks.len() {
+                        b.grids(&format!("{}/c1", blocks[i + 1].0))?.0
+                    } else {
+                        b.grids(&format!("{pre}/c2"))?.0
+                    };
+                    let (c2_in, _, _) = b.grids(&format!("{pre}/c2"))?;
+                    convs.insert(
+                        format!("{pre}/c1"),
+                        b.conv_plan(&format!("{pre}/c1"), *stride,
+                                    Padding::Same, c2_in)?);
+                    convs.insert(
+                        format!("{pre}/c2"),
+                        b.conv_plan(&format!("{pre}/c2"), 1,
+                                    Padding::Same, next_e)?);
+                    if cin != cout {
+                        convs.insert(
+                            format!("{pre}/sc"),
+                            b.conv_plan(&format!("{pre}/sc"), *stride,
+                                        Padding::Same, next_e)?);
+                    }
+                }
+                dense.insert("fc".to_string(), b.dense_plan("fc")?);
+            }
+        }
+        let first = match arch {
+            Arch::Lenet5 => "conv1",
+            Arch::Resnet8 | Arch::Resnet20 => "stem",
+        };
+        let input_exp = convs[first].in_exp;
+        Ok(QuantPlan { arch, kind, cfg, convs, dense, input_exp })
+    }
+
+    /// Whether a plan can be compiled for this kernel/width pair — the
+    /// ONE place the policy lives: the adder accumulator is provably
+    /// i32-bounded (|acc| <= 2*qmax*K), but MULT tap products reach
+    /// qmax^2, so at int16 two taps already overflow i32.
+    pub fn supports(kind: SimKernel, bits: u32) -> bool {
+        matches!(kind, SimKernel::Adder) || bits <= 8
+    }
+
+    /// Integer grid maximum of the plan's serving bit-width.
+    pub fn qmax(&self) -> i32 {
+        quant::qmax(self.cfg.bits)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Calibration tables as JSON (repro calibrate <-> repro serve)
+// ---------------------------------------------------------------------------
+
+/// Serialize a calibration table.  Plain `{}` float formatting is
+/// shortest-round-trip in Rust, so `calibration_from_json` recovers the
+/// exact f32 values.
+pub fn calibration_to_json(calib: &Calibration) -> String {
+    let rows: Vec<String> = calib.iter()
+        .map(|(name, lc)| format!(
+            "    {:?}: {{\"feat_max_abs\": {}, \"weight_max_abs\": {}}}",
+            name, lc.feat_max_abs, lc.weight_max_abs))
+        .collect();
+    format!("{{\n  \"calibration\": {{\n{}\n  }}\n}}\n", rows.join(",\n"))
+}
+
+/// Parse a calibration table written by [`calibration_to_json`].
+pub fn calibration_from_json(s: &str) -> Result<Calibration> {
+    let j = Json::parse(s).context("parsing calibration JSON")?;
+    let obj = j.at(&["calibration"]).and_then(|v| v.as_obj())
+        .ok_or_else(|| anyhow::anyhow!(
+            "calibration JSON needs a top-level \"calibration\" object"))?;
+    let mut calib = Calibration::new();
+    for (name, v) in obj {
+        let field = |key: &str| -> Result<f32> {
+            let x = v.get(key).and_then(|x| x.as_f64()).ok_or_else(
+                || anyhow::anyhow!("layer {name}: missing {key}"))? as f32;
+            anyhow::ensure!(x.is_finite() && x >= 0.0,
+                            "layer {name}: {key} must be finite and >= 0");
+            Ok(x)
+        };
+        calib.insert(name.clone(), LayerCalib {
+            feat_max_abs: field("feat_max_abs")?,
+            weight_max_abs: field("weight_max_abs")?,
+        });
+    }
+    Ok(calib)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::functional::synth_params;
+
+    #[test]
+    fn div_round_even_matches_float_round_even() {
+        for n in -2000i64..2000 {
+            for d in [1i64, 2, 3, 4, 8, 10, 64] {
+                let want = quant::round_even(n as f32 / d as f32) as i64;
+                assert_eq!(div_round_even(n, d), want, "{n}/{d}");
+            }
+        }
+    }
+
+    #[test]
+    fn requant_shift_directions() {
+        assert_eq!(requant_shift(5, 1), 2); // 2.5 -> even 2
+        assert_eq!(requant_shift(7, 1), 4); // 3.5 -> even 4
+        assert_eq!(requant_shift(-5, 1), -2);
+        assert_eq!(requant_shift(3, -2), 12); // finer grid is exact
+        assert_eq!(requant_shift(3, 0), 3);
+    }
+
+    #[test]
+    fn requant_shift_saturates_on_absurd_finer_shifts() {
+        // corrupt calibration tables can produce enormous exponent
+        // gaps; the finer-grid move must saturate, never wrap or panic
+        assert_eq!(requant_shift(1, -63), i64::MAX);
+        assert_eq!(requant_shift(-1, -63), i64::MIN);
+        assert_eq!(requant_shift(508, -120), i64::MAX);
+        assert_eq!(requant_shift(0, -120), 0);
+        assert_eq!(requant_shift(1, -62), 1i64 << 62); // still exact in range
+    }
+
+    #[test]
+    fn fold_bn_identity_is_pure_requant() {
+        // gamma=1, beta=0, mean=0, var=1: scale = 1/sqrt(1+eps), so the
+        // fold is (almost) a pure grid move; acc on the same grid comes
+        // back nearly unchanged.
+        let n = 4;
+        let f = fold_bn(&vec![1.0; n], &vec![0.0; n], &vec![0.0; n],
+                        &vec![1.0; n], -3, -3).unwrap();
+        for acc in [-1000i32, -1, 0, 1, 7, 1000] {
+            let out = f.apply(acc, 0, i32::MAX);
+            assert!((out - acc).abs() <= 1, "{acc} -> {out}");
+        }
+    }
+
+    #[test]
+    fn fold_bn_narrows_fraction_bits_for_big_scales() {
+        // A huge scale relating a fine acc grid to a coarse out grid
+        // must shrink `shift` instead of overflowing the multiplier.
+        let f = fold_bn(&[1.0e5], &[0.0], &[0.0], &[1.0], 0, -4).unwrap();
+        assert!(f.shift < BN_FRAC_BITS, "shift {}", f.shift);
+        assert!(f.mul[0].abs() <= 1 << 30, "mul {}", f.mul[0]);
+    }
+
+    #[test]
+    fn fold_bn_rejects_unrepresentable() {
+        // scale so large no non-negative shift keeps mul in range
+        assert!(fold_bn(&[1.0e20], &[0.0], &[0.0], &[1.0], 0, -20).is_err());
+    }
+
+    #[test]
+    fn calibration_json_round_trips() {
+        let mut c = Calibration::new();
+        c.insert("conv1".into(), LayerCalib { feat_max_abs: 1.25, weight_max_abs: 0.375 });
+        c.insert("s0b1/c2".into(), LayerCalib { feat_max_abs: 3.0e-5, weight_max_abs: 7.75 });
+        let s = calibration_to_json(&c);
+        let back = calibration_from_json(&s).unwrap();
+        assert_eq!(back.len(), 2);
+        for (k, lc) in &c {
+            let b = &back[k];
+            assert_eq!(b.feat_max_abs, lc.feat_max_abs, "{k}");
+            assert_eq!(b.weight_max_abs, lc.weight_max_abs, "{k}");
+        }
+    }
+
+    #[test]
+    fn calibration_json_rejects_garbage() {
+        assert!(calibration_from_json("nonsense").is_err());
+        assert!(calibration_from_json("{\"x\": 1}").is_err());
+        assert!(calibration_from_json(
+            "{\"calibration\": {\"c\": {\"feat_max_abs\": 1}}}").is_err());
+    }
+
+    fn demo_calib(names: &[&str]) -> Calibration {
+        names.iter()
+            .map(|n| (n.to_string(),
+                      LayerCalib { feat_max_abs: 1.0, weight_max_abs: 0.5 }))
+            .collect()
+    }
+
+    #[test]
+    fn build_lenet_plan_shapes() {
+        let params = synth_params(Arch::Lenet5, 9);
+        let calib = demo_calib(&["conv1", "conv2"]);
+        let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        let plan = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                    cfg, &calib).unwrap();
+        assert_eq!(plan.convs.len(), 2);
+        assert_eq!(plan.dense.len(), 3);
+        let c1 = &plan.convs["conv1"];
+        assert_eq!((c1.kh, c1.kw, c1.cin, c1.cout), (5, 5, 1, 6));
+        assert_eq!(c1.wq.len(), 5 * 5 * 6);
+        // shared adder: operands and accumulator share one grid
+        assert_eq!(c1.in_exp, c1.w_exp);
+        assert_eq!(c1.acc_exp, c1.in_exp);
+        // conv1 requantizes onto conv2's operand grid
+        assert_eq!(c1.out_exp, plan.convs["conv2"].in_exp);
+        assert_eq!(plan.input_exp, c1.in_exp);
+    }
+
+    #[test]
+    fn build_resnet_plan_covers_all_blocks() {
+        let params = synth_params(Arch::Resnet8, 9);
+        let names: Vec<String> = params.keys()
+            .filter_map(|k| k.strip_suffix("/conv_w").map(|s| s.to_string()))
+            .collect();
+        let calib: Calibration = names.iter()
+            .map(|n| (n.clone(), LayerCalib { feat_max_abs: 2.0, weight_max_abs: 0.5 }))
+            .collect();
+        let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        let plan = QuantPlan::build(&params, Arch::Resnet8, SimKernel::Adder,
+                                    cfg, &calib).unwrap();
+        assert_eq!(plan.convs.len(), names.len());
+        // residual partners land on one grid: c2 and sc of the same
+        // block always share out_exp
+        for (name, cp) in &plan.convs {
+            if let Some(pre) = name.strip_suffix("/sc") {
+                assert_eq!(cp.out_exp, plan.convs[&format!("{pre}/c2")].out_exp,
+                           "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn build_errors_on_missing_calibration() {
+        let params = synth_params(Arch::Lenet5, 9);
+        let calib = demo_calib(&["conv1"]); // conv2 missing
+        let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        let err = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                   cfg, &calib).unwrap_err();
+        assert!(format!("{err:#}").contains("conv2"), "{err:#}");
+    }
+
+    #[test]
+    fn build_errors_on_missing_params() {
+        let mut params = synth_params(Arch::Lenet5, 9);
+        params.remove("conv2/bn_gamma");
+        let calib = demo_calib(&["conv1", "conv2"]);
+        let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        assert!(QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                 cfg, &calib).is_err());
+    }
+
+    #[test]
+    fn build_rejects_wide_mult_plans() {
+        // int16 MULT products overflow the i32 accumulator; the plan
+        // compiler must refuse, while int8 mult and int16 adder build.
+        let params = synth_params(Arch::Lenet5, 9);
+        let calib = demo_calib(&["conv1", "conv2"]);
+        let wide = QuantCfg { bits: 16, mode: Mode::SharedScale };
+        let err = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Mult,
+                                   wide, &calib).unwrap_err();
+        assert!(format!("{err:#}").contains("8-bit"), "{err:#}");
+        let narrow = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        assert!(QuantPlan::build(&params, Arch::Lenet5, SimKernel::Mult,
+                                 narrow, &calib).is_ok());
+        assert!(QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                 wide, &calib).is_ok());
+    }
+}

@@ -16,8 +16,8 @@ pub use results::Results;
 
 /// All experiment ids `repro report` accepts.
 pub const EXPERIMENTS: &[&str] = &[
-    "fig2", "fig2c", "fig3ab", "fig3d", "s6", "s7", "eq23", "fig4c", "fig4d",
-    "fig5", "onboard", "s1", "s4", "s5", "s8", "hw-all",
+    "fig2", "fig2c", "fig3ab", "fig3d", "s6", "s7", "quantplan", "eq23",
+    "fig4c", "fig4d", "fig5", "onboard", "s1", "s4", "s5", "s8", "hw-all",
 ];
 
 /// Render one experiment to stdout.
@@ -71,6 +71,7 @@ pub fn run(exp: &str, art_dir: &Path, arch: &str, n_eval: usize) -> Result<()> {
         "fig3d" => quantrep::fig3d(art_dir, arch, n_eval)?.print(),
         "s6" => quantrep::fig3d(art_dir, "resnet8", n_eval)?.print(),
         "s7" => quantrep::s7(art_dir, arch, n_eval)?.print(),
+        "quantplan" => quantrep::quantplan(art_dir, arch, n_eval)?.print(),
         "hw-all" => {
             for e in ["fig2c", "s1", "s4", "s5", "eq23", "fig4c", "fig4d",
                       "fig5", "onboard", "s8"] {

@@ -1,5 +1,6 @@
 //! Quantization reports: Fig. 3(a/b) distributions, Fig. 3(d) bit sweep,
-//! S6 (deeper net sweep) and S7 (AdderNet-vs-CNN quantized contrast).
+//! S6 (deeper net sweep), S7 (AdderNet-vs-CNN quantized contrast) and
+//! the plan-vs-per-call serving comparison (`quantplan`).
 
 use std::path::Path;
 
@@ -7,11 +8,13 @@ use anyhow::Result;
 
 use crate::coordinator::Manifest;
 use crate::data;
+use crate::quant::plan::QuantPlan;
 use crate::quant::{Calibration, Mode};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{self, Runtime};
 use crate::sim::functional::{self, Arch, ExecMode, KernelStrategy, QuantCfg, Runner,
                              SimKernel, Tensor};
+use crate::sim::intpath;
 use crate::util::table::{pct, Table};
 
 /// Weights file naming convention shared with `repro train`.
@@ -36,6 +39,21 @@ pub fn load_params(manifest: &Manifest, arch: &str, kernel: &str)
 fn eval_tensor(n: usize) -> (Tensor, Vec<i32>) {
     let b = data::eval_set(n, 7);
     (Tensor::new((b.n, 32, 32, 1), b.images), b.labels)
+}
+
+/// Parameters for reports that must run artifact-free: manifest weights
+/// when present, else deterministic synthetic parameters.  Returns
+/// (params, trained, synthetic).
+pub fn params_or_synth(art_dir: &Path, arch: Arch, arch_name: &str,
+                       kernel: &str) -> (functional::Params, bool, bool) {
+    if let Ok(manifest) = Manifest::load(art_dir) {
+        match load_params(&manifest, arch_name, kernel) {
+            Ok((p, trained)) => return (p, trained, false),
+            Err(e) => eprintln!("[report] could not read parameters ({e:#}); \
+                                 using synthetic weights"),
+        }
+    }
+    (functional::synth_params(arch, 42), false, true)
 }
 
 /// Calibration pass: run f32 forward over a calibration set, recording
@@ -126,6 +144,42 @@ pub fn s7(art_dir: &Path, arch_name: &str, n_eval: usize) -> Result<Table> {
             pct(a8),
             pct(a4),
             format!("{:+.1}pp", (a4 - fp32_acc) * 100.0),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Plan-based vs per-call quantized serving: the same calibration and
+/// bit-widths executed two ways — the per-call path (weights re-gridded
+/// every forward, activations round-tripped through f32 between layers)
+/// against the compiled [`QuantPlan`] int path (weights quantized once,
+/// folded BN, activations i32 across the conv stack).  The paper's
+/// claim (§3.1) is that shared-scale int8/int16 keeps accuracy; this
+/// table shows the *serving* pipeline keeps it too.
+pub fn quantplan(art_dir: &Path, arch_name: &str, n_eval: usize) -> Result<Table> {
+    let arch = Arch::parse(arch_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown arch {arch_name}"))?;
+    let (params, trained, synthetic) =
+        params_or_synth(art_dir, arch, arch_name, "adder");
+    let (calib, fp32_acc) = calibrate(&params, arch, SimKernel::Adder, n_eval);
+    let (x, labels) = eval_tensor(n_eval);
+    let mut t = Table::new(
+        &format!("quantplan — per-call vs plan-compiled int serving on \
+                  {arch_name} adder (trained={trained} synthetic={synthetic})"),
+        &["precision", "per-call acc", "plan acc", "plan vs fp32"],
+    );
+    t.row(&["fp32".into(), pct(fp32_acc), "-".into(), "-".into()]);
+    for bits in [16u32, 8] {
+        let cfg = QuantCfg { bits, mode: Mode::SharedScale };
+        let percall = quant_accuracy(&params, arch, SimKernel::Adder, &calib,
+                                     cfg, n_eval);
+        let plan = QuantPlan::build(&params, arch, SimKernel::Adder, cfg, &calib)?;
+        let pacc = intpath::plan_accuracy(&plan, KernelStrategy::Auto, &x, &labels);
+        t.row(&[
+            format!("int{bits}"),
+            pct(percall),
+            pct(pacc),
+            format!("{:+.1}pp", (pacc - fp32_acc) * 100.0),
         ]);
     }
     Ok(t)

@@ -87,6 +87,18 @@ pub struct ConvW<'a> {
     pub cout: usize,
 }
 
+/// Pre-quantized convolution weights, same HWIO layout as [`ConvW`].
+/// A [`crate::quant::plan::QuantPlan`] holds these — quantized ONCE at
+/// plan-build time instead of on every forward pass.
+#[derive(Debug, Clone)]
+pub struct QConvW<'a> {
+    pub data: &'a [i32],
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+}
+
 // ---------------------------------------------------------------------------
 // Conv engine: gather + strategy-dispatched row kernels
 // ---------------------------------------------------------------------------
@@ -195,37 +207,114 @@ pub fn conv2d_quant(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
 pub fn conv2d_quant_with(strategy: KernelStrategy, x: &Tensor, w: &ConvW,
                          stride: usize, padding: Padding, kind: SimKernel,
                          cfg: QuantCfg, calib: &LayerCalib) -> Tensor {
-    let krow: ConvRow<i32> = match strategy.resolve(w.cout) {
+    if matches!(strategy.resolve(w.cout), Resolved::Naive) {
+        return reference::conv2d_quant(x, w, stride, padding, kind, cfg, calib);
+    }
+    let (xq, wq, pre_scale) = quant_operands(&x.data, w.data, kind, cfg, calib);
+    let qw = QConvW { data: &wq, kh: w.kh, kw: w.kw, cin: w.cin, cout: w.cout };
+    let (acc, oshape) = conv2d_int_with(strategy, &xq, x.shape, &qw, stride,
+                                        padding, kind);
+    let mut out = Tensor::zeros(oshape);
+    for (o, &a) in out.data.iter_mut().zip(&acc) {
+        *o = a as f32 * pre_scale;
+    }
+    out
+}
+
+/// Integer convolution over ALREADY-quantized operands — the engine the
+/// plan-based int path ([`crate::sim::intpath`]) runs between layers
+/// without ever leaving the i32 domain, and the core
+/// [`conv2d_quant_with`] routes through after per-call quantization.
+/// Returns the raw widened accumulators plus the output shape; callers
+/// own the (de)quantization story.  All strategies accumulate taps in
+/// ascending (ky, kx, ci) order, so outputs are bit-identical across
+/// `Naive`/`Tiled`/`Simd` (i32 accumulation is order-independent).
+pub fn conv2d_int_with(strategy: KernelStrategy, xq: &[i32],
+                       shape: (usize, usize, usize, usize), w: &QConvW,
+                       stride: usize, padding: Padding, kind: SimKernel)
+                       -> (Vec<i32>, (usize, usize, usize, usize)) {
+    let (n, h, w_in, cin) = shape;
+    assert_eq!(xq.len(), n * h * w_in * cin, "int tensor size mismatch");
+    assert_eq!(cin, w.cin, "cin mismatch");
+    let (pt, pl, ho, wo) = nn::conv_geometry(h, w_in, w.kh, w.kw, stride, padding);
+    let cout = w.cout;
+    let oshape = (n, ho, wo, cout);
+    let mut out = vec![0i32; n * ho * wo * cout];
+    if out.is_empty() {
+        return (out, oshape);
+    }
+    let krow: ConvRow<i32> = match strategy.resolve(cout) {
         Resolved::Naive => {
-            return reference::conv2d_quant(x, w, stride, padding, kind, cfg, calib)
+            naive_conv_int(xq, shape, w, stride, (pt, pl, ho, wo), kind, &mut out);
+            return (out, oshape);
         }
         Resolved::Tiled => kernels::tiled::conv_row_i32,
         Resolved::Simd => kernels::simd::conv_row_i32,
     };
-    let (n, h, w_in, cin) = x.shape;
-    assert_eq!(cin, w.cin, "cin mismatch");
-    let cout = w.cout;
-    let (xq, wq, pre_scale) = quant_operands(&x.data, w.data, kind, cfg, calib);
-    let (pt, pl, ho, wo) = nn::conv_geometry(h, w_in, w.kh, w.kw, stride, padding);
     let k_taps = w.kh * w.kw * cin;
-    let mut out = Tensor::zeros((n, ho, wo, cout));
-    if out.data.is_empty() {
-        return out;
-    }
     let threads = max_threads_for(n * ho * wo * k_taps * cout);
     let (kh, kw) = (w.kh, w.kw);
-    parallel_chunks(&mut out.data, wo * cout, threads, |row, chunk| {
+    let wdat = w.data;
+    parallel_chunks(&mut out, wo * cout, threads, |row, chunk| {
         let (b, oh) = (row / ho, row % ho);
         let mut rowbuf = vec![0i32; wo * k_taps];
-        gather_row(&xq, h, w_in, cin, kh, kw, b, oh, stride, pt, pl, wo,
+        gather_row(xq, h, w_in, cin, kh, kw, b, oh, stride, pt, pl, wo,
                    &mut rowbuf);
-        let mut irow = vec![0i32; chunk.len()];
-        krow(&rowbuf, k_taps, &wq, cout, kind, &mut irow);
-        for (o, &a) in chunk.iter_mut().zip(&irow) {
-            *o = a as f32 * pre_scale;
-        }
+        krow(&rowbuf, k_taps, wdat, cout, kind, chunk);
     });
-    out
+    (out, oshape)
+}
+
+/// Naive 7-deep loop nest over integer operands — the same tap order as
+/// [`reference::conv2d_quant`]'s core, so the `Naive` strategy of
+/// [`conv2d_int_with`] is the in-crate truth for the int engine too.
+#[allow(clippy::too_many_arguments)]
+fn naive_conv_int(xq: &[i32], shape: (usize, usize, usize, usize), w: &QConvW,
+                  stride: usize, geom: (usize, usize, usize, usize),
+                  kind: SimKernel, out: &mut [i32]) {
+    let (n, h, w_in, cin) = shape;
+    let (pt, pl, ho, wo) = geom;
+    let cout = w.cout;
+    let mut acc = vec![0i32; cout];
+    for b in 0..n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                acc.iter_mut().for_each(|a| *a = 0);
+                for ky in 0..w.kh {
+                    let iy = (oh * stride + ky) as isize - pt as isize;
+                    let row_inside = iy >= 0 && iy < h as isize;
+                    for kx in 0..w.kw {
+                        let ix = (ow * stride + kx) as isize - pl as isize;
+                        let inside = row_inside && ix >= 0 && ix < w_in as isize;
+                        for ci in 0..cin {
+                            let xv = if inside {
+                                xq[((b * h + iy as usize) * w_in + ix as usize)
+                                    * cin + ci]
+                            } else {
+                                0
+                            };
+                            let off = ((ky * w.kw + kx) * cin + ci) * cout;
+                            let wrow = &w.data[off..off + cout];
+                            match kind {
+                                SimKernel::Adder => {
+                                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                        *a -= (xv - wv).abs();
+                                    }
+                                }
+                                SimKernel::Mult => {
+                                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                        *a += xv * wv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                let base = ((b * ho + oh) * wo + ow) * cout;
+                out[base..base + cout].copy_from_slice(&acc);
+            }
+        }
+    }
 }
 
 /// Re-grid integers onto a grid `shift` bits coarser, rounding to even.
@@ -370,7 +459,12 @@ impl Arch {
     }
 }
 
-/// How the conv layers execute.
+/// How the conv layers execute.  `Quant` here is the PER-CALL
+/// experiment path (weights re-quantized each forward, activations
+/// f32 between layers); the serving path compiles a
+/// [`crate::quant::plan::QuantPlan`] instead and runs it on the
+/// i32-domain [`crate::sim::intpath::PlanRunner`] — the functional
+/// server does that translation automatically for quantized variants.
 #[derive(Debug, Clone, Copy)]
 pub enum ExecMode {
     F32,
@@ -378,7 +472,9 @@ pub enum ExecMode {
 }
 
 /// Forward runner over named params; optionally records per-layer input
-/// feature ranges (the calibration pass / Fig. 3a probe).
+/// feature ranges (the calibration pass / Fig. 3a probe).  For
+/// plan-compiled integer serving, see [`crate::sim::intpath::PlanRunner`],
+/// which mirrors this topology stage for stage in the i32 domain.
 pub struct Runner<'a> {
     pub params: &'a Params,
     pub arch: Arch,

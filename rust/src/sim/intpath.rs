@@ -1,0 +1,425 @@
+//! Plan-based integer executor: the whole conv→BN→ReLU→pool chain in
+//! the i32 domain.
+//!
+//! The per-call quantized path ([`functional::conv2d_quant`]) is an
+//! experiment harness — it quantizes the same weights on every call and
+//! dequantizes after every conv.  This module is the serving path: a
+//! [`PlanRunner`] executes a pre-compiled
+//! [`crate::quant::plan::QuantPlan`], so
+//!
+//! * weights are already integers (quantized once, at plan build);
+//! * activations enter the integer domain ONCE (the input image) and
+//!   stay i32 through every conv, folded-BN, ReLU, pooling and residual
+//!   stage — inter-layer requantization is a power-of-two shift baked
+//!   into the BN fold;
+//! * f32 reappears only at the classifier head, which dequantizes and
+//!   runs the (tiny) dense stack to the logits.
+//!
+//! Convolutions dispatch through [`functional::conv2d_int_with`], so the
+//! whole [`KernelStrategy`] subsystem (`Naive`/`Tiled`/`Simd`/`Auto`)
+//! serves the int path, and — i32 accumulation being order-independent —
+//! the integer stack is bit-identical across strategies
+//! (`tests/intpath_oracle.rs` pins this, plus first-layer bit-identity
+//! against the per-call reference).
+//!
+//! Register widths: activations BETWEEN stages live in a register with
+//! [`HEADROOM_BITS`] bits of slack over the serving width (DW+2 — the
+//! width a 2x2 pool sum needs anyway), because a layer's BN output can
+//! legitimately overshoot the range calibrated at the NEXT conv's input
+//! (pooling and residual averaging shrink it back).  The strict DW
+//! clamp is applied exactly where activations enter a convolution —
+//! the same place the per-call path quantize-clamps — so the two paths
+//! clip identically.
+
+use crate::quant;
+use crate::quant::plan::{div_round_even, requant_shift, QuantPlan};
+use crate::sim::functional::{self, KernelStrategy, QConvW, Tensor};
+
+/// Headroom of the inter-stage activation registers over the serving
+/// width: BN outputs, pool sums and residual adds run at DW+2 bits;
+/// only conv operands are clamped to DW (see the module docs).
+pub const HEADROOM_BITS: u32 = 2;
+
+/// Dense NHWC integer activation tensor on the grid `2^exp`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    pub data: Vec<i32>,
+    /// (n, h, w, c); dense activations use (n, 1, 1, c).
+    pub shape: (usize, usize, usize, usize),
+    /// Value = `data * 2^exp`.
+    pub exp: i32,
+}
+
+/// Quantize an f32 activation tensor onto `2^exp` — the single
+/// f32→int boundary of the plan path (the input image).
+pub fn quantize_input(x: &Tensor, exp: i32, bits: u32) -> IntTensor {
+    IntTensor {
+        data: quant::quantize_slice(&x.data, exp, bits),
+        shape: x.shape,
+        exp,
+    }
+}
+
+/// Dequantize (exact: every int value is representable in f32 for
+/// serving widths <= 16 bit).
+pub fn dequantize(t: &IntTensor) -> Tensor {
+    let s = (t.exp as f32).exp2();
+    Tensor::new(t.shape, t.data.iter().map(|&q| q as f32 * s).collect())
+}
+
+/// Move activations onto the `target` grid: a pure power-of-two shift
+/// with round-half-to-even, clamped to the serving width.
+pub fn shift_to(t: &IntTensor, target: i32, qmax: i32) -> IntTensor {
+    if t.exp == target {
+        return t.clone();
+    }
+    let d = target - t.exp;
+    let data = t.data.iter()
+        .map(|&v| requant_shift(v as i64, d)
+            .clamp(-(qmax as i64), qmax as i64) as i32)
+        .collect();
+    IntTensor { data, shape: t.shape, exp: target }
+}
+
+/// Integer ReLU.
+pub fn relu_int(x: &mut IntTensor) {
+    for v in x.data.iter_mut() {
+        if *v < 0 {
+            *v = 0;
+        }
+    }
+}
+
+/// 2x2 average pooling: sum four neighbours and shift by 2 with
+/// round-half-to-even — the grid (exp) is unchanged, so pooling costs
+/// half a grid step of rounding at most, like the f32 path's pool-then-
+/// quantize.
+pub fn avg_pool2_int(x: &IntTensor) -> IntTensor {
+    let (n, h, w, c) = x.shape;
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = vec![0i32; n * ho * wo * c];
+    let at = |b: usize, hh: usize, ww: usize, cc: usize| {
+        x.data[((b * h + hh) * w + ww) * c + cc] as i64
+    };
+    for b in 0..n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                for ci in 0..c {
+                    let s = at(b, 2 * oh, 2 * ow, ci)
+                        + at(b, 2 * oh, 2 * ow + 1, ci)
+                        + at(b, 2 * oh + 1, 2 * ow, ci)
+                        + at(b, 2 * oh + 1, 2 * ow + 1, ci);
+                    out[((b * ho + oh) * wo + ow) * c + ci] =
+                        requant_shift(s, 2) as i32;
+                }
+            }
+        }
+    }
+    IntTensor { data: out, shape: (n, ho, wo, c), exp: x.exp }
+}
+
+/// Global average pooling: wide i64 sum, one round-half-to-even
+/// division (an exact shift whenever `h*w` is a power of two — 64 for
+/// the ResNet tail).
+pub fn global_avg_pool_int(x: &IntTensor) -> IntTensor {
+    let (n, h, w, c) = x.shape;
+    let px = ((h * w) as i64).max(1);
+    let mut out = vec![0i32; n * c];
+    for b in 0..n {
+        for ci in 0..c {
+            let mut s = 0i64;
+            for hh in 0..h {
+                for ww in 0..w {
+                    s += x.data[((b * h + hh) * w + ww) * c + ci] as i64;
+                }
+            }
+            out[b * c + ci] = div_round_even(s, px) as i32;
+        }
+    }
+    IntTensor { data: out, shape: (n, 1, 1, c), exp: x.exp }
+}
+
+/// Executes a [`QuantPlan`] under a chosen kernel strategy.  Stateless
+/// and `Sync`: serving workers run one per variant.
+pub struct PlanRunner<'a> {
+    pub plan: &'a QuantPlan,
+    pub strategy: KernelStrategy,
+}
+
+impl PlanRunner<'_> {
+    /// Activation register bound between stages (DW + headroom).
+    fn reg_max(&self) -> i32 {
+        self.plan.qmax() << HEADROOM_BITS
+    }
+
+    /// conv + folded BN: integer in, integer out, landing on the plan's
+    /// target grid for this layer.  Inputs arriving on a different grid
+    /// (the ResNet shortcut convs) are first requantized by a pow2
+    /// shift; operands are then clamped to the serving width — the
+    /// exact spot the per-call path quantize-clamps, so both paths clip
+    /// identically.  The BN output keeps [`HEADROOM_BITS`] of slack.
+    fn conv_block(&self, name: &str, x: &IntTensor) -> IntTensor {
+        let lp = self.plan.convs.get(name)
+            .unwrap_or_else(|| panic!("plan has no conv layer {name}"));
+        let qmax = self.plan.qmax();
+        // one pass either way: shift_to's clamp IS the operand clamp
+        // (qmax < reg_max, so clamping straight to qmax is identical to
+        // clamping the register then the operand width)
+        let xin = if x.exp == lp.in_exp {
+            let mut t = x.clone();
+            for v in t.data.iter_mut() {
+                *v = (*v).clamp(-qmax, qmax);
+            }
+            t
+        } else {
+            shift_to(x, lp.in_exp, qmax)
+        };
+        let qw = QConvW {
+            data: &lp.wq,
+            kh: lp.kh,
+            kw: lp.kw,
+            cin: lp.cin,
+            cout: lp.cout,
+        };
+        let (mut acc, oshape) = functional::conv2d_int_with(
+            self.strategy, &xin.data, xin.shape, &qw, lp.stride, lp.padding,
+            self.plan.kind);
+        let reg_max = self.reg_max();
+        for (i, v) in acc.iter_mut().enumerate() {
+            *v = lp.bn.apply(*v, i % lp.cout, reg_max);
+        }
+        IntTensor { data: acc, shape: oshape, exp: lp.out_exp }
+    }
+
+    /// The f32 classifier head (dequantized input, dense stack with
+    /// ReLU between layers, raw logits out).
+    fn head(&self, x: &Tensor, names: &[&str]) -> Tensor {
+        let mut y = x.clone();
+        for (i, name) in names.iter().enumerate() {
+            let dp = self.plan.dense.get(*name)
+                .unwrap_or_else(|| panic!("plan has no dense layer {name}"));
+            y = functional::dense_with(self.strategy, &y, &dp.w, &dp.b, dp.dout);
+            if i + 1 < names.len() {
+                functional::relu(&mut y);
+            }
+        }
+        y
+    }
+
+    /// Run the integer forward pass; returns f32 logits (n, 1, 1, 10).
+    /// Mirrors `Runner::forward`'s topology stage for stage.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let bits = self.plan.cfg.bits;
+        let reg_max = self.reg_max();
+        let q = quantize_input(x, self.plan.input_exp, bits);
+        match self.plan.arch {
+            functional::Arch::Lenet5 => {
+                let mut y = self.conv_block("conv1", &q);
+                relu_int(&mut y);
+                let y = avg_pool2_int(&y);
+                let mut y = self.conv_block("conv2", &y);
+                relu_int(&mut y);
+                let y = avg_pool2_int(&y);
+                // flatten (NHWC row-major == jax reshape)
+                let (n, h, w, c) = y.shape;
+                let y = IntTensor {
+                    data: y.data,
+                    shape: (n, 1, 1, h * w * c),
+                    exp: y.exp,
+                };
+                self.head(&dequantize(&y), &["fc1", "fc2", "fc3"])
+            }
+            functional::Arch::Resnet8 | functional::Arch::Resnet20 => {
+                let n_blocks = self.plan.arch.stages();
+                let mut y = self.conv_block("stem", &q);
+                relu_int(&mut y);
+                let mut cin = 16usize;
+                for (s, cout) in [16usize, 32, 64].into_iter().enumerate() {
+                    for b in 0..n_blocks {
+                        let pre = format!("s{s}b{b}");
+                        let mut h = self.conv_block(&format!("{pre}/c1"), &y);
+                        relu_int(&mut h);
+                        let mut h = self.conv_block(&format!("{pre}/c2"), &h);
+                        // shortcut: a planned conv when channels change,
+                        // else the identity shifted onto the sum grid
+                        let sc = if cin != cout {
+                            self.conv_block(&format!("{pre}/sc"), &y)
+                        } else {
+                            shift_to(&y, h.exp, reg_max)
+                        };
+                        debug_assert_eq!(h.exp, sc.exp,
+                                         "{pre}: residual grids diverge");
+                        // saturating residual add in the DW+2 register
+                        for (v, &s2) in h.data.iter_mut().zip(&sc.data) {
+                            *v = (*v + s2).clamp(-reg_max, reg_max);
+                        }
+                        relu_int(&mut h);
+                        y = h;
+                        cin = cout;
+                    }
+                }
+                let y = global_avg_pool_int(&y);
+                self.head(&dequantize(&y), &["fc"])
+            }
+        }
+    }
+
+    /// Batched inference over independently-queued images (the serving
+    /// hot path — same contract as `Runner::forward_many`).
+    pub fn forward_many(&self, images: &[&[f32]],
+                        hwc: (usize, usize, usize)) -> Vec<Vec<f32>> {
+        if images.is_empty() {
+            return Vec::new();
+        }
+        let (h, w, c) = hwc;
+        let px = h * w * c;
+        let mut data = Vec::with_capacity(images.len() * px);
+        for img in images {
+            assert_eq!(img.len(), px, "request image size mismatch");
+            data.extend_from_slice(img);
+        }
+        let x = Tensor::new((images.len(), h, w, c), data);
+        let logits = self.forward(&x);
+        let classes = logits.shape.3;
+        (0..images.len())
+            .map(|i| logits.data[i * classes..(i + 1) * classes].to_vec())
+            .collect()
+    }
+}
+
+/// Classification accuracy of a plan over (images, labels).
+pub fn plan_accuracy(plan: &QuantPlan, strategy: KernelStrategy,
+                     images: &Tensor, labels: &[i32]) -> f64 {
+    let runner = PlanRunner { plan, strategy };
+    let logits = runner.forward(images);
+    let preds = functional::argmax_rows(&logits);
+    let correct = preds.iter().zip(labels)
+        .filter(|(p, l)| **p == **l as usize)
+        .count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::plan::QuantPlan;
+    use crate::quant::{Calibration, LayerCalib, Mode};
+    use crate::sim::functional::{synth_params, Arch, QuantCfg, SimKernel};
+    use crate::util::XorShift64;
+
+    #[test]
+    fn quantize_dequantize_input_round_trip() {
+        let x = Tensor::new((1, 2, 2, 1), vec![0.5, -0.25, 0.125, 0.0]);
+        let q = quantize_input(&x, -3, 8);
+        assert_eq!(q.data, vec![4, -2, 1, 0]);
+        let back = dequantize(&q);
+        assert_eq!(back.data, x.data);
+    }
+
+    #[test]
+    fn shift_to_round_trips_on_finer_grids() {
+        let t = IntTensor { data: vec![3, -7, 0], shape: (1, 1, 1, 3), exp: -2 };
+        let fine = shift_to(&t, -4, 32767);
+        assert_eq!(fine.data, vec![12, -28, 0]);
+        let back = shift_to(&fine, -2, 32767);
+        assert_eq!(back.data, t.data);
+    }
+
+    #[test]
+    fn shift_to_clamps_to_width() {
+        let t = IntTensor { data: vec![100], shape: (1, 1, 1, 1), exp: 0 };
+        let fine = shift_to(&t, -4, 127);
+        assert_eq!(fine.data, vec![127]); // 1600 clamped to int8 grid
+    }
+
+    #[test]
+    fn pool_rounds_to_even() {
+        // mean of (1, 2, 2, 1) = 1.5 -> even 2; mean of (0,1,0,1) = .5 -> 0
+        let x = IntTensor {
+            data: vec![1, 2, 2, 1, 0, 1, 0, 1],
+            shape: (2, 2, 2, 1),
+            exp: -1,
+        };
+        let p = avg_pool2_int(&x);
+        assert_eq!(p.shape, (2, 1, 1, 1));
+        assert_eq!(p.data, vec![2, 0]);
+        assert_eq!(p.exp, -1);
+    }
+
+    #[test]
+    fn gap_matches_float_mean() {
+        let x = IntTensor {
+            data: (1..=16).collect(),
+            shape: (1, 4, 4, 1),
+            exp: 0,
+        };
+        let g = global_avg_pool_int(&x);
+        // mean(1..=16) = 8.5 -> even 8
+        assert_eq!(g.data, vec![8]);
+    }
+
+    fn lenet_plan(bits: u32) -> (crate::sim::functional::Params, Calibration, QuantCfg) {
+        let params = synth_params(Arch::Lenet5, 3);
+        let mut calib = Calibration::new();
+        calib.insert("conv1".into(),
+                     LayerCalib { feat_max_abs: 1.0, weight_max_abs: 0.5 });
+        calib.insert("conv2".into(),
+                     LayerCalib { feat_max_abs: 16.0, weight_max_abs: 0.5 });
+        (params, calib, QuantCfg { bits, mode: Mode::SharedScale })
+    }
+
+    #[test]
+    fn plan_forward_shapes_and_finite() {
+        let (params, calib, cfg) = lenet_plan(8);
+        let plan = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                    cfg, &calib).unwrap();
+        let mut rng = XorShift64::new(5);
+        let x = Tensor::new((2, 32, 32, 1),
+                            (0..2048).map(|_| rng.next_f32_sym(1.0)).collect());
+        let r = PlanRunner { plan: &plan, strategy: KernelStrategy::Auto };
+        let y = r.forward(&x);
+        assert_eq!(y.shape, (2, 1, 1, 10));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn plan_forward_many_splits_logits() {
+        let (params, calib, cfg) = lenet_plan(8);
+        let plan = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                    cfg, &calib).unwrap();
+        let r = PlanRunner { plan: &plan, strategy: KernelStrategy::Auto };
+        let mut rng = XorShift64::new(8);
+        let imgs: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..1024).map(|_| rng.next_f32_sym(1.0)).collect())
+            .collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let many = r.forward_many(&refs, (32, 32, 1));
+        assert_eq!(many.len(), 3);
+        for (i, img) in imgs.iter().enumerate() {
+            let x = Tensor::new((1, 32, 32, 1), img.clone());
+            let single = r.forward(&x);
+            // the int path is deterministic: batching must be EXACT
+            assert_eq!(many[i], single.data, "request {i}");
+        }
+    }
+
+    #[test]
+    fn resnet_plan_runs_end_to_end() {
+        let params = synth_params(Arch::Resnet8, 3);
+        let calib: Calibration = params.keys()
+            .filter_map(|k| k.strip_suffix("/conv_w"))
+            .map(|n| (n.to_string(),
+                      LayerCalib { feat_max_abs: 4.0, weight_max_abs: 0.5 }))
+            .collect();
+        let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        let plan = QuantPlan::build(&params, Arch::Resnet8, SimKernel::Adder,
+                                    cfg, &calib).unwrap();
+        let mut rng = XorShift64::new(6);
+        let x = Tensor::new((1, 32, 32, 1),
+                            (0..1024).map(|_| rng.next_f32_sym(1.0)).collect());
+        let r = PlanRunner { plan: &plan, strategy: KernelStrategy::Auto };
+        let y = r.forward(&x);
+        assert_eq!(y.shape, (1, 1, 1, 10));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+}

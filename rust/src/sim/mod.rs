@@ -6,14 +6,19 @@
 //! kernel, and the naive scalar loops in [`reference`] (the in-crate
 //! oracle every strategy is tested against — see
 //! `rust/tests/functional_oracle.rs`).  [`functional`] owns the parallel
-//! gather engine and the single dispatch point.
+//! gather engine and the single dispatch point; [`intpath`] executes
+//! pre-compiled quantization plans ([`crate::quant::plan`]) with
+//! activations kept in the i32 domain across the conv stack (the
+//! quantized serving path).
 
 pub mod accelerator;
 pub mod functional;
+pub mod intpath;
 pub mod kernels;
 pub mod onchip;
 pub mod reference;
 
 pub use accelerator::{AccelConfig, ResourceBreakdown, RunReport};
 pub use functional::{Arch, ExecMode, QuantCfg, Runner, Tensor};
+pub use intpath::PlanRunner;
 pub use kernels::{KernelStrategy, SimKernel};

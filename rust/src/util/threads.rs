@@ -1,12 +1,36 @@
-//! Minimal scoped worker pool (the offline vendored crate set has no
+//! Persistent worker pool (the offline vendored crate set has no
 //! rayon): fan a list of equally-sized output chunks out to OS threads.
 //!
 //! The functional-sim engine parallelizes convolutions across
 //! batch x output-row tasks; each task owns one disjoint `&mut` chunk of
-//! the output buffer, so the pool needs no unsafe code — a `Mutex` over
-//! the `chunks_mut` iterator hands every worker exclusive slices.
+//! the output buffer, so a `Mutex` over the `chunks_mut` iterator hands
+//! every worker exclusive slices.
+//!
+//! Workers are spawned ONCE, on first parallel use, and reused for every
+//! subsequent call ([`parallel_chunks`] used to spawn a scoped pool per
+//! conv layer; under serving load that meant thousands of
+//! spawn/join cycles per second).  The calling thread always
+//! participates in the drain, so a call never blocks waiting for pool
+//! capacity, and a completion latch guarantees every helper task has
+//! finished before `parallel_chunks` returns — which is what makes the
+//! (contained) lifetime transmute below sound: helpers only touch the
+//! borrowed closure/iterator through references that are provably live
+//! until the latch opens.
+//!
+//! `ADDERNET_THREADS` keeps its semantics: it caps the *effective*
+//! concurrency of each call (re-read per call, so tests may change it at
+//! runtime); `0`/garbage fall back as before, and `1` runs inline
+//! without touching the pool at all.
+//!
+//! Reentrancy: a `parallel_chunks` call from INSIDE a pool worker task
+//! runs inline (detected via a thread-local flag) — queueing nested
+//! helper tasks while every worker waits on its own latch could
+//! deadlock, so nesting degrades to sequential execution instead.
 
-use std::sync::Mutex;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Threads the engine may use: `ADDERNET_THREADS` override, else the
 /// machine's available parallelism.
@@ -19,13 +43,129 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism().map_or(1, |n| n.get())
 }
 
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// True on pool worker threads — nested `parallel_chunks` calls
+    /// detect this and run inline instead of deadlocking on the queue.
+    static IN_POOL_WORKER: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+struct Pool {
+    tx: Mutex<Sender<Task>>,
+    workers: usize,
+}
+
+static POOL: OnceLock<Option<Pool>> = OnceLock::new();
+
+/// The process-wide pool, spawned on first use.  `None` when the host
+/// has a single core (or every spawn failed) — callers then run inline.
+fn pool() -> Option<&'static Pool> {
+    POOL.get_or_init(|| {
+        // The caller participates in every drain, so N-1 workers give
+        // N-way parallelism on an N-core machine.
+        let n = std::thread::available_parallelism()
+            .map_or(1, |v| v.get())
+            .saturating_sub(1);
+        if n == 0 {
+            return None;
+        }
+        let (tx, rx) = mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut spawned = 0usize;
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let ok = std::thread::Builder::new()
+                .name(format!("addernet-pool-{i}"))
+                .spawn(move || {
+                    IN_POOL_WORKER.with(|f| f.set(true));
+                    loop {
+                        // Hold the lock only while dequeuing; run unlocked.
+                        let task = { rx.lock().unwrap().recv() };
+                        match task {
+                            Ok(t) => t(),
+                            Err(_) => break, // sender gone: process teardown
+                        }
+                    }
+                })
+                .is_ok();
+            if ok {
+                spawned += 1;
+            }
+        }
+        if spawned == 0 {
+            None
+        } else {
+            Some(Pool { tx: Mutex::new(tx), workers: spawned })
+        }
+    })
+    .as_ref()
+}
+
+/// Countdown latch: `wait` opens once `arrive` has been called `n` times.
+struct Latch {
+    left: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { left: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn arrive(&self) {
+        let mut left = self.left.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = self.left.lock().unwrap();
+        while *left > 0 {
+            left = self.cv.wait(left).unwrap();
+        }
+    }
+}
+
+/// Waits for the latch even if the caller's own drain panics — helpers
+/// must be done with the borrowed state before this frame unwinds.
+struct WaitGuard<'a>(&'a Latch);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// Claim-and-run loop shared by the caller and every helper task.
+fn drain<'d, T, F>(
+    work: &Mutex<std::iter::Enumerate<std::slice::ChunksMut<'d, T>>>,
+    f: &F,
+) where
+    F: Fn(usize, &mut [T]),
+{
+    loop {
+        let item = work.lock().unwrap().next();
+        match item {
+            Some((i, chunk)) => f(i, chunk),
+            None => break,
+        }
+    }
+}
+
 /// Split `data` into `chunk_len`-sized pieces and run `f(chunk_index,
-/// chunk)` over them on up to `max_threads` scoped worker threads.
+/// chunk)` over them, on the persistent pool plus the calling thread,
+/// using up to `max_threads` effective threads.
 ///
 /// `data.len()` must be a multiple of `chunk_len`.  With one effective
 /// thread (small task counts, `max_threads == 1`, single-core hosts) the
-/// work runs inline with zero spawn overhead.  Chunks are claimed
-/// dynamically, so uneven per-chunk costs still balance.
+/// work runs inline with zero pool traffic.  Chunks are claimed
+/// dynamically, so uneven per-chunk costs still balance, and the claim
+/// order never affects results (each chunk is written exactly once).
+/// A panic inside `f` — on the caller or any helper — propagates to the
+/// caller after all helpers have stopped touching the shared state.
 pub fn parallel_chunks<T, F>(data: &mut [T], chunk_len: usize, max_threads: usize, f: F)
 where
     T: Send,
@@ -35,24 +175,59 @@ where
     assert_eq!(data.len() % chunk_len, 0, "data not a multiple of chunk_len");
     let n_chunks = data.len() / chunk_len;
     let threads = num_threads().min(max_threads).min(n_chunks).max(1);
-    if threads <= 1 {
+    // Nested calls from a pool worker run inline (see module docs).
+    let nested = IN_POOL_WORKER.with(|f| f.get());
+    let pool = if threads > 1 && !nested { pool() } else { None };
+    let helpers = match pool {
+        Some(p) => (threads - 1).min(p.workers),
+        None => 0,
+    };
+    if helpers == 0 {
         for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
             f(i, chunk);
         }
         return;
     }
+    let pool = pool.unwrap();
+
     let work = Mutex::new(data.chunks_mut(chunk_len).enumerate());
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let item = work.lock().unwrap().next();
-                match item {
-                    Some((i, chunk)) => f(i, chunk),
-                    None => break,
+    let latch = Latch::new(helpers);
+    let poisoned = AtomicBool::new(false);
+    {
+        let tx = pool.tx.lock().unwrap();
+        for _ in 0..helpers {
+            let task: Box<dyn FnOnce() + Send + '_> = Box::new(|| {
+                let r = panic::catch_unwind(AssertUnwindSafe(|| drain(&work, &f)));
+                if r.is_err() {
+                    poisoned.store(true, Ordering::SeqCst);
                 }
+                // Last touch of the borrowed state: after this arrives,
+                // the caller may return and drop `work`/`f`.
+                latch.arrive();
             });
+            // SAFETY: the task borrows `work`, `f`, `latch` and
+            // `poisoned`, all owned by this stack frame.  The frame
+            // cannot return (or unwind past the WaitGuard below) until
+            // the latch has opened, and each task calls `latch.arrive()`
+            // as its final action on the borrowed state — so every
+            // borrow is dead before the referents are.  Erasing the
+            // lifetime to 'static is only to cross the channel.
+            let task: Task = unsafe { std::mem::transmute(task) };
+            if tx.send(task).is_err() {
+                // Channel closed (cannot happen while POOL is alive, but
+                // never leave the latch hanging).
+                latch.arrive();
+            }
         }
-    });
+    }
+    // The caller is always one of the drain threads; the guard makes the
+    // latch-wait unconditional, including on unwind.
+    let guard = WaitGuard(&latch);
+    drain(&work, &f);
+    drop(guard);
+    if poisoned.load(Ordering::SeqCst) {
+        panic!("parallel_chunks: a pool worker task panicked");
+    }
 }
 
 #[cfg(test)]
@@ -90,7 +265,7 @@ mod tests {
 
     #[test]
     fn empty_data_is_a_no_op() {
-        // zero chunks: the split must not panic or spawn anything.
+        // zero chunks: the split must not panic or touch the pool.
         let mut data: Vec<u8> = Vec::new();
         parallel_chunks(&mut data, 4, usize::MAX, |_, _| panic!("no chunks"));
         parallel_chunks(&mut data, 4, 1, |_, _| panic!("no chunks"));
@@ -119,5 +294,73 @@ mod tests {
             chunk.iter_mut().for_each(|v| *v = 7);
         });
         assert!(data.iter().all(|&v| v == 7));
+    }
+
+    #[test]
+    fn pool_survives_many_sequential_calls() {
+        // The persistent pool must drain thousands of back-to-back jobs
+        // (the serving pattern: one parallel conv per request batch)
+        // without leaking, deadlocking or corrupting results.
+        for round in 0..200u64 {
+            let mut data = vec![0u64; 16 * 4];
+            parallel_chunks(&mut data, 4, usize::MAX, |i, chunk| {
+                for v in chunk.iter_mut() {
+                    *v = round * 1000 + i as u64;
+                }
+            });
+            for (i, chunk) in data.chunks(4).enumerate() {
+                assert!(chunk.iter().all(|&v| v == round * 1000 + i as u64),
+                        "round {round} chunk {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn nested_calls_do_not_deadlock() {
+        // Inner calls from pool workers run inline; inner calls from
+        // the (non-worker) caller thread use the pool normally.  Both
+        // must terminate with correct results.
+        let mut outer = vec![0u32; 8 * 4];
+        parallel_chunks(&mut outer, 4, usize::MAX, |i, chunk| {
+            let mut inner = vec![0u32; 4 * 2];
+            parallel_chunks(&mut inner, 2, usize::MAX, |j, c| {
+                c.iter_mut().for_each(|v| *v = j as u32 + 10);
+            });
+            for (j, c) in inner.chunks(2).enumerate() {
+                assert!(c.iter().all(|&v| v == j as u32 + 10), "inner {j}");
+            }
+            chunk.iter_mut().for_each(|v| *v = i as u32 + 1);
+        });
+        for (i, chunk) in outer.chunks(4).enumerate() {
+            assert!(chunk.iter().all(|&v| v == i as u32 + 1), "outer {i}");
+        }
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        // Several OS threads (the serving workers) issue parallel jobs
+        // at once; each must see only its own chunks.
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    for round in 0..50u64 {
+                        let mut data = vec![0u64; 8 * 3];
+                        parallel_chunks(&mut data, 3, usize::MAX, |i, chunk| {
+                            for v in chunk.iter_mut() {
+                                *v = t * 100_000 + round * 100 + i as u64;
+                            }
+                        });
+                        for (i, chunk) in data.chunks(3).enumerate() {
+                            let want = t * 100_000 + round * 100 + i as u64;
+                            assert!(chunk.iter().all(|&v| v == want),
+                                    "caller {t} round {round} chunk {i}");
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

@@ -14,9 +14,12 @@ use std::path::{Path, PathBuf};
 
 use addernet::coordinator::{server, Manifest};
 use addernet::data;
+use addernet::quant::plan::QuantPlan;
+use addernet::quant::Mode;
 use addernet::report::quantrep;
-use addernet::sim::functional::{self, Arch, ExecMode, KernelStrategy, Runner,
-                                SimKernel, Tensor};
+use addernet::sim::functional::{self, Arch, ExecMode, KernelStrategy, QuantCfg,
+                                Runner, SimKernel, Tensor};
+use addernet::sim::intpath::PlanRunner;
 
 #[cfg(feature = "pjrt")]
 use addernet::coordinator::Trainer;
@@ -335,6 +338,77 @@ fn functional_server_matches_direct_forward() {
         }
     }
     handle.shutdown();
+}
+
+/// An int8 variant is compiled to a QuantPlan at server start and
+/// served through the i32-domain executor: responses are finite,
+/// correctly shaped, and EXACTLY equal to a direct plan execution (the
+/// int path is deterministic, so batching cannot change results).
+#[test]
+fn functional_server_serves_int8_plan_variant() {
+    let mut cfg = server::FunctionalVariantCfg::synthetic(
+        "lenet5_adder_int8", Arch::Lenet5, SimKernel::Adder, 42);
+    let (calib, _) = quantrep::calibrate(&cfg.params, Arch::Lenet5,
+                                         SimKernel::Adder, 32);
+    let qcfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+    cfg.mode = ExecMode::Quant(qcfg);
+    cfg.calib = Some(calib.clone());
+    let params = cfg.params.clone();
+    let handle = server::start_functional(
+        vec![cfg], std::time::Duration::from_millis(1)).unwrap();
+    let b = data::eval_set(6, 31);
+    let mut rxs = Vec::new();
+    for i in 0..6 {
+        rxs.push(handle.submit("lenet5_adder_int8",
+                               b.images[i * 1024..(i + 1) * 1024].to_vec()).unwrap());
+    }
+    let plan = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder, qcfg,
+                                &calib).unwrap();
+    let runner = PlanRunner { plan: &plan, strategy: KernelStrategy::Auto };
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        let x = Tensor::new((1, 32, 32, 1),
+                            b.images[i * 1024..(i + 1) * 1024].to_vec());
+        let direct = runner.forward(&x);
+        assert_eq!(resp.logits, direct.data, "request {i}");
+    }
+    handle.shutdown();
+}
+
+/// Misconfigured quantized variants fail `start_functional` with a
+/// proper error — no worker is spawned, nothing panics.
+#[test]
+fn functional_server_rejects_misconfigured_quant_variants() {
+    // ServerHandle is not Debug, so unwrap_err() is unavailable
+    let expect_err = |r: anyhow::Result<server::ServerHandle>| -> String {
+        match r {
+            Ok(_) => panic!("misconfigured variant should fail start_functional"),
+            Err(e) => format!("{e:#}"),
+        }
+    };
+
+    // quantized mode with no calibration table at all
+    let mut cfg = server::FunctionalVariantCfg::synthetic(
+        "lenet5_adder_int8", Arch::Lenet5, SimKernel::Adder, 42);
+    cfg.mode = ExecMode::Quant(QuantCfg { bits: 8, mode: Mode::SharedScale });
+    cfg.calib = None;
+    let err = expect_err(server::start_functional(
+        vec![cfg], std::time::Duration::from_millis(1)));
+    assert!(err.contains("calibration"), "{err}");
+
+    // a table that does not cover every conv layer fails plan compilation
+    let mut cfg = server::FunctionalVariantCfg::synthetic(
+        "lenet5_adder_int8", Arch::Lenet5, SimKernel::Adder, 42);
+    let (mut calib, _) = quantrep::calibrate(&cfg.params, Arch::Lenet5,
+                                             SimKernel::Adder, 8);
+    calib.remove("conv2");
+    cfg.mode = ExecMode::Quant(QuantCfg { bits: 8, mode: Mode::SharedScale });
+    cfg.calib = Some(calib);
+    let err = expect_err(server::start_functional(
+        vec![cfg], std::time::Duration::from_millis(1)));
+    assert!(err.contains("conv2"), "{err}");
 }
 
 /// A malformed request (wrong pixel count) is dropped: the submitter

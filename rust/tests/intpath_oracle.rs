@@ -1,0 +1,254 @@
+//! Oracle tests for the plan-based integer pipeline
+//! (`quant::plan::QuantPlan` + `sim::intpath::PlanRunner`):
+//!
+//! * **first-layer bit-identity** — on the first conv layer the plan
+//!   path (weights quantized at build time, input quantized once) must
+//!   reproduce the per-call `conv2d_quant` reference EXACTLY, for every
+//!   `KernelStrategy`, both kernels and both serving widths: the same
+//!   shared exponent (§3.1) drives both paths, so the integer operands
+//!   — and therefore the i32 accumulators — are the same integers;
+//! * **cross-strategy whole-model identity** — the int stack is
+//!   i32-exact, so full forward passes agree across
+//!   Naive/Tiled/Simd/Auto bit for bit through the conv chain (and to
+//!   f32 round-off through the shared dense head);
+//! * **plan vs per-call tracking** — the compiled plan serves logits
+//!   close to the per-call experiment path and the f32 reference at
+//!   int16/int8.
+
+use addernet::quant::plan::QuantPlan;
+use addernet::quant::{Calibration, Mode};
+use addernet::report::quantrep;
+use addernet::sim::functional::{self, conv2d_quant_with, synth_params, Arch,
+                                ConvW, ExecMode, KernelStrategy, QConvW,
+                                QuantCfg, Runner, SimKernel, Tensor};
+use addernet::sim::intpath::{self, PlanRunner};
+use addernet::util::XorShift64;
+
+const STRATEGIES: [KernelStrategy; 4] = [
+    KernelStrategy::Naive,
+    KernelStrategy::Tiled,
+    KernelStrategy::Simd,
+    KernelStrategy::Auto,
+];
+
+fn rand_tensor(rng: &mut XorShift64, shape: (usize, usize, usize, usize),
+               scale: f32) -> Tensor {
+    let (n, h, w, c) = shape;
+    Tensor::new(shape, (0..n * h * w * c).map(|_| rng.next_f32_sym(scale)).collect())
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= tol, "{what}: element {i}: {x} vs {y} (tol {tol})");
+    }
+}
+
+fn max_abs(xs: &[f32]) -> f32 {
+    xs.iter().fold(0f32, |m, &v| m.max(v.abs()))
+}
+
+/// The plan's first conv layer, executed on the raw integer engine,
+/// must be bit-identical to the per-call `conv2d_quant` reference:
+/// identical operands on the shared grid, identical i32 accumulators,
+/// identical dequantization scale.
+#[test]
+fn first_layer_bit_identical_to_percall_reference() {
+    let params = synth_params(Arch::Lenet5, 42);
+    let mut rng = XorShift64::new(11);
+    let x = rand_tensor(&mut rng, (2, 32, 32, 1), 1.0);
+    for kind in [SimKernel::Adder, SimKernel::Mult] {
+        let (calib, _) = quantrep::calibrate(&params, Arch::Lenet5, kind, 16);
+        // int16 only for the adder kernel: its accumulator is provably
+        // i32-bounded (|acc| <= 2*qmax*K), while int16 MULT products
+        // can overflow the widened accumulator on large layers.
+        let widths: &[u32] = match kind {
+            SimKernel::Adder => &[8, 16],
+            SimKernel::Mult => &[8],
+        };
+        for &bits in widths {
+            let cfg = QuantCfg { bits, mode: Mode::SharedScale };
+            let plan = QuantPlan::build(&params, Arch::Lenet5, kind, cfg, &calib)
+                .unwrap();
+            let lp = &plan.convs["conv1"];
+            assert_eq!(plan.input_exp, lp.in_exp);
+            let (ws, wd) = &params["conv1/conv_w"];
+            let cw = ConvW { data: wd, kh: ws[0], kw: ws[1], cin: ws[2], cout: ws[3] };
+            let lc = &calib["conv1"];
+            let scale = (lp.acc_exp as f32).exp2();
+            for strat in STRATEGIES {
+                let want = conv2d_quant_with(strat, &x, &cw, lp.stride,
+                                             lp.padding, kind, cfg, lc);
+                let xq = intpath::quantize_input(&x, plan.input_exp, bits);
+                let qw = QConvW { data: &lp.wq, kh: lp.kh, kw: lp.kw,
+                                  cin: lp.cin, cout: lp.cout };
+                let (acc, oshape) = functional::conv2d_int_with(
+                    strat, &xq.data, xq.shape, &qw, lp.stride, lp.padding, kind);
+                assert_eq!(oshape, want.shape,
+                           "{kind:?} int{bits} [{}]", strat.label());
+                for (i, (&a, &w)) in acc.iter().zip(&want.data).enumerate() {
+                    let got = a as f32 * scale;
+                    assert!(got == w,
+                            "{kind:?} int{bits} [{}] element {i}: plan {got} \
+                             vs per-call {w}", strat.label());
+                }
+            }
+        }
+    }
+}
+
+/// Whole-model plan execution is bit-identical across every kernel
+/// strategy: the conv stack is integer-exact and the f32 head
+/// accumulates in the same (ascending) order everywhere.
+#[test]
+fn whole_model_plan_identical_across_strategies() {
+    for (arch, seed) in [(Arch::Lenet5, 3u64), (Arch::Resnet8, 5)] {
+        let params = synth_params(arch, seed);
+        let (calib, _) = quantrep::calibrate(&params, arch, SimKernel::Adder, 16);
+        let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        let plan = QuantPlan::build(&params, arch, SimKernel::Adder, cfg, &calib)
+            .unwrap();
+        let mut rng = XorShift64::new(21);
+        let x = rand_tensor(&mut rng, (2, 32, 32, 1), 1.0);
+        let mut logits = Vec::new();
+        for strat in STRATEGIES {
+            let r = PlanRunner { plan: &plan, strategy: strat };
+            let y = r.forward(&x);
+            assert_eq!(y.shape, (2, 1, 1, 10), "{arch:?} [{}]", strat.label());
+            assert!(y.data.iter().all(|v| v.is_finite()));
+            logits.push(y.data);
+        }
+        for (i, l) in logits.iter().enumerate().skip(1) {
+            assert_close(l, &logits[0], 1e-5,
+                         &format!("{arch:?} logits [{}] vs [{}]",
+                                  STRATEGIES[i].label(), STRATEGIES[0].label()));
+        }
+    }
+}
+
+/// Non-trivial LeNet parameters: BN scale/shift chosen so the
+/// always-negative adder responses re-center into the ReLU pass-band at
+/// BOTH conv layers — real signal flows through the whole int stack
+/// instead of the all-zero activations identity-BN synth weights give.
+fn lively_lenet_params() -> functional::Params {
+    let mut params = synth_params(Arch::Lenet5, 7);
+    params.insert("conv1/bn_gamma".into(), (vec![6], vec![0.1; 6]));
+    params.insert("conv1/bn_beta".into(), (vec![6], vec![2.0; 6]));
+    params.insert("conv2/bn_gamma".into(), (vec![16], vec![0.02; 16]));
+    params.insert("conv2/bn_beta".into(), (vec![16], vec![2.5; 16]));
+    params
+}
+
+/// int16 plan logits track the f32 reference closely, and int8 plan
+/// logits track the per-call int8 experiment path: the compiled
+/// pipeline preserves the §3.1 accuracy story end-to-end.
+#[test]
+fn plan_logits_track_f32_and_percall_paths() {
+    let params = lively_lenet_params();
+    let n = 16usize;
+    let (calib, _) = quantrep::calibrate(&params, Arch::Lenet5, SimKernel::Adder, n);
+    // the SAME images the calibration pass saw: ranges cover them
+    let b = addernet::data::eval_set(n, 7);
+    let x = Tensor::new((n, 32, 32, 1), b.images);
+
+    let mut f32_runner = Runner {
+        params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+        strategy: KernelStrategy::Auto, mode: ExecMode::F32,
+        calib: None, observe: None,
+    };
+    let f32_logits = f32_runner.forward(&x);
+    let scale = max_abs(&f32_logits.data).max(1.0);
+
+    // int16: the plan path must sit on top of the f32 reference
+    let cfg16 = QuantCfg { bits: 16, mode: Mode::SharedScale };
+    let plan16 = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                  cfg16, &calib).unwrap();
+    let p16 = PlanRunner { plan: &plan16, strategy: KernelStrategy::Auto }
+        .forward(&x);
+    assert_close(&p16.data, &f32_logits.data, 0.03 * scale, "int16 plan vs f32");
+
+    // int8: plan and per-call approximate f32 with the same grids, so
+    // they must stay near each other (and sane vs f32)
+    let cfg8 = QuantCfg { bits: 8, mode: Mode::SharedScale };
+    let plan8 = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                 cfg8, &calib).unwrap();
+    let p8 = PlanRunner { plan: &plan8, strategy: KernelStrategy::Auto }
+        .forward(&x);
+    let mut percall_runner = Runner {
+        params: &params, arch: Arch::Lenet5, kind: SimKernel::Adder,
+        strategy: KernelStrategy::Auto, mode: ExecMode::Quant(cfg8),
+        calib: Some(&calib), observe: None,
+    };
+    let percall = percall_runner.forward(&x);
+    assert_close(&p8.data, &percall.data, 0.5 * scale, "int8 plan vs per-call");
+    assert_close(&p8.data, &f32_logits.data, 0.75 * scale, "int8 plan vs f32");
+}
+
+/// Accuracy through the two quantized paths stays comparable — the
+/// `quantplan` report's claim, pinned as a test.
+#[test]
+fn plan_accuracy_tracks_percall_accuracy() {
+    let params = lively_lenet_params();
+    let n = 64usize;
+    let (calib, _) = quantrep::calibrate(&params, Arch::Lenet5, SimKernel::Adder, n);
+    let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+    let percall = quantrep::quant_accuracy(&params, Arch::Lenet5,
+                                           SimKernel::Adder, &calib, cfg, n);
+    let plan = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder, cfg,
+                                &calib).unwrap();
+    let b = addernet::data::eval_set(n, 7);
+    let x = Tensor::new((n, 32, 32, 1), b.images);
+    let pacc = intpath::plan_accuracy(&plan, KernelStrategy::Auto, &x, &b.labels);
+    assert!((0.0..=1.0).contains(&pacc));
+    assert!((pacc - percall).abs() <= 0.3,
+            "plan acc {pacc} drifted from per-call acc {percall}");
+}
+
+/// SeparateScale plans also execute (the S7 contrast mode): sane,
+/// finite, cross-strategy identical.
+#[test]
+fn separate_scale_plan_executes() {
+    let params = lively_lenet_params();
+    let (calib, _) = quantrep::calibrate(&params, Arch::Lenet5, SimKernel::Adder, 8);
+    let cfg = QuantCfg { bits: 8, mode: Mode::SeparateScale };
+    let plan = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder, cfg,
+                                &calib).unwrap();
+    let mut rng = XorShift64::new(33);
+    let x = rand_tensor(&mut rng, (1, 32, 32, 1), 1.0);
+    let mut logits = Vec::new();
+    for strat in STRATEGIES {
+        let y = PlanRunner { plan: &plan, strategy: strat }.forward(&x);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        logits.push(y.data);
+    }
+    for l in logits.iter().skip(1) {
+        assert_close(l, &logits[0], 1e-5, "separate-scale cross-strategy");
+    }
+}
+
+/// Calibration JSON written by `repro calibrate` compiles to the same
+/// plan as the in-memory table (the calibrate -> serve file round
+/// trip).
+#[test]
+fn calibration_json_round_trip_builds_identical_plan() {
+    use addernet::quant::plan::{calibration_from_json, calibration_to_json};
+
+    let params = synth_params(Arch::Lenet5, 42);
+    let (calib, _) = quantrep::calibrate(&params, Arch::Lenet5, SimKernel::Adder, 16);
+    let json = calibration_to_json(&calib);
+    let back: Calibration = calibration_from_json(&json).unwrap();
+    let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+    let a = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder, cfg, &calib)
+        .unwrap();
+    let b = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder, cfg, &back)
+        .unwrap();
+    assert_eq!(a.input_exp, b.input_exp);
+    for (name, cp) in &a.convs {
+        let cpb = &b.convs[name];
+        assert_eq!(cp.wq, cpb.wq, "{name}: weights");
+        assert_eq!((cp.in_exp, cp.acc_exp, cp.out_exp),
+                   (cpb.in_exp, cpb.acc_exp, cpb.out_exp), "{name}: grids");
+        assert_eq!(cp.bn.mul, cpb.bn.mul, "{name}: bn mul");
+        assert_eq!(cp.bn.add, cpb.bn.add, "{name}: bn add");
+    }
+}

@@ -1,10 +1,16 @@
 //! Property-style tests (seeded `XorShift64`) for the shared-scaling
 //! quantization layer (paper §3.1): round-half-to-even behaviour,
 //! quantize/dequantize round-trip bounds, scale-exponent coverage of the
-//! joint range, and the SharedScale-vs-SeparateScale adder-kernel
-//! divergence the S7 experiment contrasts.
+//! joint range, the SharedScale-vs-SeparateScale adder-kernel
+//! divergence the S7 experiment contrasts, and the plan compiler's
+//! integer primitives — requantization boundaries round to even exactly
+//! like the float reference, and power-of-two BN scales fold EXACTLY
+//! (the shift-not-multiply hardware claim).  The cross-`KernelStrategy`
+//! coverage of the same machinery lives in `tests/intpath_oracle.rs`,
+//! which pins the folded pipeline per strategy.
 
 use addernet::nn::Padding;
+use addernet::quant::plan::{div_round_even, fold_bn, requant_shift};
 use addernet::quant::{
     self, dequantize, qmax, quantize, round_even, scale_exp, LayerCalib, Mode,
 };
@@ -121,6 +127,81 @@ fn shared_vs_separate_scale_adder_divergence() {
     assert!(separate_sum >= 0.8 * shared_sum,
             "separate-then-align ({separate_sum}) should not beat shared \
              ({shared_sum}) for the adder kernel");
+}
+
+/// Integer requantization (the plan path's inter-layer pow2 shift) must
+/// round half to even EXACTLY like the float reference at every
+/// boundary — otherwise the int path drifts from the per-call path one
+/// half-step at a time.
+#[test]
+fn requant_shift_rounds_to_even_like_float_reference() {
+    // exhaustive small range: every halfway case for shifts 0..=8
+    for s in 0..=8i32 {
+        let step = (s as f32).exp2();
+        for v in -2048i64..=2048 {
+            let want = round_even(v as f32 / step) as i64;
+            assert_eq!(requant_shift(v, s), want, "v={v} s={s}");
+        }
+    }
+    // random wide values, still exactly representable in f32
+    let mut rng = XorShift64::new(77);
+    for s in 0..=12i32 {
+        let step = (s as f32).exp2();
+        for _ in 0..500 {
+            let v = (rng.next_f32_sym(1.0) * (1i64 << 22) as f32) as i64;
+            let want = round_even(v as f32 / step) as i64;
+            assert_eq!(requant_shift(v, s), want, "v={v} s={s}");
+        }
+    }
+    // general divisors (the non-pow2 global-average-pool case)
+    for d in [3i64, 5, 6, 7, 9, 12] {
+        for n in -500i64..=500 {
+            let want = round_even(n as f32 / d as f32) as i64;
+            assert_eq!(div_round_even(n, d), want, "n={n} d={d}");
+        }
+    }
+}
+
+/// Negative shifts (moving onto a FINER grid) are exact: requantizing
+/// down and back up is the identity.
+#[test]
+fn requant_shift_finer_grid_is_exact() {
+    let mut rng = XorShift64::new(88);
+    for _ in 0..1000 {
+        let v = (rng.next_f32_sym(1.0) * 1e6) as i64;
+        for k in 1..=8i32 {
+            assert_eq!(requant_shift(requant_shift(v, -k), k), v, "v={v} k={k}");
+        }
+    }
+}
+
+/// BN-fold exactness: when the BN scale is an exact power of two
+/// (gamma = sqrt(var+eps) * 2^k) and the shift sits on the output grid
+/// (beta = t * 2^out_exp, mean = 0), the folded integer BN reproduces
+/// `acc * 2^(k + acc_exp - out_exp) + t` with NO rounding anywhere —
+/// the multiplier degenerates to a shift, which is the §3 minimalist-
+/// hardware argument executed in software.
+#[test]
+fn bn_fold_exact_for_pow2_scales() {
+    let mut rng = XorShift64::new(55);
+    let eps = 1e-5f32;
+    for case in 0..100 {
+        let k = (case % 5) as i32 - 2; // -2..=2
+        let acc_exp = -((case % 7) as i32) - 1; // -7..=-1
+        let d = (case % 3) as i32; // k + acc_exp - out_exp in 0..=2
+        let out_exp = acc_exp + k - d;
+        let var = rng.next_f32_sym(1.0).abs() + 0.5;
+        let gamma = (var + eps).sqrt() * (k as f32).exp2();
+        let t = (rng.next_f32_sym(1.0) * 50.0) as i64; // integer shift
+        let beta = t as f32 * (out_exp as f32).exp2();
+        let fold = fold_bn(&[gamma], &[beta], &[0.0], &[var], acc_exp, out_exp)
+            .unwrap();
+        for acc in [-2000i32, -64, -3, 0, 1, 17, 500, 1999] {
+            let want = acc as i64 * (1i64 << d) + t;
+            assert_eq!(fold.apply(acc, 0, 32767) as i64, want,
+                       "case {case}: k={k} d={d} acc={acc}");
+        }
+    }
 }
 
 /// For the mult kernel separate scales are the natural choice: both
