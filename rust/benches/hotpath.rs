@@ -138,6 +138,20 @@ fn main() {
     derived.push(("plan_vs_percall".to_string(), percall_s / plan_s));
     derived.push(("plan_vs_f32".to_string(), f32_s / plan_s));
 
+    // the graph-described cnv6 architecture rides the same harness with
+    // zero executor/bench edits beyond this measurement
+    let params6 = synth_params(Arch::Cnv6, 42);
+    let (calib6, _) = quantrep::calibrate(&params6, Arch::Cnv6,
+                                          SimKernel::Adder, 16);
+    let plan6 = QuantPlan::build(&params6, Arch::Cnv6, SimKernel::Adder, qcfg,
+                                 &calib6).unwrap();
+    let (cnv6_s, _) = common::time_it(1, 5, || {
+        let r = PlanRunner { plan: &plan6, strategy: KernelStrategy::Auto };
+        std::hint::black_box(r.forward(&xin));
+    });
+    common::report("cnv6 int8 plan (graph-described arch)", cnv6_s, 64.0, "img");
+    derived.push(("e2e_cnv6_int8_plan_s".to_string(), cnv6_s));
+
     write_json(&rows, &derived);
 
     // L3b: dataset generator

@@ -176,6 +176,8 @@ pub struct FunctionalVariantCfg {
 impl FunctionalVariantCfg {
     /// Variant backed by deterministic synthetic weights — lets the
     /// server run with no Python artifacts (demos, tests, load rigs).
+    /// Input geometry comes from the architecture's compiled graph, so
+    /// any registered `Arch` serves without further configuration.
     pub fn synthetic(name: &str, arch: Arch, kind: SimKernel, seed: u64) -> Self {
         Self {
             name: name.into(),
@@ -185,7 +187,7 @@ impl FunctionalVariantCfg {
             params: functional::synth_params(arch, seed),
             mode: ExecMode::F32,
             calib: None,
-            input_hwc: (32, 32, 1),
+            input_hwc: arch.graph().input,
             max_batch: 32,
         }
     }

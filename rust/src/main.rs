@@ -236,7 +236,8 @@ fn serve_functional(args: &Args) -> Result<()> {
         let name = m.trim().to_string();
         let (arch_s, kernel_s) = name.split_once('_').unwrap_or((name.as_str(), "adder"));
         let arch = Arch::parse(arch_s).with_context(
-            || format!("functional backend serves lenet5|resnet8|resnet20, got {arch_s}"))?;
+            || format!("functional backend serves {}, got {arch_s}",
+                       Arch::names_label()))?;
         let kind = match kernel_s {
             "adder" => SimKernel::Adder,
             "mult" => SimKernel::Mult,
@@ -301,7 +302,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     let n = args.get_usize("calib-n", 256);
     let out = args.get("out", "target/calibration.json");
     let arch = Arch::parse(&arch_name)
-        .context("arch must be lenet5|resnet8|resnet20")?;
+        .with_context(|| format!("arch must be one of {}", Arch::names_label()))?;
     let kind = match kernel.as_str() {
         "adder" => SimKernel::Adder,
         "mult" => SimKernel::Mult,
@@ -413,12 +414,20 @@ fn cmd_quantize(args: &Args) -> Result<()> {
 
     let manifest = Manifest::load(&dir)?;
     let sarch = addernet::sim::functional::Arch::parse(&arch)
-        .context("arch must be lenet5|resnet8|resnet20")?;
+        .with_context(|| format!("arch must be one of {}", Arch::names_label()))?;
     let kind = match kernel.as_str() {
         "adder" => addernet::sim::functional::SimKernel::Adder,
         "mult" => addernet::sim::functional::SimKernel::Mult,
         k => anyhow::bail!("functional sim supports adder|mult, got {k}"),
     };
+    // the per-call experiment path enforces the same kernel/width
+    // policy as the plan compiler (mult tap products overflow i32 past
+    // 8-bit operands) — refuse here with a proper error instead of
+    // panicking inside the runner.
+    anyhow::ensure!(addernet::quant::QuantPlan::supports(kind, bits),
+                    "mult-kernel quantization caps at 8-bit operands \
+                     (i32 accumulator overflow at int{bits}); use \
+                     --kernel adder for wider grids");
     let (params, trained) = report::quantrep::load_params(&manifest, &arch, &kernel)?;
     let (calib, fp32) = report::quantrep::calibrate(&params, sarch, kind, n_eval);
     let qacc = report::quantrep::quant_accuracy(
@@ -487,12 +496,13 @@ fn cmd_info(args: &Args) -> Result<()> {
         Err(e) => println!("no artifacts at {} ({e}); run `make artifacts`",
                            dir.display()),
     }
-    println!("\nnetworks:");
-    for n in ["lenet5", "resnet8", "resnet18", "resnet20", "resnet50", "vgg16",
-              "alexnet"] {
-        let net = nn::by_name(n).unwrap();
-        println!("  {:10} {:8.2} GOP {:8.1}M params", n, net.gops(),
-                 net.params() as f64 / 1e6);
+    println!("\nnetworks (from the layer-graph registry):");
+    for g in nn::graph::all() {
+        let net = g.to_desc();
+        let servable = Arch::parse(g.id).is_some();
+        println!("  {:10} {:8.2} GOP {:8.1}M params{}", g.id, net.gops(),
+                 net.params() as f64 / 1e6,
+                 if servable { "  [servable]" } else { "" });
     }
     Ok(())
 }

@@ -1,179 +1,66 @@
-//! Builders for the paper's workload networks.
+//! Builders for the paper's workload networks — thin derivations from
+//! the compiled layer graphs in [`super::graph`], which is the single
+//! place each topology is encoded.  Deriving the hardware descriptors
+//! from the same programs the executors walk keeps report naming and
+//! runtime naming identical (`s0b0/c1` everywhere).
 
-use super::{ConvLayer, Layer, NetworkDesc, Padding};
+use super::{graph, NetworkDesc};
 
-fn conv(name: &str, kh: usize, cin: usize, cout: usize, h: usize, w: usize,
-        stride: usize, padding: Padding) -> Layer {
-    Layer::Conv(ConvLayer {
-        name: name.into(), kh, kw: kh, cin, cout, h_in: h, w_in: w, stride, padding,
-    })
+fn desc(id: &str) -> NetworkDesc {
+    graph::by_name(id)
+        .unwrap_or_else(|| panic!("graph {id} is not registered"))
+        .to_desc()
 }
 
 /// LeNet-5 on 32x32x1 — the fully-on-chip workload of Fig. 5 (and the
 /// architecture the Rust trainer + functional simulator execute).
 pub fn lenet5() -> NetworkDesc {
-    NetworkDesc {
-        name: "LeNet-5".into(),
-        input: (32, 32, 1),
-        layers: vec![
-            conv("conv1", 5, 1, 6, 32, 32, 1, Padding::Valid), // -> 28x28x6
-            Layer::Pool { name: "pool1".into(), window: 2, stride: 2, h_in: 28, w_in: 28, ch: 6 },
-            conv("conv2", 5, 6, 16, 14, 14, 1, Padding::Valid), // -> 10x10x16
-            Layer::Pool { name: "pool2".into(), window: 2, stride: 2, h_in: 10, w_in: 10, ch: 16 },
-            Layer::Dense { name: "fc1".into(), din: 400, dout: 120 },
-            Layer::Dense { name: "fc2".into(), din: 120, dout: 84 },
-            Layer::Dense { name: "fc3".into(), din: 84, dout: 10 },
-        ],
-    }
+    desc("lenet5")
 }
 
-/// CIFAR-style ResNet-20 (the paper's Fig. 2/7 quantization workload).
+/// VGG-style plain 6-conv stack on 32x32x1 (runtime-servable).
+pub fn cnv6() -> NetworkDesc {
+    desc("cnv6")
+}
+
+/// Small synthetic-10 ResNet-8 (the CI-scale model the trainer runs).
+pub fn resnet8() -> NetworkDesc {
+    desc("resnet8")
+}
+
+/// CIFAR-style ResNet-20 (the paper's Fig. 2/7 quantization workload),
+/// on the runtime's 32x32x1 synthetic-10 input.
 pub fn resnet20() -> NetworkDesc {
-    let mut layers = vec![conv("stem", 3, 3, 16, 32, 32, 1, Padding::Same)];
-    let mut cin = 16;
-    let mut hw = 32;
-    for (s, cout) in [16usize, 32, 64].into_iter().enumerate() {
-        for b in 0..3 {
-            let stride = if s > 0 && b == 0 { 2 } else { 1 };
-            let h_in = hw;
-            if stride == 2 {
-                hw /= 2;
-            }
-            layers.push(conv(&format!("s{s}b{b}c1"), 3, cin, cout, h_in, h_in, stride, Padding::Same));
-            layers.push(conv(&format!("s{s}b{b}c2"), 3, cout, cout, hw, hw, 1, Padding::Same));
-            if cin != cout {
-                layers.push(conv(&format!("s{s}b{b}sc"), 1, cin, cout, h_in, h_in, stride, Padding::Same));
-            }
-            cin = cout;
-        }
-    }
-    layers.push(Layer::GlobalPool { ch: 64, h_in: 8, w_in: 8 });
-    layers.push(Layer::Dense { name: "fc".into(), din: 64, dout: 10 });
-    NetworkDesc { name: "ResNet-20".into(), input: (32, 32, 3), layers }
+    desc("resnet20")
 }
 
-fn resnet_imagenet(name: &str, blocks: &[usize], bottleneck: bool) -> NetworkDesc {
-    let mut layers = vec![conv("stem", 7, 3, 64, 224, 224, 2, Padding::Same)];
-    layers.push(Layer::Pool { name: "maxpool".into(), window: 3, stride: 2, h_in: 112, w_in: 112, ch: 64 });
-    let mut hw = 56usize;
-    let widths = [64usize, 128, 256, 512];
-    let expansion = if bottleneck { 4 } else { 1 };
-    let mut cin = 64;
-    for (s, &n) in blocks.iter().enumerate() {
-        let width = widths[s];
-        for b in 0..n {
-            let stride = if s > 0 && b == 0 { 2 } else { 1 };
-            let h_in = hw;
-            if stride == 2 {
-                hw /= 2;
-            }
-            let pre = format!("s{s}b{b}");
-            if bottleneck {
-                layers.push(conv(&format!("{pre}c1"), 1, cin, width, h_in, h_in, 1, Padding::Same));
-                layers.push(conv(&format!("{pre}c2"), 3, width, width, h_in, h_in, stride, Padding::Same));
-                layers.push(conv(&format!("{pre}c3"), 1, width, width * 4, hw, hw, 1, Padding::Same));
-            } else {
-                layers.push(conv(&format!("{pre}c1"), 3, cin, width, h_in, h_in, stride, Padding::Same));
-                layers.push(conv(&format!("{pre}c2"), 3, width, width, hw, hw, 1, Padding::Same));
-            }
-            let cout = width * expansion;
-            if cin != cout {
-                layers.push(conv(&format!("{pre}sc"), 1, cin, cout, h_in, h_in, stride, Padding::Same));
-            }
-            cin = cout;
-        }
-    }
-    layers.push(Layer::GlobalPool { ch: cin, h_in: 7, w_in: 7 });
-    layers.push(Layer::Dense { name: "fc".into(), din: cin, dout: 1000 });
-    NetworkDesc { name: name.into(), input: (224, 224, 3), layers }
+/// Deeper CIFAR-style ResNet-32 (5 basic blocks per stage).
+pub fn resnet32() -> NetworkDesc {
+    desc("resnet32")
 }
 
 /// ImageNet ResNet-18 — the on-board workload of §4 / S8 "this work" row.
 pub fn resnet18() -> NetworkDesc {
-    resnet_imagenet("ResNet-18", &[2, 2, 2, 2], false)
+    desc("resnet18")
 }
 
 /// ImageNet ResNet-50 — the S6 quantization workload.
 pub fn resnet50() -> NetworkDesc {
-    resnet_imagenet("ResNet-50", &[3, 4, 6, 3], true)
+    desc("resnet50")
 }
 
 /// VGG-16 at 224x224 (S8 comparison rows [11], [42], [36]).
 pub fn vgg16() -> NetworkDesc {
-    let cfg: &[(usize, usize, usize)] = &[
-        // (cin, cout, h_in) per conv; pools between groups
-        (3, 64, 224), (64, 64, 224),
-        (64, 128, 112), (128, 128, 112),
-        (128, 256, 56), (256, 256, 56), (256, 256, 56),
-        (256, 512, 28), (512, 512, 28), (512, 512, 28),
-        (512, 512, 14), (512, 512, 14), (512, 512, 14),
-    ];
-    let mut layers = Vec::new();
-    for (i, &(cin, cout, h)) in cfg.iter().enumerate() {
-        layers.push(conv(&format!("conv{}", i + 1), 3, cin, cout, h, h, 1, Padding::Same));
-    }
-    layers.push(Layer::Dense { name: "fc6".into(), din: 512 * 7 * 7, dout: 4096 });
-    layers.push(Layer::Dense { name: "fc7".into(), din: 4096, dout: 4096 });
-    layers.push(Layer::Dense { name: "fc8".into(), din: 4096, dout: 1000 });
-    NetworkDesc { name: "VGG-16".into(), input: (224, 224, 3), layers }
+    desc("vgg16")
 }
 
 /// AlexNet (S8 comparison rows [28], [26], [2]).  conv2/4/5 use the
 /// original 2-way grouped convolutions (modelled as halved cin).
 pub fn alexnet() -> NetworkDesc {
-    NetworkDesc {
-        name: "AlexNet".into(),
-        input: (227, 227, 3),
-        layers: vec![
-            Layer::Conv(ConvLayer { name: "conv1".into(), kh: 11, kw: 11, cin: 3, cout: 96,
-                h_in: 227, w_in: 227, stride: 4, padding: Padding::Valid }), // -> 55x55
-            Layer::Pool { name: "pool1".into(), window: 3, stride: 2, h_in: 55, w_in: 55, ch: 96 },
-            Layer::Conv(ConvLayer { name: "conv2".into(), kh: 5, kw: 5, cin: 48, cout: 256,
-                h_in: 27, w_in: 27, stride: 1, padding: Padding::Same }),
-            Layer::Pool { name: "pool2".into(), window: 3, stride: 2, h_in: 27, w_in: 27, ch: 256 },
-            conv("conv3", 3, 256, 384, 13, 13, 1, Padding::Same),
-            conv("conv4", 3, 192, 384, 13, 13, 1, Padding::Same),
-            conv("conv5", 3, 192, 256, 13, 13, 1, Padding::Same),
-            Layer::Dense { name: "fc6".into(), din: 256 * 6 * 6, dout: 4096 },
-            Layer::Dense { name: "fc7".into(), din: 4096, dout: 4096 },
-            Layer::Dense { name: "fc8".into(), din: 4096, dout: 1000 },
-        ],
-    }
+    desc("alexnet")
 }
 
-/// Small synthetic-10 ResNet-8 (the CI-scale model the trainer runs).
-pub fn resnet8() -> NetworkDesc {
-    let mut layers = vec![conv("stem", 3, 1, 16, 32, 32, 1, Padding::Same)];
-    let mut cin = 16;
-    let mut hw = 32;
-    for (s, cout) in [16usize, 32, 64].into_iter().enumerate() {
-        let stride = if s > 0 { 2 } else { 1 };
-        let h_in = hw;
-        if stride == 2 {
-            hw /= 2;
-        }
-        layers.push(conv(&format!("s{s}b0c1"), 3, cin, cout, h_in, h_in, stride, Padding::Same));
-        layers.push(conv(&format!("s{s}b0c2"), 3, cout, cout, hw, hw, 1, Padding::Same));
-        if cin != cout {
-            layers.push(conv(&format!("s{s}b0sc"), 1, cin, cout, h_in, h_in, stride, Padding::Same));
-        }
-        cin = cout;
-    }
-    layers.push(Layer::GlobalPool { ch: 64, h_in: 8, w_in: 8 });
-    layers.push(Layer::Dense { name: "fc".into(), din: 64, dout: 10 });
-    NetworkDesc { name: "ResNet-8".into(), input: (32, 32, 1), layers }
-}
-
-/// Look up a network by CLI name.
+/// Look up a network by CLI name (any registered graph).
 pub fn by_name(name: &str) -> Option<NetworkDesc> {
-    match name {
-        "lenet5" => Some(lenet5()),
-        "resnet8" => Some(resnet8()),
-        "resnet18" => Some(resnet18()),
-        "resnet20" => Some(resnet20()),
-        "resnet50" => Some(resnet50()),
-        "vgg16" => Some(vgg16()),
-        "alexnet" => Some(alexnet()),
-        _ => None,
-    }
+    graph::by_name(name).map(|g| g.to_desc())
 }

@@ -1,0 +1,588 @@
+//! The layer-graph IR: ONE compiled op program per architecture.
+//!
+//! The paper's pipeline (adder conv → folded BN → ReLU → pool/residual,
+//! §3.1) used to be transcribed by hand in four executors plus the
+//! hardware descriptors, all of which had to stay in lock-step.  This
+//! module is now the single place a topology is encoded:
+//!
+//! * [`NetGraph`] — a linearized op program ([`Op`]) with canonical
+//!   layer names, strides, padding and channel geometry, compiled once
+//!   per network from the declarative builders below and cached in a
+//!   process-wide registry ([`by_name`] / [`all`]);
+//! * [`Arch`] — the runtime-servable subset of that registry (the
+//!   networks the functional simulator, the quantization planner and
+//!   the serving backend execute); `Arch::graph()` is the program every
+//!   forward pass walks;
+//! * [`NetGraph::to_desc`] — derives the [`NetworkDesc`] the FPGA
+//!   simulator and the S8 comparison tables consume, so report naming
+//!   and runtime naming cannot diverge (`s0b0/c1` everywhere).
+//!
+//! Executors never match on an architecture: they implement the
+//! numeric-domain hooks of [`crate::sim::exec::Domain`] and let
+//! [`crate::sim::exec::run_graph`] drive them.  Adding a network is one
+//! builder function + one registry entry (and, to serve it, one `Arch`
+//! variant) — no executor, planner or synthesizer edits.
+
+use std::sync::OnceLock;
+
+use super::{conv_out_dim, ConvLayer, Layer, NetworkDesc, Padding};
+
+/// One conv + batch-norm stage: the unit both the f32 path (eval-mode
+/// BN) and the int path (BN folded into the accumulator) execute.
+#[derive(Debug, Clone)]
+pub struct ConvBnSpec {
+    /// Canonical parameter/calibration key ("conv1", "s0b0/c1", ...).
+    pub name: String,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub padding: Padding,
+}
+
+/// One dense (classifier-head) layer.
+#[derive(Debug, Clone)]
+pub struct DenseSpec {
+    pub name: String,
+    pub din: usize,
+    pub dout: usize,
+}
+
+/// One op of the linearized network program.  Residual blocks are
+/// expressed as an Open/Close bracket: `ResidualOpen` saves the current
+/// activation, `ResidualClose` adds it back (through the optional
+/// projection conv when the channel count or stride changes).
+#[derive(Debug, Clone)]
+pub enum Op {
+    ConvBn(ConvBnSpec),
+    Relu,
+    /// 2x2/2 average pooling (the LeNet/cnv6 downsampler).
+    AvgPool2,
+    /// Window max pooling — only the descriptor-only ImageNet networks
+    /// use it today, but both execution domains implement it.
+    MaxPool { window: usize, stride: usize },
+    GlobalAvgPool,
+    /// NHWC reshape to (n, 1, 1, h*w*c) before a dense head.
+    Flatten,
+    ResidualOpen,
+    ResidualClose { shortcut: Option<ConvBnSpec> },
+    Dense(DenseSpec),
+}
+
+/// A compiled network program plus its identity and input geometry.
+#[derive(Debug, Clone)]
+pub struct NetGraph {
+    /// Registry/CLI id ("resnet20").
+    pub id: &'static str,
+    /// Display name ("ResNet-20").
+    pub display: &'static str,
+    /// Input (h, w, c).
+    pub input: (usize, usize, usize),
+    pub ops: Vec<Op>,
+}
+
+impl NetGraph {
+    /// Conv specs in forward order; a residual block's projection conv
+    /// follows the block's main-path convs (the order `synth_params`
+    /// draws random weights in — part of the golden-equivalence
+    /// contract with the pre-graph synthesizer).
+    pub fn conv_specs(&self) -> Vec<&ConvBnSpec> {
+        let mut out = Vec::new();
+        for op in &self.ops {
+            match op {
+                Op::ConvBn(c) => out.push(c),
+                Op::ResidualClose { shortcut: Some(c) } => out.push(c),
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Dense specs in forward order.
+    pub fn dense_specs(&self) -> Vec<&DenseSpec> {
+        self.ops.iter()
+            .filter_map(|op| match op {
+                Op::Dense(d) => Some(d),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Derive the hardware-model descriptor from the program: conv,
+    /// pool, global-pool and dense layers with spatial geometry tracked
+    /// through the walk.  Layer names are the graph's canonical names,
+    /// so `Params` keys and report rows agree by construction.
+    pub fn to_desc(&self) -> NetworkDesc {
+        fn push_conv(layers: &mut Vec<Layer>, c: &ConvBnSpec, h_in: usize,
+                     w_in: usize) {
+            layers.push(Layer::Conv(ConvLayer {
+                name: c.name.clone(),
+                kh: c.kh,
+                kw: c.kw,
+                cin: c.cin,
+                cout: c.cout,
+                h_in,
+                w_in,
+                stride: c.stride,
+                padding: c.padding,
+            }));
+        }
+        let (mut h, mut w, mut ch) = self.input;
+        let mut pools = 0usize;
+        let mut saved: Vec<(usize, usize)> = Vec::new();
+        let mut layers = Vec::new();
+        for op in &self.ops {
+            match op {
+                Op::ConvBn(c) => {
+                    push_conv(&mut layers, c, h, w);
+                    h = conv_out_dim(h, c.kh, c.stride, c.padding);
+                    w = conv_out_dim(w, c.kw, c.stride, c.padding);
+                    ch = c.cout;
+                }
+                Op::AvgPool2 => {
+                    pools += 1;
+                    layers.push(Layer::Pool {
+                        name: format!("pool{pools}"),
+                        window: 2,
+                        stride: 2,
+                        h_in: h,
+                        w_in: w,
+                        ch,
+                    });
+                    h /= 2;
+                    w /= 2;
+                }
+                Op::MaxPool { window, stride } => {
+                    pools += 1;
+                    layers.push(Layer::Pool {
+                        name: format!("pool{pools}"),
+                        window: *window,
+                        stride: *stride,
+                        h_in: h,
+                        w_in: w,
+                        ch,
+                    });
+                    h /= *stride;
+                    w /= *stride;
+                }
+                Op::GlobalAvgPool => {
+                    layers.push(Layer::GlobalPool { ch, h_in: h, w_in: w });
+                    h = 1;
+                    w = 1;
+                }
+                Op::ResidualOpen => saved.push((h, w)),
+                Op::ResidualClose { shortcut } => {
+                    let (sh, sw) = saved.pop()
+                        .expect("ResidualClose without ResidualOpen");
+                    if let Some(c) = shortcut {
+                        push_conv(&mut layers, c, sh, sw);
+                        ch = c.cout;
+                    }
+                }
+                Op::Dense(d) => {
+                    layers.push(Layer::Dense {
+                        name: d.name.clone(),
+                        din: d.din,
+                        dout: d.dout,
+                    });
+                }
+                Op::Relu | Op::Flatten => {}
+            }
+        }
+        NetworkDesc {
+            name: self.display.to_string(),
+            input: self.input,
+            layers,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The runtime-servable architectures
+// ---------------------------------------------------------------------------
+
+/// Model architectures the functional runner, the quantization planner
+/// and the serving backend execute (32x32x1 synthetic-10 input).  Every
+/// variant maps to a registry graph; executors contain NO per-arch
+/// code, so a new entry here + a builder below serves end-to-end
+/// (f32, per-call quant, int8/int16 plans, calibration, benches) with
+/// zero executor edits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Lenet5,
+    /// VGG-style plain 6-conv stack (graph-description payoff proof).
+    Cnv6,
+    Resnet8,
+    Resnet20,
+    /// Deeper CIFAR-style residual net (5 blocks per stage).
+    Resnet32,
+}
+
+impl Arch {
+    pub const ALL: [Arch; 5] = [
+        Arch::Lenet5,
+        Arch::Cnv6,
+        Arch::Resnet8,
+        Arch::Resnet20,
+        Arch::Resnet32,
+    ];
+
+    /// Registry/CLI id.
+    pub fn name(self) -> &'static str {
+        match self {
+            Arch::Lenet5 => "lenet5",
+            Arch::Cnv6 => "cnv6",
+            Arch::Resnet8 => "resnet8",
+            Arch::Resnet20 => "resnet20",
+            Arch::Resnet32 => "resnet32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Arch> {
+        Arch::ALL.into_iter().find(|a| a.name() == s)
+    }
+
+    /// `lenet5|cnv6|...` — for CLI error messages.
+    pub fn names_label() -> String {
+        Arch::ALL.map(|a| a.name()).join("|")
+    }
+
+    /// The compiled op program every forward pass, plan build and
+    /// parameter synthesis walks.
+    pub fn graph(self) -> &'static NetGraph {
+        by_name(self.name()).expect("every Arch is registered")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Declarative builders (the ONE place each topology is encoded)
+// ---------------------------------------------------------------------------
+
+fn conv(name: &str, k: usize, cin: usize, cout: usize, stride: usize,
+        padding: Padding) -> ConvBnSpec {
+    ConvBnSpec { name: name.into(), kh: k, kw: k, cin, cout, stride, padding }
+}
+
+fn dense(name: &str, din: usize, dout: usize) -> DenseSpec {
+    DenseSpec { name: name.into(), din, dout }
+}
+
+/// Dense stack with ReLU between layers (not after the logits).
+fn head(ops: &mut Vec<Op>, stack: &[(&str, usize, usize)]) {
+    for (i, &(name, din, dout)) in stack.iter().enumerate() {
+        if i > 0 {
+            ops.push(Op::Relu);
+        }
+        ops.push(Op::Dense(dense(name, din, dout)));
+    }
+}
+
+/// LeNet-5 on 32x32x1 — the fully-on-chip workload of Fig. 5.
+fn lenet5() -> NetGraph {
+    let mut ops = vec![
+        Op::ConvBn(conv("conv1", 5, 1, 6, 1, Padding::Valid)), // -> 28x28x6
+        Op::Relu,
+        Op::AvgPool2,                                          // -> 14x14x6
+        Op::ConvBn(conv("conv2", 5, 6, 16, 1, Padding::Valid)), // -> 10x10x16
+        Op::Relu,
+        Op::AvgPool2,                                          // -> 5x5x16
+        Op::Flatten,
+    ];
+    head(&mut ops, &[("fc1", 400, 120), ("fc2", 120, 84), ("fc3", 84, 10)]);
+    NetGraph { id: "lenet5", display: "LeNet-5", input: (32, 32, 1), ops }
+}
+
+/// VGG-style plain stack: conv pairs at 16/32/64 channels with 2x2
+/// average-pool downsampling — no residuals, multi-conv stages.
+fn cnv6() -> NetGraph {
+    let mut ops = vec![
+        Op::ConvBn(conv("c1", 3, 1, 16, 1, Padding::Same)),
+        Op::Relu,
+        Op::ConvBn(conv("c2", 3, 16, 16, 1, Padding::Same)),
+        Op::Relu,
+        Op::AvgPool2, // -> 16x16
+        Op::ConvBn(conv("c3", 3, 16, 32, 1, Padding::Same)),
+        Op::Relu,
+        Op::ConvBn(conv("c4", 3, 32, 32, 1, Padding::Same)),
+        Op::Relu,
+        Op::AvgPool2, // -> 8x8
+        Op::ConvBn(conv("c5", 3, 32, 64, 1, Padding::Same)),
+        Op::Relu,
+        Op::ConvBn(conv("c6", 3, 64, 64, 1, Padding::Same)),
+        Op::Relu,
+        Op::GlobalAvgPool,
+    ];
+    head(&mut ops, &[("fc", 64, 10)]);
+    NetGraph { id: "cnv6", display: "CNV-6", input: (32, 32, 1), ops }
+}
+
+/// CIFAR-style residual family (stem + 16/32/64 stages of basic
+/// blocks): resnet8 (1 block/stage), resnet20 (3), resnet32 (5).
+fn residual(id: &'static str, display: &'static str,
+            blocks_per_stage: usize) -> NetGraph {
+    let mut ops = vec![
+        Op::ConvBn(conv("stem", 3, 1, 16, 1, Padding::Same)),
+        Op::Relu,
+    ];
+    let mut cin = 16usize;
+    for (s, cout) in [16usize, 32, 64].into_iter().enumerate() {
+        for b in 0..blocks_per_stage {
+            let pre = format!("s{s}b{b}");
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            ops.push(Op::ResidualOpen);
+            ops.push(Op::ConvBn(conv(&format!("{pre}/c1"), 3, cin, cout,
+                                     stride, Padding::Same)));
+            ops.push(Op::Relu);
+            ops.push(Op::ConvBn(conv(&format!("{pre}/c2"), 3, cout, cout, 1,
+                                     Padding::Same)));
+            let shortcut = (cin != cout).then(|| {
+                conv(&format!("{pre}/sc"), 1, cin, cout, stride, Padding::Same)
+            });
+            ops.push(Op::ResidualClose { shortcut });
+            ops.push(Op::Relu);
+            cin = cout;
+        }
+    }
+    ops.push(Op::GlobalAvgPool);
+    head(&mut ops, &[("fc", 64, 10)]);
+    NetGraph { id, display, input: (32, 32, 1), ops }
+}
+
+/// ImageNet residual family (descriptor-only: drives the FPGA model and
+/// the S8 table, no runtime parameters exist).
+fn resnet_imagenet(id: &'static str, display: &'static str, blocks: &[usize],
+                   bottleneck: bool) -> NetGraph {
+    let mut ops = vec![
+        Op::ConvBn(conv("stem", 7, 3, 64, 2, Padding::Same)), // -> 112
+        Op::Relu,
+        Op::MaxPool { window: 3, stride: 2 }, // -> 56
+    ];
+    let widths = [64usize, 128, 256, 512];
+    let expansion = if bottleneck { 4 } else { 1 };
+    let mut cin = 64usize;
+    for (s, &n) in blocks.iter().enumerate() {
+        let width = widths[s];
+        for b in 0..n {
+            let pre = format!("s{s}b{b}");
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            ops.push(Op::ResidualOpen);
+            if bottleneck {
+                ops.push(Op::ConvBn(conv(&format!("{pre}/c1"), 1, cin, width,
+                                         1, Padding::Same)));
+                ops.push(Op::Relu);
+                ops.push(Op::ConvBn(conv(&format!("{pre}/c2"), 3, width, width,
+                                         stride, Padding::Same)));
+                ops.push(Op::Relu);
+                ops.push(Op::ConvBn(conv(&format!("{pre}/c3"), 1, width,
+                                         width * 4, 1, Padding::Same)));
+            } else {
+                ops.push(Op::ConvBn(conv(&format!("{pre}/c1"), 3, cin, width,
+                                         stride, Padding::Same)));
+                ops.push(Op::Relu);
+                ops.push(Op::ConvBn(conv(&format!("{pre}/c2"), 3, width, width,
+                                         1, Padding::Same)));
+            }
+            let cout = width * expansion;
+            let shortcut = (cin != cout).then(|| {
+                conv(&format!("{pre}/sc"), 1, cin, cout, stride, Padding::Same)
+            });
+            ops.push(Op::ResidualClose { shortcut });
+            ops.push(Op::Relu);
+            cin = cout;
+        }
+    }
+    ops.push(Op::GlobalAvgPool);
+    head(&mut ops, &[("fc", cin, 1000)]);
+    NetGraph { id, display, input: (224, 224, 3), ops }
+}
+
+/// VGG-16 at 224x224 (S8 comparison rows): conv groups separated by
+/// 2x2 max pools, three-layer dense head.
+fn vgg16() -> NetGraph {
+    // (cout per conv) per group; cin chains within the plain stack
+    let groups: &[&[usize]] = &[
+        &[64, 64],
+        &[128, 128],
+        &[256, 256, 256],
+        &[512, 512, 512],
+        &[512, 512, 512],
+    ];
+    let mut ops = Vec::new();
+    let mut cin = 3usize;
+    let mut i = 0usize;
+    for g in groups {
+        for &cout in *g {
+            i += 1;
+            ops.push(Op::ConvBn(conv(&format!("conv{i}"), 3, cin, cout, 1,
+                                     Padding::Same)));
+            ops.push(Op::Relu);
+            cin = cout;
+        }
+        ops.push(Op::MaxPool { window: 2, stride: 2 });
+    }
+    ops.push(Op::Flatten);
+    head(&mut ops, &[("fc6", 512 * 7 * 7, 4096), ("fc7", 4096, 4096),
+                     ("fc8", 4096, 1000)]);
+    NetGraph { id: "vgg16", display: "VGG-16", input: (224, 224, 3), ops }
+}
+
+/// AlexNet (S8 comparison rows).  conv2/4/5 use the original 2-way
+/// grouped convolutions, modelled as halved cin — which is why conv
+/// specs carry explicit channel geometry instead of chaining it.
+fn alexnet() -> NetGraph {
+    let mut ops = vec![
+        Op::ConvBn(ConvBnSpec {
+            name: "conv1".into(), kh: 11, kw: 11, cin: 3, cout: 96,
+            stride: 4, padding: Padding::Valid, // -> 55x55
+        }),
+        Op::Relu,
+        Op::MaxPool { window: 3, stride: 2 }, // -> 27x27
+        Op::ConvBn(conv("conv2", 5, 48, 256, 1, Padding::Same)),
+        Op::Relu,
+        Op::MaxPool { window: 3, stride: 2 }, // -> 13x13
+        Op::ConvBn(conv("conv3", 3, 256, 384, 1, Padding::Same)),
+        Op::Relu,
+        Op::ConvBn(conv("conv4", 3, 192, 384, 1, Padding::Same)),
+        Op::Relu,
+        Op::ConvBn(conv("conv5", 3, 192, 256, 1, Padding::Same)),
+        Op::Relu,
+        Op::Flatten,
+    ];
+    head(&mut ops, &[("fc6", 256 * 6 * 6, 4096), ("fc7", 4096, 4096),
+                     ("fc8", 4096, 1000)]);
+    NetGraph { id: "alexnet", display: "AlexNet", input: (227, 227, 3), ops }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Every compiled graph, runtime-servable and descriptor-only alike.
+pub fn all() -> &'static [NetGraph] {
+    static REGISTRY: OnceLock<Vec<NetGraph>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        vec![
+            lenet5(),
+            cnv6(),
+            residual("resnet8", "ResNet-8", 1),
+            residual("resnet20", "ResNet-20", 3),
+            residual("resnet32", "ResNet-32", 5),
+            resnet_imagenet("resnet18", "ResNet-18", &[2, 2, 2, 2], false),
+            resnet_imagenet("resnet50", "ResNet-50", &[3, 4, 6, 3], true),
+            vgg16(),
+            alexnet(),
+        ]
+    })
+}
+
+/// Look up a compiled graph by registry id.
+pub fn by_name(name: &str) -> Option<&'static NetGraph> {
+    all().iter().find(|g| g.id == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique_and_resolvable() {
+        let ids: Vec<&str> = all().iter().map(|g| g.id).collect();
+        for id in &ids {
+            assert!(by_name(id).is_some(), "{id}");
+        }
+        let mut dedup = ids.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "duplicate registry ids");
+    }
+
+    #[test]
+    fn every_arch_is_registered_and_parses() {
+        for a in Arch::ALL {
+            assert_eq!(Arch::parse(a.name()), Some(a));
+            assert_eq!(a.graph().id, a.name());
+            assert_eq!(a.graph().input, (32, 32, 1));
+        }
+        assert_eq!(Arch::parse("nope"), None);
+        assert!(Arch::names_label().contains("cnv6"));
+    }
+
+    #[test]
+    fn residual_brackets_balance() {
+        for g in all() {
+            let mut depth = 0i32;
+            for op in &g.ops {
+                match op {
+                    Op::ResidualOpen => depth += 1,
+                    Op::ResidualClose { .. } => {
+                        depth -= 1;
+                        assert!(depth >= 0, "{}: close before open", g.id);
+                    }
+                    _ => {}
+                }
+            }
+            assert_eq!(depth, 0, "{}: unbalanced residual brackets", g.id);
+        }
+    }
+
+    #[test]
+    fn conv_channels_chain_through_the_program() {
+        // Walking the program, every conv's cin must equal the live
+        // channel count (AlexNet is exempt: grouped convs halve cin).
+        for g in all().iter().filter(|g| g.id != "alexnet") {
+            let mut ch = g.input.2;
+            let mut saved = Vec::new();
+            for op in &g.ops {
+                match op {
+                    Op::ConvBn(c) => {
+                        assert_eq!(c.cin, ch, "{}: {}", g.id, c.name);
+                        ch = c.cout;
+                    }
+                    Op::ResidualOpen => saved.push(ch),
+                    Op::ResidualClose { shortcut } => {
+                        let at_open = saved.pop().unwrap();
+                        if let Some(c) = shortcut {
+                            assert_eq!(c.cin, at_open, "{}: {}", g.id, c.name);
+                            assert_eq!(c.cout, ch, "{}: {}", g.id, c.name);
+                        } else {
+                            assert_eq!(at_open, ch, "{}: identity shortcut \
+                                                     with channel change", g.id);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resnet20_graph_matches_paper_shape() {
+        let g = Arch::Resnet20.graph();
+        // stem + 9 blocks x 2 convs + 2 projection shortcuts
+        assert_eq!(g.conv_specs().len(), 1 + 9 * 2 + 2);
+        assert_eq!(g.dense_specs().len(), 1);
+        let names: Vec<&str> =
+            g.conv_specs().iter().map(|c| c.name.as_str()).collect();
+        assert!(names.contains(&"s1b0/sc"));
+        assert!(names.contains(&"s2b2/c2"));
+        assert!(!names.contains(&"s0b0/sc"), "s0 keeps identity shortcuts");
+    }
+
+    #[test]
+    fn desc_geometry_matches_graph_walk() {
+        let d = Arch::Lenet5.graph().to_desc();
+        let convs: Vec<_> = d.conv_layers().collect();
+        assert_eq!(convs.len(), 2);
+        assert_eq!((convs[0].h_in, convs[0].cin, convs[0].cout), (32, 1, 6));
+        assert_eq!((convs[1].h_in, convs[1].cin, convs[1].cout), (14, 6, 16));
+        let d32 = Arch::Resnet32.graph().to_desc();
+        // 1 stem + 15 blocks x 2 + 2 shortcuts
+        assert_eq!(d32.conv_layers().count(), 1 + 15 * 2 + 2);
+        let dc = Arch::Cnv6.graph().to_desc();
+        assert_eq!(dc.conv_layers().count(), 6);
+        // spatial chain 32 -> 16 -> 8 survives into the descriptor
+        let hs: Vec<usize> = dc.conv_layers().map(|c| c.h_in).collect();
+        assert_eq!(hs, vec![32, 32, 16, 16, 8, 8]);
+    }
+}

@@ -5,8 +5,14 @@
 //! table.  Descriptors cover the paper's evaluation workloads: LeNet-5
 //! (Fig. 5), ResNet-18 (on-board E8), ResNet-20/50 (quantization
 //! experiments) plus VGG-16/AlexNet (S8 comparison rows).
+//!
+//! Every topology is encoded ONCE, as a compiled op program in
+//! [`graph`]; the [`NetworkDesc`] values here are derived from those
+//! programs ([`graph::NetGraph::to_desc`]), so descriptor naming and
+//! runtime naming cannot diverge.
 
 pub mod builders;
+pub mod graph;
 
 pub use builders::*;
 

@@ -27,6 +27,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
+use crate::nn::graph::{NetGraph, Op};
 use crate::nn::Padding;
 use crate::quant::{self, Calibration, LayerCalib, Mode};
 use crate::sim::functional::{Arch, Params, QuantCfg, SimKernel};
@@ -288,11 +289,62 @@ impl Builder<'_> {
     }
 }
 
+/// Compute each conv's post-BN activation grid (`out_exp`) from a
+/// backward walk over the compiled op program: every conv lands its
+/// output straight on the operand grid of the NEXT conv downstream
+/// (ReLU, pooling, flatten and the residual add all preserve the grid),
+/// so inter-layer requantization folds into BN.  A conv feeding the f32
+/// head keeps its own grid (the head dequantizes).  Both inputs of a
+/// residual add — the main-path conv and the projection shortcut —
+/// receive the same target, which is what keeps residual partners on
+/// one grid.
+fn solve_out_exps(b: &Builder, graph: &NetGraph)
+                  -> Result<BTreeMap<String, i32>> {
+    let ops = &graph.ops;
+    let mut target: Option<i32> = None;
+    let mut outs = BTreeMap::new();
+    for (i, op) in ops.iter().enumerate().rev() {
+        match op {
+            // a dense head consumes dequantized f32: no grid constraint
+            Op::Dense(_) => target = None,
+            Op::ConvBn(c) => {
+                let in_e = b.grids(&c.name)?.0;
+                outs.insert(c.name.clone(), target.unwrap_or(in_e));
+                target = Some(in_e);
+            }
+            Op::ResidualClose { shortcut } => {
+                if target.is_none() {
+                    // terminal block (the head dequantizes next): land
+                    // the residual on the main-path conv's own operand
+                    // grid, for both summands
+                    let main = ops[..i].iter().rev()
+                        .find_map(|o| match o {
+                            Op::ConvBn(c) => Some(c.name.as_str()),
+                            _ => None,
+                        })
+                        .ok_or_else(|| anyhow::anyhow!(
+                            "residual block with no main-path conv"))?;
+                    target = Some(b.grids(main)?.0);
+                }
+                if let Some(c) = shortcut {
+                    outs.insert(c.name.clone(),
+                                target.expect("target set above"));
+                }
+            }
+            // grid-preserving ops: ReLU, pooling, flatten, open bracket
+            _ => {}
+        }
+    }
+    Ok(outs)
+}
+
 impl QuantPlan {
-    /// Compile a plan.  Errors (never panics) on missing parameters,
-    /// missing calibration entries or a BN fold that cannot be
-    /// represented — `coordinator::server::start_functional` surfaces
-    /// these to the caller instead of bringing a worker down.
+    /// Compile a plan by walking the architecture's compiled op program
+    /// ([`crate::nn::graph`]) — no per-architecture code.  Errors (never
+    /// panics) on missing parameters, missing calibration entries or a
+    /// BN fold that cannot be represented —
+    /// `coordinator::server::start_functional` surfaces these to the
+    /// caller instead of bringing a worker down.
     pub fn build(params: &Params, arch: Arch, kind: SimKernel, cfg: QuantCfg,
                  calib: &Calibration) -> Result<QuantPlan> {
         anyhow::ensure!((2..=16).contains(&cfg.bits),
@@ -303,71 +355,24 @@ impl QuantPlan {
              accumulator overflows at int{}); the adder kernel serves all \
              widths", cfg.bits);
         let b = Builder { params, kind, cfg, calib };
+        let graph = arch.graph();
+        let out_exps = solve_out_exps(&b, graph)?;
         let mut convs = BTreeMap::new();
         let mut dense = BTreeMap::new();
-        match arch {
-            Arch::Lenet5 => {
-                // conv1's BN lands straight on conv2's operand grid
-                // (avg-pool preserves the grid); conv2, feeding only
-                // the f32 head, keeps its own grid.
-                let (in2, _, _) = b.grids("conv2")?;
-                convs.insert("conv1".to_string(),
-                             b.conv_plan("conv1", 1, Padding::Valid, in2)?);
-                convs.insert("conv2".to_string(),
-                             b.conv_plan("conv2", 1, Padding::Valid, in2)?);
-                for d in ["fc1", "fc2", "fc3"] {
-                    dense.insert(d.to_string(), b.dense_plan(d)?);
-                }
-            }
-            Arch::Resnet8 | Arch::Resnet20 => {
-                let n_blocks = arch.stages();
-                // (prefix, cin, cout, stride) in forward order
-                let mut blocks = Vec::new();
-                let mut cin = 16usize;
-                for (s, cout) in [16usize, 32, 64].into_iter().enumerate() {
-                    for blk in 0..n_blocks {
-                        let stride = if s > 0 && blk == 0 { 2 } else { 1 };
-                        blocks.push((format!("s{s}b{blk}"), cin, cout, stride));
-                        cin = cout;
-                    }
-                }
-                let first_e = b.grids(&format!("{}/c1", blocks[0].0))?.0;
-                convs.insert("stem".to_string(),
-                             b.conv_plan("stem", 1, Padding::Same, first_e)?);
-                for i in 0..blocks.len() {
-                    let (pre, cin, cout, stride) = &blocks[i];
-                    // activation grid after this block's residual+ReLU:
-                    // the next block's c1 operand grid, or — terminal —
-                    // this c2's own grid (the head dequantizes next).
-                    let next_e = if i + 1 < blocks.len() {
-                        b.grids(&format!("{}/c1", blocks[i + 1].0))?.0
-                    } else {
-                        b.grids(&format!("{pre}/c2"))?.0
-                    };
-                    let (c2_in, _, _) = b.grids(&format!("{pre}/c2"))?;
-                    convs.insert(
-                        format!("{pre}/c1"),
-                        b.conv_plan(&format!("{pre}/c1"), *stride,
-                                    Padding::Same, c2_in)?);
-                    convs.insert(
-                        format!("{pre}/c2"),
-                        b.conv_plan(&format!("{pre}/c2"), 1,
-                                    Padding::Same, next_e)?);
-                    if cin != cout {
-                        convs.insert(
-                            format!("{pre}/sc"),
-                            b.conv_plan(&format!("{pre}/sc"), *stride,
-                                        Padding::Same, next_e)?);
-                    }
-                }
-                dense.insert("fc".to_string(), b.dense_plan("fc")?);
-            }
+        for spec in graph.conv_specs() {
+            convs.insert(
+                spec.name.clone(),
+                b.conv_plan(&spec.name, spec.stride, spec.padding,
+                            out_exps[&spec.name])?);
         }
-        let first = match arch {
-            Arch::Lenet5 => "conv1",
-            Arch::Resnet8 | Arch::Resnet20 => "stem",
-        };
-        let input_exp = convs[first].in_exp;
+        for spec in graph.dense_specs() {
+            dense.insert(spec.name.clone(), b.dense_plan(&spec.name)?);
+        }
+        let first = graph.conv_specs().first()
+            .map(|c| c.name.clone())
+            .ok_or_else(|| anyhow::anyhow!(
+                "{}: cannot plan a network with no conv layers", graph.id))?;
+        let input_exp = convs[&first].in_exp;
         Ok(QuantPlan { arch, kind, cfg, convs, dense, input_exp })
     }
 
@@ -559,6 +564,45 @@ mod tests {
                            "{name}");
             }
         }
+    }
+
+    #[test]
+    fn build_covers_every_graph_arch_with_chained_grids() {
+        // The graph walk must plan ANY registered architecture: every
+        // conv spec gets a plan, and each conv lands its activations on
+        // the grid the next conv consumes (pool/relu/residual preserve
+        // grids, the terminal conv keeps its own).
+        for arch in [Arch::Lenet5, Arch::Cnv6, Arch::Resnet8, Arch::Resnet32] {
+            let params = synth_params(arch, 9);
+            let calib: Calibration = params.keys()
+                .filter_map(|k| k.strip_suffix("/conv_w"))
+                .map(|n| (n.to_string(),
+                          LayerCalib { feat_max_abs: 2.0, weight_max_abs: 0.5 }))
+                .collect();
+            let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+            let plan = QuantPlan::build(&params, arch, SimKernel::Adder, cfg,
+                                        &calib).unwrap();
+            let specs = arch.graph().conv_specs();
+            assert_eq!(plan.convs.len(), specs.len(), "{arch:?}");
+            assert_eq!(plan.dense.len(), arch.graph().dense_specs().len());
+            assert_eq!(plan.input_exp, plan.convs[&specs[0].name].in_exp);
+        }
+        // cnv6 is a plain stack: the chain is literal neighbour-to-
+        // neighbour handoff
+        let params = synth_params(Arch::Cnv6, 9);
+        let calib: Calibration = (1..=6)
+            .map(|i| (format!("c{i}"),
+                      LayerCalib { feat_max_abs: 2.0, weight_max_abs: 0.5 }))
+            .collect();
+        let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        let plan = QuantPlan::build(&params, Arch::Cnv6, SimKernel::Adder, cfg,
+                                    &calib).unwrap();
+        for i in 1..6 {
+            assert_eq!(plan.convs[&format!("c{i}")].out_exp,
+                       plan.convs[&format!("c{}", i + 1)].in_exp, "c{i}");
+        }
+        // terminal conv feeds the head on its own grid
+        assert_eq!(plan.convs["c6"].out_exp, plan.convs["c6"].in_exp);
     }
 
     #[test]

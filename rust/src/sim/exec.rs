@@ -1,0 +1,70 @@
+//! Generic graph executor: ONE walk over a compiled
+//! [`crate::nn::graph::NetGraph`] program, parameterized over a
+//! numeric-domain trait.
+//!
+//! The f32 runner ([`crate::sim::functional::Runner`]) and the plan-based
+//! integer runner ([`crate::sim::intpath::PlanRunner`]) are thin
+//! [`Domain`] instantiations of the same walk — they supply conv-block,
+//! relu, pooling, residual-add and head hooks, and [`run_graph`] supplies
+//! the topology.  Executors therefore contain no per-architecture code:
+//! registering a new graph serves it across every domain with zero
+//! executor edits.
+
+use crate::nn::graph::{ConvBnSpec, DenseSpec, NetGraph, Op};
+
+/// Numeric-domain hooks the graph walk drives.  `Act` is the
+/// activation type flowing between ops (dense [`f32` tensors] for the
+/// float domain, an i32/f32 two-phase activation for the plan domain).
+pub trait Domain {
+    type Act: Clone;
+
+    /// Convolution + batch-norm stage (the graph's fused unit).
+    fn conv_bn(&mut self, spec: &ConvBnSpec, x: Self::Act) -> Self::Act;
+    fn relu(&mut self, x: &mut Self::Act);
+    fn avg_pool2(&mut self, x: &Self::Act) -> Self::Act;
+    fn max_pool(&mut self, window: usize, stride: usize, x: &Self::Act)
+                -> Self::Act;
+    fn global_avg_pool(&mut self, x: &Self::Act) -> Self::Act;
+    /// NHWC reshape to (n, 1, 1, h*w*c).
+    fn flatten(&mut self, x: Self::Act) -> Self::Act;
+    /// Close a residual bracket: add `saved` (the activation captured at
+    /// `ResidualOpen`, routed through `shortcut` when present) onto the
+    /// main-path activation `h`.
+    fn residual_add(&mut self, shortcut: Option<&ConvBnSpec>, h: Self::Act,
+                    saved: Self::Act) -> Self::Act;
+    fn dense(&mut self, spec: &DenseSpec, x: Self::Act) -> Self::Act;
+}
+
+/// Execute a compiled network program in `dom`, from input activation
+/// to logits.  Residual brackets nest via a save stack (today's graphs
+/// never nest, but the walk does not care).
+pub fn run_graph<D: Domain>(dom: &mut D, graph: &NetGraph, x: D::Act)
+                            -> D::Act {
+    let mut y = x;
+    let mut saved: Vec<D::Act> = Vec::new();
+    for op in &graph.ops {
+        y = match op {
+            Op::ConvBn(spec) => dom.conv_bn(spec, y),
+            Op::Relu => {
+                dom.relu(&mut y);
+                y
+            }
+            Op::AvgPool2 => dom.avg_pool2(&y),
+            Op::MaxPool { window, stride } => dom.max_pool(*window, *stride, &y),
+            Op::GlobalAvgPool => dom.global_avg_pool(&y),
+            Op::Flatten => dom.flatten(y),
+            Op::ResidualOpen => {
+                saved.push(y.clone());
+                y
+            }
+            Op::ResidualClose { shortcut } => {
+                let s = saved.pop()
+                    .expect("ResidualClose without ResidualOpen");
+                dom.residual_add(shortcut.as_ref(), y, s)
+            }
+            Op::Dense(spec) => dom.dense(spec, y),
+        };
+    }
+    debug_assert!(saved.is_empty(), "unclosed residual bracket");
+    y
+}

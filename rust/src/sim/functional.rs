@@ -1,6 +1,9 @@
 //! Bit-accurate functional model of the accelerator datapath.
 //!
-//! Executes LeNet-5 / ResNet-8/20 forward passes in two modes:
+//! Executes every architecture registered in [`crate::nn::graph`]
+//! (LeNet-5, cnv6, ResNet-8/20/32, ...) by walking the compiled op
+//! program through the generic executor ([`crate::sim::exec`]) in two
+//! modes:
 //!
 //! * **f32** — mirrors `python/compile/model.py` eval semantics exactly
 //!   (cross-validated against the AOT HLO eval graphs in
@@ -28,15 +31,18 @@
 
 use std::collections::BTreeMap;
 
+use crate::nn::graph::{ConvBnSpec, DenseSpec, Op};
 use crate::nn::{self, Padding};
-use crate::quant::{self, Calibration, LayerCalib, Mode};
+use crate::quant::{self, Calibration, LayerCalib, Mode, QuantPlan};
 use crate::util::threads::parallel_chunks;
 use crate::util::XorShift64;
 
+use super::exec::{self, Domain};
 use super::kernels::{self, gather_row, ConvRow, DenseRow, Resolved};
 use super::reference;
 
 pub use super::kernels::{KernelStrategy, SimKernel};
+pub use crate::nn::graph::Arch;
 
 /// Dense NHWC tensor (n = batch).
 #[derive(Debug, Clone, PartialEq)]
@@ -156,9 +162,17 @@ pub fn conv2d_with(strategy: KernelStrategy, x: &Tensor, w: &ConvW,
 /// subtracting: re-grid the finer operand onto the coarser grid (this
 /// throws away bits — the §3.1 motivation).  Returns (xq, wq,
 /// dequantization scale).  Shared by the engine and the naive oracle so
-/// both see identical integer operands.
+/// both see identical integer operands — which makes this the single
+/// choke point where the kernel/width policy ([`QuantPlan::supports`])
+/// is enforced for EVERY per-call quantized conv: mult tap products can
+/// overflow the i32 accumulator past 8-bit operands, so wider mult
+/// grids are refused here instead of silently wrapping.
 pub(crate) fn quant_operands(x: &[f32], w: &[f32], kind: SimKernel, cfg: QuantCfg,
                              calib: &LayerCalib) -> (Vec<i32>, Vec<i32>, f32) {
+    assert!(QuantPlan::supports(kind, cfg.bits),
+            "mult-kernel integer convs cap at 8-bit operands (int{} tap \
+             products overflow the i32 accumulator); the adder kernel \
+             serves all widths", cfg.bits);
     let (xe, we) = match cfg.mode {
         Mode::SharedScale => {
             let e = calib.shared_exp(cfg.bits);
@@ -382,6 +396,39 @@ pub fn global_avg_pool(x: &Tensor) -> Tensor {
     out
 }
 
+/// Window max pooling (floor geometry: out = in / stride; taps past the
+/// input edge are skipped).  Only the descriptor-only ImageNet graphs
+/// carry a MaxPool op today, but the executor domains stay total.
+pub fn max_pool(x: &Tensor, window: usize, stride: usize) -> Tensor {
+    let (n, h, w, c) = x.shape;
+    let (ho, wo) = (h / stride, w / stride);
+    let mut out = Tensor::zeros((n, ho, wo, c));
+    for b in 0..n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                for ci in 0..c {
+                    let mut m = f32::NEG_INFINITY;
+                    for ky in 0..window {
+                        let iy = oh * stride + ky;
+                        if iy >= h {
+                            break;
+                        }
+                        for kx in 0..window {
+                            let ix = ow * stride + kx;
+                            if ix >= w {
+                                break;
+                            }
+                            m = m.max(x.at(b, iy, ix, ci));
+                        }
+                    }
+                    out.data[((b * ho + oh) * wo + ow) * c + ci] = m;
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Dense: x (n, 1, 1, din) @ w (din, dout) + b, under the default
 /// [`KernelStrategy::Auto`] selection, parallel over the batch.
 pub fn dense(x: &Tensor, w: &[f32], bias: &[f32], dout: usize) -> Tensor {
@@ -432,32 +479,10 @@ pub fn argmax_rows(x: &Tensor) -> Vec<usize> {
 /// Named parameter store (loaded from the manifest init/trained bin).
 pub type Params = BTreeMap<String, (Vec<usize>, Vec<f32>)>;
 
-/// Model architectures the functional runner executes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Arch {
-    Lenet5,
-    Resnet8,
-    Resnet20,
-}
-
-impl Arch {
-    pub fn parse(s: &str) -> Option<Arch> {
-        match s {
-            "lenet5" => Some(Arch::Lenet5),
-            "resnet8" => Some(Arch::Resnet8),
-            "resnet20" => Some(Arch::Resnet20),
-            _ => None,
-        }
-    }
-
-    pub fn stages(&self) -> usize {
-        match self {
-            Arch::Lenet5 => 0,
-            Arch::Resnet8 => 1,
-            Arch::Resnet20 => 3,
-        }
-    }
-}
+// `Arch` (the runtime-servable architectures) lives in
+// `crate::nn::graph` next to the compiled op programs; it is
+// re-exported above so existing `sim::functional::Arch` paths keep
+// working.
 
 /// How the conv layers execute.  `Quant` here is the PER-CALL
 /// experiment path (weights re-quantized each forward, activations
@@ -472,9 +497,13 @@ pub enum ExecMode {
 }
 
 /// Forward runner over named params; optionally records per-layer input
-/// feature ranges (the calibration pass / Fig. 3a probe).  For
-/// plan-compiled integer serving, see [`crate::sim::intpath::PlanRunner`],
-/// which mirrors this topology stage for stage in the i32 domain.
+/// feature ranges (the calibration pass / Fig. 3a probe).  The runner is
+/// the f32 instantiation of the generic graph walk
+/// ([`crate::sim::exec`]): `forward` executes the architecture's
+/// compiled op program, and this struct only supplies the numeric-domain
+/// hooks.  For plan-compiled integer serving, see
+/// [`crate::sim::intpath::PlanRunner`] — the i32 instantiation of the
+/// SAME walk.
 pub struct Runner<'a> {
     pub params: &'a Params,
     pub arch: Arch,
@@ -538,58 +567,23 @@ impl<'a> Runner<'a> {
         dense_with(self.strategy, x, wd, bd, ws[1])
     }
 
-    /// Run the forward pass; returns logits (n, 1, 1, 10).
+    /// Run the forward pass by walking the architecture's compiled op
+    /// program ([`crate::nn::graph`]); returns logits (n, 1, 1, 10).
+    ///
+    /// The per-call quantized mode enforces the same kernel/width policy
+    /// as [`QuantPlan::build`]: mult-kernel integer convs cap at 8-bit
+    /// operands, because their tap products can overflow the i32
+    /// accumulator on large-tap layers (the adder kernel — the paper's
+    /// datapath — is provably i32-bounded at every supported width).
     pub fn forward(&mut self, x: &Tensor) -> Tensor {
-        match self.arch {
-            Arch::Lenet5 => {
-                let mut y = self.conv_block("conv1", x.clone(), 1, Padding::Valid);
-                relu(&mut y);
-                let mut y = avg_pool2(&y);
-                y = self.conv_block("conv2", y, 1, Padding::Valid);
-                relu(&mut y);
-                let y = avg_pool2(&y);
-                // flatten (NHWC row-major == jax reshape)
-                let (n, h, w, c) = y.shape;
-                let y = Tensor::new((n, 1, 1, h * w * c), y.data);
-                let mut y = self.dense_layer("fc1", &y);
-                relu(&mut y);
-                let mut y = self.dense_layer("fc2", &y);
-                relu(&mut y);
-                self.dense_layer("fc3", &y)
-            }
-            Arch::Resnet8 | Arch::Resnet20 => {
-                let n_blocks = self.arch.stages();
-                let mut y = self.conv_block("stem", x.clone(), 1, Padding::Same);
-                relu(&mut y);
-                let mut cin = 16;
-                for (s, cout) in [16usize, 32, 64].into_iter().enumerate() {
-                    for b in 0..n_blocks {
-                        let pre = format!("s{s}b{b}");
-                        let stride = if s > 0 && b == 0 { 2 } else { 1 };
-                        let mut h = self.conv_block(&format!("{pre}/c1"),
-                                                    y.clone(), stride, Padding::Same);
-                        relu(&mut h);
-                        let h = self.conv_block(&format!("{pre}/c2"), h, 1,
-                                                Padding::Same);
-                        let sc = if cin != cout {
-                            self.conv_block(&format!("{pre}/sc"), y.clone(),
-                                            stride, Padding::Same)
-                        } else {
-                            y.clone()
-                        };
-                        let mut sum = h;
-                        for (v, s) in sum.data.iter_mut().zip(&sc.data) {
-                            *v += s;
-                        }
-                        relu(&mut sum);
-                        y = sum;
-                        cin = cout;
-                    }
-                }
-                let y = global_avg_pool(&y);
-                self.dense_layer("fc", &y)
-            }
+        if let ExecMode::Quant(cfg) = self.mode {
+            assert!(QuantPlan::supports(self.kind, cfg.bits),
+                    "per-call mult-kernel quantization caps at 8-bit operands \
+                     (int{} tap products overflow the i32 conv accumulator); \
+                     the adder kernel serves all widths", cfg.bits);
         }
+        let graph = self.arch.graph();
+        exec::run_graph(self, graph, x.clone())
     }
 
     /// Batched inference over independently-queued images: stack them
@@ -615,6 +609,58 @@ impl<'a> Runner<'a> {
         (0..images.len())
             .map(|i| logits.data[i * classes..(i + 1) * classes].to_vec())
             .collect()
+    }
+}
+
+/// The f32 numeric domain: activations are dense f32 [`Tensor`]s, convs
+/// run the engine (per-call-quantized in `Quant` mode), BN is the
+/// eval-mode float formula, the head is the dense stack.  This is the
+/// whole architecture-specific surface of the runner — the topology
+/// itself comes from the graph walk.
+impl Domain for Runner<'_> {
+    type Act = Tensor;
+
+    fn conv_bn(&mut self, spec: &ConvBnSpec, x: Tensor) -> Tensor {
+        self.conv_block(&spec.name, x, spec.stride, spec.padding)
+    }
+
+    fn relu(&mut self, x: &mut Tensor) {
+        relu(x);
+    }
+
+    fn avg_pool2(&mut self, x: &Tensor) -> Tensor {
+        avg_pool2(x)
+    }
+
+    fn max_pool(&mut self, window: usize, stride: usize, x: &Tensor) -> Tensor {
+        max_pool(x, window, stride)
+    }
+
+    fn global_avg_pool(&mut self, x: &Tensor) -> Tensor {
+        global_avg_pool(x)
+    }
+
+    fn flatten(&mut self, x: Tensor) -> Tensor {
+        // NHWC row-major == jax reshape
+        let (n, h, w, c) = x.shape;
+        Tensor::new((n, 1, 1, h * w * c), x.data)
+    }
+
+    fn residual_add(&mut self, shortcut: Option<&ConvBnSpec>, h: Tensor,
+                    saved: Tensor) -> Tensor {
+        let sc = match shortcut {
+            Some(spec) => self.conv_bn(spec, saved),
+            None => saved,
+        };
+        let mut sum = h;
+        for (v, s) in sum.data.iter_mut().zip(&sc.data) {
+            *v += s;
+        }
+        sum
+    }
+
+    fn dense(&mut self, spec: &DenseSpec, x: Tensor) -> Tensor {
+        self.dense_layer(&spec.name, &x)
     }
 }
 
@@ -655,34 +701,22 @@ fn synth_dense(p: &mut Params, rng: &mut XorShift64, name: &str,
 /// identity BN stats), shaped for the 32x32x1 synthetic-10 input.  Lets
 /// the engine, the functional serving backend and the offline test/bench
 /// tiers run with no Python-built artifacts.
+///
+/// Walks the architecture's compiled op program in forward order — a
+/// residual block's projection conv after the block's main-path convs —
+/// which is exactly the order the pre-graph synthesizer drew random
+/// weights in, so parameter values are bit-identical across the
+/// refactor for every pre-existing architecture.
 pub fn synth_params(arch: Arch, seed: u64) -> Params {
     let mut rng = XorShift64::new(seed);
     let mut p = Params::new();
-    match arch {
-        Arch::Lenet5 => {
-            synth_conv(&mut p, &mut rng, "conv1", 5, 5, 1, 6);
-            synth_conv(&mut p, &mut rng, "conv2", 5, 5, 6, 16);
-            synth_dense(&mut p, &mut rng, "fc1", 400, 120);
-            synth_dense(&mut p, &mut rng, "fc2", 120, 84);
-            synth_dense(&mut p, &mut rng, "fc3", 84, 10);
-        }
-        Arch::Resnet8 | Arch::Resnet20 => {
-            let n_blocks = arch.stages();
-            synth_conv(&mut p, &mut rng, "stem", 3, 3, 1, 16);
-            let mut cin = 16;
-            for (s, cout) in [16usize, 32, 64].into_iter().enumerate() {
-                for b in 0..n_blocks {
-                    let pre = format!("s{s}b{b}");
-                    synth_conv(&mut p, &mut rng, &format!("{pre}/c1"), 3, 3, cin, cout);
-                    synth_conv(&mut p, &mut rng, &format!("{pre}/c2"), 3, 3, cout, cout);
-                    if cin != cout {
-                        synth_conv(&mut p, &mut rng, &format!("{pre}/sc"), 1, 1,
-                                   cin, cout);
-                    }
-                    cin = cout;
-                }
+    for op in &arch.graph().ops {
+        match op {
+            Op::ConvBn(c) | Op::ResidualClose { shortcut: Some(c) } => {
+                synth_conv(&mut p, &mut rng, &c.name, c.kh, c.kw, c.cin, c.cout);
             }
-            synth_dense(&mut p, &mut rng, "fc", 64, 10);
+            Op::Dense(d) => synth_dense(&mut p, &mut rng, &d.name, d.din, d.dout),
+            _ => {}
         }
     }
     p
@@ -812,8 +846,44 @@ mod tests {
     }
 
     #[test]
+    fn max_pool_window_and_tail() {
+        // 3x3 input, window 2 stride 2: one output, max of the top-left
+        // 2x2 window; the edge row/col is dropped by floor geometry.
+        let x = t((1, 3, 3, 1), vec![1.0, 5.0, 9.0,
+                                     2.0, 3.0, 8.0,
+                                     7.0, 4.0, 6.0]);
+        let y = max_pool(&x, 2, 2);
+        assert_eq!(y.shape, (1, 1, 1, 1));
+        assert_eq!(y.data, vec![5.0]);
+        // window larger than the remaining input clips at the edge
+        let z = max_pool(&x, 3, 1);
+        assert_eq!(z.shape, (1, 3, 3, 1));
+        assert_eq!(z.data[0], 9.0);
+        assert_eq!(z.data[8], 6.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "8-bit")]
+    fn percall_mult_refuses_int16() {
+        // the per-call experiment path enforces QuantPlan::supports —
+        // wide mult plans were already refused at plan build.
+        let params = synth_params(Arch::Lenet5, 11);
+        let calib: Calibration = [("conv1", 1.0f32), ("conv2", 4.0)].iter()
+            .map(|&(n, f)| (n.to_string(),
+                            LayerCalib { feat_max_abs: f, weight_max_abs: 0.5 }))
+            .collect();
+        let mut r = Runner {
+            params: &params, arch: Arch::Lenet5, kind: SimKernel::Mult,
+            strategy: KernelStrategy::Auto,
+            mode: ExecMode::Quant(QuantCfg { bits: 16, mode: Mode::SharedScale }),
+            calib: Some(&calib), observe: None,
+        };
+        r.forward(&Tensor::zeros((1, 32, 32, 1)));
+    }
+
+    #[test]
     fn synth_params_run_every_arch() {
-        for arch in [Arch::Lenet5, Arch::Resnet8] {
+        for arch in [Arch::Lenet5, Arch::Cnv6, Arch::Resnet8] {
             let params = synth_params(arch, 11);
             let x = Tensor::zeros((2, 32, 32, 1));
             let mut r = Runner {

@@ -31,8 +31,10 @@
 //! the same place the per-call path quantize-clamps — so the two paths
 //! clip identically.
 
+use crate::nn::graph::{ConvBnSpec, DenseSpec};
 use crate::quant;
 use crate::quant::plan::{div_round_even, requant_shift, QuantPlan};
+use crate::sim::exec::{self, Domain};
 use crate::sim::functional::{self, KernelStrategy, QConvW, Tensor};
 
 /// Headroom of the inter-stage activation registers over the serving
@@ -139,8 +141,67 @@ pub fn global_avg_pool_int(x: &IntTensor) -> IntTensor {
     IntTensor { data: out, shape: (n, 1, 1, c), exp: x.exp }
 }
 
+/// Integer max pooling over the window (grid/exp unchanged; floor
+/// geometry like the f32 [`functional::max_pool`]).
+pub fn max_pool_int(x: &IntTensor, window: usize, stride: usize) -> IntTensor {
+    let (n, h, w, c) = x.shape;
+    let (ho, wo) = (h / stride, w / stride);
+    let mut out = vec![0i32; n * ho * wo * c];
+    for b in 0..n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                for ci in 0..c {
+                    let mut m = i32::MIN;
+                    for ky in 0..window {
+                        let iy = oh * stride + ky;
+                        if iy >= h {
+                            break;
+                        }
+                        for kx in 0..window {
+                            let ix = ow * stride + kx;
+                            if ix >= w {
+                                break;
+                            }
+                            m = m.max(x.data[((b * h + iy) * w + ix) * c + ci]);
+                        }
+                    }
+                    out[((b * ho + oh) * wo + ow) * c + ci] = m;
+                }
+            }
+        }
+    }
+    IntTensor { data: out, shape: (n, ho, wo, c), exp: x.exp }
+}
+
+/// Activation of the plan domain as it flows through the graph walk:
+/// i32 ([`IntTensor`]) through the whole conv→BN→ReLU→pool/residual
+/// stack, f32 from the first dense layer on (the head dequantizes — the
+/// single int→f32 boundary of the plan path).
+#[derive(Debug, Clone)]
+pub enum IntAct {
+    Int(IntTensor),
+    F32(Tensor),
+}
+
+impl IntAct {
+    fn int(self) -> IntTensor {
+        match self {
+            IntAct::Int(t) => t,
+            IntAct::F32(_) => panic!("int-domain op after the f32 head"),
+        }
+    }
+
+    fn int_ref(&self) -> &IntTensor {
+        match self {
+            IntAct::Int(t) => t,
+            IntAct::F32(_) => panic!("int-domain op after the f32 head"),
+        }
+    }
+}
+
 /// Executes a [`QuantPlan`] under a chosen kernel strategy.  Stateless
 /// and `Sync`: serving workers run one per variant.
+#[derive(Clone, Copy)]
 pub struct PlanRunner<'a> {
     pub plan: &'a QuantPlan,
     pub strategy: KernelStrategy,
@@ -191,76 +252,18 @@ impl PlanRunner<'_> {
         IntTensor { data: acc, shape: oshape, exp: lp.out_exp }
     }
 
-    /// The f32 classifier head (dequantized input, dense stack with
-    /// ReLU between layers, raw logits out).
-    fn head(&self, x: &Tensor, names: &[&str]) -> Tensor {
-        let mut y = x.clone();
-        for (i, name) in names.iter().enumerate() {
-            let dp = self.plan.dense.get(*name)
-                .unwrap_or_else(|| panic!("plan has no dense layer {name}"));
-            y = functional::dense_with(self.strategy, &y, &dp.w, &dp.b, dp.dout);
-            if i + 1 < names.len() {
-                functional::relu(&mut y);
-            }
-        }
-        y
-    }
-
-    /// Run the integer forward pass; returns f32 logits (n, 1, 1, 10).
-    /// Mirrors `Runner::forward`'s topology stage for stage.
+    /// Run the integer forward pass by walking the plan architecture's
+    /// compiled op program ([`crate::nn::graph`]); returns f32 logits
+    /// (n, 1, 1, 10).  The input image is the single f32→int boundary;
+    /// the first dense op of the head is the single int→f32 boundary.
     pub fn forward(&self, x: &Tensor) -> Tensor {
-        let bits = self.plan.cfg.bits;
-        let reg_max = self.reg_max();
-        let q = quantize_input(x, self.plan.input_exp, bits);
-        match self.plan.arch {
-            functional::Arch::Lenet5 => {
-                let mut y = self.conv_block("conv1", &q);
-                relu_int(&mut y);
-                let y = avg_pool2_int(&y);
-                let mut y = self.conv_block("conv2", &y);
-                relu_int(&mut y);
-                let y = avg_pool2_int(&y);
-                // flatten (NHWC row-major == jax reshape)
-                let (n, h, w, c) = y.shape;
-                let y = IntTensor {
-                    data: y.data,
-                    shape: (n, 1, 1, h * w * c),
-                    exp: y.exp,
-                };
-                self.head(&dequantize(&y), &["fc1", "fc2", "fc3"])
-            }
-            functional::Arch::Resnet8 | functional::Arch::Resnet20 => {
-                let n_blocks = self.plan.arch.stages();
-                let mut y = self.conv_block("stem", &q);
-                relu_int(&mut y);
-                let mut cin = 16usize;
-                for (s, cout) in [16usize, 32, 64].into_iter().enumerate() {
-                    for b in 0..n_blocks {
-                        let pre = format!("s{s}b{b}");
-                        let mut h = self.conv_block(&format!("{pre}/c1"), &y);
-                        relu_int(&mut h);
-                        let mut h = self.conv_block(&format!("{pre}/c2"), &h);
-                        // shortcut: a planned conv when channels change,
-                        // else the identity shifted onto the sum grid
-                        let sc = if cin != cout {
-                            self.conv_block(&format!("{pre}/sc"), &y)
-                        } else {
-                            shift_to(&y, h.exp, reg_max)
-                        };
-                        debug_assert_eq!(h.exp, sc.exp,
-                                         "{pre}: residual grids diverge");
-                        // saturating residual add in the DW+2 register
-                        for (v, &s2) in h.data.iter_mut().zip(&sc.data) {
-                            *v = (*v + s2).clamp(-reg_max, reg_max);
-                        }
-                        relu_int(&mut h);
-                        y = h;
-                        cin = cout;
-                    }
-                }
-                let y = global_avg_pool_int(&y);
-                self.head(&dequantize(&y), &["fc"])
-            }
+        let q = quantize_input(x, self.plan.input_exp, self.plan.cfg.bits);
+        let graph = self.plan.arch.graph();
+        let mut dom = *self;
+        match exec::run_graph(&mut dom, graph, IntAct::Int(q)) {
+            IntAct::F32(y) => y,
+            // a headless graph ends int-domain: dequantize the features
+            IntAct::Int(t) => dequantize(&t),
         }
     }
 
@@ -284,6 +287,88 @@ impl PlanRunner<'_> {
         (0..images.len())
             .map(|i| logits.data[i * classes..(i + 1) * classes].to_vec())
             .collect()
+    }
+}
+
+/// The i32 numeric domain: activations stay integer through every conv,
+/// folded-BN, ReLU, pooling and residual stage ([`IntAct::Int`]); the
+/// first dense layer dequantizes and the head runs f32
+/// ([`IntAct::F32`]).  Like the f32 domain, this is the whole
+/// architecture-specific surface — the topology comes from the walk.
+impl Domain for PlanRunner<'_> {
+    type Act = IntAct;
+
+    fn conv_bn(&mut self, spec: &ConvBnSpec, x: IntAct) -> IntAct {
+        IntAct::Int(self.conv_block(&spec.name, x.int_ref()))
+    }
+
+    fn relu(&mut self, x: &mut IntAct) {
+        match x {
+            IntAct::Int(t) => relu_int(t),
+            IntAct::F32(t) => functional::relu(t),
+        }
+    }
+
+    fn avg_pool2(&mut self, x: &IntAct) -> IntAct {
+        IntAct::Int(avg_pool2_int(x.int_ref()))
+    }
+
+    fn max_pool(&mut self, window: usize, stride: usize, x: &IntAct) -> IntAct {
+        IntAct::Int(max_pool_int(x.int_ref(), window, stride))
+    }
+
+    fn global_avg_pool(&mut self, x: &IntAct) -> IntAct {
+        IntAct::Int(global_avg_pool_int(x.int_ref()))
+    }
+
+    fn flatten(&mut self, x: IntAct) -> IntAct {
+        // NHWC row-major == jax reshape; the grid is untouched
+        match x {
+            IntAct::Int(t) => {
+                let (n, h, w, c) = t.shape;
+                IntAct::Int(IntTensor {
+                    data: t.data,
+                    shape: (n, 1, 1, h * w * c),
+                    exp: t.exp,
+                })
+            }
+            IntAct::F32(t) => {
+                let (n, h, w, c) = t.shape;
+                IntAct::F32(Tensor::new((n, 1, 1, h * w * c), t.data))
+            }
+        }
+    }
+
+    fn residual_add(&mut self, shortcut: Option<&ConvBnSpec>, h: IntAct,
+                    saved: IntAct) -> IntAct {
+        let mut h = h.int();
+        let reg_max = self.reg_max();
+        // shortcut: a planned conv when the block projects, else the
+        // identity shifted onto the sum grid
+        let sc = match shortcut {
+            Some(spec) => self.conv_block(&spec.name, saved.int_ref()),
+            None => shift_to(saved.int_ref(), h.exp, reg_max),
+        };
+        debug_assert_eq!(h.exp, sc.exp, "{}: residual grids diverge",
+                         shortcut.map_or("identity", |s| s.name.as_str()));
+        // saturating residual add in the DW+2 register
+        for (v, &s2) in h.data.iter_mut().zip(&sc.data) {
+            *v = (*v + s2).clamp(-reg_max, reg_max);
+        }
+        IntAct::Int(h)
+    }
+
+    fn dense(&mut self, spec: &DenseSpec, x: IntAct) -> IntAct {
+        // the single int -> f32 boundary: dequantize (exact for serving
+        // widths) on head entry, then stay f32 through the dense stack
+        let y = match x {
+            IntAct::Int(t) => dequantize(&t),
+            IntAct::F32(t) => t,
+        };
+        let dp = self.plan.dense.get(&spec.name)
+            .unwrap_or_else(|| panic!("plan has no dense layer {}", spec.name));
+        IntAct::F32(functional::dense_with(self.strategy, &y, &dp.w, &dp.b,
+                                           dp.dout))
     }
 }
 

@@ -9,9 +9,14 @@
 //! gather engine and the single dispatch point; [`intpath`] executes
 //! pre-compiled quantization plans ([`crate::quant::plan`]) with
 //! activations kept in the i32 domain across the conv stack (the
-//! quantized serving path).
+//! quantized serving path).  Whole-model topology lives in ONE place —
+//! the compiled op programs of [`crate::nn::graph`] — and [`exec`]
+//! walks them generically over a numeric-domain trait; the f32
+//! [`functional::Runner`] and the i32 [`intpath::PlanRunner`] are thin
+//! domain instantiations of that walk.
 
 pub mod accelerator;
+pub mod exec;
 pub mod functional;
 pub mod intpath;
 pub mod kernels;

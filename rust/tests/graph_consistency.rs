@@ -1,0 +1,99 @@
+//! Cross-layer naming and geometry consistency for the layer-graph IR:
+//! the compiled op programs in `nn::graph` are the single encoding of
+//! every topology, so the runtime parameter store, the quantization
+//! planner and the derived hardware descriptors must all resolve the
+//! SAME canonical layer names (`s0b0/c1` — no more `s0b0c1` report-side
+//! scheme).
+
+use std::collections::BTreeSet;
+
+use addernet::nn;
+use addernet::nn::graph::{self, Arch};
+use addernet::sim::functional::synth_params;
+
+/// Every graph conv/dense name resolves in BOTH `Params` (the runtime
+/// store) and `NetworkDesc` (the hardware/report descriptor), and the
+/// parameter store contains nothing the graph does not name.
+#[test]
+fn graph_layer_names_resolve_in_params_and_desc() {
+    for arch in Arch::ALL {
+        let g = arch.graph();
+        let params = synth_params(arch, 1);
+        let desc = nn::by_name(arch.name()).unwrap();
+        let desc_convs: BTreeSet<&str> =
+            desc.conv_layers().map(|c| c.name.as_str()).collect();
+        let specs = g.conv_specs();
+        assert_eq!(specs.len(), desc_convs.len(),
+                   "{}: conv count diverges between graph and desc",
+                   arch.name());
+        for c in &specs {
+            for suffix in ["conv_w", "bn_gamma", "bn_beta", "bn_mean",
+                           "bn_var"] {
+                assert!(params.contains_key(&format!("{}/{suffix}", c.name)),
+                        "{}: {}/{suffix} missing from Params",
+                        arch.name(), c.name);
+            }
+            assert!(desc_convs.contains(c.name.as_str()),
+                    "{}: conv {} missing from NetworkDesc",
+                    arch.name(), c.name);
+        }
+        for d in g.dense_specs() {
+            assert!(params.contains_key(&format!("{}/dense_w", d.name)),
+                    "{}: dense {} missing from Params", arch.name(), d.name);
+            assert!(params.contains_key(&format!("{}/dense_b", d.name)));
+        }
+        // no orphans: every parameter belongs to a graph-named layer
+        let graph_names: BTreeSet<&str> = specs.iter()
+            .map(|c| c.name.as_str())
+            .chain(g.dense_specs().iter().map(|d| d.name.as_str()))
+            .collect();
+        for key in params.keys() {
+            let (layer, _) = key.rsplit_once('/')
+                .unwrap_or_else(|| panic!("unscoped param key {key}"));
+            assert!(graph_names.contains(layer),
+                    "{}: orphan parameter {key}", arch.name());
+        }
+    }
+}
+
+/// The runtime naming scheme (`s0b0/c1`) IS the descriptor naming
+/// scheme — the old report-side `s0b0c1` spelling is gone everywhere.
+#[test]
+fn residual_desc_names_use_runtime_scheme() {
+    for id in ["resnet8", "resnet20", "resnet32", "resnet18", "resnet50"] {
+        let desc = nn::by_name(id).unwrap();
+        for c in desc.conv_layers() {
+            if c.name == "stem" {
+                continue;
+            }
+            assert!(c.name.contains('/'),
+                    "{id}: conv {} does not use the s#b#/c# scheme", c.name);
+        }
+    }
+}
+
+/// Derived descriptors stay geometrically sane for every registry
+/// entry, servable or descriptor-only.
+#[test]
+fn derived_descriptors_have_positive_geometry() {
+    for g in graph::all() {
+        let d = g.to_desc();
+        assert!(!d.layers.is_empty(), "{}", g.id);
+        assert!(d.ops() > 0, "{}", g.id);
+        assert!(d.params() > 0, "{}", g.id);
+        for c in d.conv_layers() {
+            assert!(c.h_out() > 0 && c.w_out() > 0, "{}: {}", g.id, c.name);
+        }
+    }
+}
+
+/// The deeper graph-described resnet32 scales as expected relative to
+/// resnet20 (same family, 5 blocks per stage instead of 3).
+#[test]
+fn resnet32_scales_past_resnet20() {
+    let r20 = nn::by_name("resnet20").unwrap();
+    let r32 = nn::by_name("resnet32").unwrap();
+    assert!(r32.params() > r20.params());
+    assert!(r32.ops() > r20.ops());
+    assert_eq!(r32.conv_layers().count(), 1 + 15 * 2 + 2);
+}

@@ -377,6 +377,43 @@ fn functional_server_serves_int8_plan_variant() {
     handle.shutdown();
 }
 
+/// EVERY registered architecture serves end-to-end — f32 AND a compiled
+/// int8 plan — through the functional backend.  Iterating `Arch::ALL`
+/// means a newly registered arch cannot be left out of the smoke test:
+/// if it cannot calibrate, compile a plan or answer requests, this
+/// fails.
+#[test]
+fn all_registered_archs_serve_f32_and_int8() {
+    for arch in addernet::sim::functional::Arch::ALL {
+        let name = format!("{}_adder", arch.name());
+        let f32_cfg = server::FunctionalVariantCfg::synthetic(
+            &name, arch, SimKernel::Adder, 42);
+        let (h, w, c) = f32_cfg.input_hwc;
+        let px = h * w * c;
+        let int_name = format!("{name}_int8");
+        let mut int_cfg = server::FunctionalVariantCfg::synthetic(
+            &int_name, arch, SimKernel::Adder, 42);
+        let (calib, _) = quantrep::calibrate(&int_cfg.params, arch,
+                                             SimKernel::Adder, 4);
+        int_cfg.mode = ExecMode::Quant(QuantCfg { bits: 8,
+                                                  mode: Mode::SharedScale });
+        int_cfg.calib = Some(calib);
+        let handle = server::start_functional(
+            vec![f32_cfg, int_cfg], std::time::Duration::from_millis(1))
+            .unwrap_or_else(|e| panic!("{}: start_functional: {e:#}",
+                                       arch.name()));
+        let b = data::eval_set(2, 19);
+        for v in [&name, &int_name] {
+            let rx = handle.submit(v, b.images[..px].to_vec()).unwrap();
+            let resp = rx.recv()
+                .unwrap_or_else(|_| panic!("{v}: no response"));
+            assert_eq!(resp.logits.len(), 10, "{v}");
+            assert!(resp.logits.iter().all(|l| l.is_finite()), "{v}");
+        }
+        handle.shutdown();
+    }
+}
+
 /// Misconfigured quantized variants fail `start_functional` with a
 /// proper error — no worker is spawned, nothing panics.
 #[test]

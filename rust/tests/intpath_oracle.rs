@@ -16,12 +16,12 @@
 //!   int16/int8.
 
 use addernet::quant::plan::QuantPlan;
-use addernet::quant::{Calibration, Mode};
+use addernet::quant::{Calibration, LayerCalib, Mode};
 use addernet::report::quantrep;
 use addernet::sim::functional::{self, conv2d_quant_with, synth_params, Arch,
                                 ConvW, ExecMode, KernelStrategy, QConvW,
                                 QuantCfg, Runner, SimKernel, Tensor};
-use addernet::sim::intpath::{self, PlanRunner};
+use addernet::sim::intpath::{self, IntTensor, PlanRunner};
 use addernet::util::XorShift64;
 
 const STRATEGIES: [KernelStrategy; 4] = [
@@ -223,6 +223,195 @@ fn separate_scale_plan_executes() {
     }
     for l in logits.iter().skip(1) {
         assert_close(l, &logits[0], 1e-5, "separate-scale cross-strategy");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden pre/post-refactor equivalence: the graph-driven PlanRunner vs
+// a literal transcription of the pre-graph hand-coded integer walk
+// ---------------------------------------------------------------------------
+
+/// Residual-net block tables (prefix, has projection shortcut) written
+/// out literally — the topology as the pre-graph executor hard-coded it.
+const RESNET8_BLOCKS: &[(&str, bool)] = &[
+    ("s0b0", false),
+    ("s1b0", true),
+    ("s2b0", true),
+];
+
+const RESNET20_BLOCKS: &[(&str, bool)] = &[
+    ("s0b0", false),
+    ("s0b1", false),
+    ("s0b2", false),
+    ("s1b0", true),
+    ("s1b1", false),
+    ("s1b2", false),
+    ("s2b0", true),
+    ("s2b1", false),
+    ("s2b2", false),
+];
+
+/// The pre-graph `PlanRunner::conv_block`, verbatim: requant/clamp the
+/// operands, run the strategy-dispatched integer conv, apply folded BN
+/// in the DW+2 register.
+fn legacy_plan_conv_block(plan: &QuantPlan, strategy: KernelStrategy,
+                          name: &str, x: &IntTensor) -> IntTensor {
+    let lp = &plan.convs[name];
+    let qmax = plan.qmax();
+    let xin = if x.exp == lp.in_exp {
+        let mut t = x.clone();
+        for v in t.data.iter_mut() {
+            *v = (*v).clamp(-qmax, qmax);
+        }
+        t
+    } else {
+        intpath::shift_to(x, lp.in_exp, qmax)
+    };
+    let qw = QConvW {
+        data: &lp.wq,
+        kh: lp.kh,
+        kw: lp.kw,
+        cin: lp.cin,
+        cout: lp.cout,
+    };
+    let (mut acc, oshape) = functional::conv2d_int_with(
+        strategy, &xin.data, xin.shape, &qw, lp.stride, lp.padding, plan.kind);
+    let reg_max = plan.qmax() << intpath::HEADROOM_BITS;
+    for (i, v) in acc.iter_mut().enumerate() {
+        *v = lp.bn.apply(*v, i % lp.cout, reg_max);
+    }
+    IntTensor { data: acc, shape: oshape, exp: lp.out_exp }
+}
+
+/// The pre-graph f32 classifier head, verbatim.
+fn legacy_head(plan: &QuantPlan, strategy: KernelStrategy, x: &Tensor,
+               names: &[&str]) -> Tensor {
+    let mut y = x.clone();
+    for (i, name) in names.iter().enumerate() {
+        let dp = &plan.dense[*name];
+        y = functional::dense_with(strategy, &y, &dp.w, &dp.b, dp.dout);
+        if i + 1 < names.len() {
+            functional::relu(&mut y);
+        }
+    }
+    y
+}
+
+/// The pre-graph `PlanRunner::forward` LeNet-5 arm, verbatim.
+fn legacy_plan_forward_lenet(plan: &QuantPlan, strategy: KernelStrategy,
+                             x: &Tensor) -> Tensor {
+    let q = intpath::quantize_input(x, plan.input_exp, plan.cfg.bits);
+    let mut y = legacy_plan_conv_block(plan, strategy, "conv1", &q);
+    intpath::relu_int(&mut y);
+    let y = intpath::avg_pool2_int(&y);
+    let mut y = legacy_plan_conv_block(plan, strategy, "conv2", &y);
+    intpath::relu_int(&mut y);
+    let y = intpath::avg_pool2_int(&y);
+    let (n, h, w, c) = y.shape;
+    let y = IntTensor { data: y.data, shape: (n, 1, 1, h * w * c), exp: y.exp };
+    legacy_head(plan, strategy, &intpath::dequantize(&y),
+                &["fc1", "fc2", "fc3"])
+}
+
+/// The pre-graph `PlanRunner::forward` ResNet arm, verbatim, driven by a
+/// literal block table.
+fn legacy_plan_forward_resnet(plan: &QuantPlan, strategy: KernelStrategy,
+                              x: &Tensor, blocks: &[(&str, bool)]) -> Tensor {
+    let reg_max = plan.qmax() << intpath::HEADROOM_BITS;
+    let q = intpath::quantize_input(x, plan.input_exp, plan.cfg.bits);
+    let mut y = legacy_plan_conv_block(plan, strategy, "stem", &q);
+    intpath::relu_int(&mut y);
+    for &(pre, has_sc) in blocks {
+        let mut h = legacy_plan_conv_block(plan, strategy,
+                                           &format!("{pre}/c1"), &y);
+        intpath::relu_int(&mut h);
+        let mut h = legacy_plan_conv_block(plan, strategy,
+                                           &format!("{pre}/c2"), &h);
+        let sc = if has_sc {
+            legacy_plan_conv_block(plan, strategy, &format!("{pre}/sc"), &y)
+        } else {
+            intpath::shift_to(&y, h.exp, reg_max)
+        };
+        assert_eq!(h.exp, sc.exp, "{pre}: residual grids diverge");
+        for (v, &s2) in h.data.iter_mut().zip(&sc.data) {
+            *v = (*v + s2).clamp(-reg_max, reg_max);
+        }
+        intpath::relu_int(&mut h);
+        y = h;
+    }
+    let y = intpath::global_avg_pool_int(&y);
+    legacy_head(plan, strategy, &intpath::dequantize(&y), &["fc"])
+}
+
+/// The graph-driven `PlanRunner` must reproduce the legacy hand-coded
+/// integer walk BIT-IDENTICALLY (the int stack is i32-exact; the f32
+/// head runs the same ops in the same order) for every pre-existing
+/// architecture, every kernel strategy and both serving widths.
+#[test]
+fn graph_walk_bit_identical_to_legacy_int_walk() {
+    let mut rng = XorShift64::new(4321);
+    let x = rand_tensor(&mut rng, (1, 32, 32, 1), 1.0);
+    for (arch, blocks, widths) in [
+        (Arch::Lenet5, None, &[8u32, 16][..]),
+        (Arch::Resnet8, Some(RESNET8_BLOCKS), &[8][..]),
+        (Arch::Resnet20, Some(RESNET20_BLOCKS), &[8][..]),
+    ] {
+        let params = synth_params(arch, 42);
+        let calib: Calibration = params.keys()
+            .filter_map(|k| k.strip_suffix("/conv_w"))
+            .map(|n| (n.to_string(),
+                      LayerCalib { feat_max_abs: 2.0, weight_max_abs: 0.5 }))
+            .collect();
+        for &bits in widths {
+            let cfg = QuantCfg { bits, mode: Mode::SharedScale };
+            let plan = QuantPlan::build(&params, arch, SimKernel::Adder, cfg,
+                                        &calib).unwrap();
+            for strat in STRATEGIES {
+                let want = match blocks {
+                    None => legacy_plan_forward_lenet(&plan, strat, &x),
+                    Some(b) => legacy_plan_forward_resnet(&plan, strat, &x, b),
+                };
+                let got = PlanRunner { plan: &plan, strategy: strat }
+                    .forward(&x);
+                assert_eq!(got.shape, want.shape,
+                           "{arch:?} int{bits} [{}]", strat.label());
+                assert_eq!(got.data, want.data,
+                           "{arch:?} int{bits} [{}]: graph-walk logits must \
+                            be bit-identical to the legacy walk",
+                           strat.label());
+            }
+        }
+    }
+}
+
+/// The new graph-described architectures run the SAME plan pipeline
+/// with zero executor edits: cross-strategy bit-identity holds for them
+/// exactly as for the hand-coded-era networks.
+#[test]
+fn new_graph_archs_plan_identical_across_strategies() {
+    for arch in [Arch::Cnv6, Arch::Resnet32] {
+        let params = synth_params(arch, 13);
+        let calib: Calibration = params.keys()
+            .filter_map(|k| k.strip_suffix("/conv_w"))
+            .map(|n| (n.to_string(),
+                      LayerCalib { feat_max_abs: 2.0, weight_max_abs: 0.5 }))
+            .collect();
+        let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        let plan = QuantPlan::build(&params, arch, SimKernel::Adder, cfg,
+                                    &calib).unwrap();
+        let mut rng = XorShift64::new(31);
+        let x = rand_tensor(&mut rng, (1, 32, 32, 1), 1.0);
+        let mut logits = Vec::new();
+        for strat in STRATEGIES {
+            let y = PlanRunner { plan: &plan, strategy: strat }.forward(&x);
+            assert_eq!(y.shape, (1, 1, 1, 10), "{arch:?} [{}]", strat.label());
+            assert!(y.data.iter().all(|v| v.is_finite()));
+            logits.push(y.data);
+        }
+        for (i, l) in logits.iter().enumerate().skip(1) {
+            assert_close(l, &logits[0], 1e-5,
+                         &format!("{arch:?} [{}]", STRATEGIES[i].label()));
+        }
     }
 }
 

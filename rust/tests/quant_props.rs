@@ -225,3 +225,69 @@ fn separate_scale_sane_for_mult_kernel() {
     assert!(err <= 0.25 * denom.max(1e-3),
             "int8 separate-scale mult err {err} vs signal {denom}");
 }
+
+/// Grid-chaining property over the layer-graph IR: for EVERY registered
+/// runtime architecture, a compiled plan's requantization chain is
+/// closed — each conv lands its activations exactly on the operand grid
+/// of the conv that consumes them (grid-preserving ops in between), and
+/// the two inputs of every residual add sit on one grid.  This is the
+/// shift-only inter-layer datapath claim, stated over the op program
+/// instead of per-architecture.
+#[test]
+fn plan_grids_chain_over_every_graph_arch() {
+    use addernet::nn::graph::{Arch, Op};
+    use addernet::quant::{Calibration, QuantPlan};
+    use addernet::sim::functional::synth_params;
+
+    for arch in Arch::ALL {
+        let params = synth_params(arch, 17);
+        // deliberately NON-uniform ranges so consecutive layers sit on
+        // different grids and the chain actually has to requantize
+        let calib: Calibration = params.keys()
+            .filter_map(|k| k.strip_suffix("/conv_w"))
+            .enumerate()
+            .map(|(i, n)| (n.to_string(), LayerCalib {
+                feat_max_abs: 0.5 * ((i % 4) + 1) as f32,
+                weight_max_abs: 0.5,
+            }))
+            .collect();
+        let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        let plan = QuantPlan::build(&params, arch, SimKernel::Adder, cfg,
+                                    &calib).unwrap();
+        // walk the program tracking the live grid; pools/relu/flatten
+        // preserve it, convs must consume exactly what the chain holds
+        let mut grid: Option<i32> = Some(plan.input_exp);
+        let mut saved: Vec<Option<i32>> = Vec::new();
+        for op in &arch.graph().ops {
+            match op {
+                Op::ConvBn(c) => {
+                    let cp = &plan.convs[&c.name];
+                    assert_eq!(Some(cp.in_exp), grid,
+                               "{}: {} consumes a grid nobody produced",
+                               arch.name(), c.name);
+                    grid = Some(cp.out_exp);
+                }
+                Op::ResidualOpen => saved.push(grid),
+                Op::ResidualClose { shortcut } => {
+                    let at_open = saved.pop().unwrap();
+                    assert!(at_open.is_some(), "{}: open inside the head",
+                            arch.name());
+                    if let Some(c) = shortcut {
+                        // the projection conv may shift its INPUT onto
+                        // its own operand grid (the executor requantizes
+                        // at conv entry), but its OUTPUT must land on
+                        // the main path's grid: the add is single-grid
+                        let cp = &plan.convs[&c.name];
+                        assert_eq!(Some(cp.out_exp), grid,
+                                   "{}: residual partners diverge at {}",
+                                   arch.name(), c.name);
+                    }
+                    // identity shortcuts are shifted onto `grid` by the
+                    // executor, so the add is single-grid either way
+                }
+                Op::Dense(_) => grid = None, // f32 head: grid-free
+                _ => {}
+            }
+        }
+    }
+}
