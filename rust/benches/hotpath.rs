@@ -138,6 +138,19 @@ fn main() {
     derived.push(("plan_vs_percall".to_string(), percall_s / plan_s));
     derived.push(("plan_vs_f32".to_string(), f32_s / plan_s));
 
+    // int16 plan: since the dense head went integer the adder path is
+    // plan-servable at 16 bits end-to-end — record it next to int8.
+    let qcfg16 = QuantCfg { bits: 16, mode: Mode::SharedScale };
+    let plan16 = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                  qcfg16, &mcalib).unwrap();
+    let (plan16_s, _) = common::time_it(1, 7, || {
+        let r = PlanRunner { plan: &plan16, strategy: KernelStrategy::Auto };
+        std::hint::black_box(r.forward(&xin));
+    });
+    common::report("int16 plan (integer to the logits)", plan16_s, 64.0, "img");
+    derived.push(("e2e_int16_plan_s".to_string(), plan16_s));
+    derived.push(("int16_plan_vs_f32".to_string(), f32_s / plan16_s));
+
     // the graph-described cnv6 architecture rides the same harness with
     // zero executor/bench edits beyond this measurement
     let params6 = synth_params(Arch::Cnv6, 42);

@@ -164,8 +164,16 @@ pub struct FunctionalVariantCfg {
     /// requantizing path.
     pub mode: ExecMode,
     /// Required when `mode` is quantized (`repro calibrate` produces
-    /// one; a missing or incomplete table fails `start_functional`).
+    /// one; a missing or incomplete table fails `start_functional`) —
+    /// unless `plan` is set, which needs no calibration at all.
     pub calib: Option<Calibration>,
+    /// Pre-compiled plan (the `repro serve --plan` cold-start path).
+    /// When set, the worker serves THIS plan directly — `calib` is not
+    /// consulted, no calibration pass runs, and `params` are unused on
+    /// the quantized path (the quantized weights live in the plan).
+    /// `start_functional` validates that `arch`/`kind` match the plan
+    /// and that `mode` is `ExecMode::Quant(plan.cfg)`.
+    pub plan: Option<QuantPlan>,
     /// Input (h, w, c); requests must carry h*w*c floats.
     pub input_hwc: (usize, usize, usize),
     /// Dynamic-batch cap (the functional engine takes any batch size;
@@ -187,6 +195,7 @@ impl FunctionalVariantCfg {
             params: functional::synth_params(arch, seed),
             mode: ExecMode::F32,
             calib: None,
+            plan: None,
             input_hwc: arch.graph().input,
             max_batch: 32,
         }
@@ -202,25 +211,56 @@ impl FunctionalVariantCfg {
 /// error instead of panicking a worker thread later.
 pub fn start_functional(variants: Vec<FunctionalVariantCfg>,
                         batch_window: Duration) -> Result<ServerHandle> {
+    // An empty variant list must be a startup ERROR, not a silently
+    // idle server: callers that filtered every requested variant away
+    // (e.g. unservable quant widths) would otherwise green-light a
+    // server that can answer nothing.
+    anyhow::ensure!(!variants.is_empty(),
+                    "no variants to serve (every requested variant was \
+                     filtered out, or the model list is empty)");
     let metrics: Arc<Mutex<HashMap<String, ServerMetrics>>> =
         Arc::new(Mutex::new(HashMap::new()));
     let mut routes = HashMap::new();
     let mut workers = Vec::new();
-    for v in variants {
+    for mut v in variants {
         anyhow::ensure!(v.max_batch > 0, "variant {}: max_batch must be > 0", v.name);
-        let plan = match v.mode {
-            ExecMode::F32 => None,
-            ExecMode::Quant(cfg) => {
+        let plan = match (v.plan.take(), v.mode) {
+            // imported plan: already compiled and validated layer-by-
+            // layer against its arch graph; just check it was mounted on
+            // a variant that declares the SAME serving config (else the
+            // metrics/CLI would claim one mode while the worker serves
+            // another).
+            (Some(p), mode) => {
+                anyhow::ensure!(
+                    p.arch == v.arch && p.kind == v.kind,
+                    "variant {}: mounted plan was compiled for {}/{}, not \
+                     {}/{}", v.name, p.arch.name(), p.kind.label(),
+                    v.arch.name(), v.kind.label());
+                anyhow::ensure!(
+                    matches!(mode, ExecMode::Quant(cfg) if cfg == p.cfg),
+                    "variant {}: mounts an int{} plan but declares mode \
+                     {:?} — set mode to ExecMode::Quant(plan.cfg)",
+                    v.name, p.cfg.bits, mode);
+                Some(p)
+            }
+            (None, ExecMode::F32) => None,
+            (None, ExecMode::Quant(cfg)) => {
                 let calib = v.calib.as_ref().ok_or_else(|| anyhow::anyhow!(
                     "variant {}: quantized mode requires a calibration table \
-                     (run `repro calibrate`, or serve with --calib)", v.name))?;
+                     (run `repro calibrate`, serve with --calib, or mount a \
+                     compiled plan via --plan)", v.name))?;
                 Some(QuantPlan::build(&v.params, v.arch, v.kind, cfg, calib)
                     .with_context(|| format!(
                         "variant {}: compiling the quantization plan", v.name))?)
             }
         };
         let (tx, rx) = mpsc::channel::<Request>();
-        routes.insert(v.name.clone(), tx);
+        // a duplicate name would silently replace the first variant's
+        // route (its worker exits on disconnect while the CLI reports
+        // both as serving) — refuse at startup instead
+        anyhow::ensure!(routes.insert(v.name.clone(), tx).is_none(),
+                        "duplicate variant name {} (e.g. the same plan \
+                         file listed twice)", v.name);
         let m = metrics.clone();
         workers.push(std::thread::Builder::new()
             .name(format!("fsim-{}", v.name))

@@ -4,10 +4,16 @@
 //!   report <exp>       regenerate a paper table/figure (see DESIGN.md §4)
 //!   train              drive the AOT train-step graph, save weights
 //!   serve              start the batching inference server + load test
-//!                      (--mode int8|int16 serves plan-compiled variants)
+//!                      (--mode int8|int16 serves plan-compiled variants;
+//!                      --plan FILE serves an exported plan with zero
+//!                      calibration)
 //!   calibrate          record per-layer ranges, write a calibration JSON
+//!   plan               compile a QuantPlan and export it as a portable
+//!                      JSON artifact (serve it with serve --plan)
 //!   quantize           shared-scale quantized accuracy via functional sim
 //!   simulate           run the FPGA accelerator simulator on a network
+//!   bench check        compare target/hotpath.json against a committed
+//!                      baseline; nonzero exit on speedup regressions
 //!   info               list artifacts, graphs and networks
 //!
 //! No external CLI crate is vendored; parsing is a tiny flag scanner.
@@ -27,7 +33,8 @@ use addernet::report;
 use addernet::runtime;
 use addernet::quant;
 use addernet::sim::accelerator::{self, AccelConfig};
-use addernet::sim::functional::{Arch, ExecMode, KernelStrategy, QuantCfg, SimKernel};
+use addernet::sim::functional::{Arch, ExecMode, KernelStrategy, Params, QuantCfg,
+                                SimKernel};
 use addernet::util::table::{f, Table};
 use addernet::{data, nn};
 
@@ -86,8 +93,10 @@ fn main() {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "calibrate" => cmd_calibrate(&args),
+        "plan" => cmd_plan(&args),
         "quantize" => cmd_quantize(&args),
         "simulate" => cmd_simulate(&args),
+        "bench" => cmd_bench(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             usage();
@@ -114,12 +123,16 @@ fn usage() {
          repro train [--arch lenet5] [--kernel adder] [--steps 400] [--eval-n 512]\n  \
          repro serve [--backend functional|pjrt] [--models lenet5_adder,lenet5_mult] \
                      [--kernel naive|tiled|simd|auto] [--mode f32|int8|int16] \
-                     [--calib FILE.json] [--requests 512] \
-                     [--window-ms 2] [--max-batch 32]\n  \
+                     [--calib FILE.json] [--plan PLAN.json[,PLAN2.json]] \
+                     [--requests 512] [--window-ms 2] [--max-batch 32]\n  \
          repro calibrate [--arch lenet5] [--kernel adder] [--calib-n 256] \
                      [--out target/calibration.json]\n  \
+         repro plan [--arch lenet5] [--kernel adder] [--mode int8|int16] \
+                     [--calib FILE.json] [--out target/plan.json]\n  \
          repro quantize [--arch lenet5] [--kernel adder] [--bits 8] [--mode shared|separate]\n  \
          repro simulate [--net resnet18] [--kernel adder|mult] [--dw 16] [--parallelism 1024]\n  \
+         repro bench check --baseline bench_baseline.json \
+                     [--current target/hotpath.json] [--tolerance 0.25]\n  \
          repro info",
         report::EXPERIMENTS.join(" ")
     );
@@ -216,6 +229,53 @@ fn serve_functional(args: &Args) -> Result<()> {
                         chosen per model via --models (e.g. lenet5_mult)"))?,
         None => KernelStrategy::Auto,
     };
+    // --plan serves exported QuantPlan artifacts: the cold-start path
+    // with zero calibration (the quantized weights ARE the plan).  It
+    // replaces --models/--mode/--calib, which all describe how to BUILD
+    // a plan this invocation already has.
+    if let Some(paths) = args.flags.get("plan") {
+        anyhow::ensure!(!args.flags.contains_key("calib"),
+                        "--plan and --calib are mutually exclusive (a plan \
+                         already carries its quantized weights)");
+        anyhow::ensure!(!args.flags.contains_key("mode"),
+                        "--plan and --mode are mutually exclusive (the plan \
+                         records its serving width)");
+        if args.flags.contains_key("models") {
+            eprintln!("[serve] --plan given; ignoring --models (plan files \
+                       define the served variants)");
+        }
+        let mut variants = Vec::new();
+        for path in paths.split(',') {
+            let path = path.trim();
+            let plan = quant::plan::plan_from_json(
+                &std::fs::read_to_string(path)
+                    .with_context(|| format!("reading plan {path}"))?)
+                .with_context(|| format!("importing plan {path}"))?;
+            let name = format!("{}_{}_int{}", plan.arch.name(),
+                               plan.kind.label(), plan.cfg.bits);
+            println!("[serve] {name}: plan-compiled variant from {path} \
+                      (no calibration file needed)");
+            // no synthetic params: a plan-mounted worker never reads
+            // them (the quantized weights live in the plan)
+            variants.push(server::FunctionalVariantCfg {
+                name: name.clone(),
+                arch: plan.arch,
+                kind: plan.kind,
+                strategy,
+                params: Params::new(),
+                mode: ExecMode::Quant(plan.cfg),
+                calib: None,
+                input_hwc: plan.arch.graph().input,
+                max_batch: max_batch.max(1),
+                plan: Some(plan),
+            });
+        }
+        println!("[serve] functional backend: {} plan variants, kernel {}, \
+                  window {:?}, max batch {}",
+                 variants.len(), strategy.label(), window, max_batch);
+        let handle = server::start_functional(variants, window)?;
+        return drive_load(handle, n_req);
+    }
     let mode = args.get("mode", "f32");
     let qcfg = match mode.as_str() {
         "f32" => None,
@@ -328,6 +388,133 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     }
     t.print();
     println!("[calibrate] table written to {out}");
+    Ok(())
+}
+
+/// Compile a `QuantPlan` (params + calibration + quant config) and
+/// export it as a portable, versioned JSON artifact.  `repro serve
+/// --plan FILE` then cold-starts from it with no calibration table, no
+/// parameter files and no quantization work at startup.
+fn cmd_plan(args: &Args) -> Result<()> {
+    let dir = art_dir(args);
+    let arch_name = args.get("arch", "lenet5");
+    let kernel = args.get("kernel", "adder");
+    let mode = args.get("mode", "int8");
+    let out = args.get("out", "target/plan.json");
+    let arch = Arch::parse(&arch_name)
+        .with_context(|| format!("arch must be one of {}", Arch::names_label()))?;
+    let kind = SimKernel::parse(&kernel)
+        .with_context(|| format!("functional sim supports adder|mult, got {kernel}"))?;
+    let bits = match mode.as_str() {
+        "int8" => 8,
+        "int16" => 16,
+        m => anyhow::bail!("plan's --mode takes int8|int16, got {m}"),
+    };
+    anyhow::ensure!(quant::QuantPlan::supports(kind, bits),
+                    "mult-kernel plans cap at 8-bit operands (i32 accumulator \
+                     overflow at int{bits}); use --kernel adder for int16");
+    let qcfg = QuantCfg { bits, mode: quant::Mode::SharedScale };
+    let (params, trained, synthetic) =
+        report::quantrep::params_or_synth(&dir, arch, &arch_name, &kernel);
+    let calib = match args.flags.get("calib") {
+        Some(path) => quant::plan::calibration_from_json(
+            &std::fs::read_to_string(path)
+                .with_context(|| format!("reading calibration table {path}"))?)
+            .with_context(|| format!("parsing calibration table {path}"))?,
+        None => {
+            eprintln!("[plan] no --calib table; calibrating on 128 synthetic \
+                       eval images");
+            report::quantrep::calibrate(&params, arch, kind, 128).0
+        }
+    };
+    let plan = quant::QuantPlan::build(&params, arch, kind, qcfg, &calib)
+        .context("compiling the quantization plan")?;
+    let doc = quant::plan::plan_to_json(&plan);
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    std::fs::write(&out, &doc).with_context(|| format!("writing {out}"))?;
+    println!("[plan] {arch_name}/{kernel} int{bits}: {} conv + {} dense \
+              layers, {} bytes -> {out} (trained={trained} \
+              synthetic={synthetic})",
+             plan.convs.len(), plan.dense.len(), doc.len());
+    println!("[plan] serve it with `repro serve --plan {out}` — no \
+              calibration file needed");
+    Ok(())
+}
+
+/// `repro bench check`: compare the freshly-recorded hotpath JSON
+/// against a committed baseline snapshot and exit nonzero when a key
+/// speedup row regressed past the tolerance — the CI bench-regression
+/// gate.  Gated fields are RATIOS (machine-portable), never absolute
+/// medians.
+fn cmd_bench(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("check") => bench_check(args),
+        _ => anyhow::bail!(
+            "usage: repro bench check --baseline FILE \
+             [--current target/hotpath.json] [--tolerance 0.25]"),
+    }
+}
+
+fn bench_check(args: &Args) -> Result<()> {
+    let baseline_path = args.flags.get("baseline").cloned()
+        .context("bench check needs --baseline FILE (the committed snapshot, \
+                  e.g. rust/bench_baseline.json)")?;
+    let current_path = args.get("current", "target/hotpath.json");
+    let tol: f64 = args.get("tolerance", "0.25").parse()
+        .context("--tolerance takes a fraction, e.g. 0.25")?;
+    anyhow::ensure!((0.0..1.0).contains(&tol),
+                    "--tolerance takes a fraction in [0, 1)");
+    let load = |p: &str| -> Result<addernet::util::Json> {
+        addernet::util::Json::parse(
+            &std::fs::read_to_string(p).with_context(|| format!("reading {p} \
+                (run `cargo bench --bench hotpath` first?)"))?)
+            .with_context(|| format!("parsing {p}"))
+    };
+    let base = load(&baseline_path)?;
+    let cur = load(&current_path)?;
+    // The gate covers the three speedup families the engine promises:
+    // blocking+parallelism (tiled vs naive), the lane kernel (simd vs
+    // tiled) and the compiled int8 serving path (plan vs f32, whole
+    // model) — on both the f32 and the integer conv rows.
+    const GATES: &[(&str, &[&str])] = &[
+        ("f32 adder: tiled vs naive",
+         &["results", "f32_adder", "tiled_vs_naive"]),
+        ("f32 adder: simd vs tiled",
+         &["results", "f32_adder", "simd_vs_tiled"]),
+        ("int8 adder: tiled vs naive",
+         &["results", "int8_adder", "tiled_vs_naive"]),
+        ("int8 adder: simd vs tiled",
+         &["results", "int8_adder", "simd_vs_tiled"]),
+        ("int8 plan vs f32 (whole model)",
+         &["derived", "plan_vs_f32"]),
+    ];
+    let mut t = Table::new(
+        &format!("hotpath bench-regression gate (tolerance {:.0}%)",
+                 tol * 100.0),
+        &["speedup row", "baseline", "floor", "current", "status"]);
+    let mut failed = Vec::new();
+    for (label, path) in GATES {
+        let b = base.at(path).and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!(
+                "{baseline_path}: missing {}", path.join(".")))?;
+        let c = cur.at(path).and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!(
+                "{current_path}: missing {}", path.join(".")))?;
+        let floor = b * (1.0 - tol);
+        let ok = c >= floor;
+        t.row(&[label.to_string(), f(b, 2), f(floor, 2), f(c, 2),
+                if ok { "ok" } else { "REGRESSED" }.to_string()]);
+        if !ok {
+            failed.push(format!("{label}: {c:.2}x < floor {floor:.2}x"));
+        }
+    }
+    t.print();
+    anyhow::ensure!(failed.is_empty(),
+                    "hotpath bench regression: {}", failed.join("; "));
+    println!("[bench] all {} gated speedup rows within {:.0}% of the baseline",
+             GATES.len(), tol * 100.0);
     Ok(())
 }
 

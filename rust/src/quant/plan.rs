@@ -18,16 +18,22 @@
 //!   mirroring the shift-not-multiply hardware argument the `hw/`
 //!   gate-count model quantifies.
 //!
-//! [`crate::sim::intpath`] executes a plan keeping activations in the
-//! i32 domain across the whole conv→BN→ReLU→pool chain; the f32
-//! classifier head (a negligible slice of the compute) dequantizes at
-//! the logits.
+//! The **dense classifier head** is compiled too ([`DensePlan`]):
+//! weights quantized once onto their own static pow2 grid, bias folded
+//! onto the i64 accumulator grid, intermediate layers requantizing onto
+//! the next layer's calibrated operand grid.  [`crate::sim::intpath`]
+//! therefore executes a plan keeping activations in the i32 domain from
+//! the input image to the final dense accumulators; f32 appears exactly
+//! once, at the logit rescale.  A plan also serializes as a versioned
+//! JSON artifact ([`plan_to_json`]/[`plan_from_json`]) so serving can
+//! cold-start from the file alone — zero calibration, zero parameter
+//! files (`repro plan` / `repro serve --plan`).
 
 use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
-use crate::nn::graph::{NetGraph, Op};
+use crate::nn::graph::{DenseSpec, NetGraph, Op};
 use crate::nn::Padding;
 use crate::quant::{self, Calibration, LayerCalib, Mode};
 use crate::sim::functional::{Arch, Params, QuantCfg, SimKernel};
@@ -37,6 +43,22 @@ use crate::util::Json;
 /// narrows this per layer when needed so `acc(i32) * mul` always fits
 /// i64 with headroom.
 pub const BN_FRAC_BITS: u32 = 16;
+
+/// Floor on the dense-head grid exponents.  A degenerate calibration
+/// (e.g. an all-zero feature range from identity-BN synthetic weights,
+/// or an all-zero weight tensor) would otherwise drive `scale_exp`
+/// toward 2^-50-ish grids whose folded bias overflows i64.  Coarsening
+/// an exponent never loses range coverage — only resolution, and
+/// 2^-24 steps are already far beyond what a <= 16-bit serving width of
+/// O(1)-ranged values can use.
+pub const DENSE_MIN_EXP: i32 = -24;
+
+/// Exclusive bound on the integer magnitudes a plan serializes: every
+/// plan value must survive the JSON number round trip EXACTLY, and JSON
+/// numbers are f64, whose exact integer range ends at 2^53 (2^53 + 1
+/// already parses to its even neighbour — so the bound is strict, lest
+/// a silently-rounded corrupt value slip through import).
+pub const MAX_PLAN_INT: i64 = 1 << 53;
 
 /// Integer division rounding half to even (`d > 0`) — the integer twin
 /// of [`quant::round_even`], exact at every requantization boundary.
@@ -79,7 +101,7 @@ pub fn requant_shift(v: i64, shift: i32) -> i64 {
 /// AND the inter-layer grid change, so requantization costs nothing
 /// extra; power-of-two BN scales fold to exact powers of two (the
 /// exactness property `tests/quant_props.rs` pins).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BnFold {
     pub mul: Vec<i64>,
     pub add: Vec<i64>,
@@ -145,7 +167,7 @@ fn round_even_i64(x: f64) -> i64 {
 }
 
 /// One conv layer compiled for integer execution.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ConvPlan {
     pub name: String,
     /// Weights quantized once at build time, HWIO, on `2^w_exp`.
@@ -168,19 +190,42 @@ pub struct ConvPlan {
     pub bn: BnFold,
 }
 
-/// The f32 classifier head, copied out of `Params` so a plan serves
-/// without them.
-#[derive(Debug, Clone)]
+/// One dense (classifier-head) layer compiled for integer execution.
+/// The head is multiplicative hardware (a tiny slice of the compute),
+/// so scales compose: activations arrive on `2^in_exp`, weights are
+/// quantized once onto their own static power-of-two grid `2^w_exp`,
+/// and the i64 accumulator therefore sits on `2^acc_exp = 2^(in_exp +
+/// w_exp)` with the bias pre-folded onto that grid.  Intermediate
+/// layers requantize the accumulator onto the NEXT layer's operand grid
+/// (`out_exp = Some(..)`, a pow2 round-to-even shift); the logits layer
+/// (`out_exp = None`) dequantizes straight off the accumulator grid —
+/// the final requant-to-logits rescale, and the plan path's single
+/// int→f32 boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct DensePlan {
     pub name: String,
-    pub w: Vec<f32>,
-    pub b: Vec<f32>,
+    /// Weights quantized once at build time, (din x dout) row-major, on
+    /// `2^w_exp`.
+    pub wq: Vec<i32>,
+    /// Bias folded onto the accumulator grid `2^acc_exp`.
+    pub bq: Vec<i64>,
     pub din: usize,
     pub dout: usize,
+    /// Grid incoming activations are shifted onto (clamped to the
+    /// serving width) before entering the layer — the same operand
+    /// contract the convs have.
+    pub in_exp: i32,
+    pub w_exp: i32,
+    /// `in_exp + w_exp`: products compose scales.
+    pub acc_exp: i32,
+    /// `Some(grid)` — intermediate layer, requantize onto that grid and
+    /// stay integer; `None` — the logits layer, dequantize off
+    /// `acc_exp`.
+    pub out_exp: Option<i32>,
 }
 
 /// A fully-compiled integer inference pipeline for one model.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct QuantPlan {
     pub arch: Arch,
     pub kind: SimKernel,
@@ -275,16 +320,55 @@ impl Builder<'_> {
         })
     }
 
-    fn dense_plan(&self, name: &str) -> Result<DensePlan> {
+    /// Operand grid of one dense layer: the calibrated feature range
+    /// when the table covers it (what `repro calibrate` records since
+    /// the head went integer), else the grid the previous stage already
+    /// produces — a degraded but always-available fallback for conv-only
+    /// calibration tables, where overshooting activations clamp at the
+    /// serving width instead of landing on a wider grid.
+    fn dense_in_exp(&self, name: &str, incoming: i32) -> i32 {
+        match self.calib.get(name) {
+            Some(lc) => quant::scale_exp(lc.feat_max_abs, self.cfg.bits)
+                .max(DENSE_MIN_EXP),
+            None => incoming.max(DENSE_MIN_EXP),
+        }
+    }
+
+    fn dense_plan(&self, spec: &DenseSpec, in_exp: i32, out_exp: Option<i32>)
+                  -> Result<DensePlan> {
+        let name = spec.name.as_str();
         let (ws, wd) = p(self.params, &format!("{name}/dense_w"))?;
         let (_, bd) = p(self.params, &format!("{name}/dense_b"))?;
         anyhow::ensure!(ws.len() == 2, "dense weight for {name} must be (din, dout)");
+        anyhow::ensure!(ws[0] == spec.din && ws[1] == spec.dout,
+                        "dense weight for {name} is {}x{}, graph says {}x{}",
+                        ws[0], ws[1], spec.din, spec.dout);
+        let bits = self.cfg.bits;
+        let w_exp = quant::scale_exp(quant::max_abs(wd), bits)
+            .max(DENSE_MIN_EXP);
+        let wq = quant::quantize_slice(wd, w_exp, bits);
+        let acc_exp = in_exp + w_exp;
+        anyhow::ensure!((-120..=120).contains(&acc_exp),
+                        "dense layer {name}: accumulator grid 2^{acc_exp} out \
+                         of range (corrupt calibration table?)");
+        let bstep = 2f64.powi(-acc_exp);
+        let bq: Vec<i64> = bd.iter()
+            .map(|&v| round_even_i64(v as f64 * bstep))
+            .collect();
+        anyhow::ensure!(bq.iter().all(|v| v.abs() < MAX_PLAN_INT),
+                        "dense layer {name}: folded bias overflows the \
+                         exactly-serializable integer range on the \
+                         2^{acc_exp} accumulator grid");
         Ok(DensePlan {
             name: name.into(),
-            w: wd.to_vec(),
-            b: bd.to_vec(),
+            wq,
+            bq,
             din: ws[0],
             dout: ws[1],
+            in_exp,
+            w_exp,
+            acc_exp,
+            out_exp,
         })
     }
 }
@@ -305,7 +389,9 @@ fn solve_out_exps(b: &Builder, graph: &NetGraph)
     let mut outs = BTreeMap::new();
     for (i, op) in ops.iter().enumerate().rev() {
         match op {
-            // a dense head consumes dequantized f32: no grid constraint
+            // the dense head imposes no grid on the conv stack: it
+            // shifts its operands onto its own calibrated grid at entry
+            // (the head planning lives in `build`)
             Op::Dense(_) => target = None,
             Op::ConvBn(c) => {
                 let in_e = b.grids(&c.name)?.0;
@@ -358,21 +444,43 @@ impl QuantPlan {
         let graph = arch.graph();
         let out_exps = solve_out_exps(&b, graph)?;
         let mut convs = BTreeMap::new();
-        let mut dense = BTreeMap::new();
         for spec in graph.conv_specs() {
             convs.insert(
                 spec.name.clone(),
                 b.conv_plan(&spec.name, spec.stride, spec.padding,
                             out_exps[&spec.name])?);
         }
-        for spec in graph.dense_specs() {
-            dense.insert(spec.name.clone(), b.dense_plan(&spec.name)?);
-        }
         let first = graph.conv_specs().first()
             .map(|c| c.name.clone())
             .ok_or_else(|| anyhow::anyhow!(
                 "{}: cannot plan a network with no conv layers", graph.id))?;
         let input_exp = convs[&first].in_exp;
+        // The integer classifier head: activations enter on the grid the
+        // conv stack hands over (the LAST conv's out grid — ReLU, pools,
+        // flatten and the residual add all preserve it), each layer gets
+        // its own calibrated operand grid, intermediates requantize onto
+        // the next layer's grid and the final layer carries out_exp =
+        // None (dequantize-at-the-logits).
+        let head_in = graph.ops.iter().rev()
+            .find_map(|op| match op {
+                Op::ConvBn(c) => Some(convs[&c.name].out_exp),
+                _ => None,
+            })
+            .unwrap_or(input_exp);
+        let dense_specs = graph.dense_specs();
+        let mut in_exps = Vec::with_capacity(dense_specs.len());
+        let mut chain = head_in;
+        for spec in &dense_specs {
+            let e = b.dense_in_exp(&spec.name, chain);
+            in_exps.push(e);
+            chain = e;
+        }
+        let mut dense = BTreeMap::new();
+        for (i, spec) in dense_specs.iter().enumerate() {
+            let out_exp = in_exps.get(i + 1).copied();
+            dense.insert(spec.name.clone(),
+                         b.dense_plan(spec, in_exps[i], out_exp)?);
+        }
         Ok(QuantPlan { arch, kind, cfg, convs, dense, input_exp })
     }
 
@@ -427,6 +535,325 @@ pub fn calibration_from_json(s: &str) -> Result<Calibration> {
         });
     }
     Ok(calib)
+}
+
+// ---------------------------------------------------------------------------
+// Compiled plans as JSON (repro plan <-> repro serve --plan)
+// ---------------------------------------------------------------------------
+
+/// Format version of the plan JSON.  Bump on any incompatible change;
+/// [`plan_from_json`] refuses other versions with a proper error.
+pub const PLAN_JSON_VERSION: i64 = 1;
+
+fn padding_label(p: Padding) -> &'static str {
+    match p {
+        Padding::Same => "same",
+        Padding::Valid => "valid",
+    }
+}
+
+fn mode_label(m: Mode) -> &'static str {
+    match m {
+        Mode::SharedScale => "shared",
+        Mode::SeparateScale => "separate",
+    }
+}
+
+fn join_ints<T: std::fmt::Display>(v: &[T]) -> String {
+    v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// Serialize a compiled plan as versioned JSON — the portable artifact
+/// `repro plan` writes and `repro serve --plan` cold-starts from with no
+/// calibration table and no parameter files (the quantized weights ARE
+/// the plan).  Every field is an integer or a label, so the round trip
+/// is exact.
+pub fn plan_to_json(plan: &QuantPlan) -> String {
+    let conv_rows: Vec<String> = plan.convs.iter()
+        .map(|(name, c)| format!(
+            "      {:?}: {{\n        \
+             \"kh\": {}, \"kw\": {}, \"cin\": {}, \"cout\": {}, \
+             \"stride\": {}, \"padding\": {:?},\n        \
+             \"in_exp\": {}, \"w_exp\": {}, \"acc_exp\": {}, \
+             \"out_exp\": {}, \"bn_shift\": {},\n        \
+             \"bn_mul\": [{}],\n        \"bn_add\": [{}],\n        \
+             \"wq\": [{}]\n      }}",
+            name, c.kh, c.kw, c.cin, c.cout, c.stride,
+            padding_label(c.padding), c.in_exp, c.w_exp, c.acc_exp,
+            c.out_exp, c.bn.shift, join_ints(&c.bn.mul), join_ints(&c.bn.add),
+            join_ints(&c.wq)))
+        .collect();
+    let dense_rows: Vec<String> = plan.dense.iter()
+        .map(|(name, d)| format!(
+            "      {:?}: {{\n        \
+             \"din\": {}, \"dout\": {},\n        \
+             \"in_exp\": {}, \"w_exp\": {}, \"acc_exp\": {}, \
+             \"out_exp\": {},\n        \
+             \"bq\": [{}],\n        \"wq\": [{}]\n      }}",
+            name, d.din, d.dout, d.in_exp, d.w_exp, d.acc_exp,
+            d.out_exp.map_or("null".to_string(), |e| e.to_string()),
+            join_ints(&d.bq), join_ints(&d.wq)))
+        .collect();
+    format!(
+        "{{\n  \"quant_plan\": {{\n    \
+         \"version\": {},\n    \"arch\": {:?},\n    \"kind\": {:?},\n    \
+         \"mode\": {:?},\n    \"bits\": {},\n    \"input_exp\": {},\n    \
+         \"convs\": {{\n{}\n    }},\n    \"dense\": {{\n{}\n    }}\n  \
+         }}\n}}\n",
+        PLAN_JSON_VERSION, plan.arch.name(), plan.kind.label(),
+        mode_label(plan.cfg.mode), plan.cfg.bits, plan.input_exp,
+        conv_rows.join(",\n"), dense_rows.join(",\n"))
+}
+
+type JsonObj = std::collections::BTreeMap<String, Json>;
+
+fn jfield<'j>(o: &'j JsonObj, key: &str, what: &str) -> Result<&'j Json> {
+    o.get(key).ok_or_else(|| anyhow::anyhow!("{what}: missing field {key:?}"))
+}
+
+fn jint(o: &JsonObj, key: &str, what: &str) -> Result<i64> {
+    let n = jfield(o, key, what)?.as_f64()
+        .ok_or_else(|| anyhow::anyhow!("{what}: {key} must be a number"))?;
+    anyhow::ensure!(n.fract() == 0.0 && n.abs() < MAX_PLAN_INT as f64,
+                    "{what}: {key} must be an exactly-representable \
+                     integer (got {n})");
+    Ok(n as i64)
+}
+
+fn jusize(o: &JsonObj, key: &str, what: &str) -> Result<usize> {
+    let v = jint(o, key, what)?;
+    usize::try_from(v)
+        .map_err(|_| anyhow::anyhow!("{what}: {key} must be non-negative"))
+}
+
+/// Exponents a plan can legitimately carry (the serving grids sit within
+/// a few dozen bits of 2^0; anything wider is a corrupt or hand-mangled
+/// file and must not reach the executor's shifters).
+fn jexp(o: &JsonObj, key: &str, what: &str, bound: i64) -> Result<i32> {
+    let v = jint(o, key, what)?;
+    anyhow::ensure!(v.abs() <= bound,
+                    "{what}: {key} exponent {v} out of range (|e| <= {bound})");
+    Ok(v as i32)
+}
+
+fn jstr<'j>(o: &'j JsonObj, key: &str, what: &str) -> Result<&'j str> {
+    jfield(o, key, what)?.as_str()
+        .ok_or_else(|| anyhow::anyhow!("{what}: {key} must be a string"))
+}
+
+fn ji64_arr(o: &JsonObj, key: &str, what: &str, len: usize) -> Result<Vec<i64>> {
+    let arr = jfield(o, key, what)?.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{what}: {key} must be an array"))?;
+    anyhow::ensure!(arr.len() == len,
+                    "{what}: {key} has {} entries, expected {len}", arr.len());
+    arr.iter()
+        .map(|v| {
+            let n = v.as_f64().ok_or_else(
+                || anyhow::anyhow!("{what}: {key} entries must be numbers"))?;
+            anyhow::ensure!(n.fract() == 0.0 && n.abs() < MAX_PLAN_INT as f64,
+                            "{what}: {key} entries must be \
+                             exactly-representable integers (got {n})");
+            Ok(n as i64)
+        })
+        .collect()
+}
+
+fn jq_arr(o: &JsonObj, key: &str, what: &str, len: usize, qmax: i32)
+          -> Result<Vec<i32>> {
+    let raw = ji64_arr(o, key, what, len)?;
+    raw.into_iter()
+        .map(|v| {
+            anyhow::ensure!(v.abs() <= qmax as i64,
+                            "{what}: {key} value {v} outside the int grid \
+                             (|q| <= {qmax})");
+            Ok(v as i32)
+        })
+        .collect()
+}
+
+/// Parse and validate a plan written by [`plan_to_json`].  Corrupt or
+/// mismatched files — wrong version, unknown arch, a layer set that does
+/// not match the arch's compiled graph, geometry drift, exponents or
+/// quantized values out of range — surface as `anyhow` errors with the
+/// offending layer named; nothing here panics.
+pub fn plan_from_json(s: &str) -> Result<QuantPlan> {
+    let j = Json::parse(s).context("parsing quantization plan JSON")?;
+    let p = j.get("quant_plan").and_then(|v| v.as_obj())
+        .ok_or_else(|| anyhow::anyhow!(
+            "plan JSON needs a top-level \"quant_plan\" object"))?;
+    let version = jint(p, "version", "plan")?;
+    anyhow::ensure!(version == PLAN_JSON_VERSION,
+                    "unsupported plan version {version} (this build reads \
+                     version {PLAN_JSON_VERSION}; re-run `repro plan`)");
+    let arch_s = jstr(p, "arch", "plan")?;
+    let arch = Arch::parse(arch_s).ok_or_else(|| anyhow::anyhow!(
+        "plan is for unknown arch {arch_s:?} (this build serves {})",
+        Arch::names_label()))?;
+    let kind_s = jstr(p, "kind", "plan")?;
+    let kind = SimKernel::parse(kind_s).ok_or_else(|| anyhow::anyhow!(
+        "plan kind must be adder|mult, got {kind_s:?}"))?;
+    let mode = match jstr(p, "mode", "plan")? {
+        "shared" => Mode::SharedScale,
+        "separate" => Mode::SeparateScale,
+        m => anyhow::bail!("plan mode must be shared|separate, got {m:?}"),
+    };
+    let bits = jint(p, "bits", "plan")?;
+    anyhow::ensure!((2..=16).contains(&bits),
+                    "plan bits {bits} out of range (2..=16)");
+    let bits = bits as u32;
+    anyhow::ensure!(QuantPlan::supports(kind, bits),
+                    "plan is int{bits} on the mult kernel, which the i32 \
+                     conv accumulator cannot serve (mult caps at 8 bits)");
+    let qmax = quant::qmax(bits);
+    let input_exp = jexp(p, "input_exp", "plan", 64)?;
+    let graph = arch.graph();
+
+    let convs_obj = jfield(p, "convs", "plan")?.as_obj()
+        .ok_or_else(|| anyhow::anyhow!("plan \"convs\" must be an object"))?;
+    let conv_specs = graph.conv_specs();
+    anyhow::ensure!(
+        convs_obj.len() == conv_specs.len(),
+        "plan has {} conv layers, arch {arch_s} has {} (arch mismatch?)",
+        convs_obj.len(), conv_specs.len());
+    let mut convs = BTreeMap::new();
+    for spec in conv_specs {
+        let name = spec.name.as_str();
+        let what = format!("conv layer {name}");
+        let o = convs_obj.get(name)
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow::anyhow!(
+                "plan is missing {what} of arch {arch_s} (arch mismatch?)"))?;
+        let geom = (jusize(o, "kh", &what)?, jusize(o, "kw", &what)?,
+                    jusize(o, "cin", &what)?, jusize(o, "cout", &what)?,
+                    jusize(o, "stride", &what)?);
+        anyhow::ensure!(
+            geom == (spec.kh, spec.kw, spec.cin, spec.cout, spec.stride),
+            "{what}: geometry {geom:?} does not match the {arch_s} graph \
+             {:?} (plan built for a different architecture?)",
+            (spec.kh, spec.kw, spec.cin, spec.cout, spec.stride));
+        let padding = match jstr(o, "padding", &what)? {
+            "same" => Padding::Same,
+            "valid" => Padding::Valid,
+            pd => anyhow::bail!("{what}: padding must be same|valid, got {pd:?}"),
+        };
+        anyhow::ensure!(padding == spec.padding,
+                        "{what}: padding does not match the {arch_s} graph");
+        let shift = jint(o, "bn_shift", &what)?;
+        anyhow::ensure!((0..=62).contains(&shift),
+                        "{what}: bn_shift {shift} out of range (0..=62)");
+        let mul = ji64_arr(o, "bn_mul", &what, spec.cout)?;
+        // fold_bn keeps |mul| <= 2^30 by construction; past 2^31 the
+        // executor's `acc(i32) * mul` product can overflow i64, so a
+        // corrupt multiplier must be refused here, not wrap at serve
+        // time.
+        anyhow::ensure!(mul.iter().all(|v| v.abs() <= 1i64 << 31),
+                        "{what}: bn_mul out of range (|mul| <= 2^31)");
+        let bn = BnFold {
+            mul,
+            add: ji64_arr(o, "bn_add", &what, spec.cout)?,
+            shift: shift as u32,
+        };
+        convs.insert(name.to_string(), ConvPlan {
+            name: name.to_string(),
+            wq: jq_arr(o, "wq", &what,
+                       spec.kh * spec.kw * spec.cin * spec.cout, qmax)?,
+            kh: spec.kh,
+            kw: spec.kw,
+            cin: spec.cin,
+            cout: spec.cout,
+            stride: spec.stride,
+            padding,
+            in_exp: jexp(o, "in_exp", &what, 64)?,
+            w_exp: jexp(o, "w_exp", &what, 64)?,
+            acc_exp: jexp(o, "acc_exp", &what, 128)?,
+            out_exp: jexp(o, "out_exp", &what, 64)?,
+            bn,
+        });
+    }
+    let first = graph.conv_specs().first()
+        .map(|c| c.name.clone())
+        .ok_or_else(|| anyhow::anyhow!(
+            "{arch_s}: cannot serve a plan for a network with no convs"))?;
+    anyhow::ensure!(convs[&first].in_exp == input_exp,
+                    "plan input_exp {input_exp} does not match the first \
+                     conv layer's operand grid {}", convs[&first].in_exp);
+    // Re-establish the residual-grid invariant `solve_out_exps`
+    // guarantees at build time: a projection shortcut must land its
+    // output on the SAME grid as the block's main-path conv, because
+    // the executor adds the two without a requantization step (it only
+    // debug-asserts the match — an untrusted file must not reach it
+    // with diverging grids).
+    let mut cur_conv: Option<&str> = None;
+    for op in &graph.ops {
+        match op {
+            Op::ConvBn(c) => cur_conv = Some(c.name.as_str()),
+            Op::ResidualClose { shortcut: Some(c) } => {
+                let main = cur_conv.ok_or_else(|| anyhow::anyhow!(
+                    "{arch_s}: residual block with no main-path conv"))?;
+                anyhow::ensure!(
+                    convs[&c.name].out_exp == convs[main].out_exp,
+                    "conv layer {}: residual partners sit on different \
+                     grids (2^{} vs {}'s 2^{})", c.name,
+                    convs[&c.name].out_exp, main, convs[main].out_exp);
+            }
+            _ => {}
+        }
+    }
+
+    let dense_obj = jfield(p, "dense", "plan")?.as_obj()
+        .ok_or_else(|| anyhow::anyhow!("plan \"dense\" must be an object"))?;
+    let dense_specs = graph.dense_specs();
+    anyhow::ensure!(
+        dense_obj.len() == dense_specs.len(),
+        "plan has {} dense layers, arch {arch_s} has {} (arch mismatch?)",
+        dense_obj.len(), dense_specs.len());
+    let mut dense = BTreeMap::new();
+    for (i, spec) in dense_specs.iter().enumerate() {
+        let name = spec.name.as_str();
+        let what = format!("dense layer {name}");
+        let o = dense_obj.get(name)
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow::anyhow!(
+                "plan is missing {what} of arch {arch_s} (arch mismatch?)"))?;
+        let (din, dout) = (jusize(o, "din", &what)?, jusize(o, "dout", &what)?);
+        anyhow::ensure!((din, dout) == (spec.din, spec.dout),
+                        "{what}: shape {din}x{dout} does not match the \
+                         {arch_s} graph {}x{}", spec.din, spec.dout);
+        let in_exp = jexp(o, "in_exp", &what, 64)?;
+        let w_exp = jexp(o, "w_exp", &what, 64)?;
+        let acc_exp = jexp(o, "acc_exp", &what, 128)?;
+        anyhow::ensure!(acc_exp == in_exp + w_exp,
+                        "{what}: accumulator grid {acc_exp} is not in_exp + \
+                         w_exp ({} + {})", in_exp, w_exp);
+        let last = i + 1 == dense_specs.len();
+        let out_exp = if matches!(jfield(o, "out_exp", &what)?, Json::Null) {
+            None
+        } else {
+            Some(jexp(o, "out_exp", &what, 64)?)
+        };
+        anyhow::ensure!(out_exp.is_none() == last,
+                        "{what}: only the final dense layer dequantizes at \
+                         the logits (out_exp = null)");
+        dense.insert(name.to_string(), DensePlan {
+            name: name.to_string(),
+            wq: jq_arr(o, "wq", &what, din * dout, qmax)?,
+            bq: ji64_arr(o, "bq", &what, dout)?,
+            din,
+            dout,
+            in_exp,
+            w_exp,
+            acc_exp,
+            out_exp,
+        });
+    }
+    Ok(QuantPlan {
+        arch,
+        kind,
+        cfg: QuantCfg { bits, mode },
+        convs,
+        dense,
+        input_exp,
+    })
 }
 
 #[cfg(test)]
@@ -623,6 +1050,95 @@ mod tests {
         let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
         assert!(QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
                                  cfg, &calib).is_err());
+    }
+
+    #[test]
+    fn dense_head_chains_grids_and_folds_bias() {
+        let params = synth_params(Arch::Lenet5, 9);
+        let mut calib = demo_calib(&["conv1", "conv2"]);
+        calib.insert("fc1".into(),
+                     LayerCalib { feat_max_abs: 2.0, weight_max_abs: 0.5 });
+        calib.insert("fc2".into(),
+                     LayerCalib { feat_max_abs: 4.0, weight_max_abs: 0.5 });
+        calib.insert("fc3".into(),
+                     LayerCalib { feat_max_abs: 1.0, weight_max_abs: 0.5 });
+        let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        let plan = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                    cfg, &calib).unwrap();
+        let fc1 = &plan.dense["fc1"];
+        let fc2 = &plan.dense["fc2"];
+        let fc3 = &plan.dense["fc3"];
+        // calibrated operand grids, intermediates landing on the NEXT
+        // layer's grid, the final layer dequantizing at the logits
+        assert_eq!(fc1.in_exp, quant::scale_exp(2.0, 8));
+        assert_eq!(fc1.out_exp, Some(fc2.in_exp));
+        assert_eq!(fc2.out_exp, Some(fc3.in_exp));
+        assert_eq!(fc3.out_exp, None);
+        // products compose scales; weights sit on their own static grid
+        for fc in [fc1, fc2, fc3] {
+            assert_eq!(fc.acc_exp, fc.in_exp + fc.w_exp, "{}", fc.name);
+            assert!(fc.wq.iter().all(|&v| v.abs() <= quant::qmax(8)),
+                    "{}", fc.name);
+        }
+        assert_eq!(fc1.wq.len(), 400 * 120);
+        assert_eq!(fc1.bq.len(), 120);
+        // the folded bias reproduces the f32 bias on the acc grid
+        let (_, bd) = &params["fc1/dense_b"];
+        let step = 2f64.powi(fc1.acc_exp);
+        for (q, b) in fc1.bq.iter().zip(bd) {
+            assert!((*q as f64 * step - *b as f64).abs() <= step,
+                    "{q} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dense_head_falls_back_to_incoming_grid_without_calibration() {
+        // conv-only calibration tables (the pre-dense-head format) still
+        // build: uncalibrated dense layers inherit the incoming grid.
+        let params = synth_params(Arch::Lenet5, 9);
+        let calib = demo_calib(&["conv1", "conv2"]);
+        let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        let plan = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                    cfg, &calib).unwrap();
+        assert_eq!(plan.dense["fc1"].in_exp, plan.convs["conv2"].out_exp);
+        assert_eq!(plan.dense["fc2"].in_exp, plan.dense["fc1"].in_exp);
+        assert_eq!(plan.dense["fc3"].out_exp, None);
+    }
+
+    #[test]
+    fn plan_json_round_trips_exactly() {
+        for arch in [Arch::Lenet5, Arch::Resnet8] {
+            let params = synth_params(arch, 9);
+            let calib: Calibration = params.keys()
+                .filter_map(|k| k.strip_suffix("/conv_w"))
+                .map(|n| (n.to_string(),
+                          LayerCalib { feat_max_abs: 2.0, weight_max_abs: 0.5 }))
+                .collect();
+            for bits in [8u32, 16] {
+                let cfg = QuantCfg { bits, mode: Mode::SharedScale };
+                let plan = QuantPlan::build(&params, arch, SimKernel::Adder,
+                                            cfg, &calib).unwrap();
+                let back = plan_from_json(&plan_to_json(&plan))
+                    .unwrap_or_else(|e| panic!("{arch:?} int{bits}: {e:#}"));
+                assert_eq!(back, plan, "{arch:?} int{bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_json_rejects_garbage_and_bad_versions() {
+        assert!(plan_from_json("nonsense").is_err());
+        assert!(plan_from_json("{}").is_err());
+        assert!(plan_from_json("{\"quant_plan\": {}}").is_err());
+        let params = synth_params(Arch::Lenet5, 9);
+        let calib = demo_calib(&["conv1", "conv2"]);
+        let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+        let plan = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                    cfg, &calib).unwrap();
+        let doc = plan_to_json(&plan);
+        let bumped = doc.replace("\"version\": 1", "\"version\": 99");
+        let err = plan_from_json(&bumped).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
     }
 
     #[test]

@@ -38,7 +38,7 @@ use crate::util::threads::parallel_chunks;
 use crate::util::XorShift64;
 
 use super::exec::{self, Domain};
-use super::kernels::{self, gather_row, ConvRow, DenseRow, Resolved};
+use super::kernels::{self, gather_row, ConvRow, DenseIntRow, DenseRow, Resolved};
 use super::reference;
 
 pub use super::kernels::{KernelStrategy, SimKernel};
@@ -76,7 +76,7 @@ impl Tensor {
 }
 
 /// Quantization configuration for the integer mode.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct QuantCfg {
     pub bits: u32,
     pub mode: Mode,
@@ -103,6 +103,15 @@ pub struct QConvW<'a> {
     pub kw: usize,
     pub cin: usize,
     pub cout: usize,
+}
+
+/// Pre-quantized dense weights, (din x dout) row-major like the f32
+/// head.  A [`crate::quant::plan::QuantPlan`]'s dense layers hold these.
+#[derive(Debug, Clone)]
+pub struct QDenseW<'a> {
+    pub data: &'a [i32],
+    pub din: usize,
+    pub dout: usize,
 }
 
 // ---------------------------------------------------------------------------
@@ -459,6 +468,41 @@ pub fn dense_with(strategy: KernelStrategy, x: &Tensor, w: &[f32],
     out
 }
 
+/// Integer dense over ALREADY-quantized operands — the classifier-head
+/// twin of [`conv2d_int_with`], dispatched through the same
+/// [`KernelStrategy`] subsystem (`Naive` routes to the reference loop in
+/// [`super::reference`]).  `xq` is `n` rows of `w.din` i32 operands;
+/// `bias` is the integer bias pre-folded onto the accumulator grid.
+/// Returns the raw widened accumulators (one i64 per output — a single
+/// int16 tap product already exceeds i32, so the dense accumulator is
+/// 64-bit where the conv accumulator's i32 bound sufficed); callers own
+/// the requantization story.  All strategies accumulate inputs in
+/// ascending order with an exact zero-skip, and i64 integer addition is
+/// order-independent, so outputs are bit-identical across
+/// `Naive`/`Tiled`/`Simd`.
+pub fn dense_int_with(strategy: KernelStrategy, xq: &[i32], n: usize,
+                      w: &QDenseW, bias: &[i64]) -> Vec<i64> {
+    let (din, dout) = (w.din, w.dout);
+    assert_eq!(xq.len(), n * din, "dense int input size mismatch");
+    assert_eq!(w.data.len(), din * dout, "dense int weight size mismatch");
+    assert_eq!(bias.len(), dout, "dense int bias size mismatch");
+    let krow: DenseIntRow = match strategy.resolve(dout) {
+        Resolved::Naive => return reference::dense_int(xq, n, w, bias),
+        Resolved::Tiled => kernels::tiled::dense_int_row,
+        Resolved::Simd => kernels::simd::dense_int_row,
+    };
+    let mut out = vec![0i64; n * dout];
+    if out.is_empty() {
+        return out;
+    }
+    let threads = max_threads_for(n * din * dout);
+    let wdat = w.data;
+    parallel_chunks(&mut out, dout, threads, |b, orow| {
+        krow(&xq[b * din..(b + 1) * din], wdat, bias, dout, orow);
+    });
+    out
+}
+
 pub fn argmax_rows(x: &Tensor) -> Vec<usize> {
     let (n, _, _, c) = x.shape;
     (0..n)
@@ -660,6 +704,16 @@ impl Domain for Runner<'_> {
     }
 
     fn dense(&mut self, spec: &DenseSpec, x: Tensor) -> Tensor {
+        // the calibration pass records dense-layer input/weight ranges
+        // too, so `QuantPlan::build` can put the integer classifier head
+        // on calibrated grids (layers absent from a table fall back to
+        // the incoming grid)
+        if let Some(obs) = self.observe.as_deref_mut() {
+            let (_, wd) = lookup(self.params, &format!("{}/dense_w", spec.name));
+            let e = obs.entry(spec.name.clone()).or_default();
+            e.feat_max_abs = e.feat_max_abs.max(quant::max_abs(&x.data));
+            e.weight_max_abs = quant::max_abs(wd);
+        }
         self.dense_layer(&spec.name, &x)
     }
 }
@@ -843,6 +897,58 @@ mod tests {
     fn argmax() {
         let x = t((2, 1, 1, 3), vec![0.0, 2.0, 1.0, 5.0, -1.0, 0.0]);
         assert_eq!(argmax_rows(&x), vec![1, 0]);
+    }
+
+    #[test]
+    fn dense_int_known_value_every_strategy() {
+        // x rows [1, 2] and [3, -4] against the identity weights + bias:
+        // the integer head is exact, so every strategy must agree on the
+        // exact accumulators (bias pre-folded, zero-skip included).
+        let xq = vec![1, 2, 3, -4, 0, 7];
+        let wdat = vec![1, 0, 0, 1];
+        let w = QDenseW { data: &wdat, din: 2, dout: 2 };
+        let bias = vec![5i64, -5];
+        for strat in [KernelStrategy::Naive, KernelStrategy::Tiled,
+                      KernelStrategy::Simd, KernelStrategy::Auto] {
+            let out = dense_int_with(strat, &xq, 3, &w, &bias);
+            assert_eq!(out, vec![6, -3, 8, -9, 5, 2], "{}", strat.label());
+        }
+    }
+
+    #[test]
+    fn dense_int_accumulates_beyond_i32() {
+        // int16 operands: 64 taps of 32767 * 32767 blow through i32 —
+        // the widened i64 accumulator must carry the exact sum.
+        let din = 64usize;
+        let xq = vec![32767i32; din];
+        let wdat = vec![32767i32; din];
+        let w = QDenseW { data: &wdat, din, dout: 1 };
+        for strat in [KernelStrategy::Naive, KernelStrategy::Tiled,
+                      KernelStrategy::Simd] {
+            let out = dense_int_with(strat, &xq, 1, &w, &[0]);
+            assert_eq!(out, vec![din as i64 * 32767 * 32767], "{}", strat.label());
+        }
+    }
+
+    #[test]
+    fn dense_int_strategies_bit_identical_on_random_rows() {
+        let mut rng = crate::util::XorShift64::new(17);
+        let (n, din, dout) = (3usize, 37, 21); // tile- and lane-unaligned
+        let xq: Vec<i32> = (0..n * din)
+            .map(|_| (rng.next_f32_sym(1.0) * 127.0) as i32)
+            .collect();
+        let wdat: Vec<i32> = (0..din * dout)
+            .map(|_| (rng.next_f32_sym(1.0) * 127.0) as i32)
+            .collect();
+        let bias: Vec<i64> = (0..dout)
+            .map(|_| (rng.next_f32_sym(1.0) * 1000.0) as i64)
+            .collect();
+        let w = QDenseW { data: &wdat, din, dout };
+        let want = dense_int_with(KernelStrategy::Naive, &xq, n, &w, &bias);
+        for strat in [KernelStrategy::Tiled, KernelStrategy::Simd] {
+            assert_eq!(dense_int_with(strat, &xq, n, &w, &bias), want,
+                       "{}", strat.label());
+        }
     }
 
     #[test]

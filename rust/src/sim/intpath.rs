@@ -9,11 +9,12 @@
 //!
 //! * weights are already integers (quantized once, at plan build);
 //! * activations enter the integer domain ONCE (the input image) and
-//!   stay i32 through every conv, folded-BN, ReLU, pooling and residual
-//!   stage — inter-layer requantization is a power-of-two shift baked
-//!   into the BN fold;
-//! * f32 reappears only at the classifier head, which dequantizes and
-//!   runs the (tiny) dense stack to the logits.
+//!   stay i32 through every conv, folded-BN, ReLU, pooling, residual
+//!   AND dense stage — inter-layer requantization is a power-of-two
+//!   shift baked into the BN fold (convs) or applied at the dense
+//!   boundaries;
+//! * f32 reappears only at the very last logit rescale: the final dense
+//!   layer's i64 accumulators are dequantized straight off their grid.
 //!
 //! Convolutions dispatch through [`functional::conv2d_int_with`], so the
 //! whole [`KernelStrategy`] subsystem (`Naive`/`Tiled`/`Simd`/`Auto`)
@@ -35,7 +36,7 @@ use crate::nn::graph::{ConvBnSpec, DenseSpec};
 use crate::quant;
 use crate::quant::plan::{div_round_even, requant_shift, QuantPlan};
 use crate::sim::exec::{self, Domain};
-use crate::sim::functional::{self, KernelStrategy, QConvW, Tensor};
+use crate::sim::functional::{self, KernelStrategy, QConvW, QDenseW, Tensor};
 
 /// Headroom of the inter-stage activation registers over the serving
 /// width: BN outputs, pool sums and residual adds run at DW+2 bits;
@@ -174,8 +175,9 @@ pub fn max_pool_int(x: &IntTensor, window: usize, stride: usize) -> IntTensor {
 }
 
 /// Activation of the plan domain as it flows through the graph walk:
-/// i32 ([`IntTensor`]) through the whole conv→BN→ReLU→pool/residual
-/// stack, f32 from the first dense layer on (the head dequantizes — the
+/// i32 ([`IntTensor`]) through the whole
+/// conv→BN→ReLU→pool/residual→flatten→dense stack, f32 only after the
+/// FINAL dense layer rescales its accumulators to the logits (the
 /// single int→f32 boundary of the plan path).
 #[derive(Debug, Clone)]
 pub enum IntAct {
@@ -255,7 +257,9 @@ impl PlanRunner<'_> {
     /// Run the integer forward pass by walking the plan architecture's
     /// compiled op program ([`crate::nn::graph`]); returns f32 logits
     /// (n, 1, 1, 10).  The input image is the single f32→int boundary;
-    /// the first dense op of the head is the single int→f32 boundary.
+    /// the LAST dense layer's logit rescale is the single int→f32
+    /// boundary — everything in between, classifier head included, runs
+    /// integer.
     pub fn forward(&self, x: &Tensor) -> Tensor {
         let q = quantize_input(x, self.plan.input_exp, self.plan.cfg.bits);
         let graph = self.plan.arch.graph();
@@ -291,10 +295,11 @@ impl PlanRunner<'_> {
 }
 
 /// The i32 numeric domain: activations stay integer through every conv,
-/// folded-BN, ReLU, pooling and residual stage ([`IntAct::Int`]); the
-/// first dense layer dequantizes and the head runs f32
-/// ([`IntAct::F32`]).  Like the f32 domain, this is the whole
-/// architecture-specific surface — the topology comes from the walk.
+/// folded-BN, ReLU, pooling, residual AND dense stage
+/// ([`IntAct::Int`]); only the final dense layer's logit rescale
+/// produces f32 ([`IntAct::F32`]).  Like the f32 domain, this is the
+/// whole architecture-specific surface — the topology comes from the
+/// walk.
 impl Domain for PlanRunner<'_> {
     type Act = IntAct;
 
@@ -358,17 +363,54 @@ impl Domain for PlanRunner<'_> {
         IntAct::Int(h)
     }
 
+    /// Integer dense stage: operands are shifted/clamped onto the
+    /// layer's plan grid (the same contract conv operands have), the
+    /// strategy-dispatched integer core accumulates in i64 with the
+    /// bias pre-folded, and the result either requantizes onto the next
+    /// layer's grid (intermediate layers, staying i32) or dequantizes
+    /// off the accumulator grid — the final requant-to-logits rescale
+    /// and the plan path's ONLY int→f32 boundary.
     fn dense(&mut self, spec: &DenseSpec, x: IntAct) -> IntAct {
-        // the single int -> f32 boundary: dequantize (exact for serving
-        // widths) on head entry, then stay f32 through the dense stack
-        let y = match x {
-            IntAct::Int(t) => dequantize(&t),
-            IntAct::F32(t) => t,
-        };
         let dp = self.plan.dense.get(&spec.name)
             .unwrap_or_else(|| panic!("plan has no dense layer {}", spec.name));
-        IntAct::F32(functional::dense_with(self.strategy, &y, &dp.w, &dp.b,
-                                           dp.dout))
+        let t = x.int();
+        let qmax = self.plan.qmax();
+        let xin = if t.exp == dp.in_exp {
+            let mut t = t;
+            for v in t.data.iter_mut() {
+                *v = (*v).clamp(-qmax, qmax);
+            }
+            t
+        } else {
+            shift_to(&t, dp.in_exp, qmax)
+        };
+        let (n, h, w, c) = xin.shape;
+        assert_eq!(h * w * c, dp.din, "{}: dense input arity mismatch",
+                   spec.name);
+        let qw = QDenseW { data: &dp.wq, din: dp.din, dout: dp.dout };
+        let acc = functional::dense_int_with(self.strategy, &xin.data, n, &qw,
+                                             &dp.bq);
+        match dp.out_exp {
+            Some(oe) => {
+                let reg_max = self.reg_max() as i64;
+                let d = oe - dp.acc_exp;
+                let data = acc.iter()
+                    .map(|&a| requant_shift(a, d)
+                        .clamp(-reg_max, reg_max) as i32)
+                    .collect();
+                IntAct::Int(IntTensor {
+                    data,
+                    shape: (n, 1, 1, dp.dout),
+                    exp: oe,
+                })
+            }
+            None => {
+                let s = (dp.acc_exp as f32).exp2();
+                IntAct::F32(Tensor::new(
+                    (n, 1, 1, dp.dout),
+                    acc.iter().map(|&a| a as f32 * s).collect()))
+            }
+        }
     }
 }
 
@@ -485,6 +527,28 @@ mod tests {
             let single = r.forward(&x);
             // the int path is deterministic: batching must be EXACT
             assert_eq!(many[i], single.data, "request {i}");
+        }
+    }
+
+    #[test]
+    fn logits_sit_on_the_final_accumulator_grid() {
+        // The head is integer to the logits: every logit must be an
+        // exact multiple of the final dense layer's accumulator step
+        // (f32 appears only at the last rescale, which is a pow2 move).
+        let (params, calib, cfg) = lenet_plan(8);
+        let plan = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                    cfg, &calib).unwrap();
+        let fc3 = &plan.dense["fc3"];
+        assert_eq!(fc3.out_exp, None);
+        let step = (fc3.acc_exp as f32).exp2();
+        let mut rng = XorShift64::new(12);
+        let x = Tensor::new((2, 32, 32, 1),
+                            (0..2048).map(|_| rng.next_f32_sym(1.0)).collect());
+        let r = PlanRunner { plan: &plan, strategy: KernelStrategy::Auto };
+        let y = r.forward(&x);
+        for (i, v) in y.data.iter().enumerate() {
+            let q = v / step;
+            assert_eq!(q.fract(), 0.0, "logit {i} ({v}) off the acc grid");
         }
     }
 

@@ -36,6 +36,25 @@ pub enum SimKernel {
     Mult,
 }
 
+impl SimKernel {
+    /// CLI/serialization spelling (`adder`/`mult`) — shared by the model
+    /// naming convention and the plan JSON codec.
+    pub fn label(self) -> &'static str {
+        match self {
+            SimKernel::Adder => "adder",
+            SimKernel::Mult => "mult",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SimKernel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "adder" => Some(SimKernel::Adder),
+            "mult" => Some(SimKernel::Mult),
+            _ => None,
+        }
+    }
+}
+
 /// How the conv/dense inner kernels execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum KernelStrategy {
@@ -176,9 +195,23 @@ pub(crate) type ConvRow<T> = fn(&[T], usize, &[T], usize, SimKernel, &mut [T]);
 /// (din x dout) + `bias` into `orow` (dout).
 pub(crate) type DenseRow = fn(&[f32], &[f32], &[f32], usize, &mut [f32]);
 
+/// Integer dense-kernel signature: one batch row of i32 operands against
+/// the quantized (din x dout) weights, bias pre-folded onto the
+/// accumulator grid, widened i64 accumulators out.
+pub(crate) type DenseIntRow = fn(&[i32], &[i32], &[i64], usize, &mut [i64]);
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sim_kernel_parse_round_trips_labels() {
+        for k in [SimKernel::Adder, SimKernel::Mult] {
+            assert_eq!(SimKernel::parse(k.label()), Some(k));
+        }
+        assert_eq!(SimKernel::parse(" Mult "), Some(SimKernel::Mult));
+        assert_eq!(SimKernel::parse("xnor"), None);
+    }
 
     #[test]
     fn parse_round_trips_labels() {

@@ -161,3 +161,39 @@ pub(crate) fn dense_row(xrow: &[f32], w: &[f32], bias: &[f32], dout: usize,
         orow[co] = a;
     }
 }
+
+/// Integer dense inner kernel: lane groups of 8 widened i64 accumulators
+/// seeded from the (accumulator-grid) integer bias, i32 operands widened
+/// at the multiply (a single int16 tap product already needs more than
+/// i32).  Zero-skip and input order match the other strategies, so the
+/// i64 sums are identical by order-independence of integer addition.
+pub(crate) fn dense_int_row(xrow: &[i32], w: &[i32], bias: &[i64], dout: usize,
+                            orow: &mut [i64]) {
+    let lanes_full = dout - dout % LANES;
+    let mut co0 = 0;
+    while co0 < lanes_full {
+        let mut acc = <[i64; LANES]>::try_from(&bias[co0..co0 + LANES]).unwrap();
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let xv = xv as i64;
+            let base = i * dout + co0;
+            let wv = <[i32; LANES]>::try_from(&w[base..base + LANES]).unwrap();
+            for (aj, &wj) in acc.iter_mut().zip(wv.iter()) {
+                *aj += xv * wj as i64;
+            }
+        }
+        orow[co0..co0 + LANES].copy_from_slice(&acc);
+        co0 += LANES;
+    }
+    for co in lanes_full..dout {
+        let mut a = bias[co];
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv != 0 {
+                a += xv as i64 * w[i * dout + co] as i64;
+            }
+        }
+        orow[co] = a;
+    }
+}

@@ -123,3 +123,30 @@ pub(crate) fn dense_row(xrow: &[f32], w: &[f32], bias: &[f32], dout: usize,
         co0 += cb;
     }
 }
+
+/// Integer dense inner kernel: i32 operands, widened i64 accumulators
+/// seeded from the (accumulator-grid) integer bias.  i64 is required —
+/// at int16 a single tap product already reaches 2^30, so any dense row
+/// with more than one input would overflow i32.  The post-ReLU zero-skip
+/// is exact on integers.
+pub(crate) fn dense_int_row(xrow: &[i32], w: &[i32], bias: &[i64], dout: usize,
+                            orow: &mut [i64]) {
+    let mut co0 = 0;
+    while co0 < dout {
+        let cb = COUT_TILE.min(dout - co0);
+        let mut acc = [0i64; COUT_TILE];
+        acc[..cb].copy_from_slice(&bias[co0..co0 + cb]);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let xv = xv as i64;
+            let wrow = &w[i * dout + co0..i * dout + co0 + cb];
+            for (j, &wv) in wrow.iter().enumerate() {
+                acc[j] += xv * wv as i64;
+            }
+        }
+        orow[co0..co0 + cb].copy_from_slice(&acc[..cb]);
+        co0 += cb;
+    }
+}

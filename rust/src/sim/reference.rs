@@ -15,7 +15,7 @@
 use crate::nn::{self, Padding};
 use crate::quant::LayerCalib;
 
-use super::functional::{self, ConvW, QuantCfg, SimKernel, Tensor};
+use super::functional::{self, ConvW, QDenseW, QuantCfg, SimKernel, Tensor};
 
 /// f32 convolution (both kernels), NHWC x HWIO -> NHWC.  Zero padding
 /// contributes `-|0 - w|` per tap for the adder kernel and nothing for
@@ -121,6 +121,31 @@ pub fn conv2d_quant(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
                 for (o, &a) in out.data[base..base + cout].iter_mut().zip(acc.iter()) {
                     *o = a as f32 * pre_scale;
                 }
+            }
+        }
+    }
+    out
+}
+
+/// Integer dense over already-quantized operands, naive row loop: i32
+/// operands, widened i64 accumulators seeded from the accumulator-grid
+/// integer bias — the oracle of [`functional::dense_int_with`].  Input
+/// order and the (exact) zero-skip match the engine strategies.
+pub fn dense_int(xq: &[i32], n: usize, w: &QDenseW, bias: &[i64]) -> Vec<i64> {
+    let (din, dout) = (w.din, w.dout);
+    let mut out = vec![0i64; n * dout];
+    for b in 0..n {
+        let xrow = &xq[b * din..(b + 1) * din];
+        let orow = &mut out[b * dout..(b + 1) * dout];
+        orow.copy_from_slice(bias);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let xv = xv as i64;
+            let wrow = &w.data[i * dout..(i + 1) * dout];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv as i64;
             }
         }
     }

@@ -414,6 +414,94 @@ fn all_registered_archs_serve_f32_and_int8() {
     }
 }
 
+/// A variant mounted with a pre-compiled (exported + re-imported) plan
+/// serves with NO calibration table at all — the `repro plan` /
+/// `serve --plan` cold-start path — and answers exactly like a direct
+/// execution of the originally-built plan.
+#[test]
+fn functional_server_serves_imported_plan_without_calibration() {
+    use addernet::quant::plan::{plan_from_json, plan_to_json};
+
+    let mut cfg = server::FunctionalVariantCfg::synthetic(
+        "lenet5_adder_plan", Arch::Lenet5, SimKernel::Adder, 42);
+    let (calib, _) = quantrep::calibrate(&cfg.params, Arch::Lenet5,
+                                         SimKernel::Adder, 16);
+    let qcfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+    let built = QuantPlan::build(&cfg.params, Arch::Lenet5, SimKernel::Adder,
+                                 qcfg, &calib).unwrap();
+    let imported = plan_from_json(&plan_to_json(&built)).unwrap();
+    cfg.mode = ExecMode::Quant(qcfg);
+    cfg.calib = None; // the whole point: zero calibration at startup
+    cfg.plan = Some(imported);
+    let handle = server::start_functional(
+        vec![cfg], std::time::Duration::from_millis(1)).unwrap();
+    let b = data::eval_set(4, 23);
+    let mut rxs = Vec::new();
+    for i in 0..4 {
+        rxs.push(handle.submit("lenet5_adder_plan",
+                               b.images[i * 1024..(i + 1) * 1024].to_vec())
+            .unwrap());
+    }
+    let runner = PlanRunner { plan: &built, strategy: KernelStrategy::Auto };
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        let x = Tensor::new((1, 32, 32, 1),
+                            b.images[i * 1024..(i + 1) * 1024].to_vec());
+        let direct = runner.forward(&x);
+        assert_eq!(resp.logits, direct.data, "request {i}");
+    }
+    handle.shutdown();
+}
+
+/// An empty variant list is a startup ERROR: a caller that filtered
+/// every requested variant away must not green-light an idle server
+/// (the `repro serve` exit-code contract CI relies on).
+#[test]
+fn start_functional_rejects_empty_variant_list() {
+    match server::start_functional(Vec::new(),
+                                   std::time::Duration::from_millis(1)) {
+        Ok(_) => panic!("empty variant list must not start a server"),
+        Err(e) => assert!(format!("{e:#}").contains("no variants"), "{e:#}"),
+    }
+}
+
+/// Duplicate variant names fail startup: silently replacing a route
+/// would drop one variant's worker while the CLI reports both serving
+/// (easy to hit via `serve --plan a.json,a.json`).
+#[test]
+fn start_functional_rejects_duplicate_variant_names() {
+    let a = server::FunctionalVariantCfg::synthetic(
+        "lenet5_adder", Arch::Lenet5, SimKernel::Adder, 42);
+    let b = server::FunctionalVariantCfg::synthetic(
+        "lenet5_adder", Arch::Lenet5, SimKernel::Adder, 43);
+    match server::start_functional(vec![a, b],
+                                   std::time::Duration::from_millis(1)) {
+        Ok(_) => panic!("duplicate variant names must not start a server"),
+        Err(e) => assert!(format!("{e:#}").contains("duplicate"), "{e:#}"),
+    }
+}
+
+/// A plan mounted on the wrong variant (different arch) fails startup
+/// with a proper error instead of serving garbage.
+#[test]
+fn start_functional_rejects_mismatched_plan() {
+    let params = addernet::sim::functional::synth_params(Arch::Lenet5, 42);
+    let (calib, _) = quantrep::calibrate(&params, Arch::Lenet5,
+                                         SimKernel::Adder, 8);
+    let qcfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+    let lenet_plan = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                      qcfg, &calib).unwrap();
+    let mut cfg = server::FunctionalVariantCfg::synthetic(
+        "resnet8_adder", Arch::Resnet8, SimKernel::Adder, 42);
+    cfg.mode = ExecMode::Quant(qcfg);
+    cfg.plan = Some(lenet_plan);
+    match server::start_functional(vec![cfg],
+                                   std::time::Duration::from_millis(1)) {
+        Ok(_) => panic!("mismatched plan must not start a server"),
+        Err(e) => assert!(format!("{e:#}").contains("compiled for"), "{e:#}"),
+    }
+}
+
 /// Misconfigured quantized variants fail `start_functional` with a
 /// proper error — no worker is spawned, nothing panics.
 #[test]

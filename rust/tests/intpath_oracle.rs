@@ -7,20 +7,20 @@
 //!   `KernelStrategy`, both kernels and both serving widths: the same
 //!   shared exponent (§3.1) drives both paths, so the integer operands
 //!   — and therefore the i32 accumulators — are the same integers;
-//! * **cross-strategy whole-model identity** — the int stack is
-//!   i32-exact, so full forward passes agree across
-//!   Naive/Tiled/Simd/Auto bit for bit through the conv chain (and to
-//!   f32 round-off through the shared dense head);
+//! * **cross-strategy whole-model identity** — the whole stack (conv
+//!   chain AND the integer dense head, i64-exact with a single pow2
+//!   logit rescale) agrees across Naive/Tiled/Simd/Auto bit for bit,
+//!   logits included;
 //! * **plan vs per-call tracking** — the compiled plan serves logits
 //!   close to the per-call experiment path and the f32 reference at
 //!   int16/int8.
 
-use addernet::quant::plan::QuantPlan;
+use addernet::quant::plan::{requant_shift, QuantPlan};
 use addernet::quant::{Calibration, LayerCalib, Mode};
 use addernet::report::quantrep;
 use addernet::sim::functional::{self, conv2d_quant_with, synth_params, Arch,
                                 ConvW, ExecMode, KernelStrategy, QConvW,
-                                QuantCfg, Runner, SimKernel, Tensor};
+                                QDenseW, QuantCfg, Runner, SimKernel, Tensor};
 use addernet::sim::intpath::{self, IntTensor, PlanRunner};
 use addernet::util::XorShift64;
 
@@ -97,9 +97,11 @@ fn first_layer_bit_identical_to_percall_reference() {
     }
 }
 
-/// Whole-model plan execution is bit-identical across every kernel
-/// strategy: the conv stack is integer-exact and the f32 head
-/// accumulates in the same (ascending) order everywhere.
+/// Whole-model plan execution is BIT-identical across every kernel
+/// strategy: the conv stack is i32-exact, the dense head accumulates
+/// exactly in i64, and the final logit rescale is one pow2 move — so
+/// with the head now integer there is no f32 round-off anywhere to hide
+/// a strategy divergence behind.
 #[test]
 fn whole_model_plan_identical_across_strategies() {
     for (arch, seed) in [(Arch::Lenet5, 3u64), (Arch::Resnet8, 5)] {
@@ -119,9 +121,9 @@ fn whole_model_plan_identical_across_strategies() {
             logits.push(y.data);
         }
         for (i, l) in logits.iter().enumerate().skip(1) {
-            assert_close(l, &logits[0], 1e-5,
-                         &format!("{arch:?} logits [{}] vs [{}]",
-                                  STRATEGIES[i].label(), STRATEGIES[0].label()));
+            assert_eq!(l, &logits[0],
+                       "{arch:?} logits [{}] vs [{}] must be bit-identical",
+                       STRATEGIES[i].label(), STRATEGIES[0].label());
         }
     }
 }
@@ -222,7 +224,7 @@ fn separate_scale_plan_executes() {
         logits.push(y.data);
     }
     for l in logits.iter().skip(1) {
-        assert_close(l, &logits[0], 1e-5, "separate-scale cross-strategy");
+        assert_eq!(l, &logits[0], "separate-scale cross-strategy");
     }
 }
 
@@ -283,21 +285,58 @@ fn legacy_plan_conv_block(plan: &QuantPlan, strategy: KernelStrategy,
     IntTensor { data: acc, shape: oshape, exp: lp.out_exp }
 }
 
-/// The pre-graph f32 classifier head, verbatim.
-fn legacy_head(plan: &QuantPlan, strategy: KernelStrategy, x: &Tensor,
+/// The hand-coded integer classifier head, a literal transcription of
+/// what the graph-driven dense hook does: shift/clamp operands onto the
+/// layer's plan grid, run the strategy-dispatched integer dense core,
+/// requantize intermediates into the DW+2 register (ReLU between
+/// layers), and dequantize the final accumulators off their grid — the
+/// requant-to-logits rescale.
+fn legacy_head(plan: &QuantPlan, strategy: KernelStrategy, x: &IntTensor,
                names: &[&str]) -> Tensor {
-    let mut y = x.clone();
+    let qmax = plan.qmax();
+    let reg_max = (qmax << intpath::HEADROOM_BITS) as i64;
+    let mut t = x.clone();
     for (i, name) in names.iter().enumerate() {
         let dp = &plan.dense[*name];
-        y = functional::dense_with(strategy, &y, &dp.w, &dp.b, dp.dout);
-        if i + 1 < names.len() {
-            functional::relu(&mut y);
+        let xin = if t.exp == dp.in_exp {
+            let mut c = t.clone();
+            for v in c.data.iter_mut() {
+                *v = (*v).clamp(-qmax, qmax);
+            }
+            c
+        } else {
+            intpath::shift_to(&t, dp.in_exp, qmax)
+        };
+        let n = xin.shape.0;
+        let qw = QDenseW { data: &dp.wq, din: dp.din, dout: dp.dout };
+        let acc = functional::dense_int_with(strategy, &xin.data, n, &qw,
+                                             &dp.bq);
+        match dp.out_exp {
+            Some(oe) => {
+                assert!(i + 1 < names.len(), "{name}: intermediate grid on \
+                                              the final dense layer");
+                let d = oe - dp.acc_exp;
+                let data = acc.iter()
+                    .map(|&a| requant_shift(a, d)
+                        .clamp(-reg_max, reg_max) as i32)
+                    .collect();
+                t = IntTensor { data, shape: (n, 1, 1, dp.dout), exp: oe };
+                intpath::relu_int(&mut t);
+            }
+            None => {
+                assert_eq!(i + 1, names.len(), "{name}: logits mid-stack");
+                let s = (dp.acc_exp as f32).exp2();
+                return Tensor::new(
+                    (n, 1, 1, dp.dout),
+                    acc.iter().map(|&a| a as f32 * s).collect());
+            }
         }
     }
-    y
+    unreachable!("dense stack without a logits layer");
 }
 
-/// The pre-graph `PlanRunner::forward` LeNet-5 arm, verbatim.
+/// The pre-graph `PlanRunner::forward` LeNet-5 arm, verbatim (with the
+/// hand-coded integer head above in place of the old f32 head).
 fn legacy_plan_forward_lenet(plan: &QuantPlan, strategy: KernelStrategy,
                              x: &Tensor) -> Tensor {
     let q = intpath::quantize_input(x, plan.input_exp, plan.cfg.bits);
@@ -309,8 +348,7 @@ fn legacy_plan_forward_lenet(plan: &QuantPlan, strategy: KernelStrategy,
     let y = intpath::avg_pool2_int(&y);
     let (n, h, w, c) = y.shape;
     let y = IntTensor { data: y.data, shape: (n, 1, 1, h * w * c), exp: y.exp };
-    legacy_head(plan, strategy, &intpath::dequantize(&y),
-                &["fc1", "fc2", "fc3"])
+    legacy_head(plan, strategy, &y, &["fc1", "fc2", "fc3"])
 }
 
 /// The pre-graph `PlanRunner::forward` ResNet arm, verbatim, driven by a
@@ -340,13 +378,14 @@ fn legacy_plan_forward_resnet(plan: &QuantPlan, strategy: KernelStrategy,
         y = h;
     }
     let y = intpath::global_avg_pool_int(&y);
-    legacy_head(plan, strategy, &intpath::dequantize(&y), &["fc"])
+    legacy_head(plan, strategy, &y, &["fc"])
 }
 
 /// The graph-driven `PlanRunner` must reproduce the legacy hand-coded
-/// integer walk BIT-IDENTICALLY (the int stack is i32-exact; the f32
-/// head runs the same ops in the same order) for every pre-existing
-/// architecture, every kernel strategy and both serving widths.
+/// integer walk BIT-IDENTICALLY (the conv stack is i32-exact, the dense
+/// head is integer to the logits, and the final rescale is one exact
+/// pow2 move) for every pre-existing architecture, every kernel
+/// strategy and both serving widths.
 #[test]
 fn graph_walk_bit_identical_to_legacy_int_walk() {
     let mut rng = XorShift64::new(4321);
@@ -409,8 +448,7 @@ fn new_graph_archs_plan_identical_across_strategies() {
             logits.push(y.data);
         }
         for (i, l) in logits.iter().enumerate().skip(1) {
-            assert_close(l, &logits[0], 1e-5,
-                         &format!("{arch:?} [{}]", STRATEGIES[i].label()));
+            assert_eq!(l, &logits[0], "{arch:?} [{}]", STRATEGIES[i].label());
         }
     }
 }
@@ -440,4 +478,7 @@ fn calibration_json_round_trip_builds_identical_plan() {
         assert_eq!(cp.bn.mul, cpb.bn.mul, "{name}: bn mul");
         assert_eq!(cp.bn.add, cpb.bn.add, "{name}: bn add");
     }
+    // the integer dense head (grids, quantized weights, folded bias)
+    // must survive the calibration round trip too
+    assert_eq!(a.dense, b.dense);
 }

@@ -1,0 +1,261 @@
+//! Round-trip tests for the portable `QuantPlan` artifact
+//! (`quant::plan::{plan_to_json, plan_from_json}` — the `repro plan` /
+//! `repro serve --plan` cold-start path):
+//!
+//! * **export → import exactness** — the parsed plan equals the built
+//!   plan field-for-field, and serves BIT-identical logits under every
+//!   `KernelStrategy` (the whole pipeline is integer, so there is no
+//!   tolerance to hide behind);
+//! * **mutation grid** — truncated JSON, version bumps, arch mismatches,
+//!   deleted layers, out-of-range exponents and out-of-grid quantized
+//!   weights all surface as clean `anyhow` errors, never panics: a
+//!   corrupt plan file must fail serving startup, not a worker thread.
+
+use addernet::quant::plan::{plan_from_json, plan_to_json, QuantPlan};
+use addernet::quant::Mode;
+use addernet::report::quantrep;
+use addernet::sim::functional::{synth_params, Arch, KernelStrategy, Params,
+                                QuantCfg, SimKernel, Tensor};
+use addernet::sim::intpath::PlanRunner;
+use addernet::util::{Json, XorShift64};
+
+const STRATEGIES: [KernelStrategy; 4] = [
+    KernelStrategy::Naive,
+    KernelStrategy::Tiled,
+    KernelStrategy::Simd,
+    KernelStrategy::Auto,
+];
+
+fn built_plan(arch: Arch, bits: u32) -> (Params, QuantPlan) {
+    let params = synth_params(arch, 42);
+    let (calib, _) = quantrep::calibrate(&params, arch, SimKernel::Adder, 16);
+    let cfg = QuantCfg { bits, mode: Mode::SharedScale };
+    let plan = QuantPlan::build(&params, arch, SimKernel::Adder, cfg, &calib)
+        .unwrap();
+    (params, plan)
+}
+
+fn err_of(s: &str) -> String {
+    match plan_from_json(s) {
+        Ok(_) => panic!("corrupt plan imported cleanly"),
+        Err(e) => format!("{e:#}"),
+    }
+}
+
+#[test]
+fn export_import_is_field_exact_for_every_arch_and_width() {
+    for arch in [Arch::Lenet5, Arch::Cnv6, Arch::Resnet8] {
+        for bits in [8u32, 16] {
+            let (_, plan) = built_plan(arch, bits);
+            let doc = plan_to_json(&plan);
+            let back = plan_from_json(&doc)
+                .unwrap_or_else(|e| panic!("{arch:?} int{bits}: {e:#}"));
+            assert_eq!(back, plan, "{arch:?} int{bits}");
+        }
+    }
+}
+
+#[test]
+fn imported_plan_serves_bit_identically_across_strategies() {
+    for (arch, bits) in [(Arch::Lenet5, 8u32), (Arch::Lenet5, 16),
+                         (Arch::Resnet8, 8)] {
+        let (_, plan) = built_plan(arch, bits);
+        let imported = plan_from_json(&plan_to_json(&plan)).unwrap();
+        let mut rng = XorShift64::new(77);
+        let x = Tensor::new((2, 32, 32, 1),
+                            (0..2048).map(|_| rng.next_f32_sym(1.0)).collect());
+        for strat in STRATEGIES {
+            let want = PlanRunner { plan: &plan, strategy: strat }.forward(&x);
+            let got = PlanRunner { plan: &imported, strategy: strat }
+                .forward(&x);
+            assert_eq!(got.shape, want.shape,
+                       "{arch:?} int{bits} [{}]", strat.label());
+            assert_eq!(got.data, want.data,
+                       "{arch:?} int{bits} [{}]: imported plan must serve \
+                        bit-identical logits", strat.label());
+        }
+    }
+}
+
+#[test]
+fn truncated_json_errors_cleanly() {
+    let (_, plan) = built_plan(Arch::Lenet5, 8);
+    let doc = plan_to_json(&plan);
+    for cut in [0, 1, 10, doc.len() / 2, doc.len() - 2] {
+        assert!(plan_from_json(&doc[..cut]).is_err(), "cut at {cut}");
+    }
+    assert!(plan_from_json("").is_err());
+    assert!(plan_from_json("nonsense").is_err());
+    assert!(plan_from_json("{\"quant_plan\": 3}").is_err());
+}
+
+#[test]
+fn version_bump_errors_cleanly() {
+    let (_, plan) = built_plan(Arch::Lenet5, 8);
+    let doc = plan_to_json(&plan);
+    assert!(doc.contains("\"version\": 1"), "serializer format drifted");
+    let err = err_of(&doc.replace("\"version\": 1", "\"version\": 2"));
+    assert!(err.contains("version"), "{err}");
+}
+
+#[test]
+fn arch_mismatch_errors_cleanly() {
+    // a lenet5 plan relabelled as resnet8 has none of resnet8's layers
+    let (_, plan) = built_plan(Arch::Lenet5, 8);
+    let doc = plan_to_json(&plan);
+    let err = err_of(&doc.replace("\"arch\": \"lenet5\"",
+                                  "\"arch\": \"resnet8\""));
+    assert!(err.contains("mismatch") || err.contains("missing"), "{err}");
+    // and an arch this build does not serve at all
+    let err = err_of(&doc.replace("\"arch\": \"lenet5\"",
+                                  "\"arch\": \"lenet9000\""));
+    assert!(err.contains("unknown arch"), "{err}");
+}
+
+/// Parse-level surgery: reserialize the JSON with one field mangled, so
+/// the mutation hits exactly the target (string replacement cannot
+/// reliably single out one layer's field).
+fn mutate(doc: &str, f: impl FnOnce(&mut std::collections::BTreeMap<String, Json>))
+          -> String {
+    let parsed = Json::parse(doc).unwrap();
+    let mut root = match parsed {
+        Json::Obj(m) => m,
+        _ => panic!("plan JSON is not an object"),
+    };
+    let mut qp = match root.remove("quant_plan").unwrap() {
+        Json::Obj(m) => m,
+        _ => panic!("quant_plan is not an object"),
+    };
+    f(&mut qp);
+    root.insert("quant_plan".into(), Json::Obj(qp));
+    Json::Obj(root).to_string()
+}
+
+fn layer_mut<'m>(qp: &'m mut std::collections::BTreeMap<String, Json>,
+                 section: &str, layer: &str)
+                 -> &'m mut std::collections::BTreeMap<String, Json> {
+    match qp.get_mut(section).unwrap() {
+        Json::Obj(layers) => match layers.get_mut(layer).unwrap() {
+            Json::Obj(o) => o,
+            _ => panic!("{layer} is not an object"),
+        },
+        _ => panic!("{section} is not an object"),
+    }
+}
+
+#[test]
+fn missing_layer_errors_cleanly() {
+    let (_, plan) = built_plan(Arch::Lenet5, 8);
+    let doc = plan_to_json(&plan);
+    let err = err_of(&mutate(&doc, |qp| {
+        if let Json::Obj(layers) = qp.get_mut("convs").unwrap() {
+            layers.remove("conv2").unwrap();
+        }
+    }));
+    assert!(err.contains("conv2") || err.contains("conv layers"), "{err}");
+    let err = err_of(&mutate(&doc, |qp| {
+        if let Json::Obj(layers) = qp.get_mut("dense").unwrap() {
+            layers.remove("fc2").unwrap();
+        }
+    }));
+    assert!(err.contains("fc2") || err.contains("dense layers"), "{err}");
+}
+
+#[test]
+fn out_of_range_exponents_and_shifts_error_cleanly() {
+    let (_, plan) = built_plan(Arch::Lenet5, 8);
+    let doc = plan_to_json(&plan);
+    // top-level input grid
+    let err = err_of(&mutate(&doc, |qp| {
+        qp.insert("input_exp".into(), Json::Num(999.0));
+    }));
+    assert!(err.contains("out of range") || err.contains("does not match"),
+            "{err}");
+    // a conv operand grid
+    let err = err_of(&mutate(&doc, |qp| {
+        layer_mut(qp, "convs", "conv2").insert("in_exp".into(),
+                                               Json::Num(-700.0));
+    }));
+    assert!(err.contains("out of range"), "{err}");
+    // the folded-BN shifter width
+    let err = err_of(&mutate(&doc, |qp| {
+        layer_mut(qp, "convs", "conv1").insert("bn_shift".into(),
+                                               Json::Num(63.0));
+    }));
+    assert!(err.contains("bn_shift"), "{err}");
+    // a dense accumulator grid inconsistent with in_exp + w_exp
+    let err = err_of(&mutate(&doc, |qp| {
+        layer_mut(qp, "dense", "fc1").insert("acc_exp".into(),
+                                             Json::Num(0.0));
+    }));
+    assert!(err.contains("accumulator grid"), "{err}");
+}
+
+#[test]
+fn out_of_grid_weights_and_geometry_drift_error_cleanly() {
+    let (_, plan) = built_plan(Arch::Lenet5, 8);
+    let doc = plan_to_json(&plan);
+    // an int8 plan smuggling a 100000-valued weight
+    let err = err_of(&mutate(&doc, |qp| {
+        let o = layer_mut(qp, "convs", "conv1");
+        if let Json::Arr(wq) = o.get_mut("wq").unwrap() {
+            wq[0] = Json::Num(100000.0);
+        }
+    }));
+    assert!(err.contains("outside the int grid"), "{err}");
+    // geometry drift: conv1 claiming a different channel count
+    let err = err_of(&mutate(&doc, |qp| {
+        layer_mut(qp, "convs", "conv1").insert("cout".into(), Json::Num(7.0));
+    }));
+    assert!(err.contains("geometry"), "{err}");
+    // a non-integer number where the integer grid lives
+    let err = err_of(&mutate(&doc, |qp| {
+        let o = layer_mut(qp, "dense", "fc3");
+        if let Json::Arr(bq) = o.get_mut("bq").unwrap() {
+            bq[0] = Json::Num(1.5);
+        }
+    }));
+    assert!(err.contains("integer"), "{err}");
+}
+
+#[test]
+fn overflowing_bn_multiplier_errors_cleanly() {
+    // fold_bn keeps |mul| <= 2^30; a corrupt 2^45 multiplier would
+    // overflow the executor's i64 `acc * mul` product and must be
+    // refused at import, not wrap at serve time.
+    let (_, plan) = built_plan(Arch::Lenet5, 8);
+    let doc = plan_to_json(&plan);
+    let err = err_of(&mutate(&doc, |qp| {
+        let o = layer_mut(qp, "convs", "conv1");
+        if let Json::Arr(mul) = o.get_mut("bn_mul").unwrap() {
+            mul[0] = Json::Num((1i64 << 45) as f64);
+        }
+    }));
+    assert!(err.contains("bn_mul"), "{err}");
+}
+
+#[test]
+fn diverging_residual_grids_error_cleanly() {
+    // the executor adds main-path and shortcut activations WITHOUT a
+    // requant step, so an imported plan whose projection shortcut lands
+    // on a different grid must be refused (build guarantees equality;
+    // untrusted files must re-prove it).
+    let (_, plan) = built_plan(Arch::Resnet8, 8);
+    let doc = plan_to_json(&plan);
+    let shifted = plan.convs["s1b0/sc"].out_exp + 3;
+    let err = err_of(&mutate(&doc, |qp| {
+        layer_mut(qp, "convs", "s1b0/sc")
+            .insert("out_exp".into(), Json::Num(shifted as f64));
+    }));
+    assert!(err.contains("residual partners"), "{err}");
+}
+
+#[test]
+fn wide_mult_plans_refused_at_import() {
+    // hand-forge the headers of an int16 MULT plan: it must be refused
+    // before any layer validation work happens
+    let (_, plan) = built_plan(Arch::Lenet5, 16);
+    let doc = plan_to_json(&plan);
+    let err = err_of(&doc.replace("\"kind\": \"adder\"", "\"kind\": \"mult\""));
+    assert!(err.contains("mult"), "{err}");
+}
