@@ -1,0 +1,297 @@
+//! Open-loop load-test harness (`repro loadtest`) — synthetic traffic
+//! at a controlled QPS against a live [`ServerHandle`], with
+//! p50/p99/shed-rate persisted to JSON so serving regressions are
+//! CI-gateable like the kernel ratios.
+//!
+//! The driver is **open-loop**: request `i` is scheduled at
+//! `t0 + i/qps` regardless of how fast responses come back, which is
+//! what exposes queueing collapse — a closed-loop driver (submit, wait,
+//! repeat) self-throttles to the server's capacity and can never
+//! observe overload.  Shed requests are NEVER retried: the shed rate at
+//! a given QPS is the measurement, not an error to paper over.
+//!
+//! Latencies are taken from [`Response::total_time`] (stamped by the
+//! server between enqueue and response assembly), so the collector
+//! thread's drain order cannot skew the histograms.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::metrics::LatencyHistogram;
+use super::server::{Response, ServerHandle, SubmitError};
+use crate::util::json::Json;
+use crate::util::threads;
+
+pub const SCHEMA: &str = "addernet-loadtest-v1";
+
+/// Load profile for one run.
+#[derive(Debug, Clone)]
+pub struct LoadtestCfg {
+    /// Aggregate request rate across all variants (round-robin).
+    pub qps: f64,
+    pub duration: Duration,
+    /// Replica count the server was started with — recorded in the
+    /// report (the harness itself does not spawn servers).
+    pub replicas: usize,
+}
+
+/// Per-variant outcome counters; `sent == ok + shed + rejected + errors`.
+#[derive(Debug, Clone, Default)]
+pub struct VariantOutcome {
+    pub sent: u64,
+    pub ok: u64,
+    /// Admission-control sheds (`SubmitError::Overloaded`).
+    pub shed: u64,
+    /// Malformed-request rejects (`SubmitError::BadRequest`) — a
+    /// harness bug if nonzero, kept separate from `errors` so the
+    /// report says so.
+    pub rejected: u64,
+    /// Everything that should never happen under load: unknown
+    /// variants, shutdown errors, dropped response channels.
+    pub errors: u64,
+    /// End-to-end latency of `ok` responses.
+    pub lat: LatencyHistogram,
+}
+
+impl VariantOutcome {
+    pub fn shed_rate(&self) -> f64 {
+        if self.sent == 0 { 0.0 } else { self.shed as f64 / self.sent as f64 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LoadtestReport {
+    pub requested_qps: f64,
+    pub achieved_qps: f64,
+    pub wall: Duration,
+    /// Persistent engine-pool workers the replicas shared.
+    pub pool_workers: usize,
+    pub replicas: usize,
+    pub variants: BTreeMap<String, VariantOutcome>,
+}
+
+/// Deterministic synthetic image — the load generator must not depend
+/// on artifacts or RNG state (same traffic every run, every machine).
+fn synth_image(px: usize, i: u64) -> Vec<f32> {
+    (0..px)
+        .map(|j| {
+            let v = (i.wrapping_mul(31).wrapping_add(j as u64 * 7)) % 97;
+            v as f32 / 97.0 - 0.5
+        })
+        .collect()
+}
+
+/// Drive `cfg.qps` of round-robin traffic at `handle` for
+/// `cfg.duration`.  Returns the merged outcome; the handle stays up
+/// (callers own startup/shutdown, so one server can be probed at
+/// several rates).
+pub fn run(handle: &ServerHandle, variants: &[String],
+           cfg: &LoadtestCfg) -> Result<LoadtestReport> {
+    anyhow::ensure!(!variants.is_empty(), "loadtest needs at least one variant");
+    anyhow::ensure!(cfg.qps > 0.0, "qps must be > 0");
+    let total = ((cfg.qps * cfg.duration.as_secs_f64()).round() as u64).max(1);
+
+    // one image per variant is enough: submit clones it
+    let mut images = Vec::with_capacity(variants.len());
+    for (vi, v) in variants.iter().enumerate() {
+        let px = handle.input_len(v)
+            .with_context(|| format!("variant {v} is not served by this handle"))?;
+        images.push(synth_image(px, vi as u64));
+    }
+
+    // the collector drains response receivers off the submit path so a
+    // slow response never stalls the open-loop schedule
+    let (cx, crx) = mpsc::channel::<(usize, mpsc::Receiver<Response>)>();
+    let nvar = variants.len();
+    let collector = std::thread::spawn(move || {
+        let mut out: Vec<VariantOutcome> = vec![VariantOutcome::default(); nvar];
+        while let Ok((vi, rx)) = crx.recv() {
+            match rx.recv() {
+                Ok(resp) => {
+                    out[vi].ok += 1;
+                    out[vi].lat.record(resp.total_time);
+                }
+                // worker died / response channel dropped: a real error,
+                // never silently absorbed
+                Err(_) => out[vi].errors += 1,
+            }
+        }
+        out
+    });
+
+    let mut submit_side: Vec<VariantOutcome> = vec![VariantOutcome::default(); nvar];
+    let t0 = Instant::now();
+    for i in 0..total {
+        // open loop: request i fires at t0 + i/qps, behind or not
+        let target = t0 + Duration::from_secs_f64(i as f64 / cfg.qps);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let vi = (i as usize) % nvar;
+        submit_side[vi].sent += 1;
+        match handle.submit(&variants[vi], images[vi].clone()) {
+            Ok(rx) => {
+                // collector gone (panic) => count as error below via join
+                let _ = cx.send((vi, rx));
+            }
+            Err(SubmitError::Overloaded { .. }) => submit_side[vi].shed += 1,
+            Err(SubmitError::BadRequest { .. }) => submit_side[vi].rejected += 1,
+            Err(_) => submit_side[vi].errors += 1,
+        }
+    }
+    drop(cx); // collector drains the in-flight tail, then exits
+    let collected = collector.join()
+        .map_err(|_| anyhow::anyhow!("loadtest collector thread panicked"))?;
+    let wall = t0.elapsed();
+
+    let mut out = BTreeMap::new();
+    for (vi, v) in variants.iter().enumerate() {
+        let mut o = submit_side[vi].clone();
+        o.ok = collected[vi].ok;
+        o.errors += collected[vi].errors;
+        o.lat = collected[vi].lat.clone();
+        out.insert(v.clone(), o);
+    }
+    Ok(LoadtestReport {
+        requested_qps: cfg.qps,
+        achieved_qps: total as f64 / wall.as_secs_f64().max(1e-9),
+        wall,
+        pool_workers: threads::pool_workers(),
+        replicas: cfg.replicas,
+        variants: out,
+    })
+}
+
+impl LoadtestReport {
+    /// Hand-assembled JSON (no serializer is vendored); keys and shape
+    /// are part of the CI artifact contract, checked by [`check`].
+    pub fn to_json(&self) -> String {
+        let mut ventries = Vec::new();
+        for (name, o) in &self.variants {
+            ventries.push(format!(
+                "    \"{name}\": {{\"sent\": {}, \"ok\": {}, \"shed\": {}, \
+                 \"rejected\": {}, \"errors\": {}, \"shed_rate\": {:.4}, \
+                 \"p50_us\": {}, \"p99_us\": {}, \"max_us\": {}, \
+                 \"mean_us\": {:.1}}}",
+                o.sent, o.ok, o.shed, o.rejected, o.errors, o.shed_rate(),
+                o.lat.quantile_us(0.5), o.lat.quantile_us(0.99), o.lat.max_us(),
+                o.lat.mean_us()));
+        }
+        format!(
+            "{{\n  \"schema\": \"{SCHEMA}\",\n  \"requested_qps\": {:.1},\n  \
+             \"achieved_qps\": {:.1},\n  \"wall_s\": {:.3},\n  \
+             \"pool_workers\": {},\n  \"replicas\": {},\n  \"variants\": {{\n{}\n  }}\n}}\n",
+            self.requested_qps, self.achieved_qps, self.wall.as_secs_f64(),
+            self.pool_workers, self.replicas, ventries.join(",\n"))
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// CI gate over a persisted report (`repro loadtest check --file`):
+/// every variant must show zero errors, at least one OK response, and a
+/// nonzero p99 — a run that shed 100% or answered nothing fails loudly.
+pub fn check(path: &Path) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+    let schema = j.at(&["schema"]).and_then(Json::as_str).unwrap_or("");
+    anyhow::ensure!(schema == SCHEMA,
+                    "{}: schema {schema:?}, expected {SCHEMA:?}", path.display());
+    let vars = j.at(&["variants"]).and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("{}: no variants object", path.display()))?;
+    anyhow::ensure!(!vars.is_empty(), "{}: empty variants object", path.display());
+    for (name, v) in vars {
+        let num = |k: &str| -> Result<f64> {
+            v.at(&[k]).and_then(Json::as_f64).ok_or_else(|| anyhow::anyhow!(
+                "{}: variant {name} missing numeric {k}", path.display()))
+        };
+        let (ok, errors, rejected) = (num("ok")?, num("errors")?, num("rejected")?);
+        let p99 = num("p99_us")?;
+        anyhow::ensure!(errors == 0.0, "variant {name}: {errors} errors");
+        anyhow::ensure!(rejected == 0.0,
+                        "variant {name}: {rejected} malformed-request rejects");
+        anyhow::ensure!(ok > 0.0, "variant {name}: no OK responses");
+        anyhow::ensure!(p99 > 0.0, "variant {name}: p99 is 0µs — latencies \
+                                    were not recorded");
+        println!("loadtest check: {name} OK (ok={ok}, shed_rate={}, p99={p99}µs)",
+                 v.at(&["shed_rate"]).and_then(Json::as_f64).unwrap_or(0.0));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> LoadtestReport {
+        let mut lat = LatencyHistogram::new();
+        for us in [400u64, 900, 1500] {
+            lat.record(Duration::from_micros(us));
+        }
+        let mut variants = BTreeMap::new();
+        variants.insert("lenet5_adder".to_string(), VariantOutcome {
+            sent: 5, ok: 3, shed: 2, rejected: 0, errors: 0, lat,
+        });
+        LoadtestReport {
+            requested_qps: 200.0,
+            achieved_qps: 198.5,
+            wall: Duration::from_millis(2500),
+            pool_workers: 7,
+            replicas: 2,
+            variants,
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrip_passes_check() {
+        let r = sample_report();
+        let j = Json::parse(&r.to_json()).expect("report JSON parses");
+        assert_eq!(j.at(&["schema"]).and_then(Json::as_str), Some(SCHEMA));
+        assert_eq!(j.at(&["variants", "lenet5_adder", "shed"])
+                       .and_then(Json::as_usize), Some(2));
+        let p99 = j.at(&["variants", "lenet5_adder", "p99_us"])
+            .and_then(Json::as_f64).unwrap();
+        assert!(p99 > 0.0 && p99 <= 1500.0, "p99 {p99} must be clamped to max");
+        let path = std::env::temp_dir()
+            .join(format!("addernet-loadtest-{}.json", std::process::id()));
+        r.write_json(&path).unwrap();
+        check(&path).expect("clean report passes the gate");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn check_rejects_errors_and_empty_runs() {
+        let mut r = sample_report();
+        r.variants.get_mut("lenet5_adder").unwrap().errors = 1;
+        let path = std::env::temp_dir()
+            .join(format!("addernet-loadtest-bad-{}.json", std::process::id()));
+        r.write_json(&path).unwrap();
+        assert!(check(&path).is_err(), "errors > 0 must fail the gate");
+        let mut r = sample_report();
+        r.variants.get_mut("lenet5_adder").unwrap().ok = 0;
+        r.write_json(&path).unwrap();
+        assert!(check(&path).is_err(), "ok == 0 must fail the gate");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shed_rate_math() {
+        let o = VariantOutcome { sent: 8, shed: 2, ..Default::default() };
+        assert!((o.shed_rate() - 0.25).abs() < 1e-9);
+        assert_eq!(VariantOutcome::default().shed_rate(), 0.0);
+    }
+}

@@ -44,7 +44,12 @@ impl LatencyHistogram {
         self.max_us
     }
 
-    /// Approximate quantile from the bucket upper edges.
+    /// Approximate quantile from the bucket upper edges, clamped to the
+    /// maximum observed latency — a bucket's upper edge can exceed
+    /// every sample that landed in it (e.g. one 700µs sample reports a
+    /// p99 of 1024µs unclamped), and the top bucket is open-ended (its
+    /// nominal edge 2^32µs under-reports nothing but over-reports
+    /// wildly), so both resolve to `max_us`.
     pub fn quantile_us(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -54,7 +59,11 @@ impl LatencyHistogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return 1u64 << (i + 1);
+                if i + 1 >= self.buckets.len() {
+                    // open-ended top bucket: the true edge is max_us
+                    return self.max_us;
+                }
+                return (1u64 << (i + 1)).min(self.max_us);
             }
         }
         self.max_us
@@ -67,6 +76,13 @@ pub struct ServerMetrics {
     pub requests: u64,
     pub images: u64,
     pub batches: u64,
+    /// Admission-control sheds: submits refused `Overloaded` because
+    /// the variant's bounded queue was full.
+    pub shed: u64,
+    /// Malformed requests refused at submit (wrong pixel count).
+    pub rejected: u64,
+    /// Successful zero-downtime plan hot-swaps on this variant.
+    pub swaps: u64,
     pub queue_lat: LatencyHistogram,
     pub exec_lat: LatencyHistogram,
     pub e2e_lat: LatencyHistogram,
@@ -109,5 +125,34 @@ mod tests {
         }
         assert!(h.quantile_us(0.5) <= h.quantile_us(0.9));
         assert!(h.quantile_us(0.9) <= h.quantile_us(0.999));
+    }
+
+    #[test]
+    fn quantile_never_exceeds_observed_max() {
+        // one 700µs sample lands in bucket [512, 1024): the unclamped
+        // upper edge (1024) exceeds every latency actually observed
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(700));
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            assert!(h.quantile_us(q) <= h.max_us(),
+                    "q{q}: {} > max {}", h.quantile_us(q), h.max_us());
+        }
+        assert_eq!(h.quantile_us(0.99), 700);
+        // mixed: the 700µs tail must still not over-report
+        h.record(Duration::from_micros(10));
+        h.record(Duration::from_micros(20));
+        assert!(h.quantile_us(0.999) <= 700);
+    }
+
+    #[test]
+    fn top_bucket_reports_max_not_edge() {
+        // 5000s = 5e9µs exceeds 2^32µs, landing in the open-ended top
+        // bucket (index 31) whose nominal upper edge would both
+        // over-report (2^32) and under-report (the sample is beyond it)
+        let huge = Duration::from_secs(5000);
+        let mut h = LatencyHistogram::new();
+        h.record(huge);
+        assert_eq!(h.quantile_us(0.5), huge.as_micros() as u64);
+        assert_eq!(h.quantile_us(0.999), h.max_us());
     }
 }

@@ -1,18 +1,24 @@
 //! Layer-3 coordinator: manifest loading, the training driver that owns
-//! all model state, the serving router + dynamic batcher, and metrics.
+//! all model state, the serving router + dynamic batcher (replica
+//! fleets, bounded-queue admission control, plan hot-swap), the
+//! open-loop load-test harness, and metrics.
 //!
 //! The trainer and the PJRT serving backend need the `pjrt` feature; the
 //! functional-sim serving backend is always available.
 
+pub mod loadtest;
 pub mod manifest;
 pub mod metrics;
+pub mod queue;
 pub mod server;
 #[cfg(feature = "pjrt")]
 pub mod trainer;
 
+pub use loadtest::{LoadtestCfg, LoadtestReport};
 pub use manifest::Manifest;
 pub use metrics::{LatencyHistogram, ServerMetrics};
-pub use server::{FunctionalVariantCfg, ServerHandle};
+pub use queue::BoundedQueue;
+pub use server::{FunctionalVariantCfg, Response, ServerHandle, SubmitError};
 #[cfg(feature = "pjrt")]
 pub use server::VariantCfg;
 #[cfg(feature = "pjrt")]

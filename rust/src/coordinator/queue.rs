@@ -1,0 +1,259 @@
+//! Bounded multi-producer / multi-consumer request queue — the
+//! admission-control primitive of the serving fleet.
+//!
+//! `std::sync::mpsc` channels are unbounded and single-consumer: under
+//! overload they queue without limit (latency grows until the process
+//! dies), and a `Receiver` cannot be shared by N replica workers.  This
+//! queue fixes both:
+//!
+//! * **bounded depth** — [`BoundedQueue::push`] never blocks and never
+//!   queues past `capacity`; a full queue sheds the item back to the
+//!   caller as [`PushError::Full`] so the submitter gets an explicit
+//!   `Overloaded` error instead of unbounded latency;
+//! * **MPMC** — any number of replica workers block in
+//!   [`BoundedQueue::pop`] / [`BoundedQueue::pop_deadline`] on the same
+//!   queue; each item is claimed by exactly one worker;
+//! * **drain-on-close** — [`BoundedQueue::close`] refuses new pushes
+//!   but lets poppers empty what was already admitted, so a server
+//!   shutdown still answers every in-flight request before the workers
+//!   exit.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Why a push was refused.  The shed item rides along so callers can
+/// recover it without a clone.
+pub enum PushError<T> {
+    /// Admission control: the queue already holds `capacity` items.
+    Full(T),
+    /// The queue was closed (server shutdown).
+    Closed(T),
+}
+
+/// Outcome of a deadline-bounded pop.
+pub enum Pop<T> {
+    Item(T),
+    /// The deadline passed with the queue empty (and still open).
+    TimedOut,
+    /// The queue is closed AND drained — the worker should exit.
+    Closed,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC queue: `Mutex<VecDeque>` + condvar.  The serving hot
+/// path holds the lock only for a push/pop of one element, so worker
+/// contention is bounded by queue churn, never by inference time.
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    readers: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        assert!(capacity > 0, "queue capacity must be positive");
+        BoundedQueue {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            readers: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Currently queued (admitted, not yet claimed) items.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking admission: enqueue `item`, or shed it when the
+    /// queue is full or closed.  Never waits.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.readers.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: waits until an item is available or the queue is
+    /// closed and drained (`None` — the worker-exit signal).
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(x) = st.items.pop_front() {
+                return Some(x);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.readers.wait(st).unwrap();
+        }
+    }
+
+    /// Pop with a deadline — the batch-window primitive.  Items still
+    /// queued when the queue closes are drained before `Closed` is
+    /// reported.
+    pub fn pop_deadline(&self, deadline: Instant) -> Pop<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(x) = st.items.pop_front() {
+                return Pop::Item(x);
+            }
+            if st.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (guard, timeout) =
+                self.readers.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if timeout.timed_out() {
+                // One re-check after expiry: an item may have landed in
+                // the wake-up race, and a close must still drain first.
+                if let Some(x) = st.items.pop_front() {
+                    return Pop::Item(x);
+                }
+                if st.closed {
+                    return Pop::Closed;
+                }
+                return Pop::TimedOut;
+            }
+        }
+    }
+
+    /// Close the queue: every later push is refused, every queued item
+    /// is still handed to poppers, and blocked poppers wake up.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.readers.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn push_pop_fifo() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).map_err(|_| ()).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn full_queue_sheds_instead_of_queueing() {
+        let q = BoundedQueue::new(2);
+        q.push(1).map_err(|_| ()).unwrap();
+        q.push(2).map_err(|_| ()).unwrap();
+        match q.push(3) {
+            Err(PushError::Full(v)) => assert_eq!(v, 3),
+            _ => panic!("third push must shed"),
+        }
+        // popping frees capacity again
+        assert_eq!(q.pop(), Some(1));
+        q.push(3).map_err(|_| ()).unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_refuses_pushes_but_drains_poppers() {
+        let q = BoundedQueue::new(4);
+        q.push(10).map_err(|_| ()).unwrap();
+        q.push(11).map_err(|_| ()).unwrap();
+        q.close();
+        match q.push(12) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 12),
+            _ => panic!("push after close must be refused"),
+        }
+        // already-admitted items still drain, then poppers see the end
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(11));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_deadline_times_out_on_empty_open_queue() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        let t0 = Instant::now();
+        match q.pop_deadline(t0 + Duration::from_millis(20)) {
+            Pop::TimedOut => {}
+            _ => panic!("empty open queue must time out"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn pop_unblocks_on_concurrent_push_and_close() {
+        let q = std::sync::Arc::new(BoundedQueue::new(4));
+        let q2 = std::sync::Arc::clone(&q);
+        let popper = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = q2.pop() {
+                got.push(v);
+            }
+            got
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        q.push(7).map_err(|_| ()).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(popper.join().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn mpmc_each_item_claimed_once() {
+        const N: usize = 200;
+        let q = std::sync::Arc::new(BoundedQueue::new(N));
+        let workers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = std::sync::Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for i in 0..N {
+            q.push(i).map_err(|_| ()).unwrap();
+        }
+        q.close();
+        let mut all: Vec<usize> = workers
+            .into_iter()
+            .flat_map(|w| w.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..N).collect::<Vec<_>>());
+    }
+}

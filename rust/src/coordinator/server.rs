@@ -1,14 +1,24 @@
-//! Inference serving: request router + dynamic batcher.
+//! Inference serving: request router, admission control, replica
+//! fleets and dynamic batching.
 //!
 //! Thread architecture (the vendored crate set has no async runtime, so
-//! each model variant gets a dedicated OS worker thread):
+//! workers are dedicated OS threads):
 //!
 //! ```text
-//!   clients -> ServerHandle.submit(variant, image)
-//!           -> router (HashMap<variant, mpsc::Sender>)
-//!           -> worker thread [dynamic batcher -> backend]
+//!   clients -> ServerHandle.submit(variant, image)   [validated here]
+//!           -> per-variant BoundedQueue              [load-sheds when full]
+//!           -> N replica workers [dynamic batcher -> backend]
 //!           -> per-request response channel
 //! ```
+//!
+//! Every variant owns one bounded MPMC queue ([`super::queue`]) fed by
+//! `submit` and drained by `replicas` worker threads.  Admission
+//! control happens at `submit`: a malformed request (wrong pixel
+//! count) is refused with [`SubmitError::BadRequest`], and a full
+//! queue sheds with [`SubmitError::Overloaded`] — the server never
+//! queues unboundedly and a client is never left holding a silently
+//! dead response channel.  Both events are counted per variant in
+//! [`ServerMetrics`].
 //!
 //! Two backends share the router, the batcher and the metrics:
 //!
@@ -18,10 +28,21 @@
 //!   streaming amortize across the whole queue.  Needs no artifacts and
 //!   no XLA.  Variants with a quantized [`ExecMode`] are compiled to a
 //!   [`QuantPlan`] at startup and served by the i32-domain
-//!   [`PlanRunner`] (`repro serve --mode int8`).
+//!   [`PlanRunner`] (`repro serve --mode int8`).  Replica workers share
+//!   the persistent conv worker pool (`util/threads.rs`), so scaling
+//!   replicas scales batching concurrency without oversubscribing the
+//!   engine.
 //! * **pjrt** ([`start`], `pjrt` feature) — the AOT-compiled eval graph
 //!   through the PJRT runtime; PJRT handles are not `Send`, so each
 //!   worker constructs its own `Runtime`.
+//!
+//! **Zero-downtime plan hot-swap**: a quantized variant's compiled
+//! [`QuantPlan`] lives behind an `Arc` in a per-variant slot; workers
+//! take the CURRENT `Arc` when they start executing a batch, and
+//! [`ServerHandle::swap_plan`] atomically replaces the slot while
+//! traffic flows — in-flight batches finish on the plan they started
+//! with, every batch collected after the swap runs the new plan, and no
+//! request is ever dropped or errored by a swap.
 //!
 //! The dynamic batcher collects up to the backend's batch size, waiting
 //! at most `batch_window` after the first request — the same
@@ -29,7 +50,8 @@
 //! router) makes.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::fmt;
+use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -37,6 +59,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::metrics::ServerMetrics;
+use super::queue::{BoundedQueue, Pop, PushError};
 use crate::quant::plan::QuantPlan;
 use crate::quant::Calibration;
 use crate::sim::functional::{self, Arch, ExecMode, KernelStrategy, Params, Runner,
@@ -47,6 +70,9 @@ use crate::sim::intpath::PlanRunner;
 use super::manifest::Manifest;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{self, Runtime};
+
+/// Default bounded queue depth per variant (`--queue-depth` overrides).
+pub const DEFAULT_QUEUE_DEPTH: usize = 1024;
 
 /// A single inference request: one NHWC image.
 struct Request {
@@ -63,62 +89,193 @@ pub struct Response {
     pub total_time: Duration,
 }
 
-/// Handle clients use to submit work and read metrics.
+/// Typed submission error — callers can tell admission-control sheds
+/// apart from malformed requests and routing mistakes (the load-test
+/// harness and `drive_load` branch on it).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// No variant with that name is being served.
+    UnknownVariant(String),
+    /// Admission control: the variant's bounded queue is full.  The
+    /// request was shed (counted in `ServerMetrics::shed`) — retry
+    /// later or raise the queue depth.
+    Overloaded { variant: String, depth: usize },
+    /// Malformed request: the image does not match the variant's input
+    /// geometry (counted in `ServerMetrics::rejected`).
+    BadRequest { variant: String, expected: usize, got: usize },
+    /// The server is shutting down; the queue no longer admits work.
+    Shutdown(String),
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::UnknownVariant(v) => write!(f, "unknown variant {v}"),
+            SubmitError::Overloaded { variant, depth } => {
+                write!(f, "variant {variant}: overloaded — bounded queue full \
+                           at depth {depth}, request shed (retry later or \
+                           raise --queue-depth)")
+            }
+            SubmitError::BadRequest { variant, expected, got } => {
+                write!(f, "variant {variant}: bad request — expected \
+                           {expected} pixels (h*w*c), got {got}")
+            }
+            SubmitError::Shutdown(v) => {
+                write!(f, "variant {v}: server is shutting down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+type MetricsMap = Arc<Mutex<HashMap<String, ServerMetrics>>>;
+
+/// Per-variant shared state: the bounded request queue every replica
+/// drains, the expected input size `submit` validates against, and —
+/// for quantized variants — the hot-swappable plan slot.
+struct VariantState {
+    name: String,
+    queue: BoundedQueue<Request>,
+    /// Pixels (h*w*c) a well-formed request must carry.
+    px: usize,
+    /// The CURRENT compiled plan for quantized variants (`None` = f32
+    /// or PJRT).  Workers clone the `Arc` per batch; `swap_plan`
+    /// replaces it atomically under the mutex.
+    plan: Option<Mutex<Arc<QuantPlan>>>,
+}
+
+/// Handle clients use to submit work, swap plans and read metrics.
 pub struct ServerHandle {
-    routes: HashMap<String, Sender<Request>>,
-    pub metrics: Arc<Mutex<HashMap<String, ServerMetrics>>>,
-    workers: Vec<JoinHandle<()>>,
+    variants: HashMap<String, Arc<VariantState>>,
+    pub metrics: MetricsMap,
+    workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl ServerHandle {
-    /// Submit one image to a variant; returns a receiver for the response.
-    pub fn submit(&self, variant: &str, image: Vec<f32>) -> Result<Receiver<Response>> {
+    /// Submit one image to a variant; returns a receiver for the
+    /// response.  Admission control happens HERE: malformed requests
+    /// and overload sheds come back as typed errors immediately — a
+    /// submitted request is always answered (barring a worker panic),
+    /// never silently dropped.
+    pub fn submit(&self, variant: &str,
+                  image: Vec<f32>) -> Result<Receiver<Response>, SubmitError> {
+        let v = self.variants.get(variant)
+            .ok_or_else(|| SubmitError::UnknownVariant(variant.to_string()))?;
+        if image.len() != v.px {
+            self.bump(&v.name, |m| m.rejected += 1);
+            return Err(SubmitError::BadRequest {
+                variant: variant.to_string(),
+                expected: v.px,
+                got: image.len(),
+            });
+        }
         let (tx, rx) = mpsc::channel();
-        let route = self.routes.get(variant)
-            .ok_or_else(|| anyhow::anyhow!("unknown variant {variant}"))?;
-        route.send(Request { image, enqueued: Instant::now(), respond: tx })
-            .map_err(|_| anyhow::anyhow!("variant {variant} worker gone"))?;
-        Ok(rx)
+        let req = Request { image, enqueued: Instant::now(), respond: tx };
+        match v.queue.push(req) {
+            Ok(()) => Ok(rx),
+            Err(PushError::Full(_)) => {
+                self.bump(&v.name, |m| m.shed += 1);
+                Err(SubmitError::Overloaded {
+                    variant: variant.to_string(),
+                    depth: v.queue.capacity(),
+                })
+            }
+            Err(PushError::Closed(_)) => {
+                Err(SubmitError::Shutdown(variant.to_string()))
+            }
+        }
+    }
+
+    fn bump(&self, name: &str, f: impl FnOnce(&mut ServerMetrics)) {
+        let mut mm = self.metrics.lock().unwrap();
+        f(mm.entry(name.to_string()).or_default());
     }
 
     pub fn variants(&self) -> Vec<String> {
-        self.routes.keys().cloned().collect()
+        self.variants.keys().cloned().collect()
     }
 
-    /// Drop the routes (workers drain + exit) and join the threads.
-    pub fn shutdown(mut self) {
-        self.routes.clear();
-        for w in self.workers.drain(..) {
+    /// Pixels per request (h*w*c) the variant expects, if it exists.
+    pub fn input_len(&self, variant: &str) -> Option<usize> {
+        self.variants.get(variant).map(|v| v.px)
+    }
+
+    /// Zero-downtime plan hot-swap: atomically replace a quantized
+    /// variant's compiled [`QuantPlan`] while traffic flows.  The new
+    /// plan must target the same arch, kernel and quant config as the
+    /// one currently mounted (the same checks `start_functional`
+    /// applies to a mounted plan) — a served route never changes
+    /// meaning mid-flight.  In-flight batches finish on the old plan;
+    /// every request submitted after this returns runs the new one.
+    pub fn swap_plan(&self, variant: &str, plan: QuantPlan) -> Result<()> {
+        let v = self.variants.get(variant)
+            .ok_or_else(|| anyhow::anyhow!("unknown variant {variant}"))?;
+        let slot = v.plan.as_ref().ok_or_else(|| anyhow::anyhow!(
+            "variant {variant} does not serve a compiled plan (f32 or PJRT \
+             route) — hot-swap applies to quantized plan-backed variants"))?;
+        let mut cur = slot.lock().unwrap();
+        anyhow::ensure!(
+            plan.arch == cur.arch && plan.kind == cur.kind,
+            "variant {variant}: new plan was compiled for {}/{}, current \
+             serves {}/{}", plan.arch.name(), plan.kind.label(),
+            cur.arch.name(), cur.kind.label());
+        anyhow::ensure!(
+            plan.cfg == cur.cfg,
+            "variant {variant}: new plan serves int{} ({:?}), current serves \
+             int{} ({:?}) — quant config must match for a zero-downtime swap",
+            plan.cfg.bits, plan.cfg.mode, cur.cfg.bits, cur.cfg.mode);
+        *cur = Arc::new(plan);
+        drop(cur);
+        self.bump(variant, |m| m.swaps += 1);
+        Ok(())
+    }
+
+    /// Close every variant queue (already-admitted requests are still
+    /// answered — workers drain before exiting) and join the worker
+    /// threads.  Submissions after this return
+    /// [`SubmitError::Shutdown`].
+    pub fn shutdown(&self) {
+        for v in self.variants.values() {
+            v.queue.close();
+        }
+        let mut ws = self.workers.lock().unwrap();
+        for w in ws.drain(..) {
             let _ = w.join();
         }
     }
 }
 
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        // A dropped handle must not leak blocked worker threads.
+        self.shutdown();
+    }
+}
+
 /// Collect a batch: blocking wait for the first request, then drain up
-/// to `max_batch` within `batch_window`.  Returns false on shutdown.
-fn collect_batch(rx: &Receiver<Request>, pending: &mut Vec<Request>,
+/// to `max_batch` within `batch_window`.  Returns false on shutdown
+/// (queue closed AND drained); a closing queue still flushes what it
+/// holds through one final batch.
+fn collect_batch(queue: &BoundedQueue<Request>, pending: &mut Vec<Request>,
                  max_batch: usize, batch_window: Duration) -> bool {
-    match rx.recv() {
-        Ok(r) => pending.push(r),
-        Err(_) => return false, // all senders dropped: shutdown
+    match queue.pop() {
+        Some(r) => pending.push(r),
+        None => return false, // closed and drained: worker exits
     }
     let deadline = Instant::now() + batch_window;
     while pending.len() < max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(r) => pending.push(r),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+        match queue.pop_deadline(deadline) {
+            Pop::Item(r) => pending.push(r),
+            Pop::TimedOut => break,
+            // execute what we have; the next collect_batch call exits
+            Pop::Closed => break,
         }
     }
     true
 }
 
-fn record_batch(metrics: &Arc<Mutex<HashMap<String, ServerMetrics>>>,
-                name: &str, n: usize, exec_time: Duration) {
+fn record_batch(metrics: &MetricsMap, name: &str, n: usize, exec_time: Duration) {
     let mut mm = metrics.lock().unwrap();
     let m = mm.entry(name.to_string()).or_default();
     m.batches += 1;
@@ -127,17 +284,29 @@ fn record_batch(metrics: &Arc<Mutex<HashMap<String, ServerMetrics>>>,
     m.exec_lat.record(exec_time);
 }
 
-fn respond_all(metrics: &Arc<Mutex<HashMap<String, ServerMetrics>>>,
-               name: &str, pending: &mut Vec<Request>, exec_start: Instant,
-               logits: impl Fn(usize) -> Vec<f32>) {
-    let mut mm = metrics.lock().unwrap();
-    let m = mm.entry(name.to_string()).or_default();
-    for (i, r) in pending.drain(..).enumerate() {
-        let queue_time = exec_start.duration_since(r.enqueued);
-        let total_time = r.enqueued.elapsed();
-        m.queue_lat.record(queue_time);
-        m.e2e_lat.record(total_time);
-        let _ = r.respond.send(Response { logits: logits(i), queue_time, total_time });
+/// Record latencies and deliver responses.  The global metrics mutex is
+/// held ONLY while recording the latency histograms — never across the
+/// `respond.send` calls or the per-request logit clones, which with
+/// replica fleets would turn the lock into the serving bottleneck.
+fn respond_all(metrics: &MetricsMap, name: &str, pending: &mut Vec<Request>,
+               exec_start: Instant, logits: impl Fn(usize) -> Vec<f32>) {
+    let done: Vec<(Sender<Response>, Duration, Duration)> = pending.drain(..)
+        .map(|r| {
+            let queue_time = exec_start.duration_since(r.enqueued);
+            let total_time = r.enqueued.elapsed();
+            (r.respond, queue_time, total_time)
+        })
+        .collect();
+    {
+        let mut mm = metrics.lock().unwrap();
+        let m = mm.entry(name.to_string()).or_default();
+        for (_, queue_time, total_time) in &done {
+            m.queue_lat.record(*queue_time);
+            m.e2e_lat.record(*total_time);
+        }
+    } // lock released before any send or logit clone
+    for (i, (respond, queue_time, total_time)) in done.into_iter().enumerate() {
+        let _ = respond.send(Response { logits: logits(i), queue_time, total_time });
     }
 }
 
@@ -179,6 +348,13 @@ pub struct FunctionalVariantCfg {
     /// Dynamic-batch cap (the functional engine takes any batch size;
     /// this bounds per-batch latency).
     pub max_batch: usize,
+    /// Replica workers draining this variant's queue (`--replicas`).
+    /// Replicas share the persistent engine pool, so they scale
+    /// batch-collection concurrency, not raw thread count.
+    pub replicas: usize,
+    /// Bounded queue depth; a full queue load-sheds at `submit`
+    /// ([`SubmitError::Overloaded`]) instead of queueing unboundedly.
+    pub queue_depth: usize,
 }
 
 impl FunctionalVariantCfg {
@@ -198,11 +374,25 @@ impl FunctionalVariantCfg {
             plan: None,
             input_hwc: arch.graph().input,
             max_batch: 32,
+            replicas: 1,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
         }
     }
 }
 
-/// Start the functional-sim server: one worker thread per variant.
+/// Per-worker immutable config, shared by a variant's replicas.
+struct WorkerCfg {
+    name: String,
+    arch: Arch,
+    kind: SimKernel,
+    strategy: KernelStrategy,
+    params: Params,
+    input_hwc: (usize, usize, usize),
+    max_batch: usize,
+}
+
+/// Start the functional-sim server: `replicas` worker threads per
+/// variant, all draining one bounded per-variant queue.
 ///
 /// Quantized variants are compiled here, up front: building the
 /// [`QuantPlan`] validates the calibration table against the model
@@ -218,12 +408,14 @@ pub fn start_functional(variants: Vec<FunctionalVariantCfg>,
     anyhow::ensure!(!variants.is_empty(),
                     "no variants to serve (every requested variant was \
                      filtered out, or the model list is empty)");
-    let metrics: Arc<Mutex<HashMap<String, ServerMetrics>>> =
-        Arc::new(Mutex::new(HashMap::new()));
-    let mut routes = HashMap::new();
+    let metrics: MetricsMap = Arc::new(Mutex::new(HashMap::new()));
+    let mut routes: HashMap<String, Arc<VariantState>> = HashMap::new();
     let mut workers = Vec::new();
     for mut v in variants {
         anyhow::ensure!(v.max_batch > 0, "variant {}: max_batch must be > 0", v.name);
+        anyhow::ensure!(v.replicas > 0, "variant {}: replicas must be > 0", v.name);
+        anyhow::ensure!(v.queue_depth > 0,
+                        "variant {}: queue_depth must be > 0", v.name);
         let plan = match (v.plan.take(), v.mode) {
             // imported plan: already compiled and validated layer-by-
             // layer against its arch graph; just check it was mounted on
@@ -254,46 +446,66 @@ pub fn start_functional(variants: Vec<FunctionalVariantCfg>,
                         "variant {}: compiling the quantization plan", v.name))?)
             }
         };
-        let (tx, rx) = mpsc::channel::<Request>();
+        let (h, w, c) = v.input_hwc;
+        let state = Arc::new(VariantState {
+            name: v.name.clone(),
+            queue: BoundedQueue::new(v.queue_depth),
+            px: h * w * c,
+            plan: plan.map(|p| Mutex::new(Arc::new(p))),
+        });
         // a duplicate name would silently replace the first variant's
-        // route (its worker exits on disconnect while the CLI reports
-        // both as serving) — refuse at startup instead
-        anyhow::ensure!(routes.insert(v.name.clone(), tx).is_none(),
-                        "duplicate variant name {} (e.g. the same plan \
-                         file listed twice)", v.name);
-        let m = metrics.clone();
-        workers.push(std::thread::Builder::new()
-            .name(format!("fsim-{}", v.name))
-            .spawn(move || functional_worker(v, plan, rx, m, batch_window))?);
+        // route (its workers exit on close while the CLI reports both
+        // as serving) — refuse at startup instead
+        anyhow::ensure!(
+            routes.insert(v.name.clone(), Arc::clone(&state)).is_none(),
+            "duplicate variant name {} (e.g. the same plan file listed \
+             twice)", v.name);
+        let replicas = v.replicas;
+        let wcfg = Arc::new(WorkerCfg {
+            name: v.name.clone(),
+            arch: v.arch,
+            kind: v.kind,
+            strategy: v.strategy,
+            params: std::mem::take(&mut v.params),
+            input_hwc: v.input_hwc,
+            max_batch: v.max_batch,
+        });
+        for r in 0..replicas {
+            let wcfg = Arc::clone(&wcfg);
+            let state = Arc::clone(&state);
+            let m = Arc::clone(&metrics);
+            workers.push(std::thread::Builder::new()
+                .name(format!("fsim-{}-r{r}", wcfg.name))
+                .spawn(move || functional_worker(&wcfg, &state, &m, batch_window))?);
+        }
     }
-    Ok(ServerHandle { routes, metrics, workers })
+    Ok(ServerHandle {
+        variants: routes,
+        metrics,
+        workers: Mutex::new(workers),
+    })
 }
 
-fn functional_worker(cfg: FunctionalVariantCfg, plan: Option<QuantPlan>,
-                     rx: Receiver<Request>,
-                     metrics: Arc<Mutex<HashMap<String, ServerMetrics>>>,
+fn functional_worker(cfg: &WorkerCfg, state: &VariantState, metrics: &MetricsMap,
                      batch_window: Duration) {
-    let (h, w, c) = cfg.input_hwc;
-    let px = h * w * c;
     let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
     loop {
-        if !collect_batch(&rx, &mut pending, cfg.max_batch, batch_window) {
+        if !collect_batch(&state.queue, &mut pending, cfg.max_batch, batch_window) {
             return;
         }
-        // malformed requests are dropped; their response channel closes,
-        // surfacing a recv error to the submitter.
-        pending.retain(|r| r.image.len() == px);
         let n = pending.len();
-        if n == 0 {
-            continue;
-        }
         let exec_start = Instant::now();
         let images: Vec<&[f32]> = pending.iter().map(|r| r.image.as_slice()).collect();
-        let logits = match plan.as_ref() {
+        let logits = match state.plan.as_ref() {
             // int serving: the pre-compiled plan keeps activations i32
             // across the conv stack; no per-call weight requantization.
-            Some(p) => PlanRunner { plan: p, strategy: cfg.strategy }
-                .forward_many(&images, cfg.input_hwc),
+            // Take the CURRENT plan Arc — a concurrent swap_plan
+            // becomes visible at the next batch boundary.
+            Some(slot) => {
+                let plan = Arc::clone(&slot.lock().unwrap());
+                PlanRunner { plan: plan.as_ref(), strategy: cfg.strategy }
+                    .forward_many(&images, cfg.input_hwc)
+            }
             None => {
                 let mut runner = Runner {
                     params: &cfg.params,
@@ -309,8 +521,8 @@ fn functional_worker(cfg: FunctionalVariantCfg, plan: Option<QuantPlan>,
         };
         drop(images);
         let exec_time = exec_start.elapsed();
-        record_batch(&metrics, &cfg.name, n, exec_time);
-        respond_all(&metrics, &cfg.name, &mut pending, exec_start,
+        record_batch(metrics, &cfg.name, n, exec_time);
+        respond_all(metrics, &cfg.name, &mut pending, exec_start,
                     |i| logits[i].clone());
     }
 }
@@ -330,34 +542,57 @@ pub struct VariantCfg {
     pub weights: Option<String>,
 }
 
-/// Start the PJRT server: one worker thread per variant.
+/// Start the PJRT server: one worker thread per variant.  Input
+/// geometry is derived from each variant's eval graph in the manifest
+/// (the arch's compiled graph names the (h, w, c) input), never
+/// hardcoded; duplicate variant names are refused like
+/// [`start_functional`] does.
 #[cfg(feature = "pjrt")]
 pub fn start(manifest: &Manifest, variants: &[VariantCfg],
              batch_window: Duration) -> Result<ServerHandle> {
-    let metrics: Arc<Mutex<HashMap<String, ServerMetrics>>> =
-        Arc::new(Mutex::new(HashMap::new()));
-    let mut routes = HashMap::new();
+    anyhow::ensure!(!variants.is_empty(), "no variants to serve");
+    let metrics: MetricsMap = Arc::new(Mutex::new(HashMap::new()));
+    let mut routes: HashMap<String, Arc<VariantState>> = HashMap::new();
     let mut workers = Vec::new();
     for v in variants {
-        let (tx, rx) = mpsc::channel::<Request>();
-        routes.insert(v.model.clone(), tx);
-        let m = metrics.clone();
+        let gname = format!("{}_eval", v.model);
+        let ginfo = manifest.graph(&gname)?;
+        let arch = Arch::parse(&ginfo.arch).with_context(|| format!(
+            "variant {}: manifest arch {} is not a registered servable arch \
+             ({})", v.model, ginfo.arch, Arch::names_label()))?;
+        let input_hwc = arch.graph().input;
+        let (h, w, c) = input_hwc;
+        let state = Arc::new(VariantState {
+            name: v.model.clone(),
+            queue: BoundedQueue::new(DEFAULT_QUEUE_DEPTH),
+            px: h * w * c,
+            plan: None,
+        });
+        anyhow::ensure!(
+            routes.insert(v.model.clone(), Arc::clone(&state)).is_none(),
+            "duplicate variant name {} (listed twice in --models?)", v.model);
+        let m = Arc::clone(&metrics);
         let man = manifest.clone();
         let cfg = v.clone();
         workers.push(std::thread::Builder::new()
             .name(format!("worker-{}", v.model))
             .spawn(move || {
-                if let Err(e) = pjrt_worker(man, cfg.clone(), rx, m, batch_window) {
+                if let Err(e) = pjrt_worker(man, &cfg, &state, input_hwc, &m,
+                                            batch_window) {
                     eprintln!("[server] worker {} failed: {e:#}", cfg.model);
                 }
             })?);
     }
-    Ok(ServerHandle { routes, metrics, workers })
+    Ok(ServerHandle {
+        variants: routes,
+        metrics,
+        workers: Mutex::new(workers),
+    })
 }
 
 #[cfg(feature = "pjrt")]
-fn pjrt_worker(manifest: Manifest, cfg: VariantCfg, rx: Receiver<Request>,
-               metrics: Arc<Mutex<HashMap<String, ServerMetrics>>>,
+fn pjrt_worker(manifest: Manifest, cfg: &VariantCfg, state: &VariantState,
+               input_hwc: (usize, usize, usize), metrics: &MetricsMap,
                batch_window: Duration) -> Result<()> {
     // PJRT handles are not Send: the runtime lives and dies in this thread.
     let mut rt = Runtime::new(manifest.dir.clone())?;
@@ -365,6 +600,8 @@ fn pjrt_worker(manifest: Manifest, cfg: VariantCfg, rx: Receiver<Request>,
     let ginfo = manifest.graph(&gname)?.clone();
     rt.load(&gname, &ginfo.file)?;
     let batch = ginfo.batch;
+    let (h, w, c) = input_hwc;
+    let px = h * w * c;
 
     // model params: trained weights if configured, else init
     let layout = manifest.layout(&ginfo.arch)?;
@@ -376,25 +613,25 @@ fn pjrt_worker(manifest: Manifest, cfg: VariantCfg, rx: Receiver<Request>,
 
     let mut pending: Vec<Request> = Vec::with_capacity(batch);
     loop {
-        if !collect_batch(&rx, &mut pending, batch, batch_window) {
+        if !collect_batch(&state.queue, &mut pending, batch, batch_window) {
             return Ok(());
         }
         // assemble the fixed-size batch (pad with zeros)
         let n = pending.len();
-        let mut images = vec![0f32; batch * 1024];
+        let mut images = vec![0f32; batch * px];
         for (i, r) in pending.iter().enumerate() {
-            images[i * 1024..(i + 1) * 1024].copy_from_slice(&r.image);
+            images[i * px..(i + 1) * px].copy_from_slice(&r.image);
         }
         let exec_start = Instant::now();
-        let x = runtime::literal_f32(&[batch, 32, 32, 1], &images)?;
+        let x = runtime::literal_f32(&[batch, h, w, c], &images)?;
         let mut inputs: Vec<&xla::Literal> = params.iter().collect();
         inputs.push(&x);
         let outs = rt.execute(&gname, &inputs)?;
         let logits = runtime::to_vec_f32(&outs[0])?;
         let exec_time = exec_start.elapsed();
 
-        record_batch(&metrics, &cfg.model, n, exec_time);
-        respond_all(&metrics, &cfg.model, &mut pending, exec_start,
+        record_batch(metrics, &cfg.model, n, exec_time);
+        respond_all(metrics, &cfg.model, &mut pending, exec_start,
                     |i| logits[i * 10..(i + 1) * 10].to_vec());
     }
 }

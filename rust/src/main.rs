@@ -6,7 +6,11 @@
 //!   serve              start the batching inference server + load test
 //!                      (--mode int8|int16 serves plan-compiled variants;
 //!                      --plan FILE serves an exported plan with zero
-//!                      calibration)
+//!                      calibration; --replicas/--queue-depth size the
+//!                      fleet; --swap-plan hot-swaps a plan mid-drive)
+//!   loadtest           open-loop synthetic traffic at a fixed QPS against
+//!                      a fresh server; p50/p99/shed-rate written to JSON
+//!   loadtest check     CI gate over a loadtest JSON artifact
 //!   calibrate          record per-layer ranges, write a calibration JSON
 //!   plan               compile a QuantPlan and export it as a portable
 //!                      JSON artifact (serve it with serve --plan)
@@ -92,6 +96,7 @@ fn main() {
         "report" => cmd_report(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "loadtest" => cmd_loadtest(&args),
         "calibrate" => cmd_calibrate(&args),
         "plan" => cmd_plan(&args),
         "quantize" => cmd_quantize(&args),
@@ -124,7 +129,13 @@ fn usage() {
          repro serve [--backend functional|pjrt] [--models lenet5_adder,lenet5_mult] \
                      [--kernel naive|tiled|simd|auto] [--mode f32|int8|int16] \
                      [--calib FILE.json] [--plan PLAN.json[,PLAN2.json]] \
+                     [--replicas 1] [--queue-depth 1024] [--swap-plan PLAN.json] \
                      [--requests 512] [--window-ms 2] [--max-batch 32]\n  \
+         repro loadtest [--models lenet5_adder] [--plan PLAN.json[,PLAN2.json]] \
+                     [--kernel naive|tiled|simd|auto] [--replicas 1] \
+                     [--queue-depth 1024] [--qps 200] [--duration-s 3] \
+                     [--window-ms 2] [--max-batch 32] [--out target/loadtest.json]\n  \
+         repro loadtest check --file target/loadtest.json\n  \
          repro calibrate [--arch lenet5] [--kernel adder] [--calib-n 256] \
                      [--out target/calibration.json]\n  \
          repro plan [--arch lenet5] [--kernel adder] [--mode int8|int16] \
@@ -220,6 +231,18 @@ fn serve_functional(args: &Args) -> Result<()> {
     let n_req = args.get_usize("requests", 512);
     let window = Duration::from_millis(args.get_usize("window-ms", 2) as u64);
     let max_batch = args.get_usize("max-batch", 32);
+    let replicas = args.get_usize("replicas", 1).max(1);
+    let queue_depth = args.get_usize("queue-depth", server::DEFAULT_QUEUE_DEPTH).max(1);
+    // --swap-plan PLAN.json: mid-drive, hot-swap the matching quantized
+    // variant onto this plan while requests are in flight — the CLI
+    // control path for ServerHandle::swap_plan.
+    let swap = match args.flags.get("swap-plan") {
+        Some(path) => Some(quant::plan::plan_from_json(
+            &std::fs::read_to_string(path)
+                .with_context(|| format!("reading swap plan {path}"))?)
+            .with_context(|| format!("importing swap plan {path}"))?),
+        None => None,
+    };
     // --kernel pins the inner-kernel strategy; default Auto defers to
     // the ADDERNET_KERNEL env override and then the shape heuristic.
     let strategy = match args.flags.get("kernel") {
@@ -268,13 +291,16 @@ fn serve_functional(args: &Args) -> Result<()> {
                 input_hwc: plan.arch.graph().input,
                 max_batch: max_batch.max(1),
                 plan: Some(plan),
+                replicas,
+                queue_depth,
             });
         }
-        println!("[serve] functional backend: {} plan variants, kernel {}, \
-                  window {:?}, max batch {}",
+        println!("[serve] functional backend: {} plan variants x {replicas} \
+                  replicas, kernel {}, window {:?}, max batch {}, queue depth \
+                  {queue_depth}",
                  variants.len(), strategy.label(), window, max_batch);
         let handle = server::start_functional(variants, window)?;
-        return drive_load(handle, n_req);
+        return drive_load(handle, n_req, swap);
     }
     let mode = args.get("mode", "f32");
     let qcfg = match mode.as_str() {
@@ -306,6 +332,8 @@ fn serve_functional(args: &Args) -> Result<()> {
         let mut cfg = server::FunctionalVariantCfg::synthetic(&name, arch, kind, 42);
         cfg.strategy = strategy;
         cfg.max_batch = max_batch.max(1);
+        cfg.replicas = replicas;
+        cfg.queue_depth = queue_depth;
         let loaded = manifest.as_ref().and_then(|man| {
             let wfile = report::quantrep::trained_file(arch_s, kernel_s);
             let file = if man.dir.join(&wfile).exists() {
@@ -345,11 +373,12 @@ fn serve_functional(args: &Args) -> Result<()> {
     anyhow::ensure!(!variants.is_empty(),
                     "no servable variants left for --mode {mode} (mult-kernel \
                      plans cap at int8; try --models lenet5_adder)");
-    println!("[serve] functional backend: {} variants, kernel {}, mode {}, \
-              window {:?}, max batch {}",
+    println!("[serve] functional backend: {} variants x {replicas} replicas, \
+              kernel {}, mode {}, window {:?}, max batch {}, queue depth \
+              {queue_depth}",
              variants.len(), strategy.label(), mode, window, max_batch);
     let handle = server::start_functional(variants, window)?;
-    drive_load(handle, n_req)
+    drive_load(handle, n_req, swap)
 }
 
 /// Record per-layer feature/weight ranges over the synthetic eval set
@@ -538,12 +567,29 @@ fn serve_pjrt(args: &Args) -> Result<()> {
 
     println!("[serve] pjrt backend: {} variants, window {:?}", variants.len(), window);
     let handle = server::start(&manifest, &variants, window)?;
-    drive_load(handle, n_req)
+    drive_load(handle, n_req, None)
+}
+
+/// Resolve which served variant a hot-swap plan targets: the plan-file
+/// naming scheme first (`resnet8_adder_int8`), then the bare
+/// `arch_kernel` route `--mode int8` serving uses.
+fn swap_target(names: &[String], plan: &addernet::quant::QuantPlan) -> Result<String> {
+    let candidates = [
+        format!("{}_{}_int{}", plan.arch.name(), plan.kind.label(), plan.cfg.bits),
+        format!("{}_{}", plan.arch.name(), plan.kind.label()),
+    ];
+    candidates.iter().find(|c| names.iter().any(|n| n == *c)).cloned()
+        .ok_or_else(|| anyhow::anyhow!(
+            "--swap-plan targets {} or {}, but the server only serves: {}",
+            candidates[0], candidates[1], names.join(", ")))
 }
 
 /// Fire a synthetic round-robin load at a running server and print the
-/// latency/throughput metrics table.
-fn drive_load(handle: server::ServerHandle, n_req: usize) -> Result<()> {
+/// latency/throughput metrics table.  When `swap` carries a plan, it is
+/// hot-swapped onto the matching variant at the halfway point — with
+/// requests in flight — to exercise the zero-downtime path.
+fn drive_load(handle: server::ServerHandle, n_req: usize,
+              mut swap: Option<addernet::quant::QuantPlan>) -> Result<()> {
     let names = handle.variants();
     let eval = data::eval_set(n_req, 3);
     let t0 = std::time::Instant::now();
@@ -551,7 +597,31 @@ fn drive_load(handle: server::ServerHandle, n_req: usize) -> Result<()> {
     for i in 0..n_req {
         let img = eval.images[i * 1024..(i + 1) * 1024].to_vec();
         let v = &names[i % names.len()];
-        pending.push((i, handle.submit(v, img)?));
+        if i == n_req / 2 {
+            if let Some(plan) = swap.take() {
+                let target = swap_target(&names, &plan)?;
+                handle.swap_plan(&target, plan)?;
+                println!("[serve] hot-swapped plan onto {target} at request {i} \
+                          (traffic in flight)");
+            }
+        }
+        // the queue is bounded now: a shed is the server telling an
+        // open-loop driver to back off, not a fatal error
+        let rx = loop {
+            match handle.submit(v, img.clone()) {
+                Ok(rx) => break rx,
+                Err(server::SubmitError::Overloaded { .. }) => {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
+        pending.push((i, rx));
+    }
+    if let Some(plan) = swap.take() {
+        // n_req == 0 or 1: the midpoint never fired, still honour the flag
+        let target = swap_target(&names, &plan)?;
+        handle.swap_plan(&target, plan)?;
     }
     let mut correct = 0usize;
     for (i, rx) in pending {
@@ -568,8 +638,8 @@ fn drive_load(handle: server::ServerHandle, n_req: usize) -> Result<()> {
 
     let metrics = handle.metrics.lock().unwrap().clone();
     let mut t = Table::new("serving metrics", &[
-        "variant", "requests", "batches", "mean batch", "queue p50 us",
-        "exec p50 us", "e2e p99 us",
+        "variant", "requests", "batches", "mean batch", "shed", "swaps",
+        "queue p50 us", "exec p50 us", "e2e p50 us", "e2e p99 us",
     ]);
     for (name, m) in &metrics {
         t.row(&[
@@ -577,13 +647,125 @@ fn drive_load(handle: server::ServerHandle, n_req: usize) -> Result<()> {
             m.requests.to_string(),
             m.batches.to_string(),
             f(m.mean_batch_size(), 1),
+            m.shed.to_string(),
+            m.swaps.to_string(),
             m.queue_lat.quantile_us(0.5).to_string(),
             m.exec_lat.quantile_us(0.5).to_string(),
+            m.e2e_lat.quantile_us(0.5).to_string(),
             m.e2e_lat.quantile_us(0.99).to_string(),
         ]);
     }
     t.print();
     handle.shutdown();
+    Ok(())
+}
+
+/// `repro loadtest`: start a fresh functional server (f32 `--models`
+/// and/or `--plan` variants — unlike serve, the two compose, so one rig
+/// can probe a mixed f32 + int fleet), fire open-loop traffic at a
+/// fixed QPS, and persist p50/p99/shed-rate to a JSON artifact.
+/// `repro loadtest check --file X.json` is the CI gate over it.
+fn cmd_loadtest(args: &Args) -> Result<()> {
+    use addernet::coordinator::loadtest;
+
+    if args.positional.first().map(|s| s.as_str()) == Some("check") {
+        let file = args.flags.get("file")
+            .context("loadtest check needs --file target/loadtest.json")?;
+        return loadtest::check(std::path::Path::new(file));
+    }
+    let window = Duration::from_millis(args.get_usize("window-ms", 2) as u64);
+    let max_batch = args.get_usize("max-batch", 32).max(1);
+    let replicas = args.get_usize("replicas", 1).max(1);
+    let queue_depth = args.get_usize("queue-depth", server::DEFAULT_QUEUE_DEPTH).max(1);
+    let qps: f64 = args.get("qps", "200").parse().context("--qps takes a number")?;
+    let duration = Duration::from_secs(args.get_usize("duration-s", 3) as u64);
+    let out = args.get("out", "target/loadtest.json");
+    let strategy = match args.flags.get("kernel") {
+        Some(s) => KernelStrategy::parse(s)
+            .with_context(|| format!("--kernel takes naive|tiled|simd|auto, got {s}"))?,
+        None => KernelStrategy::Auto,
+    };
+
+    let mut variants = Vec::new();
+    // f32 variants on synthetic weights: the load rig needs no artifacts
+    if let Some(models) = args.flags.get("models") {
+        for m in models.split(',') {
+            let name = m.trim().to_string();
+            let (arch_s, kernel_s) =
+                name.split_once('_').unwrap_or((name.as_str(), "adder"));
+            let arch = Arch::parse(arch_s).with_context(
+                || format!("loadtest serves {}, got {arch_s}", Arch::names_label()))?;
+            let kind = SimKernel::parse(kernel_s).with_context(
+                || format!("loadtest serves adder|mult kernels, got {kernel_s}"))?;
+            let mut cfg = server::FunctionalVariantCfg::synthetic(&name, arch, kind, 42);
+            cfg.strategy = strategy;
+            cfg.max_batch = max_batch;
+            cfg.replicas = replicas;
+            cfg.queue_depth = queue_depth;
+            variants.push(cfg);
+        }
+    }
+    if let Some(paths) = args.flags.get("plan") {
+        for path in paths.split(',') {
+            let path = path.trim();
+            let plan = quant::plan::plan_from_json(
+                &std::fs::read_to_string(path)
+                    .with_context(|| format!("reading plan {path}"))?)
+                .with_context(|| format!("importing plan {path}"))?;
+            let name = format!("{}_{}_int{}", plan.arch.name(),
+                               plan.kind.label(), plan.cfg.bits);
+            variants.push(server::FunctionalVariantCfg {
+                name,
+                arch: plan.arch,
+                kind: plan.kind,
+                strategy,
+                params: Params::new(),
+                mode: ExecMode::Quant(plan.cfg),
+                calib: None,
+                input_hwc: plan.arch.graph().input,
+                max_batch,
+                plan: Some(plan),
+                replicas,
+                queue_depth,
+            });
+        }
+    }
+    anyhow::ensure!(!variants.is_empty(),
+                    "loadtest needs --models and/or --plan variants");
+
+    let names: Vec<String> = variants.iter().map(|v| v.name.clone()).collect();
+    println!("[loadtest] {} variants x {replicas} replicas, {qps} qps for \
+              {:?}, queue depth {queue_depth}", names.len(), duration);
+    let handle = server::start_functional(variants, window)?;
+    let report = loadtest::run(&handle, &names,
+                               &loadtest::LoadtestCfg { qps, duration, replicas })?;
+    handle.shutdown();
+
+    let mut t = Table::new("loadtest (open loop — sheds are never retried)", &[
+        "variant", "sent", "ok", "shed", "shed rate", "errors",
+        "p50 us", "p99 us", "max us",
+    ]);
+    for (name, o) in &report.variants {
+        t.row(&[
+            name.clone(),
+            o.sent.to_string(),
+            o.ok.to_string(),
+            o.shed.to_string(),
+            f(o.shed_rate(), 3),
+            o.errors.to_string(),
+            o.lat.quantile_us(0.5).to_string(),
+            o.lat.quantile_us(0.99).to_string(),
+            o.lat.max_us().to_string(),
+        ]);
+    }
+    t.print();
+    println!("[loadtest] requested {:.0} qps, achieved {:.0} qps over {:.2}s \
+              ({} pool workers)",
+             report.requested_qps, report.achieved_qps,
+             report.wall.as_secs_f64(), report.pool_workers);
+    report.write_json(std::path::Path::new(&out))?;
+    println!("[loadtest] report written to {out} (gate it with `repro \
+              loadtest check --file {out}`)");
     Ok(())
 }
 

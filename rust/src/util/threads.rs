@@ -102,6 +102,14 @@ fn pool() -> Option<&'static Pool> {
     .as_ref()
 }
 
+/// Worker threads in the persistent engine pool (0 when the host is
+/// single-core and everything runs inline).  Serving replicas share
+/// this pool, so the load-test report records it alongside replica
+/// counts — the two together bound real parallelism.
+pub fn pool_workers() -> usize {
+    pool().map_or(0, |p| p.workers)
+}
+
 /// Countdown latch: `wait` opens once `arrive` has been called `n` times.
 struct Latch {
     left: Mutex<usize>,

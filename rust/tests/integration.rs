@@ -536,17 +536,27 @@ fn functional_server_rejects_misconfigured_quant_variants() {
     assert!(err.contains("conv2"), "{err}");
 }
 
-/// A malformed request (wrong pixel count) is dropped: the submitter
-/// sees a closed channel, and well-formed requests still succeed.
+/// A malformed request (wrong pixel count) is refused AT SUBMIT with an
+/// error naming expected vs got — never silently dropped via a closed
+/// channel — it is counted in `ServerMetrics::rejected`, and
+/// well-formed requests still succeed.
 #[test]
-fn functional_server_drops_malformed_requests() {
+fn functional_server_rejects_malformed_requests_at_submit() {
     let cfg = server::FunctionalVariantCfg::synthetic(
         "lenet5_adder", Arch::Lenet5, SimKernel::Adder, 3);
     let handle = server::start_functional(
         vec![cfg], std::time::Duration::from_millis(1)).unwrap();
-    let bad = handle.submit("lenet5_adder", vec![0.0; 17]).unwrap();
+    match handle.submit("lenet5_adder", vec![0.0; 17]) {
+        Ok(_) => panic!("malformed request must be refused at submit"),
+        Err(e @ server::SubmitError::BadRequest { .. }) => {
+            let msg = e.to_string();
+            assert!(msg.contains("1024") && msg.contains("17"),
+                    "error must name expected vs got: {msg}");
+        }
+        Err(e) => panic!("expected BadRequest, got: {e}"),
+    }
     let good = handle.submit("lenet5_adder", vec![0.0; 1024]).unwrap();
-    assert!(good.recv().unwrap().logits.len() == 10);
-    assert!(bad.recv().is_err(), "malformed request should be dropped");
+    assert_eq!(good.recv().unwrap().logits.len(), 10);
+    assert_eq!(handle.metrics.lock().unwrap()["lenet5_adder"].rejected, 1);
     handle.shutdown();
 }

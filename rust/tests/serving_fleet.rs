@@ -1,0 +1,336 @@
+//! Fleet-serving tests: replica workers, bounded-queue admission
+//! control (load-shedding), zero-downtime plan hot-swap, and the
+//! batcher/shutdown edge cases.  Everything here runs offline — the
+//! tiled engine + synthetic weights need neither XLA nor artifacts.
+
+use std::time::Duration;
+
+use addernet::coordinator::server::{self, SubmitError};
+use addernet::data;
+use addernet::quant::plan::QuantPlan;
+use addernet::quant::Mode;
+use addernet::report::quantrep;
+use addernet::sim::functional::{synth_params, Arch, ExecMode, KernelStrategy,
+                                QuantCfg, SimKernel, Tensor};
+use addernet::sim::intpath::PlanRunner;
+
+const QCFG: QuantCfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+
+/// Build an int8 plan for lenet5/adder from the given synthetic seed.
+fn int8_plan(seed: u64) -> QuantPlan {
+    let params = synth_params(Arch::Lenet5, seed);
+    let (calib, _) = quantrep::calibrate(&params, Arch::Lenet5,
+                                         SimKernel::Adder, 16);
+    QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder, QCFG, &calib)
+        .unwrap()
+}
+
+/// Variant config mounting `plan` under `name` with `replicas` workers.
+fn plan_variant(name: &str, plan: QuantPlan,
+                replicas: usize) -> server::FunctionalVariantCfg {
+    let mut cfg = server::FunctionalVariantCfg::synthetic(
+        name, Arch::Lenet5, SimKernel::Adder, 42);
+    cfg.mode = ExecMode::Quant(QCFG);
+    cfg.plan = Some(plan);
+    cfg.replicas = replicas;
+    cfg
+}
+
+fn direct_logits(plan: &QuantPlan, image: &[f32]) -> Vec<f32> {
+    let runner = PlanRunner { plan, strategy: KernelStrategy::Auto };
+    runner.forward(&Tensor::new((1, 32, 32, 1), image.to_vec())).data
+}
+
+/// N replicas draining one queue serve the int path bit-identically to
+/// a direct plan execution: the plan path is deterministic, so neither
+/// replica scheduling nor batch splits may change a single logit.
+#[test]
+fn replicas_serve_int8_bit_identical() {
+    let plan = int8_plan(42);
+    let handle = server::start_functional(
+        vec![plan_variant("lenet5_adder_int8", plan.clone(), 4)],
+        Duration::from_millis(1)).unwrap();
+    let b = data::eval_set(32, 31);
+    let mut rxs = Vec::new();
+    for i in 0..32 {
+        let img = b.images[i * 1024..(i + 1) * 1024].to_vec();
+        rxs.push((i, handle.submit("lenet5_adder_int8", img).unwrap()));
+    }
+    for (i, rx) in rxs {
+        let resp = rx.recv().unwrap();
+        let want = direct_logits(&plan, &b.images[i * 1024..(i + 1) * 1024]);
+        assert_eq!(resp.logits, want, "request {i}");
+    }
+    // all 32 answered across the replica fleet, latencies recorded
+    let metrics = handle.metrics.lock().unwrap().clone();
+    let m = &metrics["lenet5_adder_int8"];
+    assert_eq!(m.requests, 32);
+    assert_eq!(m.e2e_lat.count(), 32);
+    handle.shutdown();
+}
+
+/// Zero-downtime hot-swap under live traffic: continuous submits while
+/// `swap_plan` replaces the int8 plan.  Zero requests are dropped or
+/// errored; every response is bit-identical to plan A or plan B run
+/// directly; everything submitted after the swap returns is exactly
+/// plan B — matching a cold-start server mounted on B from the outset.
+#[test]
+fn hot_swap_under_live_traffic() {
+    let plan_a = int8_plan(42);
+    let plan_b = int8_plan(1337); // different weights, same arch/kind/cfg
+    let b = data::eval_set(24, 7);
+    let img = |i: usize| b.images[i * 1024..(i + 1) * 1024].to_vec();
+
+    let handle = server::start_functional(
+        vec![plan_variant("lenet5_adder_int8", plan_a.clone(), 2)],
+        Duration::from_millis(1)).unwrap();
+
+    // pre-swap burst: must be exactly plan A
+    let pre: Vec<_> = (0..8)
+        .map(|i| (i, handle.submit("lenet5_adder_int8", img(i)).unwrap()))
+        .collect();
+    for (i, rx) in pre {
+        let resp = rx.recv().expect("pre-swap request dropped");
+        assert_eq!(resp.logits, direct_logits(&plan_a, &img(i)), "pre {i}");
+    }
+
+    // in-flight burst, then swap while it is (potentially) queued
+    let mid: Vec<_> = (8..16)
+        .map(|i| (i, handle.submit("lenet5_adder_int8", img(i)).unwrap()))
+        .collect();
+    handle.swap_plan("lenet5_adder_int8", plan_b.clone()).unwrap();
+    // post-swap burst: the swap returned before these were submitted,
+    // so they MUST execute under plan B
+    let post: Vec<_> = (16..24)
+        .map(|i| (i, handle.submit("lenet5_adder_int8", img(i)).unwrap()))
+        .collect();
+
+    for (i, rx) in mid {
+        let resp = rx.recv().expect("in-flight request dropped by swap");
+        let a = direct_logits(&plan_a, &img(i));
+        let bb = direct_logits(&plan_b, &img(i));
+        assert!(resp.logits == a || resp.logits == bb,
+                "mid {i}: response matches neither plan exactly");
+    }
+    let mut post_logits = Vec::new();
+    for (i, rx) in post {
+        let resp = rx.recv().expect("post-swap request dropped");
+        assert_eq!(resp.logits, direct_logits(&plan_b, &img(i)), "post {i}");
+        post_logits.push((i, resp.logits));
+    }
+    assert_eq!(handle.metrics.lock().unwrap()["lenet5_adder_int8"].swaps, 1);
+    handle.shutdown();
+
+    // a cold-start server on plan B answers bit-identically to the
+    // swapped server's post-swap responses
+    let cold = server::start_functional(
+        vec![plan_variant("lenet5_adder_int8", plan_b, 2)],
+        Duration::from_millis(1)).unwrap();
+    for (i, swapped) in post_logits {
+        let rx = cold.submit("lenet5_adder_int8", img(i)).unwrap();
+        assert_eq!(rx.recv().unwrap().logits, swapped, "cold-start {i}");
+    }
+    cold.shutdown();
+}
+
+/// swap_plan validates exactly like start_functional: unknown variants,
+/// f32 (plan-less) variants, and arch/kind/cfg mismatches are refused
+/// with proper errors, and the running plan is left untouched.
+#[test]
+fn hot_swap_validates_plan_compatibility() {
+    let plan_a = int8_plan(42);
+    let f32_cfg = server::FunctionalVariantCfg::synthetic(
+        "lenet5_f32", Arch::Lenet5, SimKernel::Adder, 42);
+    let handle = server::start_functional(
+        vec![plan_variant("lenet5_adder_int8", plan_a.clone(), 1), f32_cfg],
+        Duration::from_millis(1)).unwrap();
+
+    let err = handle.swap_plan("nope", plan_a.clone()).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown variant"), "{err:#}");
+
+    let err = handle.swap_plan("lenet5_f32", plan_a.clone()).unwrap_err();
+    assert!(format!("{err:#}").contains("plan"), "{err:#}");
+
+    // same arch/kind but a different quant width must be refused: the
+    // route's serving contract (its name says int8) cannot change
+    let params = synth_params(Arch::Lenet5, 42);
+    let (calib, _) = quantrep::calibrate(&params, Arch::Lenet5,
+                                         SimKernel::Adder, 16);
+    let wide = QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                                QuantCfg { bits: 16, mode: Mode::SharedScale },
+                                &calib).unwrap();
+    let err = handle.swap_plan("lenet5_adder_int8", wide).unwrap_err();
+    assert!(format!("{err:#}").contains("int16"), "{err:#}");
+
+    // traffic still flows on the original plan after every refusal
+    let b = data::eval_set(1, 3);
+    let rx = handle.submit("lenet5_adder_int8", b.images[..1024].to_vec())
+        .unwrap();
+    assert_eq!(rx.recv().unwrap().logits,
+               direct_logits(&plan_a, &b.images[..1024]));
+    assert_eq!(handle.metrics.lock().unwrap()["lenet5_adder_int8"].swaps, 0);
+    handle.shutdown();
+}
+
+/// Admission control at full queue depth: a burst far beyond
+/// queue_depth gets explicit `Overloaded` errors immediately (no hang,
+/// no unbounded queueing), the shed count lands in `ServerMetrics`, and
+/// every ADMITTED request is still answered with recorded p50/p99.
+#[test]
+fn overload_sheds_with_explicit_errors() {
+    // resnet8 forwards take milliseconds; a burst of 24 submits takes
+    // microseconds — with queue_depth 4 and max_batch 1 the queue MUST
+    // overflow mid-burst
+    let mut cfg = server::FunctionalVariantCfg::synthetic(
+        "resnet8_adder", Arch::Resnet8, SimKernel::Adder, 42);
+    cfg.max_batch = 1;
+    cfg.queue_depth = 4;
+    let handle = server::start_functional(vec![cfg],
+                                          Duration::from_millis(1)).unwrap();
+    let b = data::eval_set(1, 11);
+    let img = b.images[..1024].to_vec();
+    let mut admitted = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..24 {
+        match handle.submit("resnet8_adder", img.clone()) {
+            Ok(rx) => admitted.push((i, rx)),
+            Err(SubmitError::Overloaded { variant, depth }) => {
+                assert_eq!(variant, "resnet8_adder");
+                assert_eq!(depth, 4);
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(shed >= 1, "24-deep burst into a depth-4 queue must shed");
+    // every admitted request is answered — a shed never takes a
+    // neighbour down with it
+    for (i, rx) in admitted {
+        let resp = rx.recv().unwrap_or_else(|_| panic!("admitted {i} dropped"));
+        assert_eq!(resp.logits.len(), 10);
+    }
+    let metrics = handle.metrics.lock().unwrap().clone();
+    let m = &metrics["resnet8_adder"];
+    assert_eq!(m.shed, shed, "metrics must count exactly the observed sheds");
+    assert_eq!(m.requests + m.shed, 24);
+    assert!(m.e2e_lat.quantile_us(0.5) > 0, "p50 recorded");
+    assert!(m.e2e_lat.quantile_us(0.99) >= m.e2e_lat.quantile_us(0.5));
+    handle.shutdown();
+}
+
+/// Shutdown with requests in flight: every already-admitted request is
+/// still answered (drain-on-close), shutdown does not hang, and later
+/// submits fail with an explicit Shutdown error.
+#[test]
+fn shutdown_delivers_in_flight_then_refuses() {
+    let cfg = server::FunctionalVariantCfg::synthetic(
+        "lenet5_adder", Arch::Lenet5, SimKernel::Adder, 42);
+    let handle = server::start_functional(vec![cfg],
+                                          Duration::from_millis(1)).unwrap();
+    let b = data::eval_set(8, 13);
+    let rxs: Vec<_> = (0..8)
+        .map(|i| handle.submit("lenet5_adder",
+                               b.images[i * 1024..(i + 1) * 1024].to_vec())
+            .unwrap())
+        .collect();
+    handle.shutdown(); // joins workers: queue is closed AND drained here
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv()
+            .unwrap_or_else(|_| panic!("in-flight request {i} not answered"));
+        assert_eq!(resp.logits.len(), 10);
+    }
+    match handle.submit("lenet5_adder", vec![0.0; 1024]) {
+        Err(SubmitError::Shutdown(v)) => assert_eq!(v, "lenet5_adder"),
+        Ok(_) => panic!("submit after shutdown must fail"),
+        Err(e) => panic!("expected Shutdown error, got: {e}"),
+    }
+}
+
+/// Batch-window edges, pinned via the batches counter: requests spaced
+/// far beyond the window each get their own batch (expiry fires), while
+/// requests inside one long window share a batch.
+#[test]
+fn batch_window_expiry_and_merge() {
+    // slow trickle: 3 requests, 60ms apart, 2ms window -> 3 batches
+    let cfg = server::FunctionalVariantCfg::synthetic(
+        "lenet5_adder", Arch::Lenet5, SimKernel::Adder, 42);
+    let handle = server::start_functional(vec![cfg],
+                                          Duration::from_millis(2)).unwrap();
+    let b = data::eval_set(3, 17);
+    for i in 0..3 {
+        let rx = handle.submit("lenet5_adder",
+                               b.images[i * 1024..(i + 1) * 1024].to_vec())
+            .unwrap();
+        rx.recv().unwrap(); // wait the response out: the batch is sealed
+        if i < 2 {
+            std::thread::sleep(Duration::from_millis(60));
+        }
+    }
+    {
+        let metrics = handle.metrics.lock().unwrap();
+        let m = &metrics["lenet5_adder"];
+        assert_eq!(m.batches, 3, "trickled requests must not share a batch");
+        assert_eq!(m.images, 3);
+    }
+    handle.shutdown();
+
+    // merge: 2 requests 10ms apart inside a 400ms window -> 1 batch
+    let cfg = server::FunctionalVariantCfg::synthetic(
+        "lenet5_adder", Arch::Lenet5, SimKernel::Adder, 42);
+    let handle = server::start_functional(vec![cfg],
+                                          Duration::from_millis(400)).unwrap();
+    let rx1 = handle.submit("lenet5_adder", b.images[..1024].to_vec()).unwrap();
+    std::thread::sleep(Duration::from_millis(10));
+    let rx2 = handle.submit("lenet5_adder",
+                            b.images[1024..2048].to_vec()).unwrap();
+    rx1.recv().unwrap();
+    rx2.recv().unwrap();
+    {
+        let metrics = handle.metrics.lock().unwrap();
+        let m = &metrics["lenet5_adder"];
+        assert_eq!(m.batches, 1, "both requests fit one window");
+        assert_eq!(m.images, 2);
+    }
+    handle.shutdown();
+}
+
+/// The open-loop loadtest harness drives a live mixed fleet (f32 +
+/// int8-plan variants), reports only successes, and its JSON artifact
+/// passes the CI gate.
+#[test]
+fn loadtest_end_to_end_against_mixed_fleet() {
+    use addernet::coordinator::loadtest;
+
+    let mut f32_cfg = server::FunctionalVariantCfg::synthetic(
+        "lenet5_adder", Arch::Lenet5, SimKernel::Adder, 42);
+    f32_cfg.replicas = 2;
+    let int_cfg = plan_variant("lenet5_adder_int8", int8_plan(42), 2);
+    let handle = server::start_functional(vec![f32_cfg, int_cfg],
+                                          Duration::from_millis(1)).unwrap();
+    let names = vec!["lenet5_adder".to_string(), "lenet5_adder_int8".to_string()];
+    let report = loadtest::run(&handle, &names, &loadtest::LoadtestCfg {
+        qps: 400.0,
+        duration: Duration::from_millis(250),
+        replicas: 2,
+    }).unwrap();
+    handle.shutdown();
+
+    let total: u64 = report.variants.values().map(|o| o.sent).sum();
+    assert_eq!(total, 100, "open loop: qps * duration requests, exactly");
+    for (name, o) in &report.variants {
+        assert_eq!(o.errors, 0, "{name}: errors under a healthy fleet");
+        assert_eq!(o.rejected, 0, "{name}: the rig never sends bad pixels");
+        assert_eq!(o.ok + o.shed, o.sent, "{name}: every request accounted for");
+        assert!(o.ok > 0, "{name}: some requests must land");
+        if o.ok > 0 {
+            assert!(o.lat.quantile_us(0.99) > 0, "{name}: p99 recorded");
+        }
+    }
+    let path = std::env::temp_dir()
+        .join(format!("addernet-fleet-loadtest-{}.json", std::process::id()));
+    report.write_json(&path).unwrap();
+    // the gate passes only when no variant shed 100% — tolerate sheds
+    // by construction: queue depth is the default 1024 >> 100 requests
+    loadtest::check(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+}
