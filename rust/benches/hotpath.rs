@@ -165,6 +165,37 @@ fn main() {
     common::report("cnv6 int8 plan (graph-described arch)", cnv6_s, 64.0, "img");
     derived.push(("e2e_cnv6_int8_plan_s".to_string(), cnv6_s));
 
+    // Simulated-accelerator cycle counts for the serving plans (hwsim
+    // backend, P=1024).  Deterministic and machine-portable — unlike the
+    // wall-clock medians these can gate as absolutes; the committed
+    // ratio gate rides on hw_mult_over_adder_latency.
+    let hwp = addernet::sim::hwsim::DEFAULT_PARALLELISM;
+    let hw_lenet = addernet::sim::hwsim::per_image_cost(&plan, hwp).unwrap();
+    let hw_cnv6 = addernet::sim::hwsim::per_image_cost(&plan6, hwp).unwrap();
+    let params8 = synth_params(Arch::Resnet8, 42);
+    let (calib8a, _) = quantrep::calibrate(&params8, Arch::Resnet8,
+                                           SimKernel::Adder, 16);
+    let plan8a = QuantPlan::build(&params8, Arch::Resnet8, SimKernel::Adder,
+                                  qcfg, &calib8a).unwrap();
+    let (calib8m, _) = quantrep::calibrate(&params8, Arch::Resnet8,
+                                           SimKernel::Mult, 16);
+    let plan8m = QuantPlan::build(&params8, Arch::Resnet8, SimKernel::Mult,
+                                  qcfg, &calib8m).unwrap();
+    let hw_r8a = addernet::sim::hwsim::per_image_cost(&plan8a, hwp).unwrap();
+    let hw_r8m = addernet::sim::hwsim::per_image_cost(&plan8m, hwp).unwrap();
+    println!("hwsim cycles/img (P={hwp}): lenet5 {} | cnv6 {} | resnet8 adder \
+              {} — mult-vs-adder latency {:.2}x",
+             hw_lenet.cycles, hw_cnv6.cycles, hw_r8a.cycles,
+             hw_r8m.latency_ms / hw_r8a.latency_ms);
+    derived.push(("hw_cycles_lenet5_int8".to_string(), hw_lenet.cycles as f64));
+    derived.push(("hw_cycles_cnv6_int8".to_string(), hw_cnv6.cycles as f64));
+    derived.push(("hw_cycles_resnet8_int8".to_string(), hw_r8a.cycles as f64));
+    derived.push(("hw_cycles_resnet8_mult_int8".to_string(), hw_r8m.cycles as f64));
+    // the adder array closes timing at a higher fmax, so at equal cycle
+    // schedules the mult design is slower per image (paper: 1.16x)
+    derived.push(("hw_mult_over_adder_latency".to_string(),
+                  hw_r8m.latency_ms / hw_r8a.latency_ms));
+
     write_json(&rows, &derived);
 
     // L3b: dataset generator

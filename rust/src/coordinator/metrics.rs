@@ -2,6 +2,8 @@
 
 use std::time::Duration;
 
+use crate::sim::hwsim::HwCost;
+
 /// Online latency histogram with fixed log-spaced buckets (µs scale).
 #[derive(Debug, Clone)]
 pub struct LatencyHistogram {
@@ -86,11 +88,39 @@ pub struct ServerMetrics {
     pub queue_lat: LatencyHistogram,
     pub exec_lat: LatencyHistogram,
     pub e2e_lat: LatencyHistogram,
+    /// Simulated-accelerator cycles accumulated across every served
+    /// image (hwsim backend only; zero elsewhere).
+    pub hw_cycles: u64,
+    /// Simulated off-chip traffic, bytes.
+    pub hw_dram_bytes: u64,
+    /// Accumulated simulated wall-clock at the design's fmax, ms.
+    pub hw_latency_ms: f64,
+    /// Per-design gauges — constant over a variant's lifetime because
+    /// `swap_plan` pins (arch, kernel, quant config).
+    pub hw_power_w: f64,
+    pub hw_utilization: f64,
+    pub hw_fmax_mhz: f64,
 }
 
 impl ServerMetrics {
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 { 0.0 } else { self.images as f64 / self.batches as f64 }
+    }
+
+    /// Fold one batch's simulated-hardware cost into the aggregates.
+    pub fn record_hw(&mut self, cost: &HwCost) {
+        self.hw_cycles += cost.cycles;
+        self.hw_dram_bytes += cost.dram_bytes;
+        self.hw_latency_ms += cost.latency_ms;
+        self.hw_power_w = cost.power_w;
+        self.hw_utilization = cost.utilization;
+        self.hw_fmax_mhz = cost.fmax_mhz;
+    }
+
+    /// Mean simulated latency per served image, ms (0 when the variant
+    /// runs a backend without a hardware model).
+    pub fn hw_latency_per_image_ms(&self) -> f64 {
+        if self.images == 0 { 0.0 } else { self.hw_latency_ms / self.images as f64 }
     }
 }
 
@@ -142,6 +172,26 @@ mod tests {
         h.record(Duration::from_micros(10));
         h.record(Duration::from_micros(20));
         assert!(h.quantile_us(0.999) <= 700);
+    }
+
+    #[test]
+    fn hw_aggregates_accumulate() {
+        let mut m = ServerMetrics::default();
+        let cost = HwCost {
+            cycles: 1000, conv_cycles: 800, dma_cycles: 300,
+            dram_bytes: 4096, fmax_mhz: 250.0, latency_ms: 0.004,
+            power_w: 1.34, utilization: 0.95,
+        };
+        m.record_hw(&cost);
+        m.record_hw(&cost.scale(3));
+        m.images = 4;
+        assert_eq!(m.hw_cycles, 4000);
+        assert_eq!(m.hw_dram_bytes, 4 * 4096);
+        assert!((m.hw_latency_ms - 0.016).abs() < 1e-12);
+        assert_eq!(m.hw_power_w, 1.34);
+        assert_eq!(m.hw_fmax_mhz, 250.0);
+        assert!((m.hw_latency_per_image_ms() - 0.004).abs() < 1e-12);
+        assert_eq!(ServerMetrics::default().hw_latency_per_image_ms(), 0.0);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! dead response channel.  Both events are counted per variant in
 //! [`ServerMetrics`].
 //!
-//! Two backends share the router, the batcher and the metrics:
+//! Three backends share the router, the batcher and the metrics:
 //!
 //! * **functional** ([`start_functional`]) — the tiled multi-threaded
 //!   functional-sim engine; queued requests are stacked into ONE
@@ -32,6 +32,14 @@
 //!   the persistent conv worker pool (`util/threads.rs`), so scaling
 //!   replicas scales batching concurrency without oversubscribing the
 //!   engine.
+//! * **hwsim** — the functional plan path with the cycle-accurate
+//!   accelerator model alongside: setting
+//!   [`FunctionalVariantCfg::hw_parallelism`] on a plan-backed variant
+//!   precomputes the per-image schedule ([`crate::sim::hwsim`]) at
+//!   startup, every [`Response`] carries the request's [`HwCost`], and
+//!   batch costs aggregate into [`ServerMetrics`].  Logits are the
+//!   SAME plan-runner logits — the hardware model prices requests, it
+//!   never changes arithmetic.
 //! * **pjrt** ([`start`], `pjrt` feature) — the AOT-compiled eval graph
 //!   through the PJRT runtime; PJRT handles are not `Send`, so each
 //!   worker constructs its own `Runtime`.
@@ -64,6 +72,7 @@ use crate::quant::plan::QuantPlan;
 use crate::quant::Calibration;
 use crate::sim::functional::{self, Arch, ExecMode, KernelStrategy, Params, Runner,
                              SimKernel};
+use crate::sim::hwsim::{self, HwCost};
 use crate::sim::intpath::PlanRunner;
 
 #[cfg(feature = "pjrt")]
@@ -87,6 +96,9 @@ pub struct Response {
     pub logits: Vec<f32>,
     pub queue_time: Duration,
     pub total_time: Duration,
+    /// Simulated per-image hardware cost (hwsim backend; `None` on the
+    /// purely functional and PJRT routes).
+    pub hw: Option<HwCost>,
 }
 
 /// Typed submission error — callers can tell admission-control sheds
@@ -275,13 +287,17 @@ fn collect_batch(queue: &BoundedQueue<Request>, pending: &mut Vec<Request>,
     true
 }
 
-fn record_batch(metrics: &MetricsMap, name: &str, n: usize, exec_time: Duration) {
+fn record_batch(metrics: &MetricsMap, name: &str, n: usize, exec_time: Duration,
+                hw: Option<&HwCost>) {
     let mut mm = metrics.lock().unwrap();
     let m = mm.entry(name.to_string()).or_default();
     m.batches += 1;
     m.images += n as u64;
     m.requests += n as u64;
     m.exec_lat.record(exec_time);
+    if let Some(cost) = hw {
+        m.record_hw(cost);
+    }
 }
 
 /// Record latencies and deliver responses.  The global metrics mutex is
@@ -289,7 +305,8 @@ fn record_batch(metrics: &MetricsMap, name: &str, n: usize, exec_time: Duration)
 /// `respond.send` calls or the per-request logit clones, which with
 /// replica fleets would turn the lock into the serving bottleneck.
 fn respond_all(metrics: &MetricsMap, name: &str, pending: &mut Vec<Request>,
-               exec_start: Instant, logits: impl Fn(usize) -> Vec<f32>) {
+               exec_start: Instant, hw: Option<HwCost>,
+               logits: impl Fn(usize) -> Vec<f32>) {
     let done: Vec<(Sender<Response>, Duration, Duration)> = pending.drain(..)
         .map(|r| {
             let queue_time = exec_start.duration_since(r.enqueued);
@@ -306,7 +323,12 @@ fn respond_all(metrics: &MetricsMap, name: &str, pending: &mut Vec<Request>,
         }
     } // lock released before any send or logit clone
     for (i, (respond, queue_time, total_time)) in done.into_iter().enumerate() {
-        let _ = respond.send(Response { logits: logits(i), queue_time, total_time });
+        let _ = respond.send(Response {
+            logits: logits(i),
+            queue_time,
+            total_time,
+            hw,
+        });
     }
 }
 
@@ -343,6 +365,14 @@ pub struct FunctionalVariantCfg {
     /// `start_functional` validates that `arch`/`kind` match the plan
     /// and that `mode` is `ExecMode::Quant(plan.cfg)`.
     pub plan: Option<QuantPlan>,
+    /// Hw-sim backend: PE-array lanes of the simulated accelerator
+    /// (`repro serve --backend hwsim`, default
+    /// [`hwsim::DEFAULT_PARALLELISM`]).  Requires a plan-backed variant
+    /// (quantized mode or a mounted plan) — the per-image schedule is
+    /// precomputed at startup and is swap-invariant because `swap_plan`
+    /// pins (arch, kernel, quant config).  `None` serves without a
+    /// hardware model.
+    pub hw_parallelism: Option<u64>,
     /// Input (h, w, c); requests must carry h*w*c floats.
     pub input_hwc: (usize, usize, usize),
     /// Dynamic-batch cap (the functional engine takes any batch size;
@@ -372,6 +402,7 @@ impl FunctionalVariantCfg {
             mode: ExecMode::F32,
             calib: None,
             plan: None,
+            hw_parallelism: None,
             input_hwc: arch.graph().input,
             max_batch: 32,
             replicas: 1,
@@ -389,6 +420,8 @@ struct WorkerCfg {
     params: Params,
     input_hwc: (usize, usize, usize),
     max_batch: usize,
+    /// Precomputed per-image accelerator cost (hwsim backend).
+    hw_cost: Option<HwCost>,
 }
 
 /// Start the functional-sim server: `replicas` worker threads per
@@ -446,6 +479,23 @@ pub fn start_functional(variants: Vec<FunctionalVariantCfg>,
                         "variant {}: compiling the quantization plan", v.name))?)
             }
         };
+        // hwsim: price the variant's schedule ONCE — swap_plan pins
+        // (arch, kind, cfg), so the cost model cannot be invalidated by
+        // a hot-swap.  An f32 variant has no integer datapath to
+        // schedule; refuse it here rather than serving cost-free.
+        let hw_cost = match v.hw_parallelism {
+            None => None,
+            Some(p) => {
+                let plan_ref = plan.as_ref().ok_or_else(|| anyhow::anyhow!(
+                    "variant {}: the hwsim backend executes compiled plans — \
+                     serve a quantized mode or mount one with --plan \
+                     (f32 variants have no hardware schedule)", v.name))?;
+                Some(hwsim::per_image_cost(plan_ref, p).with_context(|| {
+                    format!("variant {}: building the accelerator schedule",
+                            v.name)
+                })?)
+            }
+        };
         let (h, w, c) = v.input_hwc;
         let state = Arc::new(VariantState {
             name: v.name.clone(),
@@ -469,6 +519,7 @@ pub fn start_functional(variants: Vec<FunctionalVariantCfg>,
             params: std::mem::take(&mut v.params),
             input_hwc: v.input_hwc,
             max_batch: v.max_batch,
+            hw_cost,
         });
         for r in 0..replicas {
             let wcfg = Arc::clone(&wcfg);
@@ -521,8 +572,9 @@ fn functional_worker(cfg: &WorkerCfg, state: &VariantState, metrics: &MetricsMap
         };
         drop(images);
         let exec_time = exec_start.elapsed();
-        record_batch(metrics, &cfg.name, n, exec_time);
-        respond_all(metrics, &cfg.name, &mut pending, exec_start,
+        let batch_hw = cfg.hw_cost.map(|c| c.scale(n));
+        record_batch(metrics, &cfg.name, n, exec_time, batch_hw.as_ref());
+        respond_all(metrics, &cfg.name, &mut pending, exec_start, cfg.hw_cost,
                     |i| logits[i].clone());
     }
 }
@@ -630,8 +682,8 @@ fn pjrt_worker(manifest: Manifest, cfg: &VariantCfg, state: &VariantState,
         let logits = runtime::to_vec_f32(&outs[0])?;
         let exec_time = exec_start.elapsed();
 
-        record_batch(metrics, &cfg.model, n, exec_time);
-        respond_all(metrics, &cfg.model, &mut pending, exec_start,
+        record_batch(metrics, &cfg.model, n, exec_time, None);
+        respond_all(metrics, &cfg.model, &mut pending, exec_start, None,
                     |i| logits[i * 10..(i + 1) * 10].to_vec());
     }
 }

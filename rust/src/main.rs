@@ -39,7 +39,7 @@ use addernet::quant;
 use addernet::sim::accelerator::{self, AccelConfig};
 use addernet::sim::functional::{Arch, ExecMode, KernelStrategy, Params, QuantCfg,
                                 SimKernel};
-use addernet::util::table::{f, Table};
+use addernet::util::table::{f, pct, Table};
 use addernet::{data, nn};
 
 /// Minimal flag parser: positional args + `--key value` pairs.
@@ -125,10 +125,14 @@ fn usage() {
          usage:\n  \
          repro report <exp> [--arch lenet5] [--eval-n 256] [--artifacts DIR]\n    \
          exps: {}\n  \
+         repro report fpga [--plan PLAN.json[,PLAN2.json]] [--parallelism 1024] \
+                     [--out target/fpga_report.json]\n  \
          repro train [--arch lenet5] [--kernel adder] [--steps 400] [--eval-n 512]\n  \
-         repro serve [--backend functional|pjrt] [--models lenet5_adder,lenet5_mult] \
+         repro serve [--backend functional|hwsim|pjrt] \
+                     [--models lenet5_adder,lenet5_mult] \
                      [--kernel naive|tiled|simd|auto] [--mode f32|int8|int16] \
                      [--calib FILE.json] [--plan PLAN.json[,PLAN2.json]] \
+                     [--hw-parallelism 1024] \
                      [--replicas 1] [--queue-depth 1024] [--swap-plan PLAN.json] \
                      [--requests 512] [--window-ms 2] [--max-batch 32]\n  \
          repro loadtest [--models lenet5_adder] [--plan PLAN.json[,PLAN2.json]] \
@@ -152,8 +156,56 @@ fn usage() {
 fn cmd_report(args: &Args) -> Result<()> {
     let exp = args.positional.first()
         .context("report needs an experiment id")?;
+    if exp == "fpga" {
+        // fpga takes flags the generic dispatcher has no slots for
+        // (--plan/--parallelism/--out) and writes a JSON artifact
+        return cmd_report_fpga(args);
+    }
     report::run(exp, &art_dir(args), &args.get("arch", "lenet5"),
                 args.get_usize("eval-n", 256))
+}
+
+/// `repro report fpga`: the paper-comparison hardware table (§4) for
+/// compiled QuantPlans — per arch × width × kernel GOPs, latency, power
+/// and LUT split — plus a JSON artifact CI archives.  `--plan` costs
+/// exported plan files; without it, every registered arch is swept over
+/// the adder int8/int16 + mult int8 matrix on synthetic weights.
+fn cmd_report_fpga(args: &Args) -> Result<()> {
+    use addernet::report::fpga;
+
+    let parallelism = args.get_usize(
+        "parallelism", addernet::sim::hwsim::DEFAULT_PARALLELISM as usize) as u64;
+    let out = args.get("out", "target/fpga_report.json");
+    fpga::onboard().print();
+    let rows = match args.flags.get("plan") {
+        Some(paths) => {
+            let mut rows = Vec::new();
+            for path in paths.split(',') {
+                let path = path.trim();
+                let plan = quant::plan::plan_from_json(
+                    &std::fs::read_to_string(path)
+                        .with_context(|| format!("reading plan {path}"))?)
+                    .with_context(|| format!("importing plan {path}"))?;
+                rows.push(fpga::plan_hw_row(&plan, parallelism)
+                    .with_context(|| format!("costing plan {path}"))?);
+            }
+            rows
+        }
+        None => {
+            println!("[report] no --plan files; sweeping every registered \
+                      arch over the adder int8/int16 + mult int8 matrix on \
+                      synthetic weights");
+            fpga::default_plan_rows(parallelism, 32)?
+        }
+    };
+    fpga::plan_table(&rows).print();
+    let doc = fpga::fpga_report_json(&rows, parallelism);
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    std::fs::write(&out, &doc).with_context(|| format!("writing {out}"))?;
+    println!("[report] fpga hardware report written to {out}");
+    Ok(())
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -209,13 +261,17 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     match args.get("backend", "functional").as_str() {
-        "functional" => serve_functional(args),
+        "functional" => serve_functional(args, false),
+        // hwsim = the functional plan path plus the cycle-accurate
+        // accelerator schedule: identical logits, each response carries
+        // the simulated hardware cost
+        "hwsim" => serve_functional(args, true),
         #[cfg(feature = "pjrt")]
         "pjrt" => serve_pjrt(args),
         other => anyhow::bail!(
-            "unknown serve backend {other} (functional is always available; \
-             pjrt needs the xla dependency uncommented in rust/Cargo.toml \
-             and a build with --features pjrt)"),
+            "unknown serve backend {other} (functional and hwsim are always \
+             available; pjrt needs the xla dependency uncommented in \
+             rust/Cargo.toml and a build with --features pjrt)"),
     }
 }
 
@@ -225,8 +281,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// variant into a `QuantPlan` (weights quantized once, activations i32
 /// through the conv stack) from `--calib FILE.json` — or, without a
 /// file, from a fresh calibration pass over the synthetic eval set.
-fn serve_functional(args: &Args) -> Result<()> {
+/// With `hwsim` every variant also gets a cycle schedule on the
+/// simulated accelerator at `--hw-parallelism` lanes, and responses
+/// carry the hardware cost (logits stay bit-identical to functional).
+fn serve_functional(args: &Args, hwsim: bool) -> Result<()> {
     let dir = art_dir(args);
+    let backend = if hwsim { "hwsim" } else { "functional" };
+    let hw_parallelism = hwsim.then(|| {
+        args.get_usize("hw-parallelism",
+                       addernet::sim::hwsim::DEFAULT_PARALLELISM as usize) as u64
+    });
     let models = args.get("models", "lenet5_adder,lenet5_mult");
     let n_req = args.get_usize("requests", 512);
     let window = Duration::from_millis(args.get_usize("window-ms", 2) as u64);
@@ -293,22 +357,27 @@ fn serve_functional(args: &Args) -> Result<()> {
                 plan: Some(plan),
                 replicas,
                 queue_depth,
+                hw_parallelism,
             });
         }
-        println!("[serve] functional backend: {} plan variants x {replicas} \
+        println!("[serve] {backend} backend: {} plan variants x {replicas} \
                   replicas, kernel {}, window {:?}, max batch {}, queue depth \
                   {queue_depth}",
                  variants.len(), strategy.label(), window, max_batch);
         let handle = server::start_functional(variants, window)?;
         return drive_load(handle, n_req, swap);
     }
-    let mode = args.get("mode", "f32");
+    let mode = args.get("mode", if hwsim { "int8" } else { "f32" });
     let qcfg = match mode.as_str() {
         "f32" => None,
         "int8" => Some(QuantCfg { bits: 8, mode: quant::Mode::SharedScale }),
         "int16" => Some(QuantCfg { bits: 16, mode: quant::Mode::SharedScale }),
         m => anyhow::bail!("serve's --mode takes f32|int8|int16, got {m}"),
     };
+    anyhow::ensure!(!(hwsim && qcfg.is_none()),
+                    "the hwsim backend executes compiled plans — pick --mode \
+                     int8|int16 or mount plan files with --plan (f32 variants \
+                     have no hardware schedule)");
     let calib_table = match args.flags.get("calib") {
         Some(path) => Some(quant::plan::calibration_from_json(
             &std::fs::read_to_string(path)
@@ -334,6 +403,7 @@ fn serve_functional(args: &Args) -> Result<()> {
         cfg.max_batch = max_batch.max(1);
         cfg.replicas = replicas;
         cfg.queue_depth = queue_depth;
+        cfg.hw_parallelism = hw_parallelism;
         let loaded = manifest.as_ref().and_then(|man| {
             let wfile = report::quantrep::trained_file(arch_s, kernel_s);
             let file = if man.dir.join(&wfile).exists() {
@@ -373,7 +443,7 @@ fn serve_functional(args: &Args) -> Result<()> {
     anyhow::ensure!(!variants.is_empty(),
                     "no servable variants left for --mode {mode} (mult-kernel \
                      plans cap at int8; try --models lenet5_adder)");
-    println!("[serve] functional backend: {} variants x {replicas} replicas, \
+    println!("[serve] {backend} backend: {} variants x {replicas} replicas, \
               kernel {}, mode {}, window {:?}, max batch {}, queue depth \
               {queue_depth}",
              variants.len(), strategy.label(), mode, window, max_batch);
@@ -519,6 +589,16 @@ fn bench_check(args: &Args) -> Result<()> {
         ("int8 plan vs f32 (whole model)",
          &["derived", "plan_vs_f32"]),
     ];
+    // Cycle-count gates over the simulated accelerator (deterministic,
+    // machine-portable).  A key missing from the BASELINE notes-and-
+    // skips — the committed snapshot predates the hw rows and can only
+    // be regenerated on a machine with the toolchain — but a key
+    // missing from the CURRENT run is a hard error: the bench must
+    // keep recording it.
+    const OPTIONAL_GATES: &[(&str, &[&str])] = &[
+        ("hwsim: mult/adder latency ratio (resnet8 int8)",
+         &["derived", "hw_mult_over_adder_latency"]),
+    ];
     let mut t = Table::new(
         &format!("hotpath bench-regression gate (tolerance {:.0}%)",
                  tol * 100.0),
@@ -528,6 +608,23 @@ fn bench_check(args: &Args) -> Result<()> {
         let b = base.at(path).and_then(|v| v.as_f64())
             .ok_or_else(|| anyhow::anyhow!(
                 "{baseline_path}: missing {}", path.join(".")))?;
+        let c = cur.at(path).and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!(
+                "{current_path}: missing {}", path.join(".")))?;
+        let floor = b * (1.0 - tol);
+        let ok = c >= floor;
+        t.row(&[label.to_string(), f(b, 2), f(floor, 2), f(c, 2),
+                if ok { "ok" } else { "REGRESSED" }.to_string()]);
+        if !ok {
+            failed.push(format!("{label}: {c:.2}x < floor {floor:.2}x"));
+        }
+    }
+    for (label, path) in OPTIONAL_GATES {
+        let Some(b) = base.at(path).and_then(|v| v.as_f64()) else {
+            t.row(&[label.to_string(), "-".into(), "-".into(), "-".into(),
+                    "skipped (no baseline)".into()]);
+            continue;
+        };
         let c = cur.at(path).and_then(|v| v.as_f64())
             .ok_or_else(|| anyhow::anyhow!(
                 "{current_path}: missing {}", path.join(".")))?;
@@ -656,6 +753,28 @@ fn drive_load(handle: server::ServerHandle, n_req: usize,
         ]);
     }
     t.print();
+    // hwsim variants: the accumulated cycle-accurate accelerator cost
+    if metrics.iter().any(|(_, m)| m.hw_cycles > 0) {
+        let mut ht = Table::new("simulated hardware (cycle-accurate accelerator)", &[
+            "variant", "cycles", "fmax MHz", "lat/img ms", "power W",
+            "util", "DRAM MB",
+        ]);
+        for (name, m) in &metrics {
+            if m.hw_cycles == 0 {
+                continue;
+            }
+            ht.row(&[
+                name.clone(),
+                m.hw_cycles.to_string(),
+                f(m.hw_fmax_mhz, 0),
+                f(m.hw_latency_per_image_ms(), 3),
+                f(m.hw_power_w, 2),
+                pct(m.hw_utilization),
+                f(m.hw_dram_bytes as f64 / 1e6, 1),
+            ]);
+        }
+        ht.print();
+    }
     handle.shutdown();
     Ok(())
 }
@@ -727,6 +846,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
                 plan: Some(plan),
                 replicas,
                 queue_depth,
+                hw_parallelism: None,
             });
         }
     }

@@ -25,7 +25,7 @@
 
 use std::sync::OnceLock;
 
-use super::{conv_out_dim, ConvLayer, Layer, NetworkDesc, Padding};
+use super::{conv_out_dim, pool_out_dim, ConvLayer, Layer, NetworkDesc, Padding};
 
 /// One conv + batch-norm stage: the unit both the f32 path (eval-mode
 /// BN) and the int path (BN folded into the accumulator) execute.
@@ -150,8 +150,8 @@ impl NetGraph {
                         w_in: w,
                         ch,
                     });
-                    h /= 2;
-                    w /= 2;
+                    h = pool_out_dim(h, 2, 2);
+                    w = pool_out_dim(w, 2, 2);
                 }
                 Op::MaxPool { window, stride } => {
                     pools += 1;
@@ -163,11 +163,16 @@ impl NetGraph {
                         w_in: w,
                         ch,
                     });
-                    h /= *stride;
-                    w /= *stride;
+                    h = pool_out_dim(h, *window, *stride);
+                    w = pool_out_dim(w, *window, *stride);
                 }
                 Op::GlobalAvgPool => {
-                    layers.push(Layer::GlobalPool { ch, h_in: h, w_in: w });
+                    layers.push(Layer::GlobalPool {
+                        name: "gap".into(),
+                        ch,
+                        h_in: h,
+                        w_in: w,
+                    });
                     h = 1;
                     w = 1;
                 }
@@ -584,5 +589,20 @@ mod tests {
         // spatial chain 32 -> 16 -> 8 survives into the descriptor
         let hs: Vec<usize> = dc.conv_layers().map(|c| c.h_in).collect();
         assert_eq!(hs, vec![32, 32, 16, 16, 8, 8]);
+    }
+
+    #[test]
+    fn imagenet_stem_pool_uses_valid_geometry() {
+        // ResNet-18 stem: 224 -(7/2 Same)-> 112 -(MaxPool 3/2)-> 55.
+        // The floor formula would claim 56; a valid 3-wide window at
+        // stride 2 only fits 55 times.
+        let d = by_name("resnet18").unwrap().to_desc();
+        let first_block = d.conv_layers()
+            .find(|c| c.name == "s0b0/c1")
+            .expect("resnet18 has s0b0/c1");
+        assert_eq!((first_block.h_in, first_block.w_in), (55, 55));
+        // Pool rows carry graph-canonical names for LayerRun joins.
+        assert!(d.layers.iter().any(|l| l.name() == "pool1"));
+        assert!(d.layers.iter().any(|l| l.name() == "gap"));
     }
 }

@@ -34,6 +34,15 @@ pub fn conv_out_dim(in_sz: usize, k: usize, stride: usize, padding: Padding) -> 
     }
 }
 
+/// Output extent of one spatial dimension under VALID window pooling —
+/// the geometry the descriptors, the graph walk and the accelerator
+/// schedule all share.  (The runtime executors keep their floor+clamp
+/// semantics; for every window == stride pool the two agree, and the
+/// descriptor side must not overcount outputs when they don't.)
+pub fn pool_out_dim(in_sz: usize, window: usize, stride: usize) -> usize {
+    conv_out_dim(in_sz, window, stride, Padding::Valid)
+}
+
 /// (before, after) zero padding for one spatial dimension — SAME mode
 /// centres the kernel the way JAX/TF do (extra pad goes after).
 pub fn same_pad(in_sz: usize, k: usize, stride: usize) -> (usize, usize) {
@@ -113,7 +122,7 @@ pub enum Layer {
     /// Window pooling (avg or max — same cost model).
     Pool { name: String, window: usize, stride: usize, h_in: usize, w_in: usize, ch: usize },
     Dense { name: String, din: usize, dout: usize },
-    GlobalPool { ch: usize, h_in: usize, w_in: usize },
+    GlobalPool { name: String, ch: usize, h_in: usize, w_in: usize },
 }
 
 impl Layer {
@@ -122,9 +131,13 @@ impl Layer {
             Layer::Conv(c) => c.macs(),
             Layer::Dense { din, dout, .. } => (din * dout) as u64,
             Layer::Pool { window, h_in, w_in, ch, stride, .. } => {
-                ((h_in / stride) * (w_in / stride) * ch * window * window) as u64 / 2
+                (pool_out_dim(*h_in, *window, *stride)
+                    * pool_out_dim(*w_in, *window, *stride)
+                    * ch * window * window) as u64 / 2
             }
-            Layer::GlobalPool { ch, h_in, w_in } => (ch * h_in * w_in) as u64 / 2,
+            Layer::GlobalPool { ch, h_in, w_in, .. } => {
+                (ch * h_in * w_in) as u64 / 2
+            }
         }
     }
 
@@ -141,7 +154,7 @@ impl Layer {
             Layer::Conv(c) => &c.name,
             Layer::Pool { name, .. } => name,
             Layer::Dense { name, .. } => name,
-            Layer::GlobalPool { .. } => "gap",
+            Layer::GlobalPool { name, .. } => name,
         }
     }
 }
@@ -197,6 +210,30 @@ mod tests {
         let (pt, pl, ho, wo) = conv_geometry(9, 7, 3, 3, 2, Padding::Same);
         assert_eq!((ho, wo), (5, 4));
         assert_eq!((pt, pl), (1, 1));
+    }
+
+    #[test]
+    fn pool_geometry_valid_semantics() {
+        // window == stride, divisible: matches the old floor formula.
+        assert_eq!(pool_out_dim(28, 2, 2), 14);
+        assert_eq!(pool_out_dim(14, 2, 2), 7);
+        // window != stride: floor would say 112/2 = 56; a valid 3-wide
+        // window only fits 55 times (the ResNet-18/50 stem pool).
+        assert_eq!(pool_out_dim(112, 3, 2), 55);
+        assert_eq!(pool_out_dim(55, 3, 2), 27);
+        // non-divisible input: a 2/2 window leaves the odd tail out.
+        assert_eq!(pool_out_dim(5, 2, 2), 2);
+        // degenerate: window larger than the input yields zero outputs.
+        assert_eq!(pool_out_dim(2, 3, 2), 0);
+    }
+
+    #[test]
+    fn pool_layer_macs_use_valid_geometry() {
+        let p = Layer::Pool {
+            name: "pool1".into(), window: 3, stride: 2,
+            h_in: 112, w_in: 112, ch: 64,
+        };
+        assert_eq!(p.macs(), (55 * 55 * 64 * 9) as u64 / 2);
     }
 
     #[test]

@@ -1,11 +1,20 @@
-//! FPGA-level reports: Eq. (2)/(3), Fig. 4, Fig. 5, §4 on-board, S8.
+//! FPGA-level reports: Eq. (2)/(3), Fig. 4, Fig. 5, §4 on-board, S8,
+//! and the plan-backed hardware table behind `repro report fpga`.
+
+use anyhow::Result;
 
 use crate::hw::array::PeArray;
 use crate::hw::kernelcircuit::KernelKind;
 use crate::nn;
-use crate::sim::accelerator::{self, AccelConfig};
+use crate::quant::{plan::QuantPlan, Mode};
+use crate::sim::accelerator::{self, AccelConfig, ResourceBreakdown, RunReport};
+use crate::sim::functional::{synth_params, Arch, QuantCfg};
+use crate::sim::hwsim::{self, HwCost};
+use crate::sim::kernels::SimKernel;
 use crate::sim::onchip;
 use crate::util::table::{f, pct, thousands, Table};
+
+use super::quantrep;
 
 /// Eq. (2)/(3): theoretical resource model + headline saving.
 pub fn eq23() -> Table {
@@ -111,15 +120,24 @@ pub fn fig5() -> Vec<Table> {
     out
 }
 
+/// The §4 on-board run pair — (CNN multiplier, AdderNet 2A) ResNet-18
+/// at P=1024/16bit on ZCU104.  Shared by the `onboard` table, the
+/// `report fpga` JSON artifact and the paper-anchor tests so they can
+/// never drift apart.
+pub fn onboard_runs() -> (RunReport, RunReport) {
+    let net = nn::resnet18();
+    let c = accelerator::run(&AccelConfig::zcu104(1024, 16, KernelKind::Mult), &net);
+    let a = accelerator::run(&AccelConfig::zcu104(1024, 16, KernelKind::Adder2A), &net);
+    (c, a)
+}
+
 /// §4 on-board run: ResNet-18 at P=1024 on ZCU104, both kernels.
 pub fn onboard() -> Table {
-    let net = nn::resnet18();
     let mut t = Table::new(
         "On-board ResNet-18 (ZCU104, P=1024, 16bit) — measured model vs paper",
         &["metric", "CNN (model)", "AdderNet (model)", "CNN (paper)", "AdderNet (paper)"],
     );
-    let c = accelerator::run(&AccelConfig::zcu104(1024, 16, KernelKind::Mult), &net);
-    let a = accelerator::run(&AccelConfig::zcu104(1024, 16, KernelKind::Adder2A), &net);
+    let (c, a) = onboard_runs();
     t.row(&["fmax (MHz)".into(), f(c.fmax_mhz, 0), f(a.fmax_mhz, 0),
             "214".into(), "250".into()]);
     t.row(&["conv GOPs".into(), f(c.conv_gops(), 0), f(a.conv_gops(), 0),
@@ -174,9 +192,137 @@ pub fn s8() -> Table {
     t
 }
 
+/// One row of the plan-backed hardware table: the cycle-accurate cost
+/// of serving a single compiled [`QuantPlan`] on the accelerator.
+#[derive(Debug, Clone)]
+pub struct PlanHwRow {
+    /// `{arch}-{kernel}-int{bits}` — the serving variant id.
+    pub name: String,
+    pub arch: &'static str,
+    pub kernel: &'static str,
+    pub bits: u32,
+    pub parallelism: u64,
+    pub cost: HwCost,
+    pub conv_gops: f64,
+    pub total_gops: f64,
+    pub resources: ResourceBreakdown,
+}
+
+/// Cost one compiled plan at `parallelism` lanes (geometry is
+/// cross-checked against the arch graph inside [`hwsim::plan_schedule`]).
+pub fn plan_hw_row(plan: &QuantPlan, parallelism: u64) -> Result<PlanHwRow> {
+    let (cfg, report) = hwsim::plan_schedule(plan, parallelism)?;
+    Ok(PlanHwRow {
+        name: format!("{}-{}-int{}", plan.arch.name(), plan.kind.label(),
+                      plan.cfg.bits),
+        arch: plan.arch.name(),
+        kernel: plan.kind.label(),
+        bits: plan.cfg.bits,
+        parallelism: cfg.parallelism(),
+        cost: hwsim::cost_of(&report, cfg.parallelism()),
+        conv_gops: report.conv_gops(),
+        total_gops: report.total_gops(),
+        resources: accelerator::resources(&cfg),
+    })
+}
+
+/// The serving kernel/width matrix `report fpga` sweeps by default:
+/// adder int8, adder int16, and the multiplier int8 baseline (the mult
+/// path caps at 8 bits), with the quantization modes the accuracy
+/// reports use for each kernel.
+pub const PLAN_MATRIX: &[(SimKernel, Mode, u32)] = &[
+    (SimKernel::Adder, Mode::SharedScale, 8),
+    (SimKernel::Adder, Mode::SharedScale, 16),
+    (SimKernel::Mult, Mode::SeparateScale, 8),
+];
+
+/// Default `report fpga` sweep: every registered arch × [`PLAN_MATRIX`],
+/// plans compiled from synthetic weights after a calibration pass —
+/// the same recipe the quantization accuracy reports use.
+pub fn default_plan_rows(parallelism: u64, n_calib: usize) -> Result<Vec<PlanHwRow>> {
+    let mut rows = Vec::new();
+    for arch in Arch::ALL {
+        let params = synth_params(arch, 42);
+        for &(kind, mode, bits) in PLAN_MATRIX {
+            if !QuantPlan::supports(kind, bits) {
+                continue;
+            }
+            let (calib, _) = quantrep::calibrate(&params, arch, kind, n_calib);
+            let plan = QuantPlan::build(&params, arch, kind,
+                                        QuantCfg { bits, mode }, &calib)?;
+            rows.push(plan_hw_row(&plan, parallelism)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Render plan rows as the paper-comparison table (per arch × width ×
+/// kernel: throughput, latency, power, LUT split — the §4 columns).
+pub fn plan_table(rows: &[PlanHwRow]) -> Table {
+    let mut t = Table::new(
+        "Plan-backed hardware serving — cycle-accurate cost per compiled QuantPlan",
+        &["plan", "P", "fmax MHz", "cycles/img", "conv GOPs", "net GOPs",
+          "latency ms", "power W", "util", "compute LUTs", "total LUTs"],
+    );
+    for r in rows {
+        t.row(&[
+            r.name.clone(),
+            r.parallelism.to_string(),
+            f(r.cost.fmax_mhz, 0),
+            thousands(r.cost.cycles),
+            f(r.conv_gops, 1),
+            f(r.total_gops, 1),
+            f(r.cost.latency_ms, 3),
+            f(r.cost.power_w, 2),
+            pct(r.cost.utilization),
+            thousands(r.resources.compute_luts()),
+            thousands(r.resources.total()),
+        ]);
+    }
+    t
+}
+
+/// Hand-assembled JSON artifact for `repro report fpga --out`: the plan
+/// rows plus the §4 ResNet-18 anchor pair, so CI can diff the hardware
+/// model against the paper without re-running the simulator.
+pub fn fpga_report_json(rows: &[PlanHwRow], parallelism: u64) -> String {
+    let anchor = |r: &RunReport| {
+        format!(
+            "{{\"fmax_mhz\": {:.3}, \"conv_gops\": {:.3}, \"total_gops\": {:.3}, \
+             \"latency_ms\": {:.4}, \"power_w\": {:.4}}}",
+            r.fmax_mhz, r.conv_gops(), r.total_gops(), r.latency_ms(),
+            r.power.total_w())
+    };
+    let (c, a) = onboard_runs();
+    let mut s = String::new();
+    s.push_str("{\n  \"report\": \"fpga\",\n");
+    s.push_str(&format!("  \"parallelism\": {parallelism},\n"));
+    s.push_str(&format!(
+        "  \"anchors_resnet18\": {{\n    \"cnn\": {},\n    \"addernet\": {}\n  }},\n",
+        anchor(&c), anchor(&a)));
+    s.push_str("  \"plans\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"arch\": \"{}\", \"kernel\": \"{}\", \
+             \"bits\": {}, \"parallelism\": {}, \"cycles\": {}, \
+             \"dram_bytes\": {}, \"fmax_mhz\": {:.3}, \"conv_gops\": {:.3}, \
+             \"total_gops\": {:.3}, \"latency_ms\": {:.5}, \"power_w\": {:.4}, \
+             \"utilization\": {:.4}, \"compute_luts\": {}, \"total_luts\": {}}}{}\n",
+            r.name, r.arch, r.kernel, r.bits, r.parallelism, r.cost.cycles,
+            r.cost.dram_bytes, r.cost.fmax_mhz, r.conv_gops, r.total_gops,
+            r.cost.latency_ms, r.cost.power_w, r.cost.utilization,
+            r.resources.compute_luts(), r.resources.total(),
+            if i + 1 == rows.len() { "" } else { "," }));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{Calibration, LayerCalib};
+    use crate::util::json::Json;
 
     #[test]
     fn all_tables_render() {
@@ -194,5 +340,68 @@ mod tests {
         let s = eq23().render();
         // the DW=16 Pin=64 row must show ~81.x% saving
         assert!(s.contains("81."), "{s}");
+    }
+
+    fn lenet_plan(kind: SimKernel, mode: Mode, bits: u32) -> QuantPlan {
+        let params = synth_params(Arch::Lenet5, 3);
+        let mut calib = Calibration::new();
+        calib.insert("conv1".into(),
+                     LayerCalib { feat_max_abs: 1.0, weight_max_abs: 0.5 });
+        calib.insert("conv2".into(),
+                     LayerCalib { feat_max_abs: 16.0, weight_max_abs: 0.5 });
+        QuantPlan::build(&params, Arch::Lenet5, kind,
+                         QuantCfg { bits, mode }, &calib)
+            .unwrap()
+    }
+
+    #[test]
+    fn plan_row_matches_direct_accelerator_run() {
+        let plan = lenet_plan(SimKernel::Adder, Mode::SharedScale, 8);
+        let row = plan_hw_row(&plan, 1024).unwrap();
+        assert_eq!(row.name, "lenet5-adder-int8");
+        assert_eq!(row.parallelism, 1024);
+        // the row must be the same schedule hwsim costs for serving
+        let direct = hwsim::per_image_cost(&plan, 1024).unwrap();
+        assert_eq!(row.cost.cycles, direct.cycles);
+        assert_eq!(row.cost.fmax_mhz, direct.fmax_mhz);
+        assert!(row.conv_gops > 0.0 && row.total_gops > 0.0);
+        assert!(row.resources.total() > row.resources.compute_luts());
+    }
+
+    #[test]
+    fn plan_table_and_json_artifact_render() {
+        let rows = vec![
+            plan_hw_row(&lenet_plan(SimKernel::Adder, Mode::SharedScale, 8),
+                        1024).unwrap(),
+            plan_hw_row(&lenet_plan(SimKernel::Mult, Mode::SeparateScale, 8),
+                        1024).unwrap(),
+        ];
+        let t = plan_table(&rows).render();
+        assert!(t.contains("lenet5-adder-int8"), "{t}");
+        assert!(t.contains("lenet5-mult-int8"), "{t}");
+        // the artifact must parse with the repo's own JSON reader and
+        // carry both the plan rows and the §4 anchor pair
+        let s = fpga_report_json(&rows, 1024);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.at(&["plans"]).unwrap().as_arr().unwrap().len(), 2);
+        let addernet = j.at(&["anchors_resnet18", "addernet"]).unwrap();
+        assert!(addernet.get("power_w").unwrap().as_f64().unwrap() > 0.0);
+        let cnn_gops = j.at(&["anchors_resnet18", "cnn", "total_gops"])
+            .unwrap().as_f64().unwrap();
+        assert!(cnn_gops > 0.0);
+    }
+
+    /// §4 anchors through the report path: the AdderNet run must beat
+    /// the CNN on throughput and power, inside the paper's bands.
+    #[test]
+    fn onboard_runs_hold_paper_anchors() {
+        let (c, a) = onboard_runs();
+        assert!((a.total_gops() - 358.6).abs() / 358.6 < 0.25,
+                "adder net GOPs {}", a.total_gops());
+        assert!((c.total_gops() - 307.0).abs() / 307.0 < 0.25,
+                "cnn net GOPs {}", c.total_gops());
+        assert!((a.power.total_w() - 1.34).abs() < 0.75, "{}", a.power.total_w());
+        assert!((c.power.total_w() - 2.57).abs() < 1.00, "{}", c.power.total_w());
+        assert!(a.fmax_mhz > c.fmax_mhz);
     }
 }

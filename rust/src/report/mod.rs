@@ -18,6 +18,7 @@ pub use results::Results;
 pub const EXPERIMENTS: &[&str] = &[
     "fig2", "fig2c", "fig3ab", "fig3d", "s6", "s7", "quantplan", "eq23",
     "fig4c", "fig4d", "fig5", "onboard", "s1", "s4", "s5", "s8", "hw-all",
+    "fpga",
 ];
 
 /// Render one experiment to stdout.
@@ -57,6 +58,14 @@ pub fn run(exp: &str, art_dir: &Path, arch: &str, n_eval: usize) -> Result<()> {
             }
         }
         "onboard" => fpga::onboard().print(),
+        // default sweep; `repro report fpga` in main.rs adds --plan /
+        // --parallelism / --out on top of the same helpers
+        "fpga" => {
+            fpga::onboard().print();
+            let rows = fpga::default_plan_rows(
+                crate::sim::hwsim::DEFAULT_PARALLELISM, n_eval.min(64))?;
+            fpga::plan_table(&rows).print();
+        }
         "s8" => fpga::s8().print(),
         #[cfg(feature = "pjrt")]
         "fig3ab" => {

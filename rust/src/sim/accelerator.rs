@@ -21,7 +21,7 @@ use crate::hw::kernelcircuit::KernelKind;
 use crate::hw::memory::{AxiBus, ZCU104_AXI};
 use crate::hw::power::{self, PowerReport};
 use crate::hw::timing;
-use crate::nn::{Layer, NetworkDesc};
+use crate::nn::{pool_out_dim, Layer, NetworkDesc};
 
 /// Accelerator configuration.
 #[derive(Debug, Clone, Copy)]
@@ -95,9 +95,14 @@ fn non_compute_luts(parallelism: u64, dw: u32) -> (u64, u64, u64) {
     let base = 31_600.0 * width_scale;
     let per_lane = 40.7 * width_scale;
     let total = base + per_lane * parallelism as f64;
-    let storage = (0.60 * total) as u64;
-    let control = (0.25 * total) as u64;
-    let other = (0.15 * total) as u64;
+    // Round the whole and the two largest shares, then derive the third
+    // as the remainder: the components always reconstruct the rounded
+    // total exactly (plain `as u64` truncation let the 0.60/0.25/0.15
+    // split drift a few LUTs below it).
+    let total_u = total.round() as u64;
+    let storage = (0.60 * total).round() as u64;
+    let control = (0.25 * total).round() as u64;
+    let other = total_u.saturating_sub(storage + control);
     (storage, control, other)
 }
 
@@ -149,19 +154,40 @@ impl RunReport {
     }
 
     /// Convolution-only throughput (paper: "424 GOPs for the convolution
-    /// calculation").
+    /// calculation").  0 for a conv-free network, not NaN.
     pub fn conv_gops(&self) -> f64 {
+        if self.conv_cycles == 0 {
+            return 0.0;
+        }
         self.conv_ops as f64 / (self.conv_cycles as f64 / (self.fmax_mhz * 1e6)) / 1e9
     }
 
     /// Whole-network throughput ("307 GOPs for the whole network").
+    /// 0 for an empty network, not NaN.
     pub fn total_gops(&self) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
         self.total_ops as f64 / (self.total_cycles as f64 / (self.fmax_mhz * 1e6)) / 1e9
     }
 
-    /// Compute-array duty cycle over the run.
+    /// Compute-array duty cycle over the run.  0 when nothing ran, not
+    /// NaN (an empty or conv-free schedule draws no datapath power).
     pub fn duty(&self) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
         self.conv_cycles as f64 / self.total_cycles as f64
+    }
+
+    /// Sustained fraction of the array's conv-phase peak rate
+    /// (2 ops/lane/cycle across `parallelism` lanes).
+    pub fn utilization(&self, parallelism: u64) -> f64 {
+        if self.conv_cycles == 0 || parallelism == 0 {
+            return 0.0;
+        }
+        self.conv_ops as f64
+            / (2.0 * parallelism as f64 * self.conv_cycles as f64)
     }
 }
 
@@ -216,14 +242,20 @@ pub fn run(cfg: &AccelConfig, net: &NetworkDesc) -> RunReport {
                 (name.clone(), 2 * macs, compute, bytes)
             }
             Layer::Pool { name, h_in, w_in, ch, stride, window } => {
-                let outs = ((h_in / stride) * (w_in / stride) * ch) as u64;
+                // valid-pool output grid — the same geometry the
+                // descriptor MAC model and the graph walk use (the old
+                // h_in/stride floor overcounted whenever window !=
+                // stride or the dims don't divide evenly).
+                let outs = (pool_out_dim(*h_in, *window, *stride)
+                    * pool_out_dim(*w_in, *window, *stride)
+                    * ch) as u64;
                 let ops = outs * (window * window) as u64;
                 // pool unit processes Pout values per cycle
                 (name.clone(), ops, outs.div_ceil(cfg.pout), 0)
             }
-            Layer::GlobalPool { ch, h_in, w_in } => {
+            Layer::GlobalPool { name, ch, h_in, w_in } => {
                 let ops = (ch * h_in * w_in) as u64;
-                ("gap".into(), ops, ops.div_ceil(cfg.parallelism()), 0)
+                (name.clone(), ops, ops.div_ceil(cfg.parallelism()), 0)
             }
         };
         let dma = if bytes == 0 { 0 } else { ((bytes as f64) / dram_bpc).ceil() as u64 };
@@ -247,17 +279,7 @@ pub fn run(cfg: &AccelConfig, net: &NetworkDesc) -> RunReport {
         layers.push(LayerRun { name, ops, compute_cycles: compute, dma_cycles: dma, cycles, dram_bytes: bytes });
     }
 
-    let runtime_s = total_cycles as f64 / (fmax * 1e6);
-    let duty = conv_cycles as f64 / total_cycles as f64;
-    let res = resources(cfg);
-    // buffer traffic per cycle: Pin features broadcast to the lanes +
-    // Pout partial sums written back (weights are stationary per tile).
-    let bram_bps = (cfg.pin + cfg.pout) as f64 * bytes_per_el as f64
-        * fmax * 1e6 * duty * 2.0;
-    let dram_bps = if runtime_s > 0.0 { dram_total as f64 / runtime_s } else { 0.0 };
-    let pw = power::power(&cfg.array(), fmax, duty, bram_bps, dram_bps, res.total());
-
-    RunReport {
+    let mut report = RunReport {
         layers,
         fmax_mhz: fmax,
         conv_ops,
@@ -265,8 +287,19 @@ pub fn run(cfg: &AccelConfig, net: &NetworkDesc) -> RunReport {
         conv_cycles,
         total_cycles,
         dram_bytes: dram_total,
-        power: pw,
-    }
+        power: PowerReport::default(),
+    };
+    let runtime_s = total_cycles as f64 / (fmax * 1e6);
+    let duty = report.duty();
+    let res = resources(cfg);
+    // buffer traffic per cycle: Pin features broadcast to the lanes +
+    // Pout partial sums written back (weights are stationary per tile).
+    let bram_bps = (cfg.pin + cfg.pout) as f64 * bytes_per_el as f64
+        * fmax * 1e6 * duty * 2.0;
+    let dram_bps = if runtime_s > 0.0 { dram_total as f64 / runtime_s } else { 0.0 };
+    report.power =
+        power::power(&cfg.array(), fmax, duty, bram_bps, dram_bps, res.total());
+    report
 }
 
 #[cfg(test)]
@@ -354,6 +387,71 @@ mod tests {
         let r = run(&c, &nn::lenet5());
         assert_eq!(r.dram_bytes, 0);
         assert_eq!(r.power.dram_w, 0.0);
+    }
+
+    /// The 0.60/0.25/0.15 non-compute split must reconstruct its total
+    /// exactly at the Fig. 4 anchor configurations (the old truncating
+    /// casts dropped up to 2 LUTs).
+    #[test]
+    fn resource_components_sum_to_total() {
+        for p in [128u64, 512, 1024, 2048] {
+            for dw in [8u32, 16] {
+                for kernel in [KernelKind::Mult, KernelKind::Adder2A] {
+                    let r = resources(&AccelConfig::zcu104(p, dw, kernel));
+                    let parts = r.conv_kernel_luts + r.adder_tree_luts
+                        + r.storage_luts + r.control_luts + r.other_luts;
+                    assert_eq!(r.total(), parts, "P={p} dw={dw}");
+                    let nc = (r.storage_luts + r.control_luts
+                        + r.other_luts) as f64;
+                    let storage_share = r.storage_luts as f64 / nc;
+                    let control_share = r.control_luts as f64 / nc;
+                    assert!((storage_share - 0.60).abs() < 0.01,
+                            "storage share {storage_share}");
+                    assert!((control_share - 0.25).abs() < 0.01,
+                            "control share {control_share}");
+                }
+            }
+        }
+    }
+
+    /// Conv-free and empty networks report zeros, not NaN.
+    #[test]
+    fn conv_free_network_report_is_finite() {
+        let c = cfg(KernelKind::Adder2A, 16);
+        let pool_only = nn::NetworkDesc {
+            name: "pool-only".into(),
+            input: (8, 8, 4),
+            layers: vec![Layer::Pool {
+                name: "pool1".into(), window: 2, stride: 2,
+                h_in: 8, w_in: 8, ch: 4,
+            }],
+        };
+        let r = run(&c, &pool_only);
+        assert_eq!(r.conv_gops(), 0.0);
+        assert_eq!(r.duty(), 0.0);
+        assert_eq!(r.utilization(1024), 0.0);
+        assert!(r.total_gops() > 0.0);
+        assert!(r.power.total_w().is_finite());
+
+        let empty = nn::NetworkDesc {
+            name: "empty".into(), input: (1, 1, 1), layers: vec![],
+        };
+        let e = run(&c, &empty);
+        assert_eq!(e.total_gops(), 0.0);
+        assert_eq!(e.duty(), 0.0);
+        assert!(e.power.total_w().is_finite());
+    }
+
+    /// Pool rows schedule the valid-window output grid and keep the
+    /// descriptor's layer names (so rows join against graph op names).
+    #[test]
+    fn pool_rows_use_valid_geometry_and_real_names() {
+        let r = run(&cfg(KernelKind::Adder2A, 16), &nn::resnet18());
+        let pool = r.layers.iter().find(|l| l.name == "pool1").unwrap();
+        // 112 -(3/2 valid)-> 55, not the floor formula's 56.
+        assert_eq!(pool.ops, (55 * 55 * 64 * 9) as u64);
+        let gap = r.layers.iter().find(|l| l.name == "gap").unwrap();
+        assert_eq!(gap.ops, (512 * 7 * 7) as u64);
     }
 
     #[test]

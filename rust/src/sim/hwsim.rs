@@ -1,0 +1,286 @@
+//! Cycle-accurate hardware serving backend: execute a compiled
+//! [`QuantPlan`] on the accelerator simulator.
+//!
+//! [`HwPlanRunner`] pairs the two halves the repo grew separately:
+//!
+//! * the **functional result** comes from [`PlanRunner`] — the i32
+//!   integer path whose logits are the correctness oracle (this module
+//!   never re-implements arithmetic, so hw-backend logits are
+//!   bit-identical to the plan path by construction, and the test suite
+//!   asserts it anyway);
+//! * the **cost** comes from [`accelerator::run`] driven by the plan's
+//!   own geometry: the schedule executes `plan.arch`'s descriptor after
+//!   cross-checking every conv/dense layer against the plan's compiled
+//!   shapes, at the plan's data width (`cfg.bits`) and kernel circuit
+//!   ([`SimKernel::Adder`] → the paper's 2A adder cell,
+//!   [`SimKernel::Mult`] → the multiplier baseline).
+//!
+//! Each inference yields a [`HwCost`] — cycles, DRAM traffic, fmax,
+//! latency, intrinsic power and array utilization — the per-request
+//! numbers the paper reports per network in §4.  The schedule depends
+//! only on (arch, bits, kind), all three pinned across
+//! `ServerHandle::swap_plan`, so serving precomputes it once per
+//! variant and batch cost is a linear scale of the per-image report.
+
+use anyhow::{bail, Result};
+
+use crate::hw::kernelcircuit::KernelKind;
+use crate::nn::Layer;
+use crate::quant::plan::QuantPlan;
+use crate::sim::accelerator::{self, AccelConfig, RunReport};
+use crate::sim::functional::Tensor;
+use crate::sim::intpath::PlanRunner;
+use crate::sim::kernels::{KernelStrategy, SimKernel};
+
+/// Default PE-array lanes for the serving backend — the §4 on-board
+/// configuration (P = 1024: Pin 64 × Pout 16).
+pub const DEFAULT_PARALLELISM: u64 = 1024;
+
+/// Hardware cost of executing a batch on the simulated accelerator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HwCost {
+    /// Whole-schedule cycles (compute, DMA exposure, pipeline fill,
+    /// post-conv BN/activation passes).
+    pub cycles: u64,
+    /// Cycles spent in conv layers (the paper's conv-GOPs denominator).
+    pub conv_cycles: u64,
+    /// DMA cycles summed over layers (overlapped under double
+    /// buffering; exposed share is inside `cycles`).
+    pub dma_cycles: u64,
+    /// Off-chip traffic, bytes.
+    pub dram_bytes: u64,
+    /// Achieved clock after timing analysis of the kernel array, MHz.
+    pub fmax_mhz: f64,
+    /// Wall-clock at `fmax_mhz`, ms.
+    pub latency_ms: f64,
+    /// Intrinsic accelerator power (compute + BRAM + DRAM + clock), W.
+    pub power_w: f64,
+    /// Sustained fraction of the array's conv-phase peak rate.
+    pub utilization: f64,
+}
+
+impl HwCost {
+    /// Cost of running `n` images back-to-back: extensive quantities
+    /// (cycles, bytes, latency) scale linearly; rates (fmax, power,
+    /// utilization) are per-design constants.
+    pub fn scale(&self, n: usize) -> HwCost {
+        let n64 = n as u64;
+        HwCost {
+            cycles: self.cycles * n64,
+            conv_cycles: self.conv_cycles * n64,
+            dma_cycles: self.dma_cycles * n64,
+            dram_bytes: self.dram_bytes * n64,
+            latency_ms: self.latency_ms * n as f64,
+            ..*self
+        }
+    }
+}
+
+/// Kernel circuit a plan's arithmetic maps to on the array: the adder
+/// plans use the paper's minimalist 2-adder cell, the mult plans the
+/// conventional multiplier lane.
+pub fn kernel_kind(kind: SimKernel) -> KernelKind {
+    match kind {
+        SimKernel::Adder => KernelKind::Adder2A,
+        SimKernel::Mult => KernelKind::Mult,
+    }
+}
+
+/// ZCU104-class accelerator configuration matching a plan's serving
+/// width and kernel circuit.
+pub fn accel_config(plan: &QuantPlan, parallelism: u64) -> AccelConfig {
+    AccelConfig::zcu104(parallelism, plan.cfg.bits, kernel_kind(plan.kind))
+}
+
+/// Build the per-image cycle schedule for a plan: derive the arch
+/// descriptor, cross-check it layer-by-layer against the plan's
+/// compiled geometry (a plan that disagrees with its own graph must
+/// never be costed as if it matched), and run the accelerator model.
+pub fn plan_schedule(plan: &QuantPlan,
+                     parallelism: u64) -> Result<(AccelConfig, RunReport)> {
+    let desc = plan.arch.graph().to_desc();
+    let mut convs = 0usize;
+    let mut dense = 0usize;
+    for layer in &desc.layers {
+        match layer {
+            Layer::Conv(c) => {
+                convs += 1;
+                let Some(lp) = plan.convs.get(&c.name) else {
+                    bail!("plan {} has no conv layer {}", plan.arch.name(),
+                          c.name);
+                };
+                if (lp.kh, lp.kw, lp.cin, lp.cout) != (c.kh, c.kw, c.cin, c.cout)
+                    || lp.stride != c.stride || lp.padding != c.padding
+                {
+                    bail!("plan {} conv {} geometry {}x{}x{}x{}/s{} diverges \
+                           from the graph descriptor", plan.arch.name(),
+                          c.name, lp.kh, lp.kw, lp.cin, lp.cout, lp.stride);
+                }
+            }
+            Layer::Dense { name, din, dout } => {
+                dense += 1;
+                let Some(dp) = plan.dense.get(name) else {
+                    bail!("plan {} has no dense layer {name}",
+                          plan.arch.name());
+                };
+                if dp.din != *din || dp.dout != *dout {
+                    bail!("plan {} dense {name} is {}x{}, descriptor says \
+                           {din}x{dout}", plan.arch.name(), dp.din, dp.dout);
+                }
+            }
+            Layer::Pool { .. } | Layer::GlobalPool { .. } => {}
+        }
+    }
+    if convs != plan.convs.len() || dense != plan.dense.len() {
+        bail!("plan {} carries {}+{} layers, descriptor schedules {convs}+{dense}",
+              plan.arch.name(), plan.convs.len(), plan.dense.len());
+    }
+    let cfg = accel_config(plan, parallelism);
+    let report = accelerator::run(&cfg, &desc);
+    Ok((cfg, report))
+}
+
+/// Per-image hardware cost of serving a plan at `parallelism` lanes.
+pub fn per_image_cost(plan: &QuantPlan, parallelism: u64) -> Result<HwCost> {
+    let (cfg, report) = plan_schedule(plan, parallelism)?;
+    Ok(cost_of(&report, cfg.parallelism()))
+}
+
+/// Fold a finished schedule into the per-image [`HwCost`] summary.
+pub fn cost_of(report: &RunReport, parallelism: u64) -> HwCost {
+    HwCost {
+        cycles: report.total_cycles,
+        conv_cycles: report.conv_cycles,
+        dma_cycles: report.layers.iter().map(|l| l.dma_cycles).sum(),
+        dram_bytes: report.dram_bytes,
+        fmax_mhz: report.fmax_mhz,
+        latency_ms: report.latency_ms(),
+        power_w: report.power.total_w(),
+        utilization: report.utilization(parallelism),
+    }
+}
+
+/// The hw-sim serving backend: functional logits from the wrapped
+/// [`PlanRunner`], cost from the precomputed accelerator schedule.
+pub struct HwPlanRunner<'a> {
+    inner: PlanRunner<'a>,
+    cfg: AccelConfig,
+    report: RunReport,
+}
+
+impl<'a> HwPlanRunner<'a> {
+    pub fn new(plan: &'a QuantPlan, strategy: KernelStrategy,
+               parallelism: u64) -> Result<Self> {
+        let (cfg, report) = plan_schedule(plan, parallelism)?;
+        Ok(Self { inner: PlanRunner { plan, strategy }, cfg, report })
+    }
+
+    pub fn config(&self) -> &AccelConfig {
+        &self.cfg
+    }
+
+    /// The per-image cycle schedule (per-layer rows join the graph's
+    /// canonical op names).
+    pub fn report(&self) -> &RunReport {
+        &self.report
+    }
+
+    /// Hardware cost of a batch of `n` images.
+    pub fn cost(&self, n: usize) -> HwCost {
+        cost_of(&self.report, self.cfg.parallelism()).scale(n)
+    }
+
+    /// Forward pass: logits bit-identical to [`PlanRunner::forward`],
+    /// plus the batch's hardware cost.
+    pub fn forward(&self, x: &Tensor) -> (Tensor, HwCost) {
+        let n = x.shape.0;
+        (self.inner.forward(x), self.cost(n))
+    }
+
+    /// Batched serving entry point — same contract as
+    /// [`PlanRunner::forward_many`], with the batch cost alongside.
+    pub fn forward_many(&self, images: &[&[f32]],
+                        hwc: (usize, usize, usize))
+                        -> (Vec<Vec<f32>>, HwCost) {
+        (self.inner.forward_many(images, hwc), self.cost(images.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{Calibration, LayerCalib, Mode};
+    use crate::sim::functional::{synth_params, Arch, QuantCfg};
+
+    fn lenet_plan(kind: SimKernel, bits: u32) -> QuantPlan {
+        let params = synth_params(Arch::Lenet5, 3);
+        let mut calib = Calibration::new();
+        calib.insert("conv1".into(),
+                     LayerCalib { feat_max_abs: 1.0, weight_max_abs: 0.5 });
+        calib.insert("conv2".into(),
+                     LayerCalib { feat_max_abs: 16.0, weight_max_abs: 0.5 });
+        QuantPlan::build(&params, Arch::Lenet5, kind,
+                         QuantCfg { bits, mode: Mode::SharedScale }, &calib)
+            .unwrap()
+    }
+
+    #[test]
+    fn kernel_mapping_matches_paper_cells() {
+        assert_eq!(kernel_kind(SimKernel::Adder), KernelKind::Adder2A);
+        assert_eq!(kernel_kind(SimKernel::Mult), KernelKind::Mult);
+    }
+
+    #[test]
+    fn config_follows_plan_width_and_kind() {
+        let p8 = lenet_plan(SimKernel::Adder, 8);
+        let cfg = accel_config(&p8, 1024);
+        assert_eq!(cfg.dw, 8);
+        assert_eq!(cfg.kernel, KernelKind::Adder2A);
+        assert_eq!(cfg.parallelism(), 1024);
+        let p16 = lenet_plan(SimKernel::Adder, 16);
+        assert_eq!(accel_config(&p16, 256).dw, 16);
+    }
+
+    #[test]
+    fn cost_scales_linearly_in_batch() {
+        let plan = lenet_plan(SimKernel::Adder, 8);
+        let one = per_image_cost(&plan, 1024).unwrap();
+        assert!(one.cycles > 0);
+        assert!(one.latency_ms > 0.0);
+        assert!(one.power_w > 0.0);
+        assert!(one.utilization > 0.0 && one.utilization <= 1.0);
+        let four = one.scale(4);
+        assert_eq!(four.cycles, 4 * one.cycles);
+        assert_eq!(four.dram_bytes, 4 * one.dram_bytes);
+        assert!((four.latency_ms - 4.0 * one.latency_ms).abs() < 1e-12);
+        assert_eq!(four.fmax_mhz, one.fmax_mhz);
+        assert_eq!(four.power_w, one.power_w);
+        assert_eq!(four.utilization, one.utilization);
+    }
+
+    #[test]
+    fn schedule_rejects_geometry_drift() {
+        let mut plan = lenet_plan(SimKernel::Adder, 8);
+        plan.convs.get_mut("conv2").unwrap().stride = 2;
+        assert!(plan_schedule(&plan, 1024).is_err());
+        let mut plan = lenet_plan(SimKernel::Adder, 8);
+        plan.convs.remove("conv1");
+        assert!(plan_schedule(&plan, 1024).is_err());
+        let mut plan = lenet_plan(SimKernel::Adder, 8);
+        plan.dense.get_mut("fc1").unwrap().din += 1;
+        assert!(plan_schedule(&plan, 1024).is_err());
+    }
+
+    #[test]
+    fn runner_logits_match_plan_runner() {
+        let plan = lenet_plan(SimKernel::Adder, 8);
+        let hw = HwPlanRunner::new(&plan, KernelStrategy::Auto, 1024).unwrap();
+        let base = PlanRunner { plan: &plan, strategy: KernelStrategy::Auto };
+        let mut rng = crate::util::XorShift64::new(11);
+        let x = Tensor::new((2, 32, 32, 1),
+                            (0..2048).map(|_| rng.next_f32_sym(1.0)).collect());
+        let (y, cost) = hw.forward(&x);
+        assert_eq!(y.data, base.forward(&x).data);
+        assert_eq!(cost.cycles, hw.cost(1).cycles * 2);
+    }
+}

@@ -18,6 +18,7 @@
 pub mod accelerator;
 pub mod exec;
 pub mod functional;
+pub mod hwsim;
 pub mod intpath;
 pub mod kernels;
 pub mod onchip;
@@ -25,5 +26,6 @@ pub mod reference;
 
 pub use accelerator::{AccelConfig, ResourceBreakdown, RunReport};
 pub use functional::{Arch, ExecMode, QuantCfg, Runner, Tensor};
+pub use hwsim::{HwCost, HwPlanRunner};
 pub use intpath::PlanRunner;
 pub use kernels::{KernelStrategy, SimKernel};

@@ -100,9 +100,11 @@ pub fn design(kernel: KernelKind, dw: u32) -> OnchipReport {
                     * crate::hw::gates::multiplier_energy_pj(dw)
                     + macs * 2.0 * bytes_per_el as f64 * E_ONCHIP_SRAM_PJ_PER_BYTE;
             }
-            Layer::Pool { h_in, w_in, ch, stride, .. } => {
+            Layer::Pool { h_in, w_in, ch, stride, window, .. } => {
                 shared_luts += 6 * dw as u64;
-                let outs = ((h_in / stride) * (w_in / stride) * ch) as f64;
+                let outs = (nn::pool_out_dim(*h_in, *window, *stride)
+                    * nn::pool_out_dim(*w_in, *window, *stride)
+                    * ch) as f64;
                 shared_energy += outs * crate::hw::gates::adder_energy_pj(dw) * 3.0;
             }
             Layer::GlobalPool { .. } => {}

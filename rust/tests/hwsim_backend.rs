@@ -1,0 +1,191 @@
+//! Hardware-serving backend tests: (a) HwPlanRunner logits are
+//! bit-identical to PlanRunner across every servable arch and kernel
+//! strategy, (b) the accelerator's per-layer op accounting agrees with
+//! the graph-derived MAC model for every registered network, and
+//! (c) the §4 ResNet-18 paper anchors hold through the `report fpga`
+//! path.  Everything runs offline on synthetic weights.
+
+use addernet::hw::KernelKind;
+use addernet::nn::{self, Layer};
+use addernet::quant::plan::QuantPlan;
+use addernet::quant::Mode;
+use addernet::report::{fpga, quantrep};
+use addernet::sim::accelerator::{self, AccelConfig};
+use addernet::sim::functional::{synth_params, Arch, QuantCfg, SimKernel,
+                                Tensor};
+use addernet::sim::hwsim::{self, HwPlanRunner};
+use addernet::sim::intpath::PlanRunner;
+use addernet::sim::kernels::KernelStrategy;
+use addernet::util::XorShift64;
+
+/// The serving matrix the hwsim backend covers: adder int8/int16 plus
+/// the mult int8 baseline (mult plans cap at 8-bit operands).
+const MATRIX: &[(SimKernel, Mode, u32)] = &[
+    (SimKernel::Adder, Mode::SharedScale, 8),
+    (SimKernel::Adder, Mode::SharedScale, 16),
+    (SimKernel::Mult, Mode::SeparateScale, 8),
+];
+
+fn build_plan(arch: Arch, kind: SimKernel, mode: Mode, bits: u32) -> QuantPlan {
+    let params = synth_params(arch, 42);
+    let (calib, _) = quantrep::calibrate(&params, arch, kind, 8);
+    QuantPlan::build(&params, arch, kind, QuantCfg { bits, mode }, &calib)
+        .unwrap()
+}
+
+fn batch(arch: Arch, n: usize, seed: u64) -> Tensor {
+    let (h, w, c) = arch.graph().input;
+    let mut rng = XorShift64::new(seed);
+    Tensor::new((n, h, w, c),
+                (0..n * h * w * c).map(|_| rng.next_f32_sym(1.0)).collect())
+}
+
+/// (a) Logit bit-identity: the hw backend wraps the plan path, so for
+/// every servable arch and every matrix cell the logits must match the
+/// PlanRunner exactly — not approximately.
+#[test]
+fn hw_logits_bit_identical_across_archs() {
+    for arch in Arch::ALL {
+        for &(kind, mode, bits) in MATRIX {
+            assert!(QuantPlan::supports(kind, bits));
+            let plan = build_plan(arch, kind, mode, bits);
+            let hw = HwPlanRunner::new(&plan, KernelStrategy::Auto,
+                                       hwsim::DEFAULT_PARALLELISM).unwrap();
+            let base = PlanRunner { plan: &plan, strategy: KernelStrategy::Auto };
+            let x = batch(arch, 2, 7 + bits as u64);
+            let (y, cost) = hw.forward(&x);
+            assert_eq!(y.data, base.forward(&x).data,
+                       "{} {} int{bits}", arch.name(), kind.label());
+            assert!(cost.cycles > 0 && cost.latency_ms > 0.0);
+            assert!(cost.power_w > 0.0 && cost.fmax_mhz > 0.0);
+            assert!(cost.utilization > 0.0 && cost.utilization <= 1.0,
+                    "{} util {}", arch.name(), cost.utilization);
+        }
+    }
+}
+
+/// (a) continued: strategy invariance — every inner-kernel strategy
+/// yields the same logits through the hw backend (the integer path is
+/// deterministic regardless of loop structure).
+#[test]
+fn hw_logits_strategy_invariant() {
+    let plan = build_plan(Arch::Lenet5, SimKernel::Adder, Mode::SharedScale, 8);
+    let x = batch(Arch::Lenet5, 3, 11);
+    let reference = PlanRunner { plan: &plan, strategy: KernelStrategy::Naive }
+        .forward(&x);
+    for strategy in [KernelStrategy::Naive, KernelStrategy::Tiled,
+                     KernelStrategy::Simd, KernelStrategy::Auto] {
+        let hw = HwPlanRunner::new(&plan, strategy,
+                                   hwsim::DEFAULT_PARALLELISM).unwrap();
+        let (y, _) = hw.forward(&x);
+        assert_eq!(y.data, reference.data, "{strategy:?}");
+    }
+}
+
+/// The batched serving entry point agrees with the tensor path and
+/// costs scale linearly with batch size.
+#[test]
+fn hw_forward_many_matches_forward() {
+    let plan = build_plan(Arch::Resnet8, SimKernel::Adder, Mode::SharedScale, 8);
+    let hw = HwPlanRunner::new(&plan, KernelStrategy::Auto, 1024).unwrap();
+    let hwc = Arch::Resnet8.graph().input;
+    let x = batch(Arch::Resnet8, 2, 5);
+    let per = hwc.0 * hwc.1 * hwc.2;
+    let imgs: Vec<&[f32]> = (0..2).map(|i| &x.data[i * per..(i + 1) * per])
+        .collect();
+    let (logits, cost) = hw.forward_many(&imgs, hwc);
+    let (y, tcost) = hw.forward(&x);
+    assert_eq!(logits.concat(), y.data);
+    assert_eq!(cost.cycles, tcost.cycles);
+    assert_eq!(cost.cycles, hw.cost(1).cycles * 2);
+}
+
+/// (b) Geometry consistency: for every registered network the
+/// accelerator's per-layer rows must join the descriptor by name and
+/// agree with the graph-derived op counts (convs/dense run 2 ops per
+/// MAC; pool rows count one op per window element).
+#[test]
+fn accelerator_ops_match_graph_macs_all_networks() {
+    for g in nn::graph::all() {
+        let desc = g.to_desc();
+        let cfg = AccelConfig::zcu104(1024, 16, KernelKind::Adder2A);
+        let report = accelerator::run(&cfg, &desc);
+        assert_eq!(report.layers.len(), desc.layers.len(), "{}", g.id);
+        let mut conv_ops = 0u64;
+        for (layer, row) in desc.layers.iter().zip(&report.layers) {
+            assert_eq!(row.name, layer.name(), "{}", g.id);
+            match layer {
+                Layer::Conv(c) => {
+                    assert_eq!(row.ops, 2 * c.macs(), "{} {}", g.id, row.name);
+                    conv_ops += row.ops;
+                }
+                Layer::Dense { din, dout, .. } => {
+                    assert_eq!(row.ops, 2 * (din * dout) as u64,
+                               "{} {}", g.id, row.name);
+                }
+                // pool macs are ops/2 rounded down; tolerate the odd op
+                Layer::Pool { .. } | Layer::GlobalPool { .. } => {
+                    assert!(row.ops / 2 == layer.macs(),
+                            "{} {}: {} ops vs {} macs",
+                            g.id, row.name, row.ops, layer.macs());
+                }
+            }
+        }
+        assert_eq!(report.conv_ops, conv_ops, "{}", g.id);
+        assert_eq!(report.total_ops,
+                   report.layers.iter().map(|l| l.ops).sum::<u64>(),
+                   "{}", g.id);
+    }
+}
+
+/// (b) continued: the plan-driven schedule is the same schedule the
+/// descriptor produces directly — hwsim adds validation, not geometry.
+#[test]
+fn plan_schedule_equals_descriptor_run() {
+    let plan = build_plan(Arch::Resnet8, SimKernel::Adder, Mode::SharedScale, 8);
+    let (cfg, from_plan) = hwsim::plan_schedule(&plan, 1024).unwrap();
+    let direct = accelerator::run(&cfg, &Arch::Resnet8.graph().to_desc());
+    assert_eq!(from_plan.total_cycles, direct.total_cycles);
+    assert_eq!(from_plan.total_ops, direct.total_ops);
+    assert_eq!(from_plan.dram_bytes, direct.dram_bytes);
+}
+
+/// (c) §4 paper anchors through the report path: ResNet-18 at P=1024,
+/// 16-bit — conv/total GOPs, latency and power for both kernels, at the
+/// same tolerances the accelerator unit tests pin.
+#[test]
+fn report_path_holds_paper_anchors() {
+    let (c, a) = fpga::onboard_runs();
+    assert!((c.conv_gops() - 424.0).abs() / 424.0 < 0.12, "cnn conv {}", c.conv_gops());
+    assert!((a.conv_gops() - 495.0).abs() / 495.0 < 0.12, "adder conv {}", a.conv_gops());
+    assert!((c.total_gops() - 307.0).abs() / 307.0 < 0.25, "cnn total {}", c.total_gops());
+    assert!((a.total_gops() - 358.6).abs() / 358.6 < 0.25, "adder total {}", a.total_gops());
+    assert!((a.latency_ms() - 9.47).abs() / 9.47 < 0.35, "latency {}", a.latency_ms());
+    let saving = 1.0 - a.power.total_w() / c.power.total_w();
+    assert!((saving - 0.4785).abs() < 0.15, "power saving {saving:.3}");
+    // the JSON artifact carries the same anchor pair
+    let rows = vec![fpga::plan_hw_row(
+        &build_plan(Arch::Lenet5, SimKernel::Adder, Mode::SharedScale, 8),
+        1024).unwrap()];
+    let doc = fpga::fpga_report_json(&rows, 1024);
+    let j = addernet::util::Json::parse(&doc).unwrap();
+    let jg = j.at(&["anchors_resnet18", "addernet", "total_gops"])
+        .unwrap().as_f64().unwrap();
+    assert!((jg - a.total_gops()).abs() < 0.01);
+}
+
+/// The serving-side cost precomputation (`per_image_cost`) refuses
+/// plans whose geometry drifted from their arch graph and scales
+/// linearly — the contract `start_functional` relies on.
+#[test]
+fn serving_cost_contract() {
+    let plan = build_plan(Arch::Cnv6, SimKernel::Adder, Mode::SharedScale, 8);
+    let one = hwsim::per_image_cost(&plan, 1024).unwrap();
+    let eight = one.scale(8);
+    assert_eq!(eight.cycles, 8 * one.cycles);
+    assert_eq!(eight.power_w, one.power_w);
+    let mut bad = plan.clone();
+    let first = bad.convs.keys().next().unwrap().clone();
+    bad.convs.remove(&first);
+    assert!(hwsim::per_image_cost(&bad, 1024).is_err());
+}
