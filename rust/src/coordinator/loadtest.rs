@@ -53,6 +53,9 @@ pub struct VariantOutcome {
     /// Everything that should never happen under load: unknown
     /// variants, shutdown errors, dropped response channels.
     pub errors: u64,
+    /// Peak queue depth observed at submit time — how deep the variant's
+    /// bounded queue got under this load.
+    pub peak_queue: u64,
     /// End-to-end latency of `ok` responses.
     pub lat: LatencyHistogram,
 }
@@ -134,6 +137,8 @@ pub fn run(handle: &ServerHandle, variants: &[String],
         }
         let vi = (i as usize) % nvar;
         submit_side[vi].sent += 1;
+        let depth = handle.queue_depth(&variants[vi]).unwrap_or(0) as u64;
+        submit_side[vi].peak_queue = submit_side[vi].peak_queue.max(depth);
         match handle.submit(&variants[vi], images[vi].clone()) {
             Ok(rx) => {
                 // collector gone (panic) => count as error below via join
@@ -176,11 +181,11 @@ impl LoadtestReport {
             ventries.push(format!(
                 "    \"{name}\": {{\"sent\": {}, \"ok\": {}, \"shed\": {}, \
                  \"rejected\": {}, \"errors\": {}, \"shed_rate\": {:.4}, \
-                 \"p50_us\": {}, \"p99_us\": {}, \"max_us\": {}, \
-                 \"mean_us\": {:.1}}}",
+                 \"peak_queue\": {}, \"p50_us\": {}, \"p99_us\": {}, \
+                 \"max_us\": {}, \"mean_us\": {:.1}}}",
                 o.sent, o.ok, o.shed, o.rejected, o.errors, o.shed_rate(),
-                o.lat.quantile_us(0.5), o.lat.quantile_us(0.99), o.lat.max_us(),
-                o.lat.mean_us()));
+                o.peak_queue, o.lat.quantile_us(0.5), o.lat.quantile_us(0.99),
+                o.lat.max_us(), o.lat.mean_us()));
         }
         format!(
             "{{\n  \"schema\": \"{SCHEMA}\",\n  \"requested_qps\": {:.1},\n  \
@@ -200,10 +205,22 @@ impl LoadtestReport {
     }
 }
 
+/// Optional SLO bounds for [`check`] (`repro loadtest check
+/// --p99-slo-ms --max-shed-rate`).  `None` fields gate nothing beyond
+/// the structural checks.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CheckSlo {
+    /// Fail any variant whose p99 end-to-end latency exceeds this, ms.
+    pub p99_slo_ms: Option<f64>,
+    /// Fail any variant whose shed rate exceeds this fraction.
+    pub max_shed_rate: Option<f64>,
+}
+
 /// CI gate over a persisted report (`repro loadtest check --file`):
 /// every variant must show zero errors, at least one OK response, and a
 /// nonzero p99 — a run that shed 100% or answered nothing fails loudly.
-pub fn check(path: &Path) -> Result<()> {
+/// `slo` optionally adds p99-latency and shed-rate ceilings.
+pub fn check(path: &Path, slo: &CheckSlo) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
     let j = Json::parse(&text)
@@ -221,14 +238,25 @@ pub fn check(path: &Path) -> Result<()> {
         };
         let (ok, errors, rejected) = (num("ok")?, num("errors")?, num("rejected")?);
         let p99 = num("p99_us")?;
+        let shed_rate = v.at(&["shed_rate"]).and_then(Json::as_f64).unwrap_or(0.0);
         anyhow::ensure!(errors == 0.0, "variant {name}: {errors} errors");
         anyhow::ensure!(rejected == 0.0,
                         "variant {name}: {rejected} malformed-request rejects");
         anyhow::ensure!(ok > 0.0, "variant {name}: no OK responses");
         anyhow::ensure!(p99 > 0.0, "variant {name}: p99 is 0µs — latencies \
                                     were not recorded");
-        println!("loadtest check: {name} OK (ok={ok}, shed_rate={}, p99={p99}µs)",
-                 v.at(&["shed_rate"]).and_then(Json::as_f64).unwrap_or(0.0));
+        if let Some(slo_ms) = slo.p99_slo_ms {
+            anyhow::ensure!(p99 <= slo_ms * 1000.0,
+                            "variant {name}: p99 {p99}µs exceeds the \
+                             {slo_ms}ms SLO");
+        }
+        if let Some(max) = slo.max_shed_rate {
+            anyhow::ensure!(shed_rate <= max,
+                            "variant {name}: shed rate {shed_rate:.4} exceeds \
+                             the {max:.4} ceiling");
+        }
+        println!("loadtest check: {name} OK (ok={ok}, shed_rate={shed_rate}, \
+                  p99={p99}µs)");
     }
     Ok(())
 }
@@ -244,7 +272,8 @@ mod tests {
         }
         let mut variants = BTreeMap::new();
         variants.insert("lenet5_adder".to_string(), VariantOutcome {
-            sent: 5, ok: 3, shed: 2, rejected: 0, errors: 0, lat,
+            sent: 5, ok: 3, shed: 2, rejected: 0, errors: 0, peak_queue: 4,
+            lat,
         });
         LoadtestReport {
             requested_qps: 200.0,
@@ -266,10 +295,28 @@ mod tests {
         let p99 = j.at(&["variants", "lenet5_adder", "p99_us"])
             .and_then(Json::as_f64).unwrap();
         assert!(p99 > 0.0 && p99 <= 1500.0, "p99 {p99} must be clamped to max");
+        assert_eq!(j.at(&["variants", "lenet5_adder", "peak_queue"])
+                       .and_then(Json::as_usize), Some(4));
         let path = std::env::temp_dir()
             .join(format!("addernet-loadtest-{}.json", std::process::id()));
         r.write_json(&path).unwrap();
-        check(&path).expect("clean report passes the gate");
+        check(&path, &CheckSlo::default()).expect("clean report passes the gate");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn slo_bounds_gate_p99_and_shed_rate() {
+        let r = sample_report(); // p99 1500µs, shed rate 0.4
+        let path = std::env::temp_dir()
+            .join(format!("addernet-loadtest-slo-{}.json", std::process::id()));
+        r.write_json(&path).unwrap();
+        let loose = CheckSlo { p99_slo_ms: Some(10.0), max_shed_rate: Some(0.5) };
+        check(&path, &loose).expect("within SLO must pass");
+        let tight_lat = CheckSlo { p99_slo_ms: Some(0.001), max_shed_rate: None };
+        assert!(check(&path, &tight_lat).is_err(), "p99 over SLO must fail");
+        let tight_shed = CheckSlo { p99_slo_ms: None, max_shed_rate: Some(0.1) };
+        assert!(check(&path, &tight_shed).is_err(),
+                "shed rate over ceiling must fail");
         std::fs::remove_file(&path).ok();
     }
 
@@ -280,11 +327,13 @@ mod tests {
         let path = std::env::temp_dir()
             .join(format!("addernet-loadtest-bad-{}.json", std::process::id()));
         r.write_json(&path).unwrap();
-        assert!(check(&path).is_err(), "errors > 0 must fail the gate");
+        assert!(check(&path, &CheckSlo::default()).is_err(),
+                "errors > 0 must fail the gate");
         let mut r = sample_report();
         r.variants.get_mut("lenet5_adder").unwrap().ok = 0;
         r.write_json(&path).unwrap();
-        assert!(check(&path).is_err(), "ok == 0 must fail the gate");
+        assert!(check(&path, &CheckSlo::default()).is_err(),
+                "ok == 0 must fail the gate");
         std::fs::remove_file(&path).ok();
     }
 

@@ -34,6 +34,34 @@ impl LatencyHistogram {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Rebuild from raw parts — the bridge the lock-free
+    /// [`crate::obs::registry::AtomicHistogram`] snapshots across.
+    /// `buckets` must use the same 32-bucket log layout.
+    pub fn from_parts(buckets: Vec<u64>, count: u64, sum_us: u64,
+                      max_us: u64) -> Self {
+        assert_eq!(buckets.len(), 32, "histogram bucket layout mismatch");
+        Self { buckets, count, sum_us, max_us }
+    }
+
+    /// Fold another histogram into this one (per-replica shard merge:
+    /// buckets and counters add, the max takes the max).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -100,6 +128,11 @@ pub struct ServerMetrics {
     pub hw_power_w: f64,
     pub hw_utilization: f64,
     pub hw_fmax_mhz: f64,
+    /// Wall-clock a replica spent executing/responding, µs (summed
+    /// across replicas at snapshot time).
+    pub busy_us: u64,
+    /// Wall-clock a replica spent waiting for work, µs.
+    pub idle_us: u64,
 }
 
 impl ServerMetrics {
@@ -121,6 +154,43 @@ impl ServerMetrics {
     /// runs a backend without a hardware model).
     pub fn hw_latency_per_image_ms(&self) -> f64 {
         if self.images == 0 { 0.0 } else { self.hw_latency_ms / self.images as f64 }
+    }
+
+    /// Fold a per-replica (or submit-side) shard into this aggregate.
+    /// Counters and histograms add; the per-design gauges are constant
+    /// across shards of one variant, so any non-zero shard wins.
+    pub fn merge(&mut self, o: &ServerMetrics) {
+        self.requests += o.requests;
+        self.images += o.images;
+        self.batches += o.batches;
+        self.shed += o.shed;
+        self.rejected += o.rejected;
+        self.swaps += o.swaps;
+        self.queue_lat.merge(&o.queue_lat);
+        self.exec_lat.merge(&o.exec_lat);
+        self.e2e_lat.merge(&o.e2e_lat);
+        self.hw_cycles += o.hw_cycles;
+        self.hw_dram_bytes += o.hw_dram_bytes;
+        self.hw_latency_ms += o.hw_latency_ms;
+        if o.hw_fmax_mhz != 0.0 {
+            self.hw_power_w = o.hw_power_w;
+            self.hw_utilization = o.hw_utilization;
+            self.hw_fmax_mhz = o.hw_fmax_mhz;
+        }
+        self.busy_us += o.busy_us;
+        self.idle_us += o.idle_us;
+    }
+
+    /// Fraction of admitted+refused submits that were load-shed.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.requests + self.shed + self.rejected;
+        if offered == 0 { 0.0 } else { self.shed as f64 / offered as f64 }
+    }
+
+    /// Fraction of offered submits rejected as malformed.
+    pub fn reject_rate(&self) -> f64 {
+        let offered = self.requests + self.shed + self.rejected;
+        if offered == 0 { 0.0 } else { self.rejected as f64 / offered as f64 }
     }
 }
 
@@ -192,6 +262,52 @@ mod tests {
         assert_eq!(m.hw_fmax_mhz, 250.0);
         assert!((m.hw_latency_per_image_ms() - 0.004).abs() < 1e-12);
         assert_eq!(ServerMetrics::default().hw_latency_per_image_ms(), 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_stream() {
+        let (mut a, mut b, mut whole) =
+            (LatencyHistogram::new(), LatencyHistogram::new(),
+             LatencyHistogram::new());
+        for us in [10u64, 100, 700, 1000] {
+            a.record(Duration::from_micros(us));
+            whole.record(Duration::from_micros(us));
+        }
+        for us in [5u64, 5000, 50_000] {
+            b.record(Duration::from_micros(us));
+            whole.record(Duration::from_micros(us));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.sum_us(), whole.sum_us());
+        assert_eq!(a.max_us(), whole.max_us());
+        assert_eq!(a.bucket_counts(), whole.bucket_counts());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile_us(q), whole.quantile_us(q));
+        }
+    }
+
+    #[test]
+    fn server_metrics_merge_folds_shards() {
+        let mut agg = ServerMetrics::default();
+        let submit = ServerMetrics {
+            shed: 3, rejected: 1, ..Default::default()
+        };
+        let mut replica = ServerMetrics {
+            requests: 6, images: 6, batches: 2, busy_us: 900, idle_us: 100,
+            hw_fmax_mhz: 250.0, hw_power_w: 1.34, ..Default::default()
+        };
+        replica.e2e_lat.record(Duration::from_micros(250));
+        agg.merge(&submit);
+        agg.merge(&replica);
+        assert_eq!(agg.shed, 3);
+        assert_eq!(agg.requests, 6);
+        assert_eq!(agg.e2e_lat.count(), 1);
+        assert_eq!(agg.busy_us, 900);
+        assert_eq!(agg.hw_fmax_mhz, 250.0);
+        assert!((agg.shed_rate() - 0.3).abs() < 1e-12);
+        assert!((agg.reject_rate() - 0.1).abs() < 1e-12);
+        assert_eq!(ServerMetrics::default().shed_rate(), 0.0);
     }
 
     #[test]

@@ -59,6 +59,7 @@
 
 use std::collections::HashMap;
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -68,6 +69,8 @@ use anyhow::{Context, Result};
 
 use super::metrics::ServerMetrics;
 use super::queue::{BoundedQueue, Pop, PushError};
+use crate::obs::registry::Registry;
+use crate::obs::trace::{TraceHandle, TraceObserver, TraceSink};
 use crate::quant::plan::QuantPlan;
 use crate::quant::Calibration;
 use crate::sim::functional::{self, Arch, ExecMode, KernelStrategy, Params, Runner,
@@ -141,11 +144,17 @@ impl fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
-type MetricsMap = Arc<Mutex<HashMap<String, ServerMetrics>>>;
+/// One metrics shard.  `[0]` in a variant's shard list belongs to the
+/// submit side (shed/rejected/swaps); each replica worker records into
+/// its own private shard — the serving hot path never contends on one
+/// global metrics mutex.  [`ServerHandle::metrics_snapshot`] merges the
+/// shards at read time.
+type MetricsShard = Arc<Mutex<ServerMetrics>>;
 
 /// Per-variant shared state: the bounded request queue every replica
-/// drains, the expected input size `submit` validates against, and —
-/// for quantized variants — the hot-swappable plan slot.
+/// drains, the expected input size `submit` validates against, the
+/// per-replica metrics shards and — for quantized variants — the
+/// hot-swappable plan slot.
 struct VariantState {
     name: String,
     queue: BoundedQueue<Request>,
@@ -155,13 +164,23 @@ struct VariantState {
     /// or PJRT).  Workers clone the `Arc` per batch; `swap_plan`
     /// replaces it atomically under the mutex.
     plan: Option<Mutex<Arc<QuantPlan>>>,
+    /// `[0]` = submit-side shard, `[1..]` one per replica.
+    shards: Vec<MetricsShard>,
+    /// Batches currently executing across this variant's replicas.
+    inflight: AtomicU64,
+}
+
+fn shard_list(replicas: usize) -> Vec<MetricsShard> {
+    (0..=replicas).map(|_| MetricsShard::default()).collect()
 }
 
 /// Handle clients use to submit work, swap plans and read metrics.
 pub struct ServerHandle {
     variants: HashMap<String, Arc<VariantState>>,
-    pub metrics: MetricsMap,
     workers: Mutex<Vec<JoinHandle<()>>>,
+    /// Set when the server was started with request tracing on
+    /// ([`start_functional_observed`]).
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl ServerHandle {
@@ -175,7 +194,7 @@ impl ServerHandle {
         let v = self.variants.get(variant)
             .ok_or_else(|| SubmitError::UnknownVariant(variant.to_string()))?;
         if image.len() != v.px {
-            self.bump(&v.name, |m| m.rejected += 1);
+            v.shards[0].lock().unwrap().rejected += 1;
             return Err(SubmitError::BadRequest {
                 variant: variant.to_string(),
                 expected: v.px,
@@ -187,7 +206,7 @@ impl ServerHandle {
         match v.queue.push(req) {
             Ok(()) => Ok(rx),
             Err(PushError::Full(_)) => {
-                self.bump(&v.name, |m| m.shed += 1);
+                v.shards[0].lock().unwrap().shed += 1;
                 Err(SubmitError::Overloaded {
                     variant: variant.to_string(),
                     depth: v.queue.capacity(),
@@ -199,11 +218,6 @@ impl ServerHandle {
         }
     }
 
-    fn bump(&self, name: &str, f: impl FnOnce(&mut ServerMetrics)) {
-        let mut mm = self.metrics.lock().unwrap();
-        f(mm.entry(name.to_string()).or_default());
-    }
-
     pub fn variants(&self) -> Vec<String> {
         self.variants.keys().cloned().collect()
     }
@@ -211,6 +225,111 @@ impl ServerHandle {
     /// Pixels per request (h*w*c) the variant expects, if it exists.
     pub fn input_len(&self, variant: &str) -> Option<usize> {
         self.variants.get(variant).map(|v| v.px)
+    }
+
+    /// Merge every variant's metrics shards into one per-variant view —
+    /// the read side of per-replica recording.
+    pub fn metrics_snapshot(&self) -> HashMap<String, ServerMetrics> {
+        self.variants.iter()
+            .map(|(name, v)| {
+                let mut m = ServerMetrics::default();
+                for s in &v.shards {
+                    m.merge(&s.lock().unwrap());
+                }
+                (name.clone(), m)
+            })
+            .collect()
+    }
+
+    /// Requests currently queued (admitted, not yet claimed by a
+    /// replica) on a variant.
+    pub fn queue_depth(&self, variant: &str) -> Option<usize> {
+        self.variants.get(variant).map(|v| v.queue.len())
+    }
+
+    /// Batches currently executing across a variant's replicas.
+    pub fn inflight(&self, variant: &str) -> Option<u64> {
+        self.variants.get(variant)
+            .map(|v| v.inflight.load(Ordering::Relaxed))
+    }
+
+    /// The trace sink, when the server was started with tracing on.
+    pub fn trace(&self) -> Option<&Arc<TraceSink>> {
+        self.trace.as_ref()
+    }
+
+    /// Publish the current serving state into a metrics [`Registry`]:
+    /// per-variant counters (requests/images/batches/shed/rejected/
+    /// swaps), gauges (queue depth, in-flight batches, busy/idle time,
+    /// shed/reject rates, hw cost rates) and the three latency
+    /// histograms.  `snapshot()` and `render_prometheus()` on the same
+    /// registry then expose identical values.
+    pub fn export_registry(&self, reg: &Registry) {
+        for (name, v) in &self.variants {
+            let mut m = ServerMetrics::default();
+            for s in &v.shards {
+                m.merge(&s.lock().unwrap());
+            }
+            let lb = format!("{{variant=\"{name}\"}}");
+            let counters: [(&str, &'static str, u64); 6] = [
+                ("requests_total", "Requests answered", m.requests),
+                ("images_total", "Images executed", m.images),
+                ("batches_total", "Batches executed", m.batches),
+                ("shed_total", "Submits shed by admission control",
+                 m.shed),
+                ("rejected_total", "Malformed submits rejected",
+                 m.rejected),
+                ("plan_swaps_total", "Zero-downtime plan hot-swaps",
+                 m.swaps),
+            ];
+            for (key, help, val) in counters {
+                reg.counter(&format!("addernet_{key}{lb}"), help).set(val);
+            }
+            let gauges: [(&str, &'static str, f64); 6] = [
+                ("queue_depth", "Requests currently queued",
+                 v.queue.len() as f64),
+                ("inflight_batches", "Batches currently executing",
+                 v.inflight.load(Ordering::Relaxed) as f64),
+                ("busy_seconds", "Replica wall-clock spent executing",
+                 m.busy_us as f64 / 1e6),
+                ("idle_seconds", "Replica wall-clock spent waiting",
+                 m.idle_us as f64 / 1e6),
+                ("shed_rate", "Shed fraction of offered submits",
+                 m.shed_rate()),
+                ("reject_rate", "Rejected fraction of offered submits",
+                 m.reject_rate()),
+            ];
+            for (key, help, val) in gauges {
+                reg.gauge(&format!("addernet_{key}{lb}"), help).set(val);
+            }
+            if m.hw_fmax_mhz != 0.0 {
+                reg.counter(&format!("addernet_hw_cycles_total{lb}"),
+                            "Simulated accelerator cycles")
+                    .set(m.hw_cycles);
+                reg.counter(&format!("addernet_hw_dram_bytes_total{lb}"),
+                            "Simulated off-chip traffic, bytes")
+                    .set(m.hw_dram_bytes);
+                reg.gauge(&format!("addernet_hw_power_w{lb}"),
+                          "Simulated accelerator power, W")
+                    .set(m.hw_power_w);
+                reg.gauge(&format!("addernet_hw_fmax_mhz{lb}"),
+                          "Simulated achieved clock, MHz")
+                    .set(m.hw_fmax_mhz);
+            }
+            let hists: [(&str, &'static str,
+                         &super::metrics::LatencyHistogram); 3] = [
+                ("queue_latency_us", "Queue wait per request, µs",
+                 &m.queue_lat),
+                ("exec_latency_us", "Batch execution time, µs",
+                 &m.exec_lat),
+                ("e2e_latency_us", "End-to-end request latency, µs",
+                 &m.e2e_lat),
+            ];
+            for (key, help, h) in hists {
+                reg.histogram(&format!("addernet_{key}{lb}"), help)
+                    .set_from(h);
+            }
+        }
     }
 
     /// Zero-downtime plan hot-swap: atomically replace a quantized
@@ -239,7 +358,7 @@ impl ServerHandle {
             plan.cfg.bits, plan.cfg.mode, cur.cfg.bits, cur.cfg.mode);
         *cur = Arc::new(plan);
         drop(cur);
-        self.bump(variant, |m| m.swaps += 1);
+        v.shards[0].lock().unwrap().swaps += 1;
         Ok(())
     }
 
@@ -287,48 +406,58 @@ fn collect_batch(queue: &BoundedQueue<Request>, pending: &mut Vec<Request>,
     true
 }
 
-fn record_batch(metrics: &MetricsMap, name: &str, n: usize, exec_time: Duration,
-                hw: Option<&HwCost>) {
-    let mut mm = metrics.lock().unwrap();
-    let m = mm.entry(name.to_string()).or_default();
+fn record_batch(shard: &Mutex<ServerMetrics>, n: usize, exec_time: Duration,
+                idle: Duration, hw: Option<&HwCost>) {
+    let mut m = shard.lock().unwrap();
     m.batches += 1;
     m.images += n as u64;
     m.requests += n as u64;
     m.exec_lat.record(exec_time);
+    m.busy_us += exec_time.as_micros() as u64;
+    m.idle_us += idle.as_micros() as u64;
     if let Some(cost) = hw {
         m.record_hw(cost);
     }
 }
 
-/// Record latencies and deliver responses.  The global metrics mutex is
-/// held ONLY while recording the latency histograms — never across the
-/// `respond.send` calls or the per-request logit clones, which with
-/// replica fleets would turn the lock into the serving bottleneck.
-fn respond_all(metrics: &MetricsMap, name: &str, pending: &mut Vec<Request>,
+/// Record latencies and deliver responses.  The replica's own metrics
+/// shard is locked ONLY while recording the latency histograms — never
+/// across the `respond.send` calls or the per-request logit clones —
+/// and no other replica ever touches it, so a fleet's responders never
+/// serialize on one global mutex.  When tracing, one `request` span per
+/// request is recorded AFTER its response was sent: the span starts at
+/// submit time, so it covers the full measured end-to-end latency.
+fn respond_all(shard: &Mutex<ServerMetrics>, pending: &mut Vec<Request>,
                exec_start: Instant, hw: Option<HwCost>,
+               trace: Option<&TraceHandle>,
                logits: impl Fn(usize) -> Vec<f32>) {
-    let done: Vec<(Sender<Response>, Duration, Duration)> = pending.drain(..)
-        .map(|r| {
-            let queue_time = exec_start.duration_since(r.enqueued);
-            let total_time = r.enqueued.elapsed();
-            (r.respond, queue_time, total_time)
-        })
-        .collect();
+    let done: Vec<(Sender<Response>, Duration, Duration, Instant)> =
+        pending.drain(..)
+            .map(|r| {
+                let queue_time = exec_start.duration_since(r.enqueued);
+                let total_time = r.enqueued.elapsed();
+                (r.respond, queue_time, total_time, r.enqueued)
+            })
+            .collect();
     {
-        let mut mm = metrics.lock().unwrap();
-        let m = mm.entry(name.to_string()).or_default();
-        for (_, queue_time, total_time) in &done {
+        let mut m = shard.lock().unwrap();
+        for (_, queue_time, total_time, _) in &done {
             m.queue_lat.record(*queue_time);
             m.e2e_lat.record(*total_time);
         }
     } // lock released before any send or logit clone
-    for (i, (respond, queue_time, total_time)) in done.into_iter().enumerate() {
+    for (i, (respond, queue_time, total_time, enqueued)) in
+        done.into_iter().enumerate()
+    {
         let _ = respond.send(Response {
             logits: logits(i),
             queue_time,
             total_time,
             hw,
         });
+        if let Some(t) = trace {
+            t.record("request", "serve", enqueued, enqueued.elapsed());
+        }
     }
 }
 
@@ -434,6 +563,16 @@ struct WorkerCfg {
 /// error instead of panicking a worker thread later.
 pub fn start_functional(variants: Vec<FunctionalVariantCfg>,
                         batch_window: Duration) -> Result<ServerHandle> {
+    start_functional_observed(variants, batch_window, None)
+}
+
+/// [`start_functional`] with request tracing: every worker takes a
+/// [`TraceHandle`] on the sink and records `collect`/`exec`/`batch`/
+/// per-layer/`request` spans while serving (`repro serve --trace-out`).
+pub fn start_functional_observed(variants: Vec<FunctionalVariantCfg>,
+                                 batch_window: Duration,
+                                 trace: Option<Arc<TraceSink>>)
+                                 -> Result<ServerHandle> {
     // An empty variant list must be a startup ERROR, not a silently
     // idle server: callers that filtered every requested variant away
     // (e.g. unservable quant widths) would otherwise green-light a
@@ -441,7 +580,6 @@ pub fn start_functional(variants: Vec<FunctionalVariantCfg>,
     anyhow::ensure!(!variants.is_empty(),
                     "no variants to serve (every requested variant was \
                      filtered out, or the model list is empty)");
-    let metrics: MetricsMap = Arc::new(Mutex::new(HashMap::new()));
     let mut routes: HashMap<String, Arc<VariantState>> = HashMap::new();
     let mut workers = Vec::new();
     for mut v in variants {
@@ -502,6 +640,8 @@ pub fn start_functional(variants: Vec<FunctionalVariantCfg>,
             queue: BoundedQueue::new(v.queue_depth),
             px: h * w * c,
             plan: plan.map(|p| Mutex::new(Arc::new(p))),
+            shards: shard_list(v.replicas),
+            inflight: AtomicU64::new(0),
         });
         // a duplicate name would silently replace the first variant's
         // route (its workers exit on close while the CLI reports both
@@ -524,26 +664,39 @@ pub fn start_functional(variants: Vec<FunctionalVariantCfg>,
         for r in 0..replicas {
             let wcfg = Arc::clone(&wcfg);
             let state = Arc::clone(&state);
-            let m = Arc::clone(&metrics);
+            let shard = Arc::clone(&state.shards[r + 1]);
+            let sink = trace.clone();
             workers.push(std::thread::Builder::new()
                 .name(format!("fsim-{}-r{r}", wcfg.name))
-                .spawn(move || functional_worker(&wcfg, &state, &m, batch_window))?);
+                .spawn(move || {
+                    let th = sink.as_ref()
+                        .map(|s| s.handle(&format!("fsim-{}-r{r}", wcfg.name)));
+                    functional_worker(&wcfg, &state, &shard, th.as_ref(),
+                                      batch_window)
+                })?);
         }
     }
     Ok(ServerHandle {
         variants: routes,
-        metrics,
         workers: Mutex::new(workers),
+        trace,
     })
 }
 
-fn functional_worker(cfg: &WorkerCfg, state: &VariantState, metrics: &MetricsMap,
+fn functional_worker(cfg: &WorkerCfg, state: &VariantState,
+                     shard: &MetricsShard, trace: Option<&TraceHandle>,
                      batch_window: Duration) {
     let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
     loop {
+        let wait_start = Instant::now();
         if !collect_batch(&state.queue, &mut pending, cfg.max_batch, batch_window) {
             return;
         }
+        let idle = wait_start.elapsed();
+        if let Some(t) = trace {
+            t.record("collect", "serve", wait_start, idle);
+        }
+        state.inflight.fetch_add(1, Ordering::Relaxed);
         let n = pending.len();
         let exec_start = Instant::now();
         let images: Vec<&[f32]> = pending.iter().map(|r| r.image.as_slice()).collect();
@@ -554,8 +707,16 @@ fn functional_worker(cfg: &WorkerCfg, state: &VariantState, metrics: &MetricsMap
             // becomes visible at the next batch boundary.
             Some(slot) => {
                 let plan = Arc::clone(&slot.lock().unwrap());
-                PlanRunner { plan: plan.as_ref(), strategy: cfg.strategy }
-                    .forward_many(&images, cfg.input_hwc)
+                let runner =
+                    PlanRunner { plan: plan.as_ref(), strategy: cfg.strategy };
+                match trace {
+                    Some(t) => {
+                        let mut obs = TraceObserver { trace: t };
+                        runner.forward_many_observed(&images, cfg.input_hwc,
+                                                     &mut obs)
+                    }
+                    None => runner.forward_many(&images, cfg.input_hwc),
+                }
             }
             None => {
                 let mut runner = Runner {
@@ -567,15 +728,30 @@ fn functional_worker(cfg: &WorkerCfg, state: &VariantState, metrics: &MetricsMap
                     calib: None,
                     observe: None,
                 };
-                runner.forward_many(&images, cfg.input_hwc)
+                match trace {
+                    Some(t) => {
+                        let mut obs = TraceObserver { trace: t };
+                        runner.forward_many_observed(&images, cfg.input_hwc,
+                                                     &mut obs)
+                    }
+                    None => runner.forward_many(&images, cfg.input_hwc),
+                }
             }
         };
         drop(images);
         let exec_time = exec_start.elapsed();
+        if let Some(t) = trace {
+            t.record("exec", "serve", exec_start, exec_time);
+        }
         let batch_hw = cfg.hw_cost.map(|c| c.scale(n));
-        record_batch(metrics, &cfg.name, n, exec_time, batch_hw.as_ref());
-        respond_all(metrics, &cfg.name, &mut pending, exec_start, cfg.hw_cost,
+        record_batch(shard, n, exec_time, idle, batch_hw.as_ref());
+        respond_all(shard, &mut pending, exec_start, cfg.hw_cost, trace,
                     |i| logits[i].clone());
+        if let Some(t) = trace {
+            // exec + respond for this batch: contains the exec span
+            t.record("batch", "serve", exec_start, exec_start.elapsed());
+        }
+        state.inflight.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -603,7 +779,6 @@ pub struct VariantCfg {
 pub fn start(manifest: &Manifest, variants: &[VariantCfg],
              batch_window: Duration) -> Result<ServerHandle> {
     anyhow::ensure!(!variants.is_empty(), "no variants to serve");
-    let metrics: MetricsMap = Arc::new(Mutex::new(HashMap::new()));
     let mut routes: HashMap<String, Arc<VariantState>> = HashMap::new();
     let mut workers = Vec::new();
     for v in variants {
@@ -619,32 +794,34 @@ pub fn start(manifest: &Manifest, variants: &[VariantCfg],
             queue: BoundedQueue::new(DEFAULT_QUEUE_DEPTH),
             px: h * w * c,
             plan: None,
+            shards: shard_list(1),
+            inflight: AtomicU64::new(0),
         });
         anyhow::ensure!(
             routes.insert(v.model.clone(), Arc::clone(&state)).is_none(),
             "duplicate variant name {} (listed twice in --models?)", v.model);
-        let m = Arc::clone(&metrics);
+        let shard = Arc::clone(&state.shards[1]);
         let man = manifest.clone();
         let cfg = v.clone();
         workers.push(std::thread::Builder::new()
             .name(format!("worker-{}", v.model))
             .spawn(move || {
-                if let Err(e) = pjrt_worker(man, &cfg, &state, input_hwc, &m,
-                                            batch_window) {
+                if let Err(e) = pjrt_worker(man, &cfg, &state, input_hwc,
+                                            &shard, batch_window) {
                     eprintln!("[server] worker {} failed: {e:#}", cfg.model);
                 }
             })?);
     }
     Ok(ServerHandle {
         variants: routes,
-        metrics,
         workers: Mutex::new(workers),
+        trace: None,
     })
 }
 
 #[cfg(feature = "pjrt")]
 fn pjrt_worker(manifest: Manifest, cfg: &VariantCfg, state: &VariantState,
-               input_hwc: (usize, usize, usize), metrics: &MetricsMap,
+               input_hwc: (usize, usize, usize), shard: &MetricsShard,
                batch_window: Duration) -> Result<()> {
     // PJRT handles are not Send: the runtime lives and dies in this thread.
     let mut rt = Runtime::new(manifest.dir.clone())?;
@@ -665,9 +842,11 @@ fn pjrt_worker(manifest: Manifest, cfg: &VariantCfg, state: &VariantState,
 
     let mut pending: Vec<Request> = Vec::with_capacity(batch);
     loop {
+        let wait_start = Instant::now();
         if !collect_batch(&state.queue, &mut pending, batch, batch_window) {
             return Ok(());
         }
+        let idle = wait_start.elapsed();
         // assemble the fixed-size batch (pad with zeros)
         let n = pending.len();
         let mut images = vec![0f32; batch * px];
@@ -682,8 +861,8 @@ fn pjrt_worker(manifest: Manifest, cfg: &VariantCfg, state: &VariantState,
         let logits = runtime::to_vec_f32(&outs[0])?;
         let exec_time = exec_start.elapsed();
 
-        record_batch(metrics, &cfg.model, n, exec_time, None);
-        respond_all(metrics, &cfg.model, &mut pending, exec_start, None,
+        record_batch(shard, n, exec_time, idle, None);
+        respond_all(shard, &mut pending, exec_start, None, None,
                     |i| logits[i * 10..(i + 1) * 10].to_vec());
     }
 }

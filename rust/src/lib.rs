@@ -21,6 +21,7 @@ pub mod coordinator;
 pub mod data;
 pub mod hw;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod report;
 #[cfg(feature = "pjrt")]

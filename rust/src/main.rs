@@ -11,6 +11,11 @@
 //!   loadtest           open-loop synthetic traffic at a fixed QPS against
 //!                      a fresh server; p50/p99/shed-rate written to JSON
 //!   loadtest check     CI gate over a loadtest JSON artifact
+//!                      (--p99-slo-ms / --max-shed-rate add SLO bounds)
+//!   profile            per-layer wall-time for one forward pass; int
+//!                      modes join the plan schedule's simulated cycles
+//!                      per layer (the cycle column sums to the
+//!                      schedule's total exactly)
 //!   calibrate          record per-layer ranges, write a calibration JSON
 //!   plan               compile a QuantPlan and export it as a portable
 //!                      JSON artifact (serve it with serve --plan)
@@ -32,13 +37,14 @@ use addernet::coordinator::{server, Manifest};
 #[cfg(feature = "pjrt")]
 use addernet::coordinator::{Trainer, VariantCfg};
 use addernet::hw::KernelKind;
+use addernet::obs;
 use addernet::report;
 #[cfg(feature = "pjrt")]
 use addernet::runtime;
 use addernet::quant;
 use addernet::sim::accelerator::{self, AccelConfig};
 use addernet::sim::functional::{Arch, ExecMode, KernelStrategy, Params, QuantCfg,
-                                SimKernel};
+                                Runner, SimKernel, Tensor};
 use addernet::util::table::{f, pct, Table};
 use addernet::{data, nn};
 
@@ -97,6 +103,7 @@ fn main() {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "loadtest" => cmd_loadtest(&args),
+        "profile" => cmd_profile(&args),
         "calibrate" => cmd_calibrate(&args),
         "plan" => cmd_plan(&args),
         "quantize" => cmd_quantize(&args),
@@ -134,12 +141,17 @@ fn usage() {
                      [--calib FILE.json] [--plan PLAN.json[,PLAN2.json]] \
                      [--hw-parallelism 1024] \
                      [--replicas 1] [--queue-depth 1024] [--swap-plan PLAN.json] \
-                     [--requests 512] [--window-ms 2] [--max-batch 32]\n  \
+                     [--requests 512] [--window-ms 2] [--max-batch 32] \
+                     [--trace-out trace.json] [--metrics-out metrics.json]\n  \
          repro loadtest [--models lenet5_adder] [--plan PLAN.json[,PLAN2.json]] \
                      [--kernel naive|tiled|simd|auto] [--replicas 1] \
                      [--queue-depth 1024] [--qps 200] [--duration-s 3] \
-                     [--window-ms 2] [--max-batch 32] [--out target/loadtest.json]\n  \
-         repro loadtest check --file target/loadtest.json\n  \
+                     [--window-ms 2] [--max-batch 32] [--out target/loadtest.json] \
+                     [--trace-out trace.json]\n  \
+         repro loadtest check --file target/loadtest.json \
+                     [--p99-slo-ms 50] [--max-shed-rate 0.25]\n  \
+         repro profile [--arch resnet8] [--kernel adder] [--mode f32|int8|int16] \
+                     [--calib FILE.json] [--hw-parallelism 1024] [--out prof.json]\n  \
          repro calibrate [--arch lenet5] [--kernel adder] [--calib-n 256] \
                      [--out target/calibration.json]\n  \
          repro plan [--arch lenet5] [--kernel adder] [--mode int8|int16] \
@@ -297,6 +309,12 @@ fn serve_functional(args: &Args, hwsim: bool) -> Result<()> {
     let max_batch = args.get_usize("max-batch", 32);
     let replicas = args.get_usize("replicas", 1).max(1);
     let queue_depth = args.get_usize("queue-depth", server::DEFAULT_QUEUE_DEPTH).max(1);
+    // --trace-out: record request/batch/exec/per-layer spans into a
+    // ring-buffer sink and write Chrome trace-event JSON on exit.
+    // --metrics-out: snapshot the metrics registry to a JSON file.
+    let trace_out = args.flags.get("trace-out").cloned();
+    let metrics_out = args.flags.get("metrics-out").cloned();
+    let sink = trace_out.is_some().then(obs::trace::TraceSink::new);
     // --swap-plan PLAN.json: mid-drive, hot-swap the matching quantized
     // variant onto this plan while requests are in flight — the CLI
     // control path for ServerHandle::swap_plan.
@@ -364,8 +382,9 @@ fn serve_functional(args: &Args, hwsim: bool) -> Result<()> {
                   replicas, kernel {}, window {:?}, max batch {}, queue depth \
                   {queue_depth}",
                  variants.len(), strategy.label(), window, max_batch);
-        let handle = server::start_functional(variants, window)?;
-        return drive_load(handle, n_req, swap);
+        let handle = server::start_functional_observed(variants, window, sink)?;
+        return drive_load(handle, n_req, swap, trace_out.as_deref(),
+                          metrics_out.as_deref());
     }
     let mode = args.get("mode", if hwsim { "int8" } else { "f32" });
     let qcfg = match mode.as_str() {
@@ -447,8 +466,8 @@ fn serve_functional(args: &Args, hwsim: bool) -> Result<()> {
               kernel {}, mode {}, window {:?}, max batch {}, queue depth \
               {queue_depth}",
              variants.len(), strategy.label(), mode, window, max_batch);
-    let handle = server::start_functional(variants, window)?;
-    drive_load(handle, n_req, swap)
+    let handle = server::start_functional_observed(variants, window, sink)?;
+    drive_load(handle, n_req, swap, trace_out.as_deref(), metrics_out.as_deref())
 }
 
 /// Record per-layer feature/weight ranges over the synthetic eval set
@@ -543,10 +562,10 @@ fn cmd_plan(args: &Args) -> Result<()> {
 }
 
 /// `repro bench check`: compare the freshly-recorded hotpath JSON
-/// against a committed baseline snapshot and exit nonzero when a key
-/// speedup row regressed past the tolerance — the CI bench-regression
-/// gate.  Gated fields are RATIOS (machine-portable), never absolute
-/// medians.
+/// against a committed baseline snapshot and exit nonzero when a gated
+/// row regressed past the tolerance — the CI bench-regression gate.
+/// Gated fields are RATIOS (machine-portable) plus the simulated
+/// accelerator's deterministic cycle counts — never absolute medians.
 fn cmd_bench(args: &Args) -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("check") => bench_check(args),
@@ -573,11 +592,11 @@ fn bench_check(args: &Args) -> Result<()> {
     };
     let base = load(&baseline_path)?;
     let cur = load(&current_path)?;
-    // The gate covers the three speedup families the engine promises:
-    // blocking+parallelism (tiled vs naive), the lane kernel (simd vs
-    // tiled) and the compiled int8 serving path (plan vs f32, whole
-    // model) — on both the f32 and the integer conv rows.
-    const GATES: &[(&str, &[&str])] = &[
+    // Floor gates: RATIOS where higher is better — the three speedup
+    // families the engine promises (blocking+parallelism, the lane
+    // kernel, the compiled int8 serving path) plus the accelerator's
+    // mult/adder latency ratio.  Fail when current < baseline*(1-tol).
+    const FLOOR_GATES: &[(&str, &[&str])] = &[
         ("f32 adder: tiled vs naive",
          &["results", "f32_adder", "tiled_vs_naive"]),
         ("f32 adder: simd vs tiled",
@@ -588,59 +607,60 @@ fn bench_check(args: &Args) -> Result<()> {
          &["results", "int8_adder", "simd_vs_tiled"]),
         ("int8 plan vs f32 (whole model)",
          &["derived", "plan_vs_f32"]),
-    ];
-    // Cycle-count gates over the simulated accelerator (deterministic,
-    // machine-portable).  A key missing from the BASELINE notes-and-
-    // skips — the committed snapshot predates the hw rows and can only
-    // be regenerated on a machine with the toolchain — but a key
-    // missing from the CURRENT run is a hard error: the bench must
-    // keep recording it.
-    const OPTIONAL_GATES: &[(&str, &[&str])] = &[
         ("hwsim: mult/adder latency ratio (resnet8 int8)",
          &["derived", "hw_mult_over_adder_latency"]),
     ];
+    // Ceiling gates: per-image cycle counts on the simulated
+    // accelerator — deterministic and machine-portable, so the baseline
+    // is exact; lower is better.  Fail when current > baseline*(1+tol).
+    const CEILING_GATES: &[(&str, &[&str])] = &[
+        ("hwsim cycles: lenet5 adder int8",
+         &["derived", "hw_cycles_lenet5_int8"]),
+        ("hwsim cycles: cnv6 adder int8",
+         &["derived", "hw_cycles_cnv6_int8"]),
+        ("hwsim cycles: resnet8 adder int8",
+         &["derived", "hw_cycles_resnet8_int8"]),
+        ("hwsim cycles: resnet8 mult int8",
+         &["derived", "hw_cycles_resnet8_mult_int8"]),
+    ];
+    let fetch = |doc: &addernet::util::Json, which: &str,
+                 path: &[&str]| -> Result<f64> {
+        doc.at(path).and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("{which}: missing {}",
+                                           path.join(".")))
+    };
     let mut t = Table::new(
         &format!("hotpath bench-regression gate (tolerance {:.0}%)",
                  tol * 100.0),
-        &["speedup row", "baseline", "floor", "current", "status"]);
+        &["gated row", "baseline", "bound", "current", "status"]);
     let mut failed = Vec::new();
-    for (label, path) in GATES {
-        let b = base.at(path).and_then(|v| v.as_f64())
-            .ok_or_else(|| anyhow::anyhow!(
-                "{baseline_path}: missing {}", path.join(".")))?;
-        let c = cur.at(path).and_then(|v| v.as_f64())
-            .ok_or_else(|| anyhow::anyhow!(
-                "{current_path}: missing {}", path.join(".")))?;
+    for (label, path) in FLOOR_GATES {
+        let b = fetch(&base, &baseline_path, path)?;
+        let c = fetch(&cur, &current_path, path)?;
         let floor = b * (1.0 - tol);
         let ok = c >= floor;
         t.row(&[label.to_string(), f(b, 2), f(floor, 2), f(c, 2),
                 if ok { "ok" } else { "REGRESSED" }.to_string()]);
         if !ok {
-            failed.push(format!("{label}: {c:.2}x < floor {floor:.2}x"));
+            failed.push(format!("{label}: {c:.2} < floor {floor:.2}"));
         }
     }
-    for (label, path) in OPTIONAL_GATES {
-        let Some(b) = base.at(path).and_then(|v| v.as_f64()) else {
-            t.row(&[label.to_string(), "-".into(), "-".into(), "-".into(),
-                    "skipped (no baseline)".into()]);
-            continue;
-        };
-        let c = cur.at(path).and_then(|v| v.as_f64())
-            .ok_or_else(|| anyhow::anyhow!(
-                "{current_path}: missing {}", path.join(".")))?;
-        let floor = b * (1.0 - tol);
-        let ok = c >= floor;
-        t.row(&[label.to_string(), f(b, 2), f(floor, 2), f(c, 2),
+    for (label, path) in CEILING_GATES {
+        let b = fetch(&base, &baseline_path, path)?;
+        let c = fetch(&cur, &current_path, path)?;
+        let cap = b * (1.0 + tol);
+        let ok = c <= cap;
+        t.row(&[label.to_string(), f(b, 0), f(cap, 0), f(c, 0),
                 if ok { "ok" } else { "REGRESSED" }.to_string()]);
         if !ok {
-            failed.push(format!("{label}: {c:.2}x < floor {floor:.2}x"));
+            failed.push(format!("{label}: {c:.0} > ceiling {cap:.0}"));
         }
     }
     t.print();
     anyhow::ensure!(failed.is_empty(),
                     "hotpath bench regression: {}", failed.join("; "));
-    println!("[bench] all {} gated speedup rows within {:.0}% of the baseline",
-             GATES.len(), tol * 100.0);
+    println!("[bench] all {} gated rows within {:.0}% of the baseline",
+             FLOOR_GATES.len() + CEILING_GATES.len(), tol * 100.0);
     Ok(())
 }
 
@@ -664,7 +684,7 @@ fn serve_pjrt(args: &Args) -> Result<()> {
 
     println!("[serve] pjrt backend: {} variants, window {:?}", variants.len(), window);
     let handle = server::start(&manifest, &variants, window)?;
-    drive_load(handle, n_req, None)
+    drive_load(handle, n_req, None, None, None)
 }
 
 /// Resolve which served variant a hot-swap plan targets: the plan-file
@@ -684,9 +704,12 @@ fn swap_target(names: &[String], plan: &addernet::quant::QuantPlan) -> Result<St
 /// Fire a synthetic round-robin load at a running server and print the
 /// latency/throughput metrics table.  When `swap` carries a plan, it is
 /// hot-swapped onto the matching variant at the halfway point — with
-/// requests in flight — to exercise the zero-downtime path.
+/// requests in flight — to exercise the zero-downtime path.  When
+/// `trace_out` / `metrics_out` name files, the Chrome trace and the
+/// registry snapshot are written before returning.
 fn drive_load(handle: server::ServerHandle, n_req: usize,
-              mut swap: Option<addernet::quant::QuantPlan>) -> Result<()> {
+              mut swap: Option<addernet::quant::QuantPlan>,
+              trace_out: Option<&str>, metrics_out: Option<&str>) -> Result<()> {
     let names = handle.variants();
     let eval = data::eval_set(n_req, 3);
     let t0 = std::time::Instant::now();
@@ -733,7 +756,7 @@ fn drive_load(handle: server::ServerHandle, n_req: usize,
     println!("[serve] {n_req} requests in {dt:.2}s = {:.0} img/s, acc {:.3}",
              n_req as f64 / dt, correct as f64 / n_req as f64);
 
-    let metrics = handle.metrics.lock().unwrap().clone();
+    let metrics = handle.metrics_snapshot();
     let mut t = Table::new("serving metrics", &[
         "variant", "requests", "batches", "mean batch", "shed", "swaps",
         "queue p50 us", "exec p50 us", "e2e p50 us", "e2e p99 us",
@@ -775,7 +798,24 @@ fn drive_load(handle: server::ServerHandle, n_req: usize,
         }
         ht.print();
     }
+    if let Some(path) = metrics_out {
+        let reg = obs::registry::Registry::new();
+        handle.export_registry(&reg);
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        std::fs::write(path, reg.snapshot().to_string())
+            .with_context(|| format!("writing {path}"))?;
+        println!("[serve] metrics snapshot written to {path}");
+    }
+    let sink = handle.trace().cloned();
     handle.shutdown();
+    // write after shutdown so the workers' final spans are in the sink
+    if let (Some(path), Some(sink)) = (trace_out, sink) {
+        sink.write_json(std::path::Path::new(path))?;
+        println!("[serve] chrome trace written to {path} (open it at \
+                  https://ui.perfetto.dev)");
+    }
     Ok(())
 }
 
@@ -790,7 +830,20 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     if args.positional.first().map(|s| s.as_str()) == Some("check") {
         let file = args.flags.get("file")
             .context("loadtest check needs --file target/loadtest.json")?;
-        return loadtest::check(std::path::Path::new(file));
+        // optional SLO bounds on top of the structural checks
+        let slo = loadtest::CheckSlo {
+            p99_slo_ms: match args.flags.get("p99-slo-ms") {
+                Some(v) => Some(v.parse()
+                    .context("--p99-slo-ms takes milliseconds, e.g. 50")?),
+                None => None,
+            },
+            max_shed_rate: match args.flags.get("max-shed-rate") {
+                Some(v) => Some(v.parse()
+                    .context("--max-shed-rate takes a fraction, e.g. 0.25")?),
+                None => None,
+            },
+        };
+        return loadtest::check(std::path::Path::new(file), &slo);
     }
     let window = Duration::from_millis(args.get_usize("window-ms", 2) as u64);
     let max_batch = args.get_usize("max-batch", 32).max(1);
@@ -799,6 +852,8 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     let qps: f64 = args.get("qps", "200").parse().context("--qps takes a number")?;
     let duration = Duration::from_secs(args.get_usize("duration-s", 3) as u64);
     let out = args.get("out", "target/loadtest.json");
+    let trace_out = args.flags.get("trace-out").cloned();
+    let sink = trace_out.is_some().then(obs::trace::TraceSink::new);
     let strategy = match args.flags.get("kernel") {
         Some(s) => KernelStrategy::parse(s)
             .with_context(|| format!("--kernel takes naive|tiled|simd|auto, got {s}"))?,
@@ -856,13 +911,19 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     let names: Vec<String> = variants.iter().map(|v| v.name.clone()).collect();
     println!("[loadtest] {} variants x {replicas} replicas, {qps} qps for \
               {:?}, queue depth {queue_depth}", names.len(), duration);
-    let handle = server::start_functional(variants, window)?;
+    let handle = server::start_functional_observed(variants, window, sink)?;
     let report = loadtest::run(&handle, &names,
                                &loadtest::LoadtestCfg { qps, duration, replicas })?;
+    let sink = handle.trace().cloned();
     handle.shutdown();
+    if let (Some(path), Some(sink)) = (trace_out.as_deref(), sink) {
+        sink.write_json(std::path::Path::new(path))?;
+        println!("[loadtest] chrome trace written to {path} (open it at \
+                  https://ui.perfetto.dev)");
+    }
 
     let mut t = Table::new("loadtest (open loop — sheds are never retried)", &[
-        "variant", "sent", "ok", "shed", "shed rate", "errors",
+        "variant", "sent", "ok", "shed", "shed rate", "errors", "peak q",
         "p50 us", "p99 us", "max us",
     ]);
     for (name, o) in &report.variants {
@@ -873,6 +934,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
             o.shed.to_string(),
             f(o.shed_rate(), 3),
             o.errors.to_string(),
+            o.peak_queue.to_string(),
             o.lat.quantile_us(0.5).to_string(),
             o.lat.quantile_us(0.99).to_string(),
             o.lat.max_us().to_string(),
@@ -886,6 +948,81 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     report.write_json(std::path::Path::new(&out))?;
     println!("[loadtest] report written to {out} (gate it with `repro \
               loadtest check --file {out}`)");
+    Ok(())
+}
+
+/// `repro profile`: one observed forward pass through the functional
+/// engine, printed as a per-layer table.  f32 mode profiles the float
+/// Runner (wall-time only); int modes compile a QuantPlan, run it on
+/// the hardware-backed runner and join each measured row against the
+/// accelerator schedule's simulated cycles by canonical op name — the
+/// cycle column sums to the schedule's `total_cycles` exactly.
+fn cmd_profile(args: &Args) -> Result<()> {
+    let dir = art_dir(args);
+    let arch_name = args.get("arch", "resnet8");
+    let kernel = args.get("kernel", "adder");
+    let mode = args.get("mode", "int8");
+    let arch = Arch::parse(&arch_name)
+        .with_context(|| format!("arch must be one of {}", Arch::names_label()))?;
+    let kind = SimKernel::parse(&kernel)
+        .with_context(|| format!("functional sim supports adder|mult, got {kernel}"))?;
+    let parallelism = args.get_usize(
+        "hw-parallelism", addernet::sim::hwsim::DEFAULT_PARALLELISM as usize) as u64;
+    let (params, trained, synthetic) =
+        report::quantrep::params_or_synth(&dir, arch, &arch_name, &kernel);
+    let (h, w, c) = arch.graph().input;
+    let ev = data::eval_set(1, 7);
+    let x = Tensor::new((1, h, w, c), ev.images[..h * w * c].to_vec());
+    let profile = match mode.as_str() {
+        "f32" => {
+            let mut runner = Runner {
+                params: &params,
+                arch,
+                kind,
+                strategy: KernelStrategy::Auto,
+                mode: ExecMode::F32,
+                calib: None,
+                observe: None,
+            };
+            obs::profile::profile_f32(&mut runner, &x)
+        }
+        "int8" | "int16" => {
+            let bits = if mode == "int8" { 8 } else { 16 };
+            anyhow::ensure!(quant::QuantPlan::supports(kind, bits),
+                            "mult-kernel plans cap at 8-bit operands; use \
+                             --kernel adder for int16");
+            let calib = match args.flags.get("calib") {
+                Some(path) => quant::plan::calibration_from_json(
+                    &std::fs::read_to_string(path)
+                        .with_context(|| format!("reading calibration table \
+                                                  {path}"))?)
+                    .with_context(|| format!("parsing calibration table {path}"))?,
+                None => report::quantrep::calibrate(&params, arch, kind, 128).0,
+            };
+            let qcfg = QuantCfg { bits, mode: quant::Mode::SharedScale };
+            let plan = quant::QuantPlan::build(&params, arch, kind, qcfg, &calib)
+                .context("compiling the quantization plan")?;
+            obs::profile::profile_plan(&plan, KernelStrategy::Auto, parallelism, &x)
+                .context("profiling the plan on the simulated accelerator")?
+        }
+        m => anyhow::bail!("profile's --mode takes f32|int8|int16, got {m}"),
+    };
+    println!("[profile] {arch_name}/{kernel} {mode} (trained={trained} \
+              synthetic={synthetic})");
+    profile.table().print();
+    if let Some(cyc) = profile.hw_total_cycles {
+        println!("[profile] schedule total {} cycles @ {:.0} MHz -> {:.3} ms/img",
+                 cyc, profile.hw_fmax_mhz.unwrap_or(0.0),
+                 profile.hw_latency_ms.unwrap_or(0.0));
+    }
+    if let Some(out) = args.flags.get("out") {
+        if let Some(parent) = std::path::Path::new(out).parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        std::fs::write(out, profile.to_json().to_string())
+            .with_context(|| format!("writing {out}"))?;
+        println!("[profile] profile written to {out}");
+    }
     Ok(())
 }
 

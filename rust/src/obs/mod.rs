@@ -1,0 +1,21 @@
+//! Observability layer: metrics registry, per-layer profiling and
+//! request tracing.
+//!
+//! The paper's argument is an accounting argument — adder kernels win
+//! because you can measure where the cycles, logic and energy go (§4).
+//! This module gives the reproduction the same discipline at runtime:
+//!
+//! * [`registry`] — a process-wide registry of atomic counters, gauges
+//!   and lock-free latency histograms with a stable JSON snapshot and a
+//!   Prometheus text exposition;
+//! * [`profile`] — per-layer wall-time + activation stats from the
+//!   [`crate::sim::exec::ExecObserver`] hook, joined against the
+//!   accelerator schedule's simulated cycles (measured vs modeled);
+//! * [`trace`] — a per-thread ring-buffer span recorder exporting
+//!   Chrome trace-event JSON loadable in Perfetto.
+//!
+//! No new dependencies: the crate stays anyhow-only.
+
+pub mod profile;
+pub mod registry;
+pub mod trace;

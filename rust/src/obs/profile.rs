@@ -1,0 +1,299 @@
+//! Per-layer profiles: measured wall-time from the observed graph walk
+//! joined against the accelerator schedule's simulated cycles.
+//!
+//! One [`ProfileObserver`] serves every executor — the f32
+//! [`Runner`], the integer [`PlanRunner`] and the hardware-backed
+//! [`HwPlanRunner`] all drive the SAME instrumentation point
+//! ([`crate::sim::exec::run_graph_observed`]) — so a profile row's label
+//! is the graph's canonical op name, which is also the accelerator
+//! schedule's row name.  The join invariant (pinned by `tests/obs.rs`):
+//! the `hw_cycles` column, summed over the rows that have one, equals
+//! the schedule's `total_cycles` EXACTLY, because [`LayerRun`] now
+//! carries its post-conv pass in `post_cycles` and
+//! `Σ (cycles + post_cycles) == total_cycles` by construction.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::quant::plan::QuantPlan;
+use crate::sim::exec::{ActStats, ExecObserver};
+use crate::sim::functional::{Runner, Tensor};
+use crate::sim::hwsim::HwPlanRunner;
+use crate::sim::kernels::KernelStrategy;
+use crate::util::json::Json;
+use crate::util::table::{self, Table};
+
+/// Profile JSON schema tag.
+pub const SCHEMA: &str = "addernet-profile-v1";
+
+/// [`ExecObserver`] that collects one row per executed op.
+#[derive(Debug, Default)]
+pub struct ProfileObserver {
+    rows: Vec<(usize, String, Duration, ActStats)>,
+}
+
+impl ProfileObserver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn rows(&self) -> &[(usize, String, Duration, ActStats)] {
+        &self.rows
+    }
+}
+
+impl ExecObserver for ProfileObserver {
+    fn op_done(&mut self, index: usize, label: &str, _start: Instant,
+               wall: Duration, stats: ActStats) {
+        self.rows.push((index, label.to_string(), wall, stats));
+    }
+}
+
+/// One profiled op: measured side always present, modeled side
+/// (`hw_cycles`) only for ops the accelerator schedule has a row for
+/// (conv/dense/pool — relu, flatten and residual bookkeeping are free
+/// on the array).
+#[derive(Debug, Clone)]
+pub struct LayerProfile {
+    pub index: usize,
+    pub label: String,
+    pub wall_us: f64,
+    pub elems: usize,
+    pub mean_abs: f64,
+    pub hw_cycles: Option<u64>,
+}
+
+/// A full forward-pass profile.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub arch: String,
+    pub mode: String,
+    pub kernel: String,
+    pub layers: Vec<LayerProfile>,
+    pub wall_us_total: f64,
+    /// The schedule's `total_cycles` (None for pure-f32 profiles with
+    /// no hardware model attached).
+    pub hw_total_cycles: Option<u64>,
+    pub hw_fmax_mhz: Option<f64>,
+    pub hw_latency_ms: Option<f64>,
+}
+
+impl Profile {
+    fn from_rows(arch: String, mode: String, kernel: String,
+                 obs: ProfileObserver,
+                 hw: Option<(&BTreeMap<String, u64>, u64, f64, f64)>)
+                 -> Profile {
+        let cycles_by_name = hw.map(|(m, _, _, _)| m);
+        let layers: Vec<LayerProfile> = obs.rows.into_iter()
+            .map(|(index, label, wall, stats)| LayerProfile {
+                index,
+                label: label.clone(),
+                wall_us: wall.as_secs_f64() * 1e6,
+                elems: stats.elems,
+                mean_abs: stats.mean_abs,
+                hw_cycles: cycles_by_name.and_then(|m| m.get(&label).copied()),
+            })
+            .collect();
+        let wall_us_total = layers.iter().map(|l| l.wall_us).sum();
+        Profile {
+            arch,
+            mode,
+            kernel,
+            layers,
+            wall_us_total,
+            hw_total_cycles: hw.map(|(_, t, _, _)| t),
+            hw_fmax_mhz: hw.map(|(_, _, f, _)| f),
+            hw_latency_ms: hw.map(|(_, _, _, l)| l),
+        }
+    }
+
+    /// Sum of the `hw_cycles` column over the rows that carry one —
+    /// equals `hw_total_cycles` exactly when the profile is hw-joined.
+    pub fn hw_layer_cycle_sum(&self) -> Option<u64> {
+        if self.hw_total_cycles.is_none() {
+            return None;
+        }
+        Some(self.layers.iter().filter_map(|l| l.hw_cycles).sum())
+    }
+
+    /// Stable JSON (`addernet-profile-v1`).
+    pub fn to_json(&self) -> Json {
+        let opt_u64 =
+            |v: Option<u64>| v.map_or(Json::Null, |x| Json::Num(x as f64));
+        let mut top = BTreeMap::new();
+        top.insert("schema".into(), Json::Str(SCHEMA.into()));
+        top.insert("arch".into(), Json::Str(self.arch.clone()));
+        top.insert("mode".into(), Json::Str(self.mode.clone()));
+        top.insert("kernel".into(), Json::Str(self.kernel.clone()));
+        top.insert("wall_us_total".into(), Json::Num(self.wall_us_total));
+        top.insert("hw_total_cycles".into(), opt_u64(self.hw_total_cycles));
+        top.insert("hw_fmax_mhz".into(),
+                   self.hw_fmax_mhz.map_or(Json::Null, Json::Num));
+        top.insert("hw_latency_ms".into(),
+                   self.hw_latency_ms.map_or(Json::Null, Json::Num));
+        let layers: Vec<Json> = self.layers.iter()
+            .map(|l| {
+                let mut m = BTreeMap::new();
+                m.insert("index".into(), Json::Num(l.index as f64));
+                m.insert("layer".into(), Json::Str(l.label.clone()));
+                m.insert("wall_us".into(), Json::Num(l.wall_us));
+                m.insert("elems".into(), Json::Num(l.elems as f64));
+                m.insert("mean_abs".into(), Json::Num(l.mean_abs));
+                m.insert("hw_cycles".into(), opt_u64(l.hw_cycles));
+                Json::Obj(m)
+            })
+            .collect();
+        top.insert("layers".into(), Json::Arr(layers));
+        Json::Obj(top)
+    }
+
+    /// Per-layer table: wall-µs rows align with hw cycle rows by graph
+    /// op name; the cycle column sums to the schedule total.
+    pub fn table(&self) -> Table {
+        let title = format!("profile {} {} ({} kernel)", self.arch, self.mode,
+                            self.kernel);
+        let mut t = Table::new(
+            &title,
+            &["layer", "wall us", "wall %", "elems", "mean|act|",
+              "hw cycles"]);
+        for l in &self.layers {
+            let share = if self.wall_us_total > 0.0 {
+                l.wall_us / self.wall_us_total
+            } else {
+                0.0
+            };
+            t.row(&[l.label.clone(),
+                    table::f(l.wall_us, 1),
+                    table::pct(share),
+                    table::thousands(l.elems as u64),
+                    table::f(l.mean_abs, 4),
+                    l.hw_cycles.map_or("-".into(), table::thousands)]);
+        }
+        let hw_total =
+            self.hw_total_cycles.map_or("-".into(), table::thousands);
+        t.row(&["TOTAL".into(),
+                table::f(self.wall_us_total, 1),
+                table::pct(1.0),
+                "".into(),
+                "".into(),
+                hw_total]);
+        t
+    }
+}
+
+/// Cycle map `layer name -> cycles + post_cycles` from a schedule.
+fn schedule_cycles(report: &crate::sim::accelerator::RunReport)
+                   -> BTreeMap<String, u64> {
+    let mut m = BTreeMap::new();
+    for l in &report.layers {
+        *m.entry(l.name.clone()).or_insert(0) += l.cycles + l.post_cycles;
+    }
+    m
+}
+
+/// Profile an f32 forward pass (no hardware join — the float path has
+/// no accelerator schedule).
+pub fn profile_f32(runner: &mut Runner, x: &Tensor) -> Profile {
+    let mut obs = ProfileObserver::new();
+    runner.forward_observed(x, &mut obs);
+    Profile::from_rows(runner.arch.name().to_string(), "f32".to_string(),
+                       runner.kind.label().to_string(), obs, None)
+}
+
+/// Profile an integer plan on the simulated accelerator: measured
+/// wall-µs per op from the observed walk, modeled cycles per layer from
+/// the plan's schedule, joined by canonical op name.
+pub fn profile_plan(plan: &QuantPlan, strategy: KernelStrategy,
+                    parallelism: u64, x: &Tensor) -> Result<Profile> {
+    let hw = HwPlanRunner::new(plan, strategy, parallelism)?;
+    let mut obs = ProfileObserver::new();
+    let (_, cost) = hw.forward_observed(x, &mut obs);
+    let cycles = schedule_cycles(hw.report());
+    let mode = format!("int{}", plan.cfg.bits);
+    Ok(Profile::from_rows(
+        plan.arch.name().to_string(), mode, plan.kind.label().to_string(),
+        obs,
+        Some((&cycles, hw.report().total_cycles, cost.fmax_mhz,
+              hw.report().latency_ms()))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{Calibration, LayerCalib, Mode};
+    use crate::sim::functional::{synth_params, Arch, ExecMode, QuantCfg,
+                                 SimKernel};
+    use crate::util::XorShift64;
+
+    fn lenet_plan() -> QuantPlan {
+        let params = synth_params(Arch::Lenet5, 3);
+        let mut calib = Calibration::new();
+        calib.insert("conv1".into(),
+                     LayerCalib { feat_max_abs: 1.0, weight_max_abs: 0.5 });
+        calib.insert("conv2".into(),
+                     LayerCalib { feat_max_abs: 16.0, weight_max_abs: 0.5 });
+        QuantPlan::build(&params, Arch::Lenet5, SimKernel::Adder,
+                         QuantCfg { bits: 8, mode: Mode::SharedScale },
+                         &calib)
+            .unwrap()
+    }
+
+    fn image(seed: u64) -> Tensor {
+        let mut rng = XorShift64::new(seed);
+        Tensor::new((1, 32, 32, 1),
+                    (0..1024).map(|_| rng.next_f32_sym(1.0)).collect())
+    }
+
+    #[test]
+    fn plan_profile_cycle_column_sums_to_schedule_total() {
+        let plan = lenet_plan();
+        let p = profile_plan(&plan, KernelStrategy::Auto, 1024, &image(3))
+            .unwrap();
+        assert_eq!(p.hw_layer_cycle_sum(), p.hw_total_cycles);
+        assert!(p.hw_total_cycles.unwrap() > 0);
+        // one row per graph op, labels join the schedule's conv rows
+        assert!(p.layers.iter().any(|l| l.label == "conv1"
+                                    && l.hw_cycles.is_some()));
+        assert!(p.layers.iter().any(|l| l.label == "relu"
+                                    && l.hw_cycles.is_none()));
+        assert!(p.wall_us_total > 0.0);
+    }
+
+    #[test]
+    fn f32_profile_has_rows_but_no_hw_side() {
+        let params = synth_params(Arch::Lenet5, 3);
+        let mut runner = Runner {
+            params: &params,
+            arch: Arch::Lenet5,
+            kind: SimKernel::Adder,
+            strategy: KernelStrategy::Auto,
+            mode: ExecMode::F32,
+            calib: None,
+            observe: None,
+        };
+        let p = profile_f32(&mut runner, &image(4));
+        assert!(p.layers.len() > 4);
+        assert!(p.layers.iter().all(|l| l.hw_cycles.is_none()));
+        assert_eq!(p.hw_layer_cycle_sum(), None);
+        assert!(p.layers.iter().all(|l| l.elems > 0));
+    }
+
+    #[test]
+    fn profile_json_round_trips() {
+        let plan = lenet_plan();
+        let p = profile_plan(&plan, KernelStrategy::Auto, 1024, &image(5))
+            .unwrap();
+        let j = Json::parse(&p.to_json().to_string()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(SCHEMA));
+        assert_eq!(j.get("arch").unwrap().as_str(), Some("lenet5"));
+        assert_eq!(j.get("mode").unwrap().as_str(), Some("int8"));
+        let layers = j.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), p.layers.len());
+        let total = j.get("hw_total_cycles").unwrap().as_usize().unwrap();
+        assert_eq!(total as u64, p.hw_total_cycles.unwrap());
+        // table renders one row per layer plus the TOTAL line
+        assert_eq!(p.table().rows_len(), p.layers.len() + 1);
+    }
+}

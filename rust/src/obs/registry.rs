@@ -1,0 +1,361 @@
+//! Process-wide metrics registry: named atomic counters, gauges and
+//! lock-free latency histograms, with a stable JSON snapshot and a
+//! Prometheus text exposition rendered from the SAME values.
+//!
+//! Metric names may carry Prometheus-style labels inline
+//! (`addernet_requests_total{variant="lenet5_adder"}`); the renderer
+//! splits the base name off to emit `# HELP` / `# TYPE` once per family
+//! even when many label sets share it.  The JSON snapshot keeps the
+//! full labeled name as the key, so the two expositions are two views
+//! of one map — pinned by `tests/obs.rs`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::util::json::Json;
+
+/// Snapshot schema tag (bump on breaking JSON layout changes).
+pub const SCHEMA: &str = "addernet-metrics-v1";
+
+/// Monotonic counter.  `set` exists for bridge exports that publish an
+/// externally-aggregated total (e.g. merged `ServerMetrics` shards).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous value: an f64 stored as bits in an AtomicU64.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Lock-free sibling of [`LatencyHistogram`]: the SAME 32-bucket
+/// log-spaced layout (bucket i counts latencies in [2^i, 2^(i+1)) µs),
+/// recorded with relaxed atomics so replicas never serialize on a
+/// mutex.  `snapshot()` bridges back into the locked type for
+/// quantiles; equivalence under concurrent hammering is pinned by
+/// `tests/obs.rs`.
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        // identical bucket math to LatencyHistogram::record
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Bridge into the locked histogram (for quantiles/mean).
+    pub fn snapshot(&self) -> LatencyHistogram {
+        let buckets: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        LatencyHistogram::from_parts(
+            buckets,
+            self.count.load(Ordering::Relaxed),
+            self.sum_us.load(Ordering::Relaxed),
+            self.max_us.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Overwrite from a locked histogram (bridge exports: publish a
+    /// merged shard aggregate into the registry).
+    pub fn set_from(&self, h: &LatencyHistogram) {
+        for (b, &v) in self.buckets.iter().zip(h.bucket_counts()) {
+            b.store(v, Ordering::Relaxed);
+        }
+        self.count.store(h.count(), Ordering::Relaxed);
+        self.sum_us.store(h.sum_us(), Ordering::Relaxed);
+        self.max_us.store(h.max_us(), Ordering::Relaxed);
+    }
+
+    /// Fold another atomic histogram into this one.
+    pub fn merge(&self, other: &AtomicHistogram) {
+        for (b, o) in self.buckets.iter().zip(&other.buckets) {
+            b.fetch_add(o.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed),
+                             Ordering::Relaxed);
+        self.sum_us.fetch_add(other.sum_us.load(Ordering::Relaxed),
+                              Ordering::Relaxed);
+        self.max_us.fetch_max(other.max_us.load(Ordering::Relaxed),
+                              Ordering::Relaxed);
+    }
+}
+
+type Family<T> = Mutex<BTreeMap<String, (Arc<T>, &'static str)>>;
+
+/// Named metric registry.  `counter`/`gauge`/`histogram` are
+/// get-or-create: the first caller's help string wins, every caller
+/// shares the same atomic cell.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Family<Counter>,
+    gauges: Family<Gauge>,
+    histograms: Family<AtomicHistogram>,
+}
+
+fn get_or_create<T: Default>(family: &Family<T>, name: &str,
+                             help: &'static str) -> Arc<T> {
+    let mut m = family.lock().unwrap();
+    let (cell, _) = m.entry(name.to_string())
+        .or_insert_with(|| (Arc::new(T::default()), help));
+    Arc::clone(cell)
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str, help: &'static str) -> Arc<Counter> {
+        get_or_create(&self.counters, name, help)
+    }
+
+    pub fn gauge(&self, name: &str, help: &'static str) -> Arc<Gauge> {
+        get_or_create(&self.gauges, name, help)
+    }
+
+    pub fn histogram(&self, name: &str, help: &'static str)
+                     -> Arc<AtomicHistogram> {
+        get_or_create(&self.histograms, name, help)
+    }
+
+    /// Stable JSON snapshot: `{schema, counters{}, gauges{},
+    /// histograms{name: {count, sum_us, mean_us, max_us, p50_us,
+    /// p99_us}}}`.  Keys are the full labeled metric names; BTreeMap
+    /// ordering makes the rendering deterministic.
+    pub fn snapshot(&self) -> Json {
+        let mut top = BTreeMap::new();
+        top.insert("schema".into(), Json::Str(SCHEMA.into()));
+        let counters: BTreeMap<String, Json> = self.counters.lock().unwrap()
+            .iter()
+            .map(|(k, (c, _))| (k.clone(), Json::Num(c.get() as f64)))
+            .collect();
+        top.insert("counters".into(), Json::Obj(counters));
+        let gauges: BTreeMap<String, Json> = self.gauges.lock().unwrap()
+            .iter()
+            .map(|(k, (g, _))| (k.clone(), Json::Num(g.get())))
+            .collect();
+        top.insert("gauges".into(), Json::Obj(gauges));
+        let mut hists = BTreeMap::new();
+        for (k, (h, _)) in self.histograms.lock().unwrap().iter() {
+            let s = h.snapshot();
+            let mut m = BTreeMap::new();
+            m.insert("count".into(), Json::Num(s.count() as f64));
+            m.insert("sum_us".into(), Json::Num(s.sum_us() as f64));
+            m.insert("mean_us".into(), Json::Num(s.mean_us()));
+            m.insert("max_us".into(), Json::Num(s.max_us() as f64));
+            m.insert("p50_us".into(), Json::Num(s.quantile_us(0.5) as f64));
+            m.insert("p99_us".into(), Json::Num(s.quantile_us(0.99) as f64));
+            hists.insert(k.clone(), Json::Obj(m));
+        }
+        top.insert("histograms".into(), Json::Obj(hists));
+        Json::Obj(top)
+    }
+
+    /// Prometheus text exposition (text/plain; version 0.0.4).
+    /// `# HELP`/`# TYPE` are emitted once per metric family even when
+    /// several label sets share the base name; histograms render as
+    /// summaries (p50/p99 quantiles + `_sum`/`_count`).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last = String::new();
+        for (name, (c, help)) in self.counters.lock().unwrap().iter() {
+            let (base, labels) = split_name(name);
+            head(&mut out, &mut last, base, help, "counter");
+            out.push_str(&format!("{} {}\n", sample(base, labels, None),
+                                  c.get()));
+        }
+        last.clear();
+        for (name, (g, help)) in self.gauges.lock().unwrap().iter() {
+            let (base, labels) = split_name(name);
+            head(&mut out, &mut last, base, help, "gauge");
+            out.push_str(&format!("{} {}\n", sample(base, labels, None),
+                                  g.get()));
+        }
+        last.clear();
+        for (name, (h, help)) in self.histograms.lock().unwrap().iter() {
+            let (base, labels) = split_name(name);
+            head(&mut out, &mut last, base, help, "summary");
+            let s = h.snapshot();
+            for (q, v) in [("0.5", s.quantile_us(0.5)),
+                           ("0.99", s.quantile_us(0.99))] {
+                let tag = format!("quantile=\"{q}\"");
+                out.push_str(&format!("{} {v}\n",
+                                      sample(base, labels, Some(&tag))));
+            }
+            let base_sum = format!("{base}_sum");
+            out.push_str(&format!("{} {}\n", sample(&base_sum, labels, None),
+                                  s.sum_us()));
+            let base_count = format!("{base}_count");
+            out.push_str(&format!("{} {}\n", sample(&base_count, labels, None),
+                                  s.count()));
+        }
+        out
+    }
+}
+
+/// Split `name{label="x"}` into the base family name and the raw label
+/// body (without braces).
+fn split_name(name: &str) -> (&str, Option<&str>) {
+    match name.find('{') {
+        Some(i) => (&name[..i], Some(name[i + 1..].trim_end_matches('}'))),
+        None => (name, None),
+    }
+}
+
+/// Emit HELP/TYPE once per family (callers iterate name-sorted maps, so
+/// label sets of one family are adjacent).
+fn head(out: &mut String, last: &mut String, base: &str, help: &str,
+        kind: &str) {
+    if *last != base {
+        out.push_str(&format!("# HELP {base} {help}\n"));
+        out.push_str(&format!("# TYPE {base} {kind}\n"));
+        *last = base.to_string();
+    }
+}
+
+/// Rebuild a sample name from base + labels (+ an extra label).
+fn sample(base: &str, labels: Option<&str>, extra: Option<&str>) -> String {
+    match (labels, extra) {
+        (None, None) => base.to_string(),
+        (Some(l), None) => format!("{base}{{{l}}}"),
+        (None, Some(e)) => format!("{base}{{{e}}}"),
+        (Some(l), Some(e)) => format!("{base}{{{l},{e}}}"),
+    }
+}
+
+/// The process-wide registry (CLI subcommands and tests share it; the
+/// serving handle can also export into a private one).
+pub fn global() -> &'static Registry {
+    static G: OnceLock<Registry> = OnceLock::new();
+    G.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_share_cells() {
+        let r = Registry::new();
+        r.counter("c_total", "a counter").add(2);
+        r.counter("c_total", "a counter").inc();
+        assert_eq!(r.counter("c_total", "a counter").get(), 3);
+        r.gauge("g", "a gauge").set(0.5);
+        assert_eq!(r.gauge("g", "a gauge").get(), 0.5);
+    }
+
+    #[test]
+    fn atomic_histogram_matches_locked_single_thread() {
+        let a = AtomicHistogram::new();
+        let mut l = LatencyHistogram::new();
+        for us in [1u64, 7, 63, 900, 70_000, 5_000_000] {
+            a.record_us(us);
+            l.record(Duration::from_micros(us));
+        }
+        let s = a.snapshot();
+        assert_eq!(s.count(), l.count());
+        assert_eq!(s.sum_us(), l.sum_us());
+        assert_eq!(s.max_us(), l.max_us());
+        assert_eq!(s.bucket_counts(), l.bucket_counts());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(s.quantile_us(q), l.quantile_us(q));
+        }
+    }
+
+    #[test]
+    fn set_from_round_trips() {
+        let mut l = LatencyHistogram::new();
+        for us in [10u64, 500, 90_000] {
+            l.record(Duration::from_micros(us));
+        }
+        let a = AtomicHistogram::new();
+        a.set_from(&l);
+        let s = a.snapshot();
+        assert_eq!(s.bucket_counts(), l.bucket_counts());
+        assert_eq!(s.sum_us(), l.sum_us());
+    }
+
+    #[test]
+    fn prometheus_dedups_family_headers() {
+        let r = Registry::new();
+        r.counter("req_total{variant=\"a\"}", "requests").add(1);
+        r.counter("req_total{variant=\"b\"}", "requests").add(2);
+        let text = r.render_prometheus();
+        assert_eq!(text.matches("# HELP req_total").count(), 1);
+        assert_eq!(text.matches("# TYPE req_total").count(), 1);
+        assert!(text.contains("req_total{variant=\"a\"} 1"));
+        assert!(text.contains("req_total{variant=\"b\"} 2"));
+    }
+
+    #[test]
+    fn snapshot_has_schema_and_sections() {
+        let r = Registry::new();
+        r.histogram("lat_us", "latency").record_us(100);
+        let j = r.snapshot();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(SCHEMA));
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        let h = reparsed.at(&["histograms", "lat_us", "count"]).unwrap();
+        assert_eq!(h.as_usize(), Some(1));
+    }
+}

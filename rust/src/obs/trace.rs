@@ -1,0 +1,253 @@
+//! Request tracing: a per-thread ring-buffer span recorder exporting
+//! Chrome trace-event JSON (loadable in Perfetto / `chrome://tracing`).
+//!
+//! Every participating thread takes a [`TraceHandle`] from the shared
+//! [`TraceSink`]; recording a span touches only that thread's own ring
+//! (one uncontended mutex acquire — the export path is the only other
+//! reader), so tracing never serializes replicas against each other.
+//! Rings overwrite their oldest spans when full; the export reports how
+//! many were dropped.
+//!
+//! Span vocabulary on the serving path: `request` (submit → response
+//! sent), `collect` (batcher wait), `batch` (exec + respond for one
+//! collected batch), `exec`, `respond`, and per-layer spans from
+//! [`TraceObserver`] when layer tracing is on.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::sim::exec::{ActStats, ExecObserver};
+
+/// Default per-thread ring capacity (spans).
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// One completed span, timestamped in µs since the sink's epoch.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: String,
+    pub cat: &'static str,
+    pub ts_us: u64,
+    pub dur_us: u64,
+}
+
+struct Ring {
+    events: Vec<Span>,
+    written: u64,
+}
+
+/// One thread's span ring, registered with the sink at handle creation.
+pub struct ThreadBuf {
+    tid: u64,
+    name: String,
+    capacity: usize,
+    ring: Mutex<Ring>,
+}
+
+impl ThreadBuf {
+    fn record(&self, span: Span) {
+        let mut r = self.ring.lock().unwrap();
+        let idx = (r.written % self.capacity as u64) as usize;
+        if r.events.len() < self.capacity {
+            r.events.push(span);
+        } else {
+            r.events[idx] = span;
+        }
+        r.written += 1;
+    }
+}
+
+/// Shared trace collector: owns the epoch and the thread registry.
+pub struct TraceSink {
+    epoch: Instant,
+    capacity: usize,
+    bufs: Mutex<Vec<Arc<ThreadBuf>>>,
+    next_tid: AtomicU64,
+}
+
+impl TraceSink {
+    pub fn new() -> Arc<Self> {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Arc<Self> {
+        Arc::new(Self {
+            epoch: Instant::now(),
+            capacity: capacity.max(1),
+            bufs: Mutex::new(Vec::new()),
+            next_tid: AtomicU64::new(1),
+        })
+    }
+
+    /// Register a new per-thread buffer and return a recording handle.
+    pub fn handle(self: &Arc<Self>, thread_name: &str) -> TraceHandle {
+        let tid = self.next_tid.fetch_add(1, Ordering::Relaxed);
+        let buf = Arc::new(ThreadBuf {
+            tid,
+            name: thread_name.to_string(),
+            capacity: self.capacity,
+            ring: Mutex::new(Ring { events: Vec::new(), written: 0 }),
+        });
+        self.bufs.lock().unwrap().push(Arc::clone(&buf));
+        TraceHandle { sink: Arc::clone(self), buf }
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Spans lost to ring overwrite across all threads.
+    pub fn dropped(&self) -> u64 {
+        self.bufs.lock().unwrap().iter()
+            .map(|b| {
+                let r = b.ring.lock().unwrap();
+                r.written - r.events.len() as u64
+            })
+            .sum()
+    }
+
+    /// All retained spans as `(tid, thread_name, span)` rows.
+    pub fn spans(&self) -> Vec<(u64, String, Span)> {
+        let mut out = Vec::new();
+        for b in self.bufs.lock().unwrap().iter() {
+            let r = b.ring.lock().unwrap();
+            for s in &r.events {
+                out.push((b.tid, b.name.clone(), s.clone()));
+            }
+        }
+        out
+    }
+
+    /// Chrome trace-event JSON (object form): thread-name metadata
+    /// events plus `"ph":"X"` complete events, ts/dur in µs.
+    pub fn export_json(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        let mut first = true;
+        let bufs = self.bufs.lock().unwrap();
+        for b in bufs.iter() {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"name\":\
+                 \"thread_name\",\"args\":{{\"name\":{:?}}}}}",
+                b.tid, b.name
+            ));
+            let r = b.ring.lock().unwrap();
+            for s in &r.events {
+                out.push_str(&format!(
+                    ",{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{},\
+                     \"dur\":{},\"name\":{:?},\"cat\":{:?}}}",
+                    b.tid, s.ts_us, s.dur_us, s.name, s.cat
+                ));
+            }
+        }
+        drop(bufs);
+        out.push_str(&format!(
+            "],\"displayTimeUnit\":\"ms\",\"droppedSpans\":{}}}",
+            self.dropped()
+        ));
+        out
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.export_json())
+            .with_context(|| format!("writing trace to {}", path.display()))
+    }
+}
+
+/// A thread's recording handle (cheap to clone; clones share the ring).
+#[derive(Clone)]
+pub struct TraceHandle {
+    sink: Arc<TraceSink>,
+    buf: Arc<ThreadBuf>,
+}
+
+impl TraceHandle {
+    /// Record a completed span from its start instant and duration.
+    /// Starts before the sink's epoch clamp to ts 0.
+    pub fn record(&self, name: &str, cat: &'static str, start: Instant,
+                  dur: Duration) {
+        let ts_us =
+            start.saturating_duration_since(self.sink.epoch).as_micros() as u64;
+        self.buf.record(Span {
+            name: name.to_string(),
+            cat,
+            ts_us,
+            dur_us: dur.as_micros() as u64,
+        });
+    }
+}
+
+/// [`ExecObserver`] that records one `layer`-category span per op into
+/// a trace handle — the per-layer rows inside each `exec` span.
+pub struct TraceObserver<'a> {
+    pub trace: &'a TraceHandle,
+}
+
+impl ExecObserver for TraceObserver<'_> {
+    fn op_done(&mut self, _index: usize, label: &str, start: Instant,
+               wall: Duration, _stats: ActStats) {
+        self.trace.record(label, "layer", start, wall);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn export_parses_and_keeps_thread_names() {
+        let sink = TraceSink::new();
+        let h = sink.handle("worker-0");
+        let t0 = Instant::now();
+        h.record("exec", "serve", t0, Duration::from_micros(250));
+        let j = Json::parse(&sink.export_json()).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2); // metadata + one span
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("M"));
+        let x = &events[1];
+        assert_eq!(x.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(x.get("name").unwrap().as_str(), Some("exec"));
+        assert_eq!(x.get("dur").unwrap().as_usize(), Some(250));
+        assert_eq!(j.get("droppedSpans").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let sink = TraceSink::with_capacity(4);
+        let h = sink.handle("w");
+        let t0 = Instant::now();
+        for i in 0..10 {
+            h.record(&format!("s{i}"), "t", t0, Duration::from_micros(1));
+        }
+        assert_eq!(sink.dropped(), 6);
+        let names: Vec<String> =
+            sink.spans().into_iter().map(|(_, _, s)| s.name).collect();
+        assert_eq!(names.len(), 4);
+        assert!(names.contains(&"s9".to_string()));
+        assert!(!names.contains(&"s0".to_string()));
+    }
+
+    #[test]
+    fn pre_epoch_starts_clamp_to_zero() {
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        let sink = TraceSink::new();
+        let h = sink.handle("w");
+        h.record("early", "t", t0, Duration::from_micros(5));
+        let (_, _, s) = sink.spans().pop().unwrap();
+        assert_eq!(s.ts_us, 0);
+    }
+}

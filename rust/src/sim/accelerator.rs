@@ -132,6 +132,10 @@ pub struct LayerRun {
     pub dma_cycles: u64,
     /// max(compute, dma) under double buffering + fixed pipeline fill.
     pub cycles: u64,
+    /// Post-conv BN/activation/residual pass (0 for non-conv rows).
+    /// `cycles + post_cycles` summed over layers equals the report's
+    /// `total_cycles` exactly — the invariant the profiler joins on.
+    pub post_cycles: u64,
     pub dram_bytes: u64,
 }
 
@@ -263,6 +267,7 @@ pub fn run(cfg: &AccelConfig, net: &NetworkDesc) -> RunReport {
         // and buffer turnaround leave ~15% of the shorter phase exposed.
         let exposed = (0.15 * compute.min(dma) as f64) as u64;
         let cycles = compute.max(dma) + exposed + PIPELINE_FILL_CYCLES;
+        let mut post_cycles = 0u64;
         if let Layer::Conv(c) = layer {
             conv_ops += ops;
             conv_cycles += cycles;
@@ -270,13 +275,20 @@ pub fn run(cfg: &AccelConfig, net: &NetworkDesc) -> RunReport {
             // after the conv at Pout elements/cycle — part of the
             // whole-network time but not of the conv-GOPs measure (this
             // models the paper's 424->307 / 495->358.6 gap).
-            let post = (c.h_out() * c.w_out() * c.cout) as u64 / cfg.pout.max(1);
-            total_cycles += post;
+            post_cycles = (c.h_out() * c.w_out() * c.cout) as u64 / cfg.pout.max(1);
         }
         total_ops += ops;
-        total_cycles += cycles;
+        total_cycles += cycles + post_cycles;
         dram_total += bytes;
-        layers.push(LayerRun { name, ops, compute_cycles: compute, dma_cycles: dma, cycles, dram_bytes: bytes });
+        layers.push(LayerRun {
+            name,
+            ops,
+            compute_cycles: compute,
+            dma_cycles: dma,
+            cycles,
+            post_cycles,
+            dram_bytes: bytes,
+        });
     }
 
     let mut report = RunReport {
@@ -462,6 +474,9 @@ mod tests {
         let sum: u64 = r.layers.iter().map(|l| l.cycles).sum();
         assert!(r.total_cycles >= sum);
         assert!(r.total_cycles < sum + sum / 2);
+        // with the post pass accounted per layer the sum is exact
+        let exact: u64 = r.layers.iter().map(|l| l.cycles + l.post_cycles).sum();
+        assert_eq!(r.total_cycles, exact);
         assert!(r.latency_ms() > 0.0);
     }
 }

@@ -10,7 +10,29 @@
 //! registering a new graph serves it across every domain with zero
 //! executor edits.
 
+use std::time::{Duration, Instant};
+
 use crate::nn::graph::{ConvBnSpec, DenseSpec, NetGraph, Op};
+
+/// Cheap summary statistics of an op's output activation, captured by
+/// the observed walk.  Domains that cannot (or need not) inspect their
+/// activation return the default.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ActStats {
+    pub elems: usize,
+    pub mean_abs: f64,
+}
+
+/// Observer hook for the instrumented graph walk: called once per op
+/// with the op's linear index, its canonical label (mirroring
+/// [`crate::nn::graph::NetGraph::to_desc`] naming, so profile rows join
+/// against accelerator schedule rows), the wall-clock interval and the
+/// output stats.  ONE instrumentation point serves every domain —
+/// f32, integer-plan and hardware-sim runners alike.
+pub trait ExecObserver {
+    fn op_done(&mut self, index: usize, label: &str, start: Instant,
+               wall: Duration, stats: ActStats);
+}
 
 /// Numeric-domain hooks the graph walk drives.  `Act` is the
 /// activation type flowing between ops (dense [`f32` tensors] for the
@@ -33,6 +55,35 @@ pub trait Domain {
     fn residual_add(&mut self, shortcut: Option<&ConvBnSpec>, h: Self::Act,
                     saved: Self::Act) -> Self::Act;
     fn dense(&mut self, spec: &DenseSpec, x: Self::Act) -> Self::Act;
+
+    /// Cheap output stats for the observed walk.  Default: none — the
+    /// observer still gets timings and labels.
+    fn stats(_act: &Self::Act) -> ActStats {
+        ActStats::default()
+    }
+}
+
+/// Canonical label for an op, mirroring `NetGraph::to_desc` row naming
+/// (`pools` is the shared pool counter — both pool kinds draw from it,
+/// exactly as the descriptor does).  Projection shortcuts label their
+/// residual-close op, so conv rows in the schedule always find a match.
+fn op_label(op: &Op, pools: &mut usize) -> String {
+    match op {
+        Op::ConvBn(spec) => spec.name.clone(),
+        Op::Relu => "relu".into(),
+        Op::AvgPool2 | Op::MaxPool { .. } => {
+            *pools += 1;
+            format!("pool{pools}")
+        }
+        Op::GlobalAvgPool => "gap".into(),
+        Op::Flatten => "flatten".into(),
+        Op::ResidualOpen => "residual_open".into(),
+        Op::ResidualClose { shortcut } => match shortcut {
+            Some(c) => c.name.clone(),
+            None => "residual_add".into(),
+        },
+        Op::Dense(spec) => spec.name.clone(),
+    }
 }
 
 /// Execute a compiled network program in `dom`, from input activation
@@ -64,6 +115,49 @@ pub fn run_graph<D: Domain>(dom: &mut D, graph: &NetGraph, x: D::Act)
             }
             Op::Dense(spec) => dom.dense(spec, y),
         };
+    }
+    debug_assert!(saved.is_empty(), "unclosed residual bracket");
+    y
+}
+
+/// [`run_graph`] with per-op instrumentation: identical walk, but every
+/// op is wall-clock timed and reported to `obs` together with its
+/// canonical label and output stats.  The unobserved walk stays
+/// zero-cost — this is a separate entry point, not a branch in the hot
+/// loop.
+pub fn run_graph_observed<D: Domain>(dom: &mut D, graph: &NetGraph,
+                                     x: D::Act, obs: &mut dyn ExecObserver)
+                                     -> D::Act {
+    let mut y = x;
+    let mut saved: Vec<D::Act> = Vec::new();
+    let mut pools = 0usize;
+    for (i, op) in graph.ops.iter().enumerate() {
+        let label = op_label(op, &mut pools);
+        let start = Instant::now();
+        y = match op {
+            Op::ConvBn(spec) => dom.conv_bn(spec, y),
+            Op::Relu => {
+                dom.relu(&mut y);
+                y
+            }
+            Op::AvgPool2 => dom.avg_pool2(&y),
+            Op::MaxPool { window, stride } => dom.max_pool(*window, *stride, &y),
+            Op::GlobalAvgPool => dom.global_avg_pool(&y),
+            Op::Flatten => dom.flatten(y),
+            Op::ResidualOpen => {
+                saved.push(y.clone());
+                y
+            }
+            Op::ResidualClose { shortcut } => {
+                let s = saved.pop()
+                    .expect("ResidualClose without ResidualOpen");
+                dom.residual_add(shortcut.as_ref(), y, s)
+            }
+            Op::Dense(spec) => dom.dense(spec, y),
+        };
+        let wall = start.elapsed();
+        let stats = D::stats(&y);
+        obs.op_done(i, &label, start, wall, stats);
     }
     debug_assert!(saved.is_empty(), "unclosed residual bracket");
     y

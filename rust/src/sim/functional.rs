@@ -37,7 +37,7 @@ use crate::quant::{self, Calibration, LayerCalib, Mode, QuantPlan};
 use crate::util::threads::parallel_chunks;
 use crate::util::XorShift64;
 
-use super::exec::{self, Domain};
+use super::exec::{self, ActStats, Domain, ExecObserver};
 use super::kernels::{self, gather_row, ConvRow, DenseIntRow, DenseRow, Resolved};
 use super::reference;
 
@@ -630,6 +630,20 @@ impl<'a> Runner<'a> {
         exec::run_graph(self, graph, x.clone())
     }
 
+    /// [`Runner::forward`] with per-op instrumentation: the same walk
+    /// through [`exec::run_graph_observed`], reporting every op's
+    /// wall-time and output stats to `obs`.
+    pub fn forward_observed(&mut self, x: &Tensor, obs: &mut dyn ExecObserver)
+                            -> Tensor {
+        if let ExecMode::Quant(cfg) = self.mode {
+            assert!(QuantPlan::supports(self.kind, cfg.bits),
+                    "per-call mult-kernel quantization caps at 8-bit operands \
+                     (int{} tap products overflow the i32 conv accumulator); \
+                     the adder kernel serves all widths", cfg.bits);
+        }
+        exec::run_graph_observed(self, self.arch.graph(), x.clone(), obs)
+    }
+
     /// Batched inference over independently-queued images: stack them
     /// into ONE forward pass — amortizing dispatch, patch gathers and
     /// weight streaming across the whole queue (the serving hot path) —
@@ -649,6 +663,30 @@ impl<'a> Runner<'a> {
         }
         let x = Tensor::new((images.len(), h, w, c), data);
         let logits = self.forward(&x);
+        let classes = logits.shape.3;
+        (0..images.len())
+            .map(|i| logits.data[i * classes..(i + 1) * classes].to_vec())
+            .collect()
+    }
+
+    /// [`Runner::forward_many`] with per-op instrumentation: the stacked
+    /// batch runs ONE observed walk (each per-layer span covers the
+    /// whole batch).
+    pub fn forward_many_observed(&mut self, images: &[&[f32]],
+                                 hwc: (usize, usize, usize),
+                                 obs: &mut dyn ExecObserver) -> Vec<Vec<f32>> {
+        if images.is_empty() {
+            return Vec::new();
+        }
+        let (h, w, c) = hwc;
+        let px = h * w * c;
+        let mut data = Vec::with_capacity(images.len() * px);
+        for img in images {
+            assert_eq!(img.len(), px, "request image size mismatch");
+            data.extend_from_slice(img);
+        }
+        let x = Tensor::new((images.len(), h, w, c), data);
+        let logits = self.forward_observed(&x, obs);
         let classes = logits.shape.3;
         (0..images.len())
             .map(|i| logits.data[i * classes..(i + 1) * classes].to_vec())
@@ -715,6 +753,15 @@ impl Domain for Runner<'_> {
             e.weight_max_abs = quant::max_abs(wd);
         }
         self.dense_layer(&spec.name, &x)
+    }
+
+    fn stats(act: &Tensor) -> ActStats {
+        let n = act.data.len();
+        if n == 0 {
+            return ActStats::default();
+        }
+        let sum: f64 = act.data.iter().map(|v| v.abs() as f64).sum();
+        ActStats { elems: n, mean_abs: sum / n as f64 }
     }
 }
 

@@ -28,6 +28,7 @@ use crate::hw::kernelcircuit::KernelKind;
 use crate::nn::Layer;
 use crate::quant::plan::QuantPlan;
 use crate::sim::accelerator::{self, AccelConfig, RunReport};
+use crate::sim::exec::ExecObserver;
 use crate::sim::functional::Tensor;
 use crate::sim::intpath::PlanRunner;
 use crate::sim::kernels::{KernelStrategy, SimKernel};
@@ -203,6 +204,24 @@ impl<'a> HwPlanRunner<'a> {
                         hwc: (usize, usize, usize))
                         -> (Vec<Vec<f32>>, HwCost) {
         (self.inner.forward_many(images, hwc), self.cost(images.len()))
+    }
+
+    /// [`Self::forward`] with a per-op [`ExecObserver`]: wall-time per
+    /// layer from the observed functional walk, hardware cycles from the
+    /// precomputed schedule — the two sides the profiler joins.
+    pub fn forward_observed(&self, x: &Tensor,
+                            obs: &mut dyn ExecObserver) -> (Tensor, HwCost) {
+        let n = x.shape.0;
+        (self.inner.forward_observed(x, obs), self.cost(n))
+    }
+
+    /// Batched observed entry point (the traced serving path).
+    pub fn forward_many_observed(&self, images: &[&[f32]],
+                                 hwc: (usize, usize, usize),
+                                 obs: &mut dyn ExecObserver)
+                                 -> (Vec<Vec<f32>>, HwCost) {
+        (self.inner.forward_many_observed(images, hwc, obs),
+         self.cost(images.len()))
     }
 }
 

@@ -35,7 +35,7 @@
 use crate::nn::graph::{ConvBnSpec, DenseSpec};
 use crate::quant;
 use crate::quant::plan::{div_round_even, requant_shift, QuantPlan};
-use crate::sim::exec::{self, Domain};
+use crate::sim::exec::{self, ActStats, Domain, ExecObserver};
 use crate::sim::functional::{self, KernelStrategy, QConvW, QDenseW, Tensor};
 
 /// Headroom of the inter-stage activation registers over the serving
@@ -271,6 +271,20 @@ impl PlanRunner<'_> {
         }
     }
 
+    /// [`Self::forward`] with a per-op [`ExecObserver`] (profiling /
+    /// layer tracing); numerically identical to the unobserved walk.
+    pub fn forward_observed(&self, x: &Tensor,
+                            obs: &mut dyn ExecObserver) -> Tensor {
+        let q = quantize_input(x, self.plan.input_exp, self.plan.cfg.bits);
+        let graph = self.plan.arch.graph();
+        let mut dom = *self;
+        match exec::run_graph_observed(&mut dom, graph, IntAct::Int(q), obs) {
+            IntAct::F32(y) => y,
+            // a headless graph ends int-domain: dequantize the features
+            IntAct::Int(t) => dequantize(&t),
+        }
+    }
+
     /// Batched inference over independently-queued images (the serving
     /// hot path — same contract as `Runner::forward_many`).
     pub fn forward_many(&self, images: &[&[f32]],
@@ -278,6 +292,25 @@ impl PlanRunner<'_> {
         if images.is_empty() {
             return Vec::new();
         }
+        let x = Self::stack(images, hwc);
+        let logits = self.forward(&x);
+        Self::split(logits, images.len())
+    }
+
+    /// Batched inference with a per-op observer — the traced serving
+    /// path.
+    pub fn forward_many_observed(&self, images: &[&[f32]],
+                                 hwc: (usize, usize, usize),
+                                 obs: &mut dyn ExecObserver) -> Vec<Vec<f32>> {
+        if images.is_empty() {
+            return Vec::new();
+        }
+        let x = Self::stack(images, hwc);
+        let logits = self.forward_observed(&x, obs);
+        Self::split(logits, images.len())
+    }
+
+    fn stack(images: &[&[f32]], hwc: (usize, usize, usize)) -> Tensor {
         let (h, w, c) = hwc;
         let px = h * w * c;
         let mut data = Vec::with_capacity(images.len() * px);
@@ -285,10 +318,12 @@ impl PlanRunner<'_> {
             assert_eq!(img.len(), px, "request image size mismatch");
             data.extend_from_slice(img);
         }
-        let x = Tensor::new((images.len(), h, w, c), data);
-        let logits = self.forward(&x);
+        Tensor::new((images.len(), h, w, c), data)
+    }
+
+    fn split(logits: Tensor, n: usize) -> Vec<Vec<f32>> {
         let classes = logits.shape.3;
-        (0..images.len())
+        (0..n)
             .map(|i| logits.data[i * classes..(i + 1) * classes].to_vec())
             .collect()
     }
@@ -302,6 +337,33 @@ impl PlanRunner<'_> {
 /// walk.
 impl Domain for PlanRunner<'_> {
     type Act = IntAct;
+
+    fn stats(act: &IntAct) -> ActStats {
+        match act {
+            IntAct::Int(t) => {
+                let n = t.data.len();
+                if n == 0 {
+                    return ActStats::default();
+                }
+                // mean |value| in real units: mean |q| * 2^exp
+                let sum: f64 =
+                    t.data.iter().map(|&v| (v as f64).abs()).sum();
+                ActStats {
+                    elems: n,
+                    mean_abs: sum / n as f64 * (t.exp as f64).exp2(),
+                }
+            }
+            IntAct::F32(t) => {
+                let n = t.data.len();
+                if n == 0 {
+                    return ActStats::default();
+                }
+                let sum: f64 =
+                    t.data.iter().map(|&v| (v as f64).abs()).sum();
+                ActStats { elems: n, mean_abs: sum / n as f64 }
+            }
+        }
+    }
 
     fn conv_bn(&mut self, spec: &ConvBnSpec, x: IntAct) -> IntAct {
         IntAct::Int(self.conv_block(&spec.name, x.int_ref()))

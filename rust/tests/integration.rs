@@ -300,7 +300,7 @@ fn functional_server_round_trip() {
     }
     assert!(handle.submit("nope", vec![0.0; 1024]).is_err());
     {
-        let metrics = handle.metrics.lock().unwrap();
+        let metrics = handle.metrics_snapshot();
         let m = &metrics["lenet5_adder"];
         assert_eq!(m.images, 8);
         assert!(m.batches >= 1 && m.batches <= 8, "batches {}", m.batches);
@@ -557,6 +557,6 @@ fn functional_server_rejects_malformed_requests_at_submit() {
     }
     let good = handle.submit("lenet5_adder", vec![0.0; 1024]).unwrap();
     assert_eq!(good.recv().unwrap().logits.len(), 10);
-    assert_eq!(handle.metrics.lock().unwrap()["lenet5_adder"].rejected, 1);
+    assert_eq!(handle.metrics_snapshot()["lenet5_adder"].rejected, 1);
     handle.shutdown();
 }

@@ -1,0 +1,273 @@
+//! Observability integration tests: registry snapshot/Prometheus
+//! agreement, atomic-vs-locked histogram equivalence under concurrent
+//! hammering, serve-driven Chrome traces whose spans nest and cover the
+//! measured end-to-end latency, and per-layer profiles whose cycle
+//! column sums to the accelerator schedule's total exactly.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use addernet::coordinator::server;
+use addernet::coordinator::LatencyHistogram;
+use addernet::data;
+use addernet::obs::profile;
+use addernet::obs::registry::{AtomicHistogram, Registry};
+use addernet::obs::trace::{Span, TraceSink};
+use addernet::quant::plan::QuantPlan;
+use addernet::quant::Mode;
+use addernet::report::quantrep;
+use addernet::sim::functional::{synth_params, Arch, ExecMode, KernelStrategy,
+                                QuantCfg, SimKernel, Tensor};
+use addernet::sim::hwsim;
+use addernet::util::json::Json;
+
+const QCFG: QuantCfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+
+/// Build an int8 plan for `arch`/adder from synthetic weights.
+fn int8_plan(arch: Arch, seed: u64) -> QuantPlan {
+    let params = synth_params(arch, seed);
+    let (calib, _) = quantrep::calibrate(&params, arch, SimKernel::Adder, 8);
+    QuantPlan::build(&params, arch, SimKernel::Adder, QCFG, &calib).unwrap()
+}
+
+/// Variant config mounting `plan` under `name` with `replicas` workers.
+fn plan_variant(name: &str, plan: QuantPlan,
+                replicas: usize) -> server::FunctionalVariantCfg {
+    let mut cfg = server::FunctionalVariantCfg::synthetic(
+        name, plan.arch, SimKernel::Adder, 42);
+    cfg.mode = ExecMode::Quant(QCFG);
+    cfg.plan = Some(plan);
+    cfg.replicas = replicas;
+    cfg
+}
+
+/// The snapshot JSON layout is the `addernet-metrics-v1` contract:
+/// exactly the four top-level sections, histogram entries with the six
+/// summary fields, values readable back out of the rendered text.
+#[test]
+fn snapshot_json_schema_is_stable() {
+    let r = Registry::new();
+    r.counter("obs_requests_total", "requests").add(7);
+    r.gauge("obs_depth", "queue depth").set(3.0);
+    r.histogram("obs_lat_us", "latency").record_us(250);
+    let j = Json::parse(&r.snapshot().to_string()).unwrap();
+    let top = j.as_obj().unwrap();
+    let keys: Vec<&str> = top.keys().map(|k| k.as_str()).collect();
+    assert_eq!(keys, ["counters", "gauges", "histograms", "schema"]);
+    assert_eq!(j.get("schema").unwrap().as_str(),
+               Some(addernet::obs::registry::SCHEMA));
+    assert_eq!(j.at(&["counters", "obs_requests_total"]).unwrap().as_usize(),
+               Some(7));
+    assert_eq!(j.at(&["gauges", "obs_depth"]).unwrap().as_f64(), Some(3.0));
+    let h = j.at(&["histograms", "obs_lat_us"]).unwrap().as_obj().unwrap();
+    let hkeys: Vec<&str> = h.keys().map(|k| k.as_str()).collect();
+    assert_eq!(hkeys,
+               ["count", "max_us", "mean_us", "p50_us", "p99_us", "sum_us"]);
+    assert_eq!(j.at(&["histograms", "obs_lat_us", "count"]).unwrap().as_usize(),
+               Some(1));
+}
+
+/// Prometheus text: one sample line per metric, HELP/TYPE once per
+/// family even when several label sets share the base name.
+#[test]
+fn prometheus_one_sample_per_metric_no_duplicate_help() {
+    let r = Registry::new();
+    r.counter("obs_req_total{variant=\"a\"}", "requests").add(1);
+    r.counter("obs_req_total{variant=\"b\"}", "requests").add(2);
+    r.gauge("obs_depth{variant=\"a\"}", "queue depth").set(4.0);
+    r.histogram("obs_lat_us{variant=\"a\"}", "latency").record_us(100);
+    let text = r.render_prometheus();
+    assert_eq!(text.matches("# HELP obs_req_total ").count(), 1);
+    assert_eq!(text.matches("# TYPE obs_req_total ").count(), 1);
+    assert_eq!(text.matches("obs_req_total{variant=\"a\"} ").count(), 1);
+    assert_eq!(text.matches("obs_req_total{variant=\"b\"} ").count(), 1);
+    assert!(text.contains("obs_req_total{variant=\"a\"} 1\n"));
+    assert!(text.contains("obs_req_total{variant=\"b\"} 2\n"));
+    assert!(text.contains("obs_depth{variant=\"a\"} 4\n"));
+    // the histogram renders as a summary: two quantiles + sum + count
+    assert_eq!(text.matches("obs_lat_us{variant=\"a\",quantile=").count(), 2);
+    assert!(text.contains("obs_lat_us_count{variant=\"a\"} 1\n"));
+}
+
+/// Four threads hammering one lock-free histogram record exactly what a
+/// single locked histogram sees from the combined stream: same buckets,
+/// same count/sum/max, same quantiles.
+#[test]
+fn atomic_histogram_matches_locked_under_4_threads() {
+    let seqs: Vec<Vec<u64>> = (0..4u64)
+        .map(|t| (0..2000u64).map(|i| (i * 37 + t * 13) % 100_000 + 1).collect())
+        .collect();
+    let a = AtomicHistogram::new();
+    std::thread::scope(|scope| {
+        for seq in &seqs {
+            let a = &a;
+            scope.spawn(move || {
+                for &us in seq {
+                    a.record_us(us);
+                }
+            });
+        }
+    });
+    let mut l = LatencyHistogram::new();
+    for seq in &seqs {
+        for &us in seq {
+            l.record(Duration::from_micros(us));
+        }
+    }
+    let s = a.snapshot();
+    assert_eq!(s.count(), 8000);
+    assert_eq!(s.count(), l.count());
+    assert_eq!(s.sum_us(), l.sum_us());
+    assert_eq!(s.max_us(), l.max_us());
+    assert_eq!(s.bucket_counts(), l.bucket_counts());
+    for q in [0.5, 0.9, 0.99] {
+        assert_eq!(s.quantile_us(q), l.quantile_us(q));
+    }
+}
+
+/// Serve with a trace sink attached: the export is valid Chrome trace
+/// JSON, spans nest (layer within exec within batch, exec within its
+/// request), and the request spans cover >= 99% of the latency the
+/// client measured end to end.
+#[test]
+fn serve_trace_spans_nest_and_cover_e2e() {
+    let n = 8usize;
+    let sink = TraceSink::new();
+    let handle = server::start_functional_observed(
+        vec![plan_variant("lenet5_adder_int8", int8_plan(Arch::Lenet5, 42), 1)],
+        Duration::from_millis(5), Some(Arc::clone(&sink))).unwrap();
+    let b = data::eval_set(n, 19);
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let t0 = Instant::now();
+        let rx = handle.submit("lenet5_adder_int8",
+                               b.images[i * 1024..(i + 1) * 1024].to_vec())
+            .unwrap();
+        pending.push((t0, rx));
+    }
+    let mut measured_us = 0.0f64;
+    for (t0, rx) in pending {
+        rx.recv().unwrap();
+        measured_us += t0.elapsed().as_secs_f64() * 1e6;
+    }
+    handle.shutdown();
+
+    let spans = sink.spans();
+    // one request span per answered request, recorded at respond time
+    // with ts = enqueue and dur = enqueue -> response sent, so the span
+    // set covers (essentially all of) the client-measured e2e window
+    let reqs: Vec<_> = spans.iter().filter(|r| r.2.name == "request").collect();
+    assert_eq!(reqs.len(), n);
+    let span_us: f64 = reqs.iter().map(|r| r.2.dur_us as f64).sum();
+    assert!(span_us >= 0.99 * measured_us,
+            "request spans cover {span_us:.0}us of {measured_us:.0}us \
+             measured e2e (< 99%)");
+
+    let within = |i: &Span, o: &Span| {
+        o.ts_us <= i.ts_us && i.ts_us + i.dur_us <= o.ts_us + o.dur_us
+    };
+    let execs: Vec<_> = spans.iter().filter(|r| r.2.name == "exec").collect();
+    let batches: Vec<_> = spans.iter().filter(|r| r.2.name == "batch").collect();
+    assert!(!execs.is_empty() && !batches.is_empty());
+    for e in &execs {
+        assert!(batches.iter().any(|bt| bt.0 == e.0 && within(&e.2, &bt.2)),
+                "exec span outside every batch span");
+        assert!(reqs.iter().any(|r| r.0 == e.0 && within(&e.2, &r.2)),
+                "exec span outside every request span");
+    }
+    // per-layer spans from the observed graph walk ride inside exec
+    // (2us slack: ts and dur truncate to whole microseconds separately)
+    let layers: Vec<_> = spans.iter().filter(|r| r.2.cat == "layer").collect();
+    assert!(!layers.is_empty(), "layer spans missing from the trace");
+    for l in &layers {
+        assert!(execs.iter().any(|e| e.0 == l.0
+                                 && e.2.ts_us <= l.2.ts_us
+                                 && l.2.ts_us + l.2.dur_us
+                                    <= e.2.ts_us + e.2.dur_us + 2),
+                "layer span outside every exec span");
+    }
+    // the export parses as Chrome trace JSON with thread metadata
+    let j = Json::parse(&sink.export_json()).unwrap();
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str())
+                              == Some("M")));
+    assert!(events.iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .count() >= spans.len());
+    assert_eq!(j.get("droppedSpans").unwrap().as_usize(), Some(0));
+}
+
+/// `snapshot()` and `render_prometheus()` are two views of one registry:
+/// after exporting merged serving metrics, every counter and gauge in
+/// the JSON appears in the text with the identical value, and the
+/// counters agree with `metrics_snapshot()`.
+#[test]
+fn registry_snapshot_and_prometheus_agree_after_serving() {
+    let n = 8usize;
+    let handle = server::start_functional(
+        vec![plan_variant("lenet5_adder_int8", int8_plan(Arch::Lenet5, 42), 2)],
+        Duration::from_millis(1)).unwrap();
+    let b = data::eval_set(n, 29);
+    let rxs: Vec<_> = (0..n)
+        .map(|i| handle.submit("lenet5_adder_int8",
+                               b.images[i * 1024..(i + 1) * 1024].to_vec())
+            .unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let reg = Registry::new();
+    handle.export_registry(&reg);
+    let m = handle.metrics_snapshot();
+    handle.shutdown();
+
+    let j = Json::parse(&reg.snapshot().to_string()).unwrap();
+    let text = reg.render_prometheus();
+    let counters = j.get("counters").unwrap().as_obj().unwrap();
+    assert!(!counters.is_empty());
+    for (name, v) in counters {
+        let line = format!("{} {}\n", name, v.as_f64().unwrap() as u64);
+        assert!(text.contains(&line), "prometheus missing: {line}");
+    }
+    let gauges = j.get("gauges").unwrap().as_obj().unwrap();
+    assert!(!gauges.is_empty());
+    for (name, v) in gauges {
+        let got: f64 = text.lines()
+            .find_map(|l| l.strip_prefix(&format!("{name} ")))
+            .unwrap_or_else(|| panic!("prometheus missing gauge {name}"))
+            .parse().unwrap();
+        assert_eq!(got, v.as_f64().unwrap(), "{name} differs across views");
+    }
+    // the exported counters are the merged per-replica shard totals
+    let label = "addernet_requests_total{variant=\"lenet5_adder_int8\"}";
+    assert_eq!(counters[label].as_f64(),
+               Some(m["lenet5_adder_int8"].requests as f64));
+    assert_eq!(m["lenet5_adder_int8"].requests, n as u64);
+    let e2e = "addernet_e2e_latency_us{variant=\"lenet5_adder_int8\"}";
+    assert_eq!(j.at(&["histograms", e2e, "count"]).unwrap().as_usize(),
+               Some(n));
+    assert!(text.contains(
+        "addernet_e2e_latency_us_count{variant=\"lenet5_adder_int8\"} 8\n"));
+}
+
+/// The resnet8 int8 profile joins measured wall-us rows against the
+/// plan schedule by graph op name, and the cycle column sums to the
+/// independently-built schedule's `total_cycles` EXACTLY.
+#[test]
+fn resnet8_profile_cycle_column_sums_to_schedule_total() {
+    let plan = int8_plan(Arch::Resnet8, 42);
+    let b = data::eval_set(1, 23);
+    let x = Tensor::new((1, 32, 32, 1), b.images[..1024].to_vec());
+    let p = profile::profile_plan(&plan, KernelStrategy::Auto, 1024, &x)
+        .unwrap();
+    assert_eq!(p.arch, "resnet8");
+    assert_eq!(p.mode, "int8");
+    assert_eq!(p.hw_layer_cycle_sum(), p.hw_total_cycles);
+    let (_cfg, report) = hwsim::plan_schedule(&plan, 1024).unwrap();
+    assert_eq!(p.hw_total_cycles, Some(report.total_cycles));
+    // the conv stack joined: plenty of rows carry cycles, the residual
+    // bookkeeping rows don't
+    assert!(p.layers.iter().filter(|l| l.hw_cycles.is_some()).count() >= 8);
+    assert!(p.layers.iter().any(|l| l.hw_cycles.is_none()));
+    assert!(p.wall_us_total > 0.0);
+}
