@@ -10,7 +10,9 @@
 //!        kernel-strategy acceptance number (target >= 1.3x) — plus the
 //!        int8/int16-vs-f32 throughput ratios on the tiled and simd
 //!        strategies (the quantized-serving acceptance number:
-//!        int8 >= f32);
+//!        int8 >= f32), plus the Winograd transform-domain engine on
+//!        the int8 mult path (`winograd_vs_simd`, target >= 1.2x —
+//!        F(2x2, 3x3) does ~2.25x fewer inner products per output);
 //!   L3a2: whole-model serving comparison — f32 vs per-call int8 vs
 //!        the plan-compiled int8 path (weights quantized once,
 //!        activations i32 across the conv stack);
@@ -83,6 +85,23 @@ fn main() {
         }, macs, &mut rows);
     }
 
+    // int8 mult trio plus the Winograd transform-domain engine, which
+    // is exact (bit-identical) on the integer mult path and so can be
+    // gated as a straight speedup: winograd_vs_simd is this layer's
+    // acceptance ratio (>= 1.2x).
+    let cfg8 = QuantCfg { bits: 8, mode: Mode::SharedScale };
+    bench_strategy_trio("int8 mult", "int8_mult", |strat| {
+        std::hint::black_box(conv2d_quant_with(
+            strat, &x, &w, 1, nn::Padding::Same, SimKernel::Mult, cfg8,
+            &calib));
+    }, macs, &mut rows);
+    let (wino_s, _) = common::time_it(2, 9, || {
+        std::hint::black_box(conv2d_quant_with(
+            KernelStrategy::Winograd, &x, &w, 1, nn::Padding::Same,
+            SimKernel::Mult, cfg8, &calib));
+    });
+    common::report("int8 mult (winograd engine)", wino_s, macs, "MAC");
+
     // derived: int-vs-f32 throughput on the engine strategies — the
     // quantized-serving acceptance ratio (int8 >= 1.0x means the int
     // datapath is at least as fast as f32).
@@ -95,6 +114,10 @@ fn main() {
         derived.push((format!("{key}_vs_f32_tiled"), f32a.2 / row.2));
         derived.push((format!("{key}_vs_f32_simd"), f32a.3 / row.3));
     }
+    let m8 = find("int8_mult");
+    println!("  winograd vs simd (int8 mult conv): {:>5.2}x", m8.3 / wino_s);
+    derived.push(("int8_mult_winograd_s".to_string(), wino_s));
+    derived.push(("winograd_vs_simd".to_string(), m8.3 / wino_s));
 
     // L3a2: whole-model serving — f32 vs per-call int8 vs the compiled
     // QuantPlan int8 path (no per-call weight requantization,
@@ -184,17 +207,30 @@ fn main() {
     let hw_r8a = addernet::sim::hwsim::per_image_cost(&plan8a, hwp).unwrap();
     let hw_r8m = addernet::sim::hwsim::per_image_cost(&plan8m, hwp).unwrap();
     println!("hwsim cycles/img (P={hwp}): lenet5 {} | cnv6 {} | resnet8 adder \
-              {} — mult-vs-adder latency {:.2}x",
-             hw_lenet.cycles, hw_cnv6.cycles, hw_r8a.cycles,
-             hw_r8m.latency_ms / hw_r8a.latency_ms);
+              {} | resnet8 mult {}",
+             hw_lenet.cycles, hw_cnv6.cycles, hw_r8a.cycles, hw_r8m.cycles);
     derived.push(("hw_cycles_lenet5_int8".to_string(), hw_lenet.cycles as f64));
     derived.push(("hw_cycles_cnv6_int8".to_string(), hw_cnv6.cycles as f64));
     derived.push(("hw_cycles_resnet8_int8".to_string(), hw_r8a.cycles as f64));
     derived.push(("hw_cycles_resnet8_mult_int8".to_string(), hw_r8m.cycles as f64));
-    // the adder array closes timing at a higher fmax, so at equal cycle
-    // schedules the mult design is slower per image (paper: 1.16x)
-    derived.push(("hw_mult_over_adder_latency".to_string(),
-                  hw_r8m.latency_ms / hw_r8a.latency_ms));
+    // The adder array closes timing at a higher fmax, but at the 8-bit
+    // datapath BOTH designs hit the 250 MHz fabric cap — which is why
+    // the int8 cycle keys above are legitimately equal and why the
+    // ratio used to read 1.0.  The paper's ~1.16x mult latency penalty
+    // only shows where the mult critical path is the fmax limiter, so
+    // measure it at the 16-bit datapath on the resnet8 descriptor.
+    use addernet::hw::KernelKind;
+    use addernet::sim::accelerator::{self, AccelConfig};
+    let r8desc = nn::resnet8();
+    let mult16 = accelerator::run(
+        &AccelConfig::zcu104(hwp, 16, KernelKind::Mult), &r8desc);
+    let adder16 = accelerator::run(
+        &AccelConfig::zcu104(hwp, 16, KernelKind::Adder2A), &r8desc);
+    let ratio16 = mult16.latency_ms() / adder16.latency_ms();
+    println!("  dw16 mult-vs-adder latency (resnet8 descriptor): {ratio16:.3}x \
+              (mult fmax {:.0} MHz vs adder {:.0} MHz)",
+             mult16.fmax_mhz, adder16.fmax_mhz);
+    derived.push(("hw_mult_over_adder_latency".to_string(), ratio16));
 
     write_json(&rows, &derived);
 

@@ -137,20 +137,21 @@ fn usage() {
          repro train [--arch lenet5] [--kernel adder] [--steps 400] [--eval-n 512]\n  \
          repro serve [--backend functional|hwsim|pjrt] \
                      [--models lenet5_adder,lenet5_mult] \
-                     [--kernel naive|tiled|simd|auto] [--mode f32|int8|int16] \
+                     [--kernel naive|tiled|simd|winograd|auto] [--mode f32|int8|int16] \
                      [--calib FILE.json] [--plan PLAN.json[,PLAN2.json]] \
                      [--hw-parallelism 1024] \
                      [--replicas 1] [--queue-depth 1024] [--swap-plan PLAN.json] \
                      [--requests 512] [--window-ms 2] [--max-batch 32] \
                      [--trace-out trace.json] [--metrics-out metrics.json]\n  \
          repro loadtest [--models lenet5_adder] [--plan PLAN.json[,PLAN2.json]] \
-                     [--kernel naive|tiled|simd|auto] [--replicas 1] \
+                     [--kernel naive|tiled|simd|winograd|auto] [--replicas 1] \
                      [--queue-depth 1024] [--qps 200] [--duration-s 3] \
                      [--window-ms 2] [--max-batch 32] [--out target/loadtest.json] \
                      [--trace-out trace.json]\n  \
          repro loadtest check --file target/loadtest.json \
                      [--p99-slo-ms 50] [--max-shed-rate 0.25]\n  \
          repro profile [--arch resnet8] [--kernel adder] [--mode f32|int8|int16] \
+                     [--strategy naive|tiled|simd|winograd|auto] \
                      [--calib FILE.json] [--hw-parallelism 1024] [--out prof.json]\n  \
          repro calibrate [--arch lenet5] [--kernel adder] [--calib-n 256] \
                      [--out target/calibration.json]\n  \
@@ -330,8 +331,8 @@ fn serve_functional(args: &Args, hwsim: bool) -> Result<()> {
     let strategy = match args.flags.get("kernel") {
         Some(s) => KernelStrategy::parse(s).with_context(
             || format!("serve's --kernel selects the inner-kernel STRATEGY \
-                        (naive|tiled|simd|auto), got {s}; adder-vs-mult is \
-                        chosen per model via --models (e.g. lenet5_mult)"))?,
+                        (naive|tiled|simd|winograd|auto), got {s}; adder-vs-mult \
+                        is chosen per model via --models (e.g. lenet5_mult)"))?,
         None => KernelStrategy::Auto,
     };
     // --plan serves exported QuantPlan artifacts: the cold-start path
@@ -592,10 +593,11 @@ fn bench_check(args: &Args) -> Result<()> {
     };
     let base = load(&baseline_path)?;
     let cur = load(&current_path)?;
-    // Floor gates: RATIOS where higher is better — the three speedup
-    // families the engine promises (blocking+parallelism, the lane
-    // kernel, the compiled int8 serving path) plus the accelerator's
-    // mult/adder latency ratio.  Fail when current < baseline*(1-tol).
+    // Floor gates: RATIOS where higher is better — the speedup families
+    // the engine promises (blocking+parallelism, the lane kernel, the
+    // Winograd transform-domain engine, the compiled int8 serving path)
+    // plus the accelerator's mult/adder latency ratio.  Fail when
+    // current < baseline*(1-tol).
     const FLOOR_GATES: &[(&str, &[&str])] = &[
         ("f32 adder: tiled vs naive",
          &["results", "f32_adder", "tiled_vs_naive"]),
@@ -605,9 +607,11 @@ fn bench_check(args: &Args) -> Result<()> {
          &["results", "int8_adder", "tiled_vs_naive"]),
         ("int8 adder: simd vs tiled",
          &["results", "int8_adder", "simd_vs_tiled"]),
+        ("int8 mult: winograd vs simd",
+         &["derived", "winograd_vs_simd"]),
         ("int8 plan vs f32 (whole model)",
          &["derived", "plan_vs_f32"]),
-        ("hwsim: mult/adder latency ratio (resnet8 int8)",
+        ("hwsim: mult/adder latency ratio (resnet8 dw16)",
          &["derived", "hw_mult_over_adder_latency"]),
     ];
     // Ceiling gates: per-image cycle counts on the simulated
@@ -856,7 +860,8 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     let sink = trace_out.is_some().then(obs::trace::TraceSink::new);
     let strategy = match args.flags.get("kernel") {
         Some(s) => KernelStrategy::parse(s)
-            .with_context(|| format!("--kernel takes naive|tiled|simd|auto, got {s}"))?,
+            .with_context(|| format!("--kernel takes naive|tiled|simd|winograd|\
+                                      auto, got {s}"))?,
         None => KernelStrategy::Auto,
     };
 
@@ -966,6 +971,15 @@ fn cmd_profile(args: &Args) -> Result<()> {
         .with_context(|| format!("arch must be one of {}", Arch::names_label()))?;
     let kind = SimKernel::parse(&kernel)
         .with_context(|| format!("functional sim supports adder|mult, got {kernel}"))?;
+    // --strategy pins the inner-kernel engine the profile's "kernel"
+    // column reports; default Auto defers to ADDERNET_KERNEL and the
+    // shape heuristic, exactly like serving.
+    let strategy = match args.flags.get("strategy") {
+        Some(s) => KernelStrategy::parse(s).with_context(
+            || format!("--strategy takes naive|tiled|simd|winograd|auto, \
+                        got {s}"))?,
+        None => KernelStrategy::Auto,
+    };
     let parallelism = args.get_usize(
         "hw-parallelism", addernet::sim::hwsim::DEFAULT_PARALLELISM as usize) as u64;
     let (params, trained, synthetic) =
@@ -979,7 +993,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
                 params: &params,
                 arch,
                 kind,
-                strategy: KernelStrategy::Auto,
+                strategy,
                 mode: ExecMode::F32,
                 calib: None,
                 observe: None,
@@ -1002,7 +1016,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
             let qcfg = QuantCfg { bits, mode: quant::Mode::SharedScale };
             let plan = quant::QuantPlan::build(&params, arch, kind, qcfg, &calib)
                 .context("compiling the quantization plan")?;
-            obs::profile::profile_plan(&plan, KernelStrategy::Auto, parallelism, &x)
+            obs::profile::profile_plan(&plan, strategy, parallelism, &x)
                 .context("profiling the plan on the simulated accelerator")?
         }
         m => anyhow::bail!("profile's --mode takes f32|int8|int16, got {m}"),

@@ -17,6 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::nn::graph::Op;
 use crate::quant::plan::QuantPlan;
 use crate::sim::exec::{ActStats, ExecObserver};
 use crate::sim::functional::{Runner, Tensor};
@@ -63,6 +64,11 @@ pub struct LayerProfile {
     pub elems: usize,
     pub mean_abs: f64,
     pub hw_cycles: Option<u64>,
+    /// Concrete inner-kernel engine this layer's conv/dense dispatched
+    /// to under the profiled strategy (`Auto` and the Winograd shape
+    /// guard resolve per layer, so the pick is otherwise invisible).
+    /// `None` for ops with no kernel (relu, pool, flatten, residual).
+    pub kernel: Option<String>,
 }
 
 /// A full forward-pass profile.
@@ -82,7 +88,7 @@ pub struct Profile {
 
 impl Profile {
     fn from_rows(arch: String, mode: String, kernel: String,
-                 obs: ProfileObserver,
+                 obs: ProfileObserver, kernels: &BTreeMap<String, String>,
                  hw: Option<(&BTreeMap<String, u64>, u64, f64, f64)>)
                  -> Profile {
         let cycles_by_name = hw.map(|(m, _, _, _)| m);
@@ -94,6 +100,7 @@ impl Profile {
                 elems: stats.elems,
                 mean_abs: stats.mean_abs,
                 hw_cycles: cycles_by_name.and_then(|m| m.get(&label).copied()),
+                kernel: kernels.get(&label).cloned(),
             })
             .collect();
         let wall_us_total = layers.iter().map(|l| l.wall_us).sum();
@@ -142,6 +149,8 @@ impl Profile {
                 m.insert("elems".into(), Json::Num(l.elems as f64));
                 m.insert("mean_abs".into(), Json::Num(l.mean_abs));
                 m.insert("hw_cycles".into(), opt_u64(l.hw_cycles));
+                m.insert("kernel".into(), l.kernel.clone()
+                    .map_or(Json::Null, Json::Str));
                 Json::Obj(m)
             })
             .collect();
@@ -156,7 +165,7 @@ impl Profile {
                             self.kernel);
         let mut t = Table::new(
             &title,
-            &["layer", "wall us", "wall %", "elems", "mean|act|",
+            &["layer", "kernel", "wall us", "wall %", "elems", "mean|act|",
               "hw cycles"]);
         for l in &self.layers {
             let share = if self.wall_us_total > 0.0 {
@@ -165,6 +174,7 @@ impl Profile {
                 0.0
             };
             t.row(&[l.label.clone(),
+                    l.kernel.clone().unwrap_or_else(|| "-".into()),
                     table::f(l.wall_us, 1),
                     table::pct(share),
                     table::thousands(l.elems as u64),
@@ -174,6 +184,7 @@ impl Profile {
         let hw_total =
             self.hw_total_cycles.map_or("-".into(), table::thousands);
         t.row(&["TOTAL".into(),
+                "".into(),
                 table::f(self.wall_us_total, 1),
                 table::pct(1.0),
                 "".into(),
@@ -193,13 +204,67 @@ fn schedule_cycles(report: &crate::sim::accelerator::RunReport)
     m
 }
 
+/// Kernel map `layer name -> concrete engine label` for an integer
+/// plan: convs resolve through the shape-aware conv dispatch (so the
+/// Winograd guard sees each layer's geometry and kernel family), dense
+/// heads through the row dispatch.
+fn plan_kernel_map(plan: &QuantPlan, strategy: KernelStrategy)
+                   -> BTreeMap<String, String> {
+    let mut m = BTreeMap::new();
+    for (name, c) in &plan.convs {
+        let r = strategy.resolve_conv(c.cout, c.kh, c.kw, c.stride, c.cin,
+                                      plan.kind);
+        m.insert(name.clone(), r.label().to_string());
+    }
+    for (name, d) in &plan.dense {
+        m.insert(name.clone(), strategy.resolve(d.dout).label().to_string());
+    }
+    m
+}
+
+/// Kernel map for the f32 path: float convs never take the Winograd
+/// transform (it would reassociate float sums and break bit-compat), so
+/// every op resolves through the row dispatch.
+fn f32_kernel_map(runner: &Runner) -> BTreeMap<String, String> {
+    let mut m = BTreeMap::new();
+    for op in &runner.arch.graph().ops {
+        match op {
+            Op::ConvBn(c) | Op::ResidualClose { shortcut: Some(c) } => {
+                m.insert(c.name.clone(),
+                         runner.strategy.resolve(c.cout).label().to_string());
+            }
+            Op::Dense(d) => {
+                m.insert(d.name.clone(),
+                         runner.strategy.resolve(d.dout).label().to_string());
+            }
+            _ => {}
+        }
+    }
+    m
+}
+
+/// Export `addernet_layer_kernel{arch=...,layer=...,kernel=...} = 1`
+/// info-gauges to the global registry so scrapes can see the concrete
+/// per-layer engine picks alongside the dispatch counters.
+fn export_kernel_gauges(arch: &str, map: &BTreeMap<String, String>) {
+    for (layer, kernel) in map {
+        crate::obs::registry::global()
+            .gauge(&format!("addernet_layer_kernel{{arch=\"{arch}\",\
+                             layer=\"{layer}\",kernel=\"{kernel}\"}}"),
+                   "concrete kernel engine resolved per layer")
+            .set(1.0);
+    }
+}
+
 /// Profile an f32 forward pass (no hardware join — the float path has
 /// no accelerator schedule).
 pub fn profile_f32(runner: &mut Runner, x: &Tensor) -> Profile {
     let mut obs = ProfileObserver::new();
     runner.forward_observed(x, &mut obs);
+    let kernels = f32_kernel_map(runner);
+    export_kernel_gauges(runner.arch.name(), &kernels);
     Profile::from_rows(runner.arch.name().to_string(), "f32".to_string(),
-                       runner.kind.label().to_string(), obs, None)
+                       runner.kind.label().to_string(), obs, &kernels, None)
 }
 
 /// Profile an integer plan on the simulated accelerator: measured
@@ -212,9 +277,11 @@ pub fn profile_plan(plan: &QuantPlan, strategy: KernelStrategy,
     let (_, cost) = hw.forward_observed(x, &mut obs);
     let cycles = schedule_cycles(hw.report());
     let mode = format!("int{}", plan.cfg.bits);
+    let kernels = plan_kernel_map(plan, strategy);
+    export_kernel_gauges(plan.arch.name(), &kernels);
     Ok(Profile::from_rows(
         plan.arch.name().to_string(), mode, plan.kind.label().to_string(),
-        obs,
+        obs, &kernels,
         Some((&cycles, hw.report().total_cycles, cost.fmax_mhz,
               hw.report().latency_ms()))))
 }
@@ -295,5 +362,36 @@ mod tests {
         assert_eq!(total as u64, p.hw_total_cycles.unwrap());
         // table renders one row per layer plus the TOTAL line
         assert_eq!(p.table().rows_len(), p.layers.len() + 1);
+    }
+
+    #[test]
+    fn kernel_column_reports_concrete_engine_per_layer() {
+        let plan = lenet_plan();
+        // lenet's 5x5 convs fail the Winograd shape guard, so the
+        // column records the heuristic fallback pick per layer
+        // (deterministically — Winograd dispatch never consults
+        // ADDERNET_KERNEL).
+        let p = profile_plan(&plan, KernelStrategy::Winograd, 1024, &image(6))
+            .unwrap();
+        let kernel_of = |name: &str| {
+            p.layers.iter().find(|l| l.label == name).unwrap().kernel.clone()
+        };
+        assert_eq!(kernel_of("conv1").as_deref(), Some("tiled")); // cout 6
+        assert_eq!(kernel_of("conv2").as_deref(), Some("simd")); // cout 16
+        assert_eq!(kernel_of("fc1").as_deref(), Some("simd")); // dout 120
+        assert!(kernel_of("relu").is_none());
+        // explicit strategies pin every kernel-bearing row
+        let p2 = profile_plan(&plan, KernelStrategy::Naive, 1024, &image(6))
+            .unwrap();
+        assert!(p2.layers.iter().any(|l| l.kernel.is_some()));
+        assert!(p2.layers.iter()
+            .filter(|l| l.kernel.is_some())
+            .all(|l| l.kernel.as_deref() == Some("naive")));
+        // the JSON layer objects carry the kernel key additively
+        let j = Json::parse(&p.to_json().to_string()).unwrap();
+        let layers = j.get("layers").unwrap().as_arr().unwrap();
+        assert!(layers.iter().any(|l| {
+            l.get("kernel").and_then(|k| k.as_str()) == Some("tiled")
+        }));
     }
 }

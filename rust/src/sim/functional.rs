@@ -19,15 +19,19 @@
 //! im2col-style patch gather per output row plus a swappable inner row
 //! kernel — the [`super::kernels`] strategy subsystem: `Tiled`
 //! (cache-blocked scalar), `Simd` (lane-structured autovectorizing),
-//! `Naive` (the [`super::reference`] oracle loops) or `Auto`
-//! (env/heuristic selection) — parallelized across batch x output-rows
-//! on a scoped worker pool ([`crate::util::threads`]).
-//! [`conv2d_with`], [`conv2d_quant_with`] and [`dense_with`] are the
-//! single dispatch point every caller (the [`Runner`], the serving
-//! backend, the CLI, the benches) routes through.  All strategies
-//! accumulate taps in the same ascending (ky, kx, ci) order, so the
-//! integer path is bit-identical across strategies (i32 accumulation is
-//! order-independent) and the f32 path is bit-compatible.
+//! `Winograd` (transform-domain F(2x2, 3x3) on eligible integer convs,
+//! heuristic fallback elsewhere), `Naive` (the [`super::reference`]
+//! oracle loops) or `Auto` (env/heuristic selection) — parallelized
+//! across batch x output-rows on a scoped worker pool
+//! ([`crate::util::threads`]).  [`conv2d_with`], [`conv2d_quant_with`]
+//! and [`dense_with`] are the single dispatch point every caller (the
+//! [`Runner`], the serving backend, the CLI, the benches) routes
+//! through.  All row strategies accumulate taps in the same ascending
+//! (ky, kx, ci) order, so the integer path is bit-identical across
+//! strategies (i32 accumulation is order-independent) and the f32 path
+//! is bit-compatible; the Winograd mult path reaches the same
+//! bit-identity by algebraic exactness instead (see
+//! [`super::kernels::winograd`]).
 
 use std::collections::BTreeMap;
 
@@ -38,7 +42,8 @@ use crate::util::threads::parallel_chunks;
 use crate::util::XorShift64;
 
 use super::exec::{self, ActStats, Domain, ExecObserver};
-use super::kernels::{self, gather_row, ConvRow, DenseIntRow, DenseRow, Resolved};
+use super::kernels::{self, gather_row, ConvRow, DenseIntRow, DenseRow, Resolved,
+                     ResolvedConv};
 use super::reference;
 
 pub use super::kernels::{KernelStrategy, SimKernel};
@@ -139,7 +144,12 @@ pub fn conv2d(x: &Tensor, w: &ConvW, stride: usize, padding: Padding,
 /// run the parallel gather engine with that strategy's row kernel.
 pub fn conv2d_with(strategy: KernelStrategy, x: &Tensor, w: &ConvW,
                    stride: usize, padding: Padding, kind: SimKernel) -> Tensor {
-    let krow: ConvRow<f32> = match strategy.resolve(w.cout) {
+    // The Winograd transforms reassociate float sums, which would break
+    // the f32 path's bit-compatibility contract — f32 convs always run
+    // a row strategy (`Winograd` falls back via `resolve`).
+    let resolved = strategy.resolve(w.cout);
+    kernels::note_resolution(resolved.label());
+    let krow: ConvRow<f32> = match resolved {
         Resolved::Naive => return reference::conv2d(x, w, stride, padding, kind),
         Resolved::Tiled => kernels::tiled::conv_row_f32,
         Resolved::Simd => kernels::simd::conv_row_f32,
@@ -249,9 +259,13 @@ pub fn conv2d_quant_with(strategy: KernelStrategy, x: &Tensor, w: &ConvW,
 /// without ever leaving the i32 domain, and the core
 /// [`conv2d_quant_with`] routes through after per-call quantization.
 /// Returns the raw widened accumulators plus the output shape; callers
-/// own the (de)quantization story.  All strategies accumulate taps in
-/// ascending (ky, kx, ci) order, so outputs are bit-identical across
-/// `Naive`/`Tiled`/`Simd` (i32 accumulation is order-independent).
+/// own the (de)quantization story.  All row strategies accumulate taps
+/// in ascending (ky, kx, ci) order, so outputs are bit-identical across
+/// `Naive`/`Tiled`/`Simd` (i32 accumulation is order-independent); the
+/// `Winograd` strategy reaches the same bit-identity on eligible mult
+/// convs by algebraic exactness ([`kernels::winograd`]) and falls back
+/// to the `Auto` heuristic's row pick everywhere else (shape guard /
+/// adder layers / f32), so it slots under the same oracle contract.
 pub fn conv2d_int_with(strategy: KernelStrategy, xq: &[i32],
                        shape: (usize, usize, usize, usize), w: &QConvW,
                        stride: usize, padding: Padding, kind: SimKernel)
@@ -266,16 +280,30 @@ pub fn conv2d_int_with(strategy: KernelStrategy, xq: &[i32],
     if out.is_empty() {
         return (out, oshape);
     }
-    let krow: ConvRow<i32> = match strategy.resolve(cout) {
-        Resolved::Naive => {
+    let resolved = strategy.resolve_conv(cout, w.kh, w.kw, stride, cin, kind);
+    kernels::note_resolution(resolved.label());
+    let k_taps = w.kh * w.kw * cin;
+    let threads = max_threads_for(n * ho * wo * k_taps * cout);
+    let krow: ConvRow<i32> = match resolved {
+        ResolvedConv::Winograd => {
+            kernels::winograd::conv2d_int_mult(xq, shape, w.data, cin, cout,
+                                               (pt, pl, ho, wo), threads,
+                                               &mut out);
+            return (out, oshape);
+        }
+        ResolvedConv::WinogradL1 => {
+            kernels::winograd::conv2d_int_adder_l1(xq, shape, w.data, cin, cout,
+                                                   (pt, pl, ho, wo), threads,
+                                                   &mut out);
+            return (out, oshape);
+        }
+        ResolvedConv::Row(Resolved::Naive) => {
             naive_conv_int(xq, shape, w, stride, (pt, pl, ho, wo), kind, &mut out);
             return (out, oshape);
         }
-        Resolved::Tiled => kernels::tiled::conv_row_i32,
-        Resolved::Simd => kernels::simd::conv_row_i32,
+        ResolvedConv::Row(Resolved::Tiled) => kernels::tiled::conv_row_i32,
+        ResolvedConv::Row(Resolved::Simd) => kernels::simd::conv_row_i32,
     };
-    let k_taps = w.kh * w.kw * cin;
-    let threads = max_threads_for(n * ho * wo * k_taps * cout);
     let (kh, kw) = (w.kh, w.kw);
     let wdat = w.data;
     parallel_chunks(&mut out, wo * cout, threads, |row, chunk| {
@@ -447,7 +475,9 @@ pub fn dense(x: &Tensor, w: &[f32], bias: &[f32], dout: usize) -> Tensor {
 /// Dense under an explicit kernel strategy.
 pub fn dense_with(strategy: KernelStrategy, x: &Tensor, w: &[f32],
                   bias: &[f32], dout: usize) -> Tensor {
-    let krow: DenseRow = match strategy.resolve(dout) {
+    let resolved = strategy.resolve(dout);
+    kernels::note_resolution(resolved.label());
+    let krow: DenseRow = match resolved {
         Resolved::Naive => return reference::dense(x, w, bias, dout),
         Resolved::Tiled => kernels::tiled::dense_row,
         Resolved::Simd => kernels::simd::dense_row,
@@ -486,7 +516,9 @@ pub fn dense_int_with(strategy: KernelStrategy, xq: &[i32], n: usize,
     assert_eq!(xq.len(), n * din, "dense int input size mismatch");
     assert_eq!(w.data.len(), din * dout, "dense int weight size mismatch");
     assert_eq!(bias.len(), dout, "dense int bias size mismatch");
-    let krow: DenseIntRow = match strategy.resolve(dout) {
+    let resolved = strategy.resolve(dout);
+    kernels::note_resolution(resolved.label());
+    let krow: DenseIntRow = match resolved {
         Resolved::Naive => return reference::dense_int(xq, n, w, bias),
         Resolved::Tiled => kernels::tiled::dense_int_row,
         Resolved::Simd => kernels::simd::dense_int_row,
@@ -956,7 +988,8 @@ mod tests {
         let w = QDenseW { data: &wdat, din: 2, dout: 2 };
         let bias = vec![5i64, -5];
         for strat in [KernelStrategy::Naive, KernelStrategy::Tiled,
-                      KernelStrategy::Simd, KernelStrategy::Auto] {
+                      KernelStrategy::Simd, KernelStrategy::Winograd,
+                      KernelStrategy::Auto] {
             let out = dense_int_with(strat, &xq, 3, &w, &bias);
             assert_eq!(out, vec![6, -3, 8, -9, 5, 2], "{}", strat.label());
         }
@@ -992,7 +1025,8 @@ mod tests {
             .collect();
         let w = QDenseW { data: &wdat, din, dout };
         let want = dense_int_with(KernelStrategy::Naive, &xq, n, &w, &bias);
-        for strat in [KernelStrategy::Tiled, KernelStrategy::Simd] {
+        for strat in [KernelStrategy::Tiled, KernelStrategy::Simd,
+                      KernelStrategy::Winograd] {
             assert_eq!(dense_int_with(strat, &xq, n, &w, &bias), want,
                        "{}", strat.label());
         }

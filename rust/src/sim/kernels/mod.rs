@@ -12,6 +12,14 @@
 //!   8 f32 (or i32) output channels with per-column register
 //!   accumulators, written so stable-Rust autovectorization emits
 //!   packed SIMD (no nightly `std::simd`, no intrinsics);
+//! * [`winograd`] — transform-domain F(2x2, 3x3) kernels: the exact
+//!   integer mult conv (bit-identical by algebraic exactness — 2.25x
+//!   less inner-loop arithmetic on 3x3/stride-1 layers) plus Li
+//!   et al.'s approximate l1 adder reformulation behind an explicit
+//!   opt-in.  A shape guard ([`winograd::applies`]) confines it to
+//!   3x3/stride-1 integer convs; everywhere else (other shapes, f32,
+//!   dense) the strategy falls back to the `Auto` heuristic's pick, so
+//!   every arch serves end-to-end under `--kernel winograd`;
 //! * **naive** — the original 7-deep loop nests in
 //!   [`crate::sim::reference`], retained as the in-crate truth.
 //!
@@ -26,6 +34,7 @@
 
 pub(crate) mod simd;
 pub(crate) mod tiled;
+pub mod winograd;
 
 /// Which similarity the conv kernel computes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,6 +75,10 @@ pub enum KernelStrategy {
     Tiled,
     /// Lane-structured autovectorizing kernel (chunks of 8 channels).
     Simd,
+    /// Transform-domain F(2x2, 3x3) engine on eligible integer convs
+    /// (exact on the mult kernel); the `Auto` heuristic's pick
+    /// everywhere the [`winograd::applies`] shape guard says no.
+    Winograd,
     /// Runtime selection: `ADDERNET_KERNEL` env override if set,
     /// else [`simd`] when the channel count fills at least one lane
     /// group, else [`tiled`].
@@ -73,7 +86,7 @@ pub enum KernelStrategy {
     Auto,
 }
 
-/// A concrete strategy after `Auto` resolution.
+/// A concrete row/dense strategy after `Auto` resolution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Resolved {
     Naive,
@@ -81,13 +94,49 @@ pub enum Resolved {
     Simd,
 }
 
+impl Resolved {
+    pub fn label(self) -> &'static str {
+        match self {
+            Resolved::Naive => "naive",
+            Resolved::Tiled => "tiled",
+            Resolved::Simd => "simd",
+        }
+    }
+}
+
+/// A concrete conv engine after the shape-aware [`KernelStrategy::
+/// resolve_conv`] resolution: either one of the row-kernel strategies,
+/// or a whole-tensor Winograd path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResolvedConv {
+    /// Row-gather engines (and the naive oracle loops).
+    Row(Resolved),
+    /// Exact integer F(2x2, 3x3) transform-domain mult conv.
+    Winograd,
+    /// Li et al.'s approximate l1 transform-domain adder conv
+    /// (explicit opt-in only — never chosen silently).
+    WinogradL1,
+}
+
+impl ResolvedConv {
+    pub fn label(self) -> &'static str {
+        match self {
+            ResolvedConv::Row(r) => r.label(),
+            ResolvedConv::Winograd => "winograd",
+            ResolvedConv::WinogradL1 => "winograd_l1",
+        }
+    }
+}
+
 impl KernelStrategy {
-    /// Parse a CLI/env spelling: `naive`, `tiled`, `simd`, `auto`.
+    /// Parse a CLI/env spelling: `naive`, `tiled`, `simd`, `winograd`,
+    /// `auto`.
     pub fn parse(s: &str) -> Option<KernelStrategy> {
         match s.trim().to_ascii_lowercase().as_str() {
             "naive" => Some(KernelStrategy::Naive),
             "tiled" => Some(KernelStrategy::Tiled),
             "simd" => Some(KernelStrategy::Simd),
+            "winograd" => Some(KernelStrategy::Winograd),
             "auto" => Some(KernelStrategy::Auto),
             _ => None,
         }
@@ -98,6 +147,7 @@ impl KernelStrategy {
             KernelStrategy::Naive => "naive",
             KernelStrategy::Tiled => "tiled",
             KernelStrategy::Simd => "simd",
+            KernelStrategy::Winograd => "winograd",
             KernelStrategy::Auto => "auto",
         }
     }
@@ -111,7 +161,7 @@ impl KernelStrategy {
                 static WARNED: std::sync::Once = std::sync::Once::new();
                 WARNED.call_once(|| {
                     eprintln!("[kernels] ignoring ADDERNET_KERNEL={v:?} \
-                               (expected naive|tiled|simd|auto)");
+                               (expected naive|tiled|simd|winograd|auto)");
                 });
                 KernelStrategy::Auto
             }),
@@ -119,29 +169,89 @@ impl KernelStrategy {
         }
     }
 
-    /// Resolve to a concrete strategy for a layer with `cout` output
-    /// channels.  Selection order for `Auto`: `ADDERNET_KERNEL` env
-    /// override, then `Simd` when `cout` fills at least one 8-wide lane
-    /// group, else `Tiled` (sub-lane layers gain nothing from the lane
-    /// path).  Explicit strategies always win — the oracle tests rely
-    /// on that to pin each kernel regardless of the environment.
+    /// The `Auto` shape heuristic: `Simd` when `cout` fills at least one
+    /// 8-wide lane group, else `Tiled` — also the fallback pick wherever
+    /// `Winograd` does not apply (f32, dense, ineligible conv shapes).
+    fn heuristic(cout: usize) -> Resolved {
+        if cout >= simd::LANES {
+            Resolved::Simd
+        } else {
+            Resolved::Tiled
+        }
+    }
+
+    /// Resolve to a concrete row/dense strategy for a layer with `cout`
+    /// output channels.  Selection order for `Auto`: `ADDERNET_KERNEL`
+    /// env override, then the [`Self::heuristic`] shape pick.  Explicit
+    /// strategies always win — the oracle tests rely on that to pin each
+    /// kernel regardless of the environment.  `Winograd` resolves to the
+    /// heuristic pick here: the transform path exists only for eligible
+    /// integer convs, which route through [`Self::resolve_conv`]
+    /// instead; every other call site (f32 convs, dense layers) gets the
+    /// `Auto` fallback this returns.
     pub fn resolve(self, cout: usize) -> Resolved {
         match self {
             KernelStrategy::Naive => Resolved::Naive,
             KernelStrategy::Tiled => Resolved::Tiled,
             KernelStrategy::Simd => Resolved::Simd,
+            KernelStrategy::Winograd => Self::heuristic(cout),
             KernelStrategy::Auto => match KernelStrategy::from_env() {
-                KernelStrategy::Auto => {
-                    if cout >= simd::LANES {
-                        Resolved::Simd
-                    } else {
-                        Resolved::Tiled
-                    }
-                }
+                KernelStrategy::Auto => Self::heuristic(cout),
                 pinned => pinned.resolve(cout),
             },
         }
     }
+
+    /// Shape-aware resolution for INTEGER convs — the one place the
+    /// Winograd transform path can be chosen.  `Winograd` (explicit or
+    /// via the `ADDERNET_KERNEL` pin) takes the transform-domain engine
+    /// exactly when the [`winograd::applies`] guard passes AND the
+    /// kernel family permits it: the mult conv is algebraically exact;
+    /// the adder conv additionally requires the explicit
+    /// `ADDERNET_WINOGRAD_ADDER=approx` opt-in (the l1 reformulation is
+    /// an approximation, so `Auto`/default dispatch never picks it).
+    /// Every other case falls back to [`Self::resolve`]'s pick, which
+    /// keeps all registered archs servable under `--kernel winograd`.
+    pub fn resolve_conv(self, cout: usize, kh: usize, kw: usize,
+                        stride: usize, cin: usize, kind: SimKernel)
+                        -> ResolvedConv {
+        match self {
+            KernelStrategy::Winograd => {
+                if winograd::applies(kh, kw, stride, cin) {
+                    match kind {
+                        SimKernel::Mult => ResolvedConv::Winograd,
+                        SimKernel::Adder if winograd::adder_l1_opted_in() => {
+                            ResolvedConv::WinogradL1
+                        }
+                        SimKernel::Adder => {
+                            ResolvedConv::Row(Self::heuristic(cout))
+                        }
+                    }
+                } else {
+                    ResolvedConv::Row(Self::heuristic(cout))
+                }
+            }
+            KernelStrategy::Auto => match KernelStrategy::from_env() {
+                KernelStrategy::Auto => {
+                    ResolvedConv::Row(Self::heuristic(cout))
+                }
+                pinned => pinned.resolve_conv(cout, kh, kw, stride, cin, kind),
+            },
+            explicit => ResolvedConv::Row(explicit.resolve(cout)),
+        }
+    }
+}
+
+/// Observability hook: count each kernel dispatch by the concrete engine
+/// it resolved to — `addernet_kernel_resolved_total{kernel="simd"}` in
+/// the global metrics registry.  `Auto` and the Winograd shape guard
+/// make the concrete pick invisible from the call site; this (plus the
+/// per-layer `kernel` column in `repro profile`) records it.
+pub(crate) fn note_resolution(label: &'static str) {
+    crate::obs::registry::global()
+        .counter(&format!("addernet_kernel_resolved_total{{kernel=\"{label}\"}}"),
+                 "kernel dispatches per concrete engine")
+        .inc();
 }
 
 /// Gather the im2col patches for one (batch, output-row) pair:
@@ -216,11 +326,12 @@ mod tests {
     #[test]
     fn parse_round_trips_labels() {
         for s in [KernelStrategy::Naive, KernelStrategy::Tiled,
-                  KernelStrategy::Simd, KernelStrategy::Auto] {
+                  KernelStrategy::Simd, KernelStrategy::Winograd,
+                  KernelStrategy::Auto] {
             assert_eq!(KernelStrategy::parse(s.label()), Some(s));
         }
         assert_eq!(KernelStrategy::parse(" SIMD "), Some(KernelStrategy::Simd));
-        assert_eq!(KernelStrategy::parse("winograd"), None);
+        assert_eq!(KernelStrategy::parse("fft"), None);
     }
 
     #[test]
@@ -244,5 +355,54 @@ mod tests {
         };
         assert_eq!(KernelStrategy::Auto.resolve(1), expect.0);
         assert_eq!(KernelStrategy::Auto.resolve(64), expect.1);
+    }
+
+    #[test]
+    fn winograd_resolves_by_shape_and_kind() {
+        let w = KernelStrategy::Winograd;
+        // eligible integer mult conv -> the exact transform path
+        assert_eq!(w.resolve_conv(16, 3, 3, 1, 16, SimKernel::Mult),
+                   ResolvedConv::Winograd);
+        // adder convs never take the transform path silently (the l1
+        // opt-in env is not set in the test environment)
+        if !winograd::adder_l1_opted_in() {
+            assert_eq!(w.resolve_conv(16, 3, 3, 1, 16, SimKernel::Adder),
+                       ResolvedConv::Row(Resolved::Simd));
+        }
+        // shape-guard fallbacks: 1x1, 5x5, strided, too-wide cin
+        for (kh, kw, stride, cin) in
+            [(1, 1, 1, 16), (5, 5, 1, 16), (3, 3, 2, 16), (3, 3, 3, 16),
+             (3, 3, 1, winograd::MAX_CIN + 1)] {
+            assert_eq!(w.resolve_conv(64, kh, kw, stride, cin, SimKernel::Mult),
+                       ResolvedConv::Row(Resolved::Simd),
+                       "guard failed for k{kh}x{kw} s{stride} cin{cin}");
+            assert_eq!(w.resolve_conv(2, kh, kw, stride, cin, SimKernel::Mult),
+                       ResolvedConv::Row(Resolved::Tiled));
+        }
+        // the row-only resolve (f32/dense call sites) takes the
+        // heuristic pick, never a transform variant
+        assert_eq!(w.resolve(64), Resolved::Simd);
+        assert_eq!(w.resolve(2), Resolved::Tiled);
+        // explicit row strategies resolve conv shapes to themselves
+        assert_eq!(KernelStrategy::Simd.resolve_conv(4, 3, 3, 1, 8,
+                                                     SimKernel::Mult),
+                   ResolvedConv::Row(Resolved::Simd));
+        assert_eq!(KernelStrategy::Naive.resolve_conv(4, 3, 3, 1, 8,
+                                                      SimKernel::Adder),
+                   ResolvedConv::Row(Resolved::Naive));
+    }
+
+    #[test]
+    fn resolved_labels_are_distinct() {
+        let labels = [ResolvedConv::Row(Resolved::Naive).label(),
+                      ResolvedConv::Row(Resolved::Tiled).label(),
+                      ResolvedConv::Row(Resolved::Simd).label(),
+                      ResolvedConv::Winograd.label(),
+                      ResolvedConv::WinogradL1.label()];
+        for (i, a) in labels.iter().enumerate() {
+            for b in labels.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
     }
 }

@@ -1,0 +1,499 @@
+//! Winograd F(2x2, 3x3) transform-domain conv kernels.
+//!
+//! The minimal-filtering identity `Y = At [ (G g Gt) . (Bt d Bt') ] A`
+//! computes a 2x2 output tile of a 3x3/stride-1 convolution with 16
+//! elementwise products instead of 36 MACs — a 2.25x cut in inner-loop
+//! arithmetic.  Two sub-kernels with different correctness contracts
+//! live here:
+//!
+//! * [`conv2d_int_mult`] — the **exact** integer mult conv.  `B` and `A`
+//!   have only 0/±1 entries, so the data and output transforms are
+//!   integer sums; `G` has ½ entries, so weights are transformed with
+//!   `2G` instead, keeping them integral at 4x scale.  The transform
+//!   identity then yields exactly `4 *` the direct i32 conv accumulator,
+//!   and the final exact division by 4 restores it — **bit-identical**
+//!   to the naive/tiled/simd row kernels, which is what lets
+//!   `KernelStrategy::Winograd` slot under the existing int-path oracle
+//!   contract with no tolerance.
+//!
+//! * [`conv2d_int_adder_l1`] — Li et al.'s transform-domain **adder**
+//!   reformulation ("Winograd Algorithm for AdderNet", arXiv:2105.05530):
+//!   the elementwise product is replaced by `-|u - v|` and the output
+//!   transform by `|A|` so it only aggregates.  This is an
+//!   **approximation by design** (the l1 metric does not factor through
+//!   the Winograd transforms), so it must never silently replace the
+//!   exact adder conv: dispatch reaches it only through the explicit
+//!   [`adder_l1_opted_in`] opt-in (`ADDERNET_WINOGRAD_ADDER=approx`) on
+//!   top of `--kernel winograd`, and it carries its own tolerance-based
+//!   oracle in `tests/functional_oracle.rs` instead of the bit-identity
+//!   contract.
+//!
+//! Both kernels apply only to 3x3/stride-1 (dilation-1) convs — the
+//! [`applies`] shape guard; `KernelStrategy::resolve_conv` falls back to
+//! the `Auto` heuristic's row-kernel pick everywhere else, so every
+//! registered arch serves end-to-end under `--kernel winograd`.
+//!
+//! Transform matrices (F(2x2, 3x3), Lavin & Gray layout):
+//!
+//! ```text
+//! Bt = [1  0 -1  0]    2G = [2  0  0]    At = [1 1  1  0]
+//!      [0  1  1  0]         [1  1  1]         [0 1 -1 -1]
+//!      [0 -1  1  0]         [1 -1  1]
+//!      [0  1  0 -1]         [0  0  2]
+//! ```
+//!
+//! Overflow bounds for the exact path: operands are capped at 8 bits by
+//! `QuantPlan::supports` (|q| <= 127), so |U| <= 9*127, |V| <= 4*127 and
+//! a transform-domain tap product is <= 36*127^2 = 580_644 — the i32
+//! elementwise accumulator is safe up to [`MAX_CIN`] input channels
+//! (the shape guard falls back beyond it).  The inverse transform sums
+//! up to 9 such accumulators in i64 headroom; the exact /4 lands back on
+//! the direct conv's i32 accumulator value.
+
+use crate::util::threads::parallel_chunks;
+
+/// Input-channel cap for the exact mult path's i32 transform-domain
+/// accumulator: 36 * 127^2 * 3600 < 2^31.  Registered archs top out at
+/// 512 channels; wider convs fall back to the row kernels.
+pub const MAX_CIN: usize = 3600;
+
+/// Shape guard: Winograd F(2x2, 3x3) covers exactly the 3x3/stride-1
+/// convs (dilation is always 1 in this engine).
+pub fn applies(kh: usize, kw: usize, stride: usize, cin: usize) -> bool {
+    kh == 3 && kw == 3 && stride == 1 && cin <= MAX_CIN
+}
+
+/// The explicit opt-in for the approximate l1 adder reformulation:
+/// `ADDERNET_WINOGRAD_ADDER=approx` (read once per process).  Without
+/// it, adder convs under `--kernel winograd` keep the exact row-kernel
+/// fallback — `Auto` never resolves to the approximation.
+pub fn adder_l1_opted_in() -> bool {
+    static OPTED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *OPTED.get_or_init(|| {
+        std::env::var("ADDERNET_WINOGRAD_ADDER")
+            .map(|v| v.trim().eq_ignore_ascii_case("approx"))
+            .unwrap_or(false)
+    })
+}
+
+/// Transform every (ci, co) 3x3 filter into the 4x4 Winograd domain with
+/// `2G` (integral, 4x scale): `U[(pos * cin + ci) * cout + co]`,
+/// `pos = 4*r + c`.  The per-position `cin`-major layout matches the
+/// elementwise stage's access pattern (broadcast one V value across a
+/// contiguous cout row).
+fn transform_weights(wdat: &[i32], cin: usize, cout: usize) -> Vec<i32> {
+    let mut u = vec![0i32; 16 * cin * cout];
+    for ci in 0..cin {
+        for co in 0..cout {
+            let g = |ky: usize, kx: usize| wdat[((ky * 3 + kx) * cin + ci) * cout + co];
+            // t = (2G) . g, one 4-row column per kernel column kx
+            let mut t = [[0i32; 3]; 4];
+            for (kx, col) in (0..3).map(|kx| (kx, [g(0, kx), g(1, kx), g(2, kx)])) {
+                t[0][kx] = 2 * col[0];
+                t[1][kx] = col[0] + col[1] + col[2];
+                t[2][kx] = col[0] - col[1] + col[2];
+                t[3][kx] = 2 * col[2];
+            }
+            // U = t . (2G)t
+            for (r, tr) in t.iter().enumerate() {
+                let row = [
+                    2 * tr[0],
+                    tr[0] + tr[1] + tr[2],
+                    tr[0] - tr[1] + tr[2],
+                    2 * tr[2],
+                ];
+                for (c, &v) in row.iter().enumerate() {
+                    u[((r * 4 + c) * cin + ci) * cout + co] = v;
+                }
+            }
+        }
+    }
+    u
+}
+
+/// Gather the zero-padded 4x4 x cin input patch for the tile whose
+/// top-left output is (2*t, ow0): `patch[(ky * 4 + kx) * cin + ci]`.
+#[allow(clippy::too_many_arguments)]
+fn gather_patch(xq: &[i32], h: usize, w_in: usize, cin: usize, b: usize,
+                t: usize, ow0: usize, pt: usize, pl: usize, patch: &mut [i32]) {
+    let x0 = ow0 as isize - pl as isize;
+    for ky in 0..4 {
+        let iy = (2 * t + ky) as isize - pt as isize;
+        let dst = &mut patch[ky * 4 * cin..(ky + 1) * 4 * cin];
+        if iy < 0 || iy >= h as isize {
+            dst.iter_mut().for_each(|v| *v = 0);
+            continue;
+        }
+        let row_off = (b * h + iy as usize) * w_in;
+        if x0 >= 0 && x0 + 4 <= w_in as isize {
+            let off = (row_off + x0 as usize) * cin;
+            dst.copy_from_slice(&xq[off..off + 4 * cin]);
+        } else {
+            for kx in 0..4 {
+                let ix = x0 + kx as isize;
+                let d = &mut dst[kx * cin..(kx + 1) * cin];
+                if ix < 0 || ix >= w_in as isize {
+                    d.iter_mut().for_each(|v| *v = 0);
+                } else {
+                    let off = (row_off + ix as usize) * cin;
+                    d.copy_from_slice(&xq[off..off + cin]);
+                }
+            }
+        }
+    }
+}
+
+/// Data transform `V = Bt d B` for every input channel of one gathered
+/// patch: `vbuf[pos * cin + ci]`.  Bt entries are 0/±1, so this is pure
+/// integer adds.
+fn transform_data(patch: &[i32], cin: usize, vbuf: &mut [i32]) {
+    for ci in 0..cin {
+        let d = |pos: usize| patch[pos * cin + ci];
+        // bt = Bt . d (rows), then v = bt . B (columns)
+        let mut bt = [0i32; 16];
+        for c in 0..4 {
+            let (d0, d1, d2, d3) = (d(c), d(4 + c), d(8 + c), d(12 + c));
+            bt[c] = d0 - d2;
+            bt[4 + c] = d1 + d2;
+            bt[8 + c] = d2 - d1;
+            bt[12 + c] = d1 - d3;
+        }
+        for r in 0..4 {
+            let (b0, b1, b2, b3) = (bt[4 * r], bt[4 * r + 1], bt[4 * r + 2], bt[4 * r + 3]);
+            vbuf[(4 * r) * cin + ci] = b0 - b2;
+            vbuf[(4 * r + 1) * cin + ci] = b1 + b2;
+            vbuf[(4 * r + 2) * cin + ci] = b2 - b1;
+            vbuf[(4 * r + 3) * cin + ci] = b1 - b3;
+        }
+    }
+}
+
+/// One tile-row of the exact mult path: all 2x2 output tiles with top
+/// row `2*t` of image `b`, written into `out_rows` (`rows` output rows
+/// of `wo * cout`; `rows == 1` drops the tile's bottom row at an odd
+/// output-height tail).
+#[allow(clippy::too_many_arguments)]
+fn tile_row_mult(xq: &[i32], h: usize, w_in: usize, cin: usize, u: &[i32],
+                 cout: usize, b: usize, t: usize, pt: usize, pl: usize,
+                 wo: usize, out_rows: &mut [i32], rows: usize,
+                 patch: &mut [i32], vbuf: &mut [i32], m: &mut [i32]) {
+    let mut ow0 = 0;
+    while ow0 < wo {
+        gather_patch(xq, h, w_in, cin, b, t, ow0, pt, pl, patch);
+        transform_data(patch, cin, vbuf);
+        // Elementwise stage: 16 independent (cin -> cout) contractions.
+        m.iter_mut().for_each(|v| *v = 0);
+        for pos in 0..16 {
+            let mrow = &mut m[pos * cout..(pos + 1) * cout];
+            for ci in 0..cin {
+                let xv = vbuf[pos * cin + ci];
+                if xv == 0 {
+                    continue;
+                }
+                let urow = &u[(pos * cin + ci) * cout..(pos * cin + ci + 1) * cout];
+                for (a, &uv) in mrow.iter_mut().zip(urow) {
+                    *a += xv * uv;
+                }
+            }
+        }
+        // Inverse transform At M A in i64 headroom; the result is 4x the
+        // direct conv accumulator (the 2G weight scaling, twice), so the
+        // shift by 2 is exact.
+        let cols = if ow0 + 1 < wo { 2 } else { 1 };
+        for co in 0..cout {
+            let mm = |pos: usize| m[pos * cout + co] as i64;
+            let at0 = [mm(0) + mm(4) + mm(8), mm(1) + mm(5) + mm(9),
+                       mm(2) + mm(6) + mm(10), mm(3) + mm(7) + mm(11)];
+            let at1 = [mm(4) - mm(8) - mm(12), mm(5) - mm(9) - mm(13),
+                       mm(6) - mm(10) - mm(14), mm(7) - mm(11) - mm(15)];
+            let y = [[at0[0] + at0[1] + at0[2], at0[1] - at0[2] - at0[3]],
+                     [at1[0] + at1[1] + at1[2], at1[1] - at1[2] - at1[3]]];
+            for (r, yr) in y.iter().enumerate().take(rows) {
+                for (c, &v) in yr.iter().enumerate().take(cols) {
+                    debug_assert_eq!(v & 3, 0, "winograd 4x output not divisible");
+                    out_rows[(r * wo + ow0 + c) * cout + co] = (v >> 2) as i32;
+                }
+            }
+        }
+        ow0 += 2;
+    }
+}
+
+/// Exact integer Winograd mult conv over already-quantized operands —
+/// the transform-domain twin of the row-kernel engines in
+/// `functional::conv2d_int_with`, bit-identical to them by algebraic
+/// exactness (see module docs).  `geom` is conv_geometry's
+/// `(pt, pl, ho, wo)`; `wdat` is the HWIO 3x3 filter block.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_int_mult(xq: &[i32], shape: (usize, usize, usize, usize),
+                       wdat: &[i32], cin: usize, cout: usize,
+                       geom: (usize, usize, usize, usize), max_threads: usize,
+                       out: &mut [i32]) {
+    let (n, h, w_in, xc) = shape;
+    let (pt, pl, ho, wo) = geom;
+    assert_eq!(xc, cin, "cin mismatch");
+    assert_eq!(wdat.len(), 9 * cin * cout, "winograd expects a 3x3 filter block");
+    assert_eq!(out.len(), n * ho * wo * cout, "output size mismatch");
+    if out.is_empty() {
+        return;
+    }
+    let u = transform_weights(wdat, cin, cout);
+    let row = wo * cout;
+    if ho % 2 == 0 {
+        // One chunk per tile row: tiles never straddle a chunk (or an
+        // image — each image holds ho/2 whole tile rows).
+        let tpi = ho / 2;
+        parallel_chunks(out, 2 * row, max_threads, |idx, chunk| {
+            let (b, t) = (idx / tpi, idx % tpi);
+            let mut patch = vec![0i32; 16 * cin];
+            let mut vbuf = vec![0i32; 16 * cin];
+            let mut m = vec![0i32; 16 * cout];
+            tile_row_mult(xq, h, w_in, cin, &u, cout, b, t, pt, pl, wo, chunk,
+                          2, &mut patch, &mut vbuf, &mut m);
+        });
+    } else {
+        // Odd output height (test-grid shapes): one chunk per image, the
+        // final tile row writes only its top output row.
+        parallel_chunks(out, ho * row, max_threads, |b, chunk| {
+            let mut patch = vec![0i32; 16 * cin];
+            let mut vbuf = vec![0i32; 16 * cin];
+            let mut m = vec![0i32; 16 * cout];
+            for t in 0..(ho + 1) / 2 {
+                let rows = if 2 * t + 1 < ho { 2 } else { 1 };
+                let s = &mut chunk[2 * t * row..(2 * t + rows) * row];
+                tile_row_mult(xq, h, w_in, cin, &u, cout, b, t, pt, pl, wo, s,
+                              rows, &mut patch, &mut vbuf, &mut m);
+            }
+        });
+    }
+}
+
+/// Round-half-even division by 4 for the l1 path's 4x-scaled outputs
+/// (the exact path divides exactly instead; here the scale mismatch is
+/// part of the approximation, so ties break like every other requant
+/// step in the int path).
+fn div4_round_even(v: i64) -> i64 {
+    let q = v >> 2;
+    match v & 3 {
+        0 | 1 => q,
+        2 => q + (q & 1),
+        _ => q + 1,
+    }
+}
+
+/// One tile-row of the approximate l1 adder path: elementwise
+/// `-|U - 4V|` in i64, aggregated through `|A|` (all-nonnegative output
+/// transform), divided by the 4x weight scale with round-half-even.
+#[allow(clippy::too_many_arguments)]
+fn tile_row_adder_l1(xq: &[i32], h: usize, w_in: usize, cin: usize, u: &[i32],
+                     cout: usize, b: usize, t: usize, pt: usize, pl: usize,
+                     wo: usize, out_rows: &mut [i32], rows: usize,
+                     patch: &mut [i32], vbuf: &mut [i32], m: &mut [i64]) {
+    let mut ow0 = 0;
+    while ow0 < wo {
+        gather_patch(xq, h, w_in, cin, b, t, ow0, pt, pl, patch);
+        transform_data(patch, cin, vbuf);
+        m.iter_mut().for_each(|v| *v = 0);
+        for pos in 0..16 {
+            let mrow = &mut m[pos * cout..(pos + 1) * cout];
+            for ci in 0..cin {
+                let xv4 = 4 * vbuf[pos * cin + ci];
+                let urow = &u[(pos * cin + ci) * cout..(pos * cin + ci + 1) * cout];
+                for (a, &uv) in mrow.iter_mut().zip(urow) {
+                    *a -= (uv - xv4).abs() as i64;
+                }
+            }
+        }
+        let cols = if ow0 + 1 < wo { 2 } else { 1 };
+        for co in 0..cout {
+            let mm = |pos: usize| m[pos * cout + co];
+            // |At| rows: [1 1 1 0] and [0 1 1 1]; |A| columns likewise.
+            let a0 = [mm(0) + mm(4) + mm(8), mm(1) + mm(5) + mm(9),
+                      mm(2) + mm(6) + mm(10), mm(3) + mm(7) + mm(11)];
+            let a1 = [mm(4) + mm(8) + mm(12), mm(5) + mm(9) + mm(13),
+                      mm(6) + mm(10) + mm(14), mm(7) + mm(11) + mm(15)];
+            let y = [[a0[0] + a0[1] + a0[2], a0[1] + a0[2] + a0[3]],
+                     [a1[0] + a1[1] + a1[2], a1[1] + a1[2] + a1[3]]];
+            for (r, yr) in y.iter().enumerate().take(rows) {
+                for (c, &v) in yr.iter().enumerate().take(cols) {
+                    let q = div4_round_even(v)
+                        .clamp(i32::MIN as i64, i32::MAX as i64);
+                    out_rows[(r * wo + ow0 + c) * cout + co] = q as i32;
+                }
+            }
+        }
+        ow0 += 2;
+    }
+}
+
+/// Approximate l1 transform-domain **adder** conv (Li et al.,
+/// arXiv:2105.05530) over already-quantized operands.  NOT bit-identical
+/// to the exact adder conv — see module docs for the opt-in and the
+/// tolerance oracle.  Same signature contract as [`conv2d_int_mult`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_int_adder_l1(xq: &[i32], shape: (usize, usize, usize, usize),
+                           wdat: &[i32], cin: usize, cout: usize,
+                           geom: (usize, usize, usize, usize),
+                           max_threads: usize, out: &mut [i32]) {
+    let (n, h, w_in, xc) = shape;
+    let (pt, pl, ho, wo) = geom;
+    assert_eq!(xc, cin, "cin mismatch");
+    assert_eq!(wdat.len(), 9 * cin * cout, "winograd expects a 3x3 filter block");
+    assert_eq!(out.len(), n * ho * wo * cout, "output size mismatch");
+    if out.is_empty() {
+        return;
+    }
+    let u = transform_weights(wdat, cin, cout);
+    let row = wo * cout;
+    if ho % 2 == 0 {
+        let tpi = ho / 2;
+        parallel_chunks(out, 2 * row, max_threads, |idx, chunk| {
+            let (b, t) = (idx / tpi, idx % tpi);
+            let mut patch = vec![0i32; 16 * cin];
+            let mut vbuf = vec![0i32; 16 * cin];
+            let mut m = vec![0i64; 16 * cout];
+            tile_row_adder_l1(xq, h, w_in, cin, &u, cout, b, t, pt, pl, wo,
+                              chunk, 2, &mut patch, &mut vbuf, &mut m);
+        });
+    } else {
+        parallel_chunks(out, ho * row, max_threads, |b, chunk| {
+            let mut patch = vec![0i32; 16 * cin];
+            let mut vbuf = vec![0i32; 16 * cin];
+            let mut m = vec![0i64; 16 * cout];
+            for t in 0..(ho + 1) / 2 {
+                let rows = if 2 * t + 1 < ho { 2 } else { 1 };
+                let s = &mut chunk[2 * t * row..(2 * t + rows) * row];
+                tile_row_adder_l1(xq, h, w_in, cin, &u, cout, b, t, pt, pl, wo,
+                                  s, rows, &mut patch, &mut vbuf, &mut m);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    /// Direct 3x3/stride-1 integer mult conv — the local truth the
+    /// transform path must reproduce bit-for-bit.
+    fn direct_mult(xq: &[i32], n: usize, h: usize, w_in: usize, cin: usize,
+                   wdat: &[i32], cout: usize,
+                   geom: (usize, usize, usize, usize)) -> Vec<i32> {
+        let (pt, pl, ho, wo) = geom;
+        let mut out = vec![0i32; n * ho * wo * cout];
+        for b in 0..n {
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    for co in 0..cout {
+                        let mut acc = 0i32;
+                        for ky in 0..3 {
+                            let iy = (oh + ky) as isize - pt as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..3 {
+                                let ix = (ow + kx) as isize - pl as isize;
+                                if ix < 0 || ix >= w_in as isize {
+                                    continue;
+                                }
+                                for ci in 0..cin {
+                                    let xv = xq[((b * h + iy as usize) * w_in
+                                        + ix as usize) * cin + ci];
+                                    let wv = wdat[((ky * 3 + kx) * cin + ci)
+                                        * cout + co];
+                                    acc += xv * wv;
+                                }
+                            }
+                        }
+                        out[((b * ho + oh) * wo + ow) * cout + co] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn rand_ops(rng: &mut XorShift64, len: usize, amp: f32) -> Vec<i32> {
+        (0..len).map(|_| (rng.next_f32_sym(amp)) as i32).collect()
+    }
+
+    #[test]
+    fn exact_mult_matches_direct_conv_bitwise() {
+        let mut rng = XorShift64::new(42);
+        // even and odd extents, SAME- and VALID-style paddings
+        for &(n, h, w_in, cin, cout, pt, pl) in &[
+            (1usize, 4usize, 4usize, 1usize, 1usize, 1usize, 1usize),
+            (2, 6, 8, 3, 5, 1, 1),
+            (1, 5, 7, 2, 4, 1, 1), // odd output height
+            (1, 6, 6, 2, 3, 0, 0), // valid: ho = h - 2
+            (1, 3, 3, 1, 2, 0, 0), // single-tile valid
+        ] {
+            let (ho, wo) = (h + 2 * pt - 2, w_in + 2 * pl - 2);
+            let xq = rand_ops(&mut rng, n * h * w_in * cin, 127.0);
+            let wdat = rand_ops(&mut rng, 9 * cin * cout, 127.0);
+            let want = direct_mult(&xq, n, h, w_in, cin, &wdat, cout,
+                                   (pt, pl, ho, wo));
+            let mut got = vec![0i32; want.len()];
+            conv2d_int_mult(&xq, (n, h, w_in, cin), &wdat, cin, cout,
+                            (pt, pl, ho, wo), 1, &mut got);
+            assert_eq!(got, want, "shape n{n} h{h} w{w_in} cin{cin} cout{cout}");
+            // and identically when the pool is allowed in
+            let mut par = vec![0i32; want.len()];
+            conv2d_int_mult(&xq, (n, h, w_in, cin), &wdat, cin, cout,
+                            (pt, pl, ho, wo), usize::MAX, &mut par);
+            assert_eq!(par, want, "parallel mismatch");
+        }
+    }
+
+    #[test]
+    fn shape_guard_covers_only_3x3_stride1() {
+        assert!(applies(3, 3, 1, 16));
+        assert!(!applies(1, 1, 1, 16));
+        assert!(!applies(5, 5, 1, 16));
+        assert!(!applies(3, 3, 2, 16));
+        assert!(!applies(3, 3, 3, 16));
+        assert!(!applies(3, 3, 1, MAX_CIN + 1));
+    }
+
+    #[test]
+    fn empty_output_is_a_no_op() {
+        // kernel larger than a VALID input: conv_geometry yields 0x0
+        let xq = vec![1i32; 4];
+        let mut out: Vec<i32> = Vec::new();
+        conv2d_int_mult(&xq, (1, 2, 2, 1), &[1; 9], 1, 1, (0, 0, 0, 0), 1,
+                        &mut out);
+        conv2d_int_adder_l1(&xq, (1, 2, 2, 1), &[1; 9], 1, 1, (0, 0, 0, 0), 1,
+                            &mut out);
+    }
+
+    #[test]
+    fn adder_l1_is_deterministic_and_nonpositive() {
+        let mut rng = XorShift64::new(7);
+        let (n, h, w_in, cin, cout) = (2usize, 6usize, 6usize, 3usize, 4usize);
+        let xq = rand_ops(&mut rng, n * h * w_in * cin, 127.0);
+        let wdat = rand_ops(&mut rng, 9 * cin * cout, 127.0);
+        let geom = (1, 1, h, w_in);
+        let mut a = vec![0i32; n * h * w_in * cout];
+        let mut b = vec![0i32; n * h * w_in * cout];
+        conv2d_int_adder_l1(&xq, (n, h, w_in, cin), &wdat, cin, cout, geom, 1,
+                            &mut a);
+        conv2d_int_adder_l1(&xq, (n, h, w_in, cin), &wdat, cin, cout, geom,
+                            usize::MAX, &mut b);
+        assert_eq!(a, b, "thread count changed the l1 result");
+        assert!(a.iter().all(|&v| v <= 0), "l1 outputs are -|.| aggregates");
+    }
+
+    #[test]
+    fn div4_round_even_ties_to_even() {
+        assert_eq!(div4_round_even(8), 2);
+        assert_eq!(div4_round_even(9), 2);
+        assert_eq!(div4_round_even(10), 2); // tie: 2.5 -> 2 (even)
+        assert_eq!(div4_round_even(6), 2); // tie: 1.5 -> 2 (even)
+        assert_eq!(div4_round_even(11), 3);
+        assert_eq!(div4_round_even(-10), -2); // -2.5 -> -2 (even)
+        assert_eq!(div4_round_even(-6), -2); // -1.5 -> -2 (even)
+        assert_eq!(div4_round_even(-9), -2);
+        assert_eq!(div4_round_even(-11), -3);
+    }
+}

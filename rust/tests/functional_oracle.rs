@@ -1,6 +1,13 @@
-//! Oracle tests: every kernel strategy (`Naive`, `Tiled`, `Simd`, plus
-//! the `Auto` selector) vs the retained naive reference
-//! (`addernet::sim::reference`).
+//! Oracle tests: every kernel strategy (`Naive`, `Tiled`, `Simd`,
+//! `Winograd`, plus the `Auto` selector) vs the retained naive
+//! reference (`addernet::sim::reference`).
+//!
+//! `Winograd` rides the same grids as the row strategies: on eligible
+//! integer mult convs (3x3/stride-1) it takes the exact transform-
+//! domain path, everywhere else (f32, adder without the l1 opt-in,
+//! ineligible shapes) it falls back to the Auto heuristic's pick — so
+//! the bit-identity contract below covers both the transform and the
+//! shape guard.
 //!
 //! Three tiers:
 //! * a deterministic shape grid — kernels 1x1/3x3/5x5, strides 1-2,
@@ -28,11 +35,12 @@ use addernet::util::XorShift64;
 
 /// The concrete strategies pinned against the reference.  `Naive`
 /// dispatches *to* the reference, so its rows double as a dispatch
-/// test; `Tiled` and `Simd` are the real subjects.
-const STRATEGIES: [KernelStrategy; 4] = [
+/// test; `Tiled`, `Simd` and `Winograd` are the real subjects.
+const STRATEGIES: [KernelStrategy; 5] = [
     KernelStrategy::Naive,
     KernelStrategy::Tiled,
     KernelStrategy::Simd,
+    KernelStrategy::Winograd,
     KernelStrategy::Auto,
 ];
 
@@ -292,6 +300,153 @@ fn randomized_cross_strategy_oracle() {
     }
     // the sampler must keep most cases non-degenerate
     assert!(zero_output_cases < 25, "sampler degenerated: {zero_output_cases}/50");
+}
+
+// ---------------------------------------------------------------------------
+// Winograd: explicit shape-guard cases + the opt-in l1 reformulation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn winograd_shape_guard_falls_back_bit_identically() {
+    // The cases the guard must refuse: 1x1 (no spatial window), 5x5,
+    // stride 2 and 3, kernel larger than the input, non-square 3x1.
+    // Each must produce EXACTLY the reference on the int path — the
+    // fallback is the Auto heuristic's row kernel, not a different
+    // numeric contract.
+    let mut rng = XorShift64::new(4242);
+    let calib = LayerCalib { feat_max_abs: 1.5, weight_max_abs: 1.0 };
+    let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+    // (h, w, kh, kw, stride, cin, cout, padding)
+    let cases: &[(usize, usize, usize, usize, usize, usize, usize, Padding)] = &[
+        (8, 8, 1, 1, 1, 4, 12, Padding::Same),
+        (8, 8, 5, 5, 1, 2, 9, Padding::Same),
+        (8, 8, 3, 3, 2, 4, 16, Padding::Same),
+        (9, 9, 3, 3, 3, 2, 10, Padding::Valid),
+        (2, 2, 3, 3, 1, 3, 8, Padding::Same),
+        (8, 8, 3, 1, 1, 2, 6, Padding::Same),
+    ];
+    for &(h, w, kh, kw, stride, cin, cout, padding) in cases {
+        let x = Tensor::new((2, h, w, cin),
+                            rand_vec(&mut rng, 2 * h * w * cin, 1.5));
+        let wdat = rand_vec(&mut rng, kh * kw * cin * cout, 1.0);
+        let cw = ConvW { data: &wdat, kh, kw, cin, cout };
+        for kind in [SimKernel::Adder, SimKernel::Mult] {
+            let want = reference::conv2d_quant(&x, &cw, stride, padding, kind,
+                                               cfg, &calib);
+            let got = conv2d_quant_with(KernelStrategy::Winograd, &x, &cw,
+                                        stride, padding, kind, cfg, &calib);
+            let what = format!("winograd guard {kind:?} k{kh}x{kw} s{stride} \
+                                {cin}->{cout} {padding:?}");
+            assert_eq!(got.shape, want.shape, "{what}");
+            assert_eq!(got.data, want.data, "{what}");
+        }
+    }
+}
+
+#[test]
+fn winograd_l1_adder_is_opt_in_only() {
+    use addernet::sim::kernels::{winograd, ResolvedConv};
+    // The l1 reformulation is an approximation by design, so neither
+    // `Auto` nor plain `--kernel winograd` may silently route an adder
+    // conv through it — only the explicit ADDERNET_WINOGRAD_ADDER
+    // opt-in does.  (Guarded so a developer running the suite WITH the
+    // opt-in set doesn't see a false failure.)
+    if winograd::adder_l1_opted_in() {
+        return;
+    }
+    for strat in [KernelStrategy::Auto, KernelStrategy::Winograd] {
+        let r = strat.resolve_conv(16, 3, 3, 1, 16, SimKernel::Adder);
+        assert!(!matches!(r, ResolvedConv::WinogradL1),
+                "{} resolved an adder conv to the l1 approximation \
+                 without the opt-in", strat.label());
+    }
+    // the mult path takes the exact transform on the same shape
+    assert!(matches!(
+        KernelStrategy::Winograd.resolve_conv(16, 3, 3, 1, 16, SimKernel::Mult),
+        ResolvedConv::Winograd));
+}
+
+#[test]
+fn winograd_l1_adder_tolerance_oracle() {
+    use addernet::sim::kernels::winograd;
+    // The l1 reformulation (Li et al., arXiv:2105.05530) aggregates
+    // -|U - 4V| in the transform domain, which does NOT equal the
+    // spatial -sum|x - w| — so its oracle is tolerance- and
+    // property-based instead of bit-identity:
+    //  * deterministic across thread counts,
+    //  * every output is a nonpositive l1-style score,
+    //  * jointly doubling inputs and weights doubles every output up to
+    //    the divide-by-4 rounding (|err| <= 2),
+    //  * total magnitude tracks the exact spatial adder conv within a
+    //    generous band on random int8-range data (same taps, different
+    //    aggregation order).
+    let (n, h, w, cin, cout) = (2usize, 8usize, 8usize, 4usize, 6usize);
+    let (pt, pl, ho, wo) = (1usize, 1usize, 8usize, 8usize); // 3x3/s1 SAME
+    let mut rng = XorShift64::new(9090);
+    let xq: Vec<i32> =
+        (0..n * h * w * cin).map(|_| (rng.next_f32_sym(50.0)) as i32).collect();
+    let wq: Vec<i32> =
+        (0..9 * cin * cout).map(|_| (rng.next_f32_sym(50.0)) as i32).collect();
+
+    let mut got = vec![0i32; n * ho * wo * cout];
+    winograd::conv2d_int_adder_l1(&xq, (n, h, w, cin), &wq, cin, cout,
+                                  (pt, pl, ho, wo), 1, &mut got);
+    let mut got_mt = vec![0i32; got.len()];
+    winograd::conv2d_int_adder_l1(&xq, (n, h, w, cin), &wq, cin, cout,
+                                  (pt, pl, ho, wo), usize::MAX, &mut got_mt);
+    assert_eq!(got, got_mt, "l1 kernel must be thread-count deterministic");
+    assert!(got.iter().all(|&v| v <= 0), "l1 outputs are -|.| aggregates");
+
+    // homogeneity: doubling both operands doubles the pre-division
+    // accumulator exactly, so outputs match 2x up to div4 rounding
+    let xq2: Vec<i32> = xq.iter().map(|v| v * 2).collect();
+    let wq2: Vec<i32> = wq.iter().map(|v| v * 2).collect();
+    let mut got2 = vec![0i32; got.len()];
+    winograd::conv2d_int_adder_l1(&xq2, (n, h, w, cin), &wq2, cin, cout,
+                                  (pt, pl, ho, wo), 1, &mut got2);
+    for (i, (&y2, &y)) in got2.iter().zip(&got).enumerate() {
+        assert!((y2 as i64 - 2 * y as i64).abs() <= 2,
+                "homogeneity violated at {i}: 2x-input {y2} vs 2*{y}");
+    }
+
+    // spatial l1 truth for the tracking band
+    let mut spatial = vec![0i64; got.len()];
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for co in 0..cout {
+                    let mut acc = 0i64;
+                    for ky in 0..3 {
+                        for kx in 0..3 {
+                            let iy = (oy + ky) as isize - pt as isize;
+                            let ix = (ox + kx) as isize - pl as isize;
+                            for ci in 0..cin {
+                                let xv = if iy >= 0 && (iy as usize) < h
+                                    && ix >= 0 && (ix as usize) < w
+                                {
+                                    xq[((b * h + iy as usize) * w
+                                        + ix as usize) * cin + ci]
+                                } else {
+                                    0
+                                };
+                                let wv = wq[((ky * 3 + kx) * cin + ci) * cout
+                                            + co];
+                                acc -= (xv as i64 - wv as i64).abs();
+                            }
+                        }
+                    }
+                    spatial[((b * ho + oy) * wo + ox) * cout + co] = acc;
+                }
+            }
+        }
+    }
+    let e_wino: f64 = got.iter().map(|&v| (v as f64).abs()).sum();
+    let e_spatial: f64 = spatial.iter().map(|&v| (v as f64).abs()).sum();
+    assert!(e_wino > 0.0 && e_spatial > 0.0);
+    let ratio = e_wino / e_spatial;
+    assert!((0.1..=10.0).contains(&ratio),
+            "transform-domain l1 energy drifted from the spatial adder \
+             conv: ratio {ratio:.3}");
 }
 
 // ---------------------------------------------------------------------------

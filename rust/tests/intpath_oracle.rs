@@ -9,8 +9,10 @@
 //!   — and therefore the i32 accumulators — are the same integers;
 //! * **cross-strategy whole-model identity** — the whole stack (conv
 //!   chain AND the integer dense head, i64-exact with a single pow2
-//!   logit rescale) agrees across Naive/Tiled/Simd/Auto bit for bit,
-//!   logits included;
+//!   logit rescale) agrees across Naive/Tiled/Simd/Winograd/Auto bit
+//!   for bit, logits included; on mult plans the Winograd strategy
+//!   takes the exact transform-domain path on every 3x3/stride-1
+//!   layer, so its rows double as the transform's whole-model oracle;
 //! * **plan vs per-call tracking** — the compiled plan serves logits
 //!   close to the per-call experiment path and the f32 reference at
 //!   int16/int8.
@@ -24,10 +26,11 @@ use addernet::sim::functional::{self, conv2d_quant_with, synth_params, Arch,
 use addernet::sim::intpath::{self, IntTensor, PlanRunner};
 use addernet::util::XorShift64;
 
-const STRATEGIES: [KernelStrategy; 4] = [
+const STRATEGIES: [KernelStrategy; 5] = [
     KernelStrategy::Naive,
     KernelStrategy::Tiled,
     KernelStrategy::Simd,
+    KernelStrategy::Winograd,
     KernelStrategy::Auto,
 ];
 
@@ -124,6 +127,46 @@ fn whole_model_plan_identical_across_strategies() {
             assert_eq!(l, &logits[0],
                        "{arch:?} logits [{}] vs [{}] must be bit-identical",
                        STRATEGIES[i].label(), STRATEGIES[0].label());
+        }
+    }
+}
+
+/// ISSUE-9 acceptance: on MULT int8 plans the Winograd transform path
+/// actually engages (every 3x3/stride-1 conv; the shape guard covers
+/// the rest) and the whole-model logits stay bit-identical to the row
+/// kernels for EVERY servable arch — the transform is exact, not
+/// approximately close.
+#[test]
+fn mult_plans_bit_identical_with_winograd_every_arch() {
+    let cfg = QuantCfg { bits: 8, mode: Mode::SharedScale };
+    for arch in Arch::ALL {
+        let params = synth_params(arch, 17);
+        let calib: Calibration = params.keys()
+            .filter_map(|k| k.strip_suffix("/conv_w"))
+            .map(|n| (n.to_string(),
+                      LayerCalib { feat_max_abs: 2.0, weight_max_abs: 0.5 }))
+            .collect();
+        let plan = QuantPlan::build(&params, arch, SimKernel::Mult, cfg,
+                                    &calib).unwrap();
+        let mut rng = XorShift64::new(71);
+        let x = rand_tensor(&mut rng, (1, 32, 32, 1), 1.0);
+        let simd = PlanRunner { plan: &plan, strategy: KernelStrategy::Simd }
+            .forward(&x);
+        let wino = PlanRunner { plan: &plan,
+                                strategy: KernelStrategy::Winograd }
+            .forward(&x);
+        assert_eq!(wino.shape, simd.shape, "{arch:?}");
+        assert!(wino.data.iter().all(|v| v.is_finite()));
+        assert_eq!(wino.data, simd.data,
+                   "{arch:?}: winograd mult plan logits must be bit-identical \
+                    to simd");
+        // pin the naive reference too where it's cheap — lenet5 is the
+        // all-fallback case (5x5 convs), resnet8 the all-transform case
+        if matches!(arch, Arch::Lenet5 | Arch::Resnet8) {
+            let naive = PlanRunner { plan: &plan,
+                                     strategy: KernelStrategy::Naive }
+                .forward(&x);
+            assert_eq!(wino.data, naive.data, "{arch:?}: winograd vs naive");
         }
     }
 }
