@@ -1,23 +1,13 @@
 //! Shared micro-bench harness (criterion is not in the offline vendored
 //! set): median-of-N wall-clock timing with warm-up.
-
-use std::time::Instant;
+//!
+//! The timing loop itself lives in `addernet::lab::measure` — ONE
+//! implementation shared by the benches and the `repro lab` experiment
+//! runner — and this module just re-exports it for the bench binaries.
 
 /// Time `f` `iters` times after `warmup` runs; returns (median_s, mean_s).
-pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
-    for _ in 0..warmup {
-        f();
-    }
-    let mut samples = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        let t0 = Instant::now();
-        f();
-        samples.push(t0.elapsed().as_secs_f64());
-    }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let median = samples[samples.len() / 2];
-    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-    (median, mean)
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, f: F) -> (f64, f64) {
+    addernet::lab::measure::time_it(warmup, iters, f)
 }
 
 /// Pretty-print one benchmark line.

@@ -21,31 +21,40 @@
 //!        are present and the crate is built with --features pjrt — the
 //!        training/serving hot loop.
 //!
-//! The per-strategy medians and the derived ratios are also written as
-//! JSON (default `target/hotpath.json`, override with `HOTPATH_JSON`)
-//! so CI can persist the record as an artifact.
+//! The fixtures and timing loops live in `addernet::lab::measure` —
+//! the SAME cores the `repro lab` experiment runner executes, so a
+//! bench row and the lab's recorded key for the same point can never
+//! measure different things.  The per-strategy medians and the derived
+//! ratios are also written as JSON (default `target/hotpath.json`,
+//! override with `HOTPATH_JSON`) for the legacy `repro bench check`
+//! path; CI now gates through `repro lab run` + `lab check`.
 
 mod common;
 
+use addernet::data;
+use addernet::lab::measure;
 use addernet::quant::plan::QuantPlan;
-use addernet::quant::{LayerCalib, Mode};
+use addernet::quant::Mode;
 use addernet::report::quantrep;
-use addernet::sim::functional::{conv2d_quant_with, conv2d_with, synth_params,
-                                Arch, ConvW, ExecMode, KernelStrategy, QuantCfg,
-                                Runner, SimKernel, Tensor};
+use addernet::sim::functional::{synth_params, Arch, ExecMode, KernelStrategy,
+                                QuantCfg, Runner, SimKernel, Tensor};
 use addernet::sim::intpath::PlanRunner;
-use addernet::util::XorShift64;
-use addernet::{data, nn};
 
 /// One measured row: (json_key, naive_s, tiled_s, simd_s).
 type Row = (String, f64, f64, f64);
 
-fn bench_strategy_trio(name: &str, json_key: &str,
-                       mut run: impl FnMut(KernelStrategy), macs: f64,
+fn bench_strategy_trio(lb: &measure::LayerBench, name: &str, json_key: &str,
+                       kind: SimKernel, quant: Option<QuantCfg>,
                        rows: &mut Vec<Row>) {
-    let (naive, _) = common::time_it(1, 5, || run(KernelStrategy::Naive));
-    let (tiled, _) = common::time_it(2, 9, || run(KernelStrategy::Tiled));
-    let (simd, _) = common::time_it(2, 9, || run(KernelStrategy::Simd));
+    let time = |strat: KernelStrategy, warmup: usize, iters: usize| match quant
+    {
+        None => lb.time_f32(strat, kind, warmup, iters),
+        Some(cfg) => lb.time_quant(strat, kind, cfg, warmup, iters),
+    };
+    let naive = time(KernelStrategy::Naive, 1, 5);
+    let tiled = time(KernelStrategy::Tiled, 2, 9);
+    let simd = time(KernelStrategy::Simd, 2, 9);
+    let macs = lb.macs();
     common::report(&format!("{name} (naive reference)"), naive, macs, "MAC");
     common::report(&format!("{name} (tiled engine)"), tiled, macs, "MAC");
     common::report(&format!("{name} (simd kernel)"), simd, macs, "MAC");
@@ -56,33 +65,21 @@ fn bench_strategy_trio(name: &str, json_key: &str,
 
 fn main() {
     println!("=== bench hotpath (§Perf) ===");
-    let mut rng = XorShift64::new(1);
     let mut rows: Vec<Row> = Vec::new();
 
     // L3a: resnet-shape conv (the heaviest functional-sim layer),
-    // per kernel strategy.
-    let x = Tensor::new((8, 32, 32, 16),
-                        (0..8 * 32 * 32 * 16).map(|_| rng.next_f32_sym(1.0)).collect());
-    let wdat: Vec<f32> = (0..3 * 3 * 16 * 16).map(|_| rng.next_f32_sym(1.0)).collect();
-    let w = ConvW { data: &wdat, kh: 3, kw: 3, cin: 16, cout: 16 };
-    let macs = 8.0 * 32.0 * 32.0 * 9.0 * 16.0 * 16.0;
+    // per kernel strategy — the lab's shared B=8 fixture.
+    let lb = measure::LayerBench::new(8);
     println!("functional conv 3x3 16->16 (B=8, 32x32), naive vs tiled vs simd:");
     for (name, key, kind) in [("f32 adder", "f32_adder", SimKernel::Adder),
                               ("f32 mult", "f32_mult", SimKernel::Mult)] {
-        bench_strategy_trio(name, key, |strat| {
-            std::hint::black_box(conv2d_with(strat, &x, &w, 1, nn::Padding::Same,
-                                             kind));
-        }, macs, &mut rows);
+        bench_strategy_trio(&lb, name, key, kind, None, &mut rows);
     }
-    let calib = LayerCalib { feat_max_abs: 1.0, weight_max_abs: 1.0 };
     for (name, key, bits) in [("int8 adder", "int8_adder", 8u32),
                               ("int16 adder", "int16_adder", 16)] {
         let cfg = QuantCfg { bits, mode: Mode::SharedScale };
-        bench_strategy_trio(name, key, |strat| {
-            std::hint::black_box(conv2d_quant_with(
-                strat, &x, &w, 1, nn::Padding::Same, SimKernel::Adder, cfg,
-                &calib));
-        }, macs, &mut rows);
+        bench_strategy_trio(&lb, name, key, SimKernel::Adder, Some(cfg),
+                            &mut rows);
     }
 
     // int8 mult trio plus the Winograd transform-domain engine, which
@@ -90,17 +87,11 @@ fn main() {
     // gated as a straight speedup: winograd_vs_simd is this layer's
     // acceptance ratio (>= 1.2x).
     let cfg8 = QuantCfg { bits: 8, mode: Mode::SharedScale };
-    bench_strategy_trio("int8 mult", "int8_mult", |strat| {
-        std::hint::black_box(conv2d_quant_with(
-            strat, &x, &w, 1, nn::Padding::Same, SimKernel::Mult, cfg8,
-            &calib));
-    }, macs, &mut rows);
-    let (wino_s, _) = common::time_it(2, 9, || {
-        std::hint::black_box(conv2d_quant_with(
-            KernelStrategy::Winograd, &x, &w, 1, nn::Padding::Same,
-            SimKernel::Mult, cfg8, &calib));
-    });
-    common::report("int8 mult (winograd engine)", wino_s, macs, "MAC");
+    bench_strategy_trio(&lb, "int8 mult", "int8_mult", SimKernel::Mult,
+                        Some(cfg8), &mut rows);
+    let wino_s = lb.time_quant(KernelStrategy::Winograd, SimKernel::Mult,
+                               cfg8, 2, 9);
+    common::report("int8 mult (winograd engine)", wino_s, lb.macs(), "MAC");
 
     // derived: int-vs-f32 throughput on the engine strategies — the
     // quantized-serving acceptance ratio (int8 >= 1.0x means the int
@@ -189,23 +180,20 @@ fn main() {
     derived.push(("e2e_cnv6_int8_plan_s".to_string(), cnv6_s));
 
     // Simulated-accelerator cycle counts for the serving plans (hwsim
-    // backend, P=1024).  Deterministic and machine-portable — unlike the
-    // wall-clock medians these can gate as absolutes; the committed
-    // ratio gate rides on hw_mult_over_adder_latency.
+    // backend, P=1024), through the lab's deterministic measurement
+    // cores — the exact numbers `repro lab run` records and `lab diff`
+    // pins bit-for-bit.  Unlike the wall-clock medians these gate as
+    // absolutes; the committed ratio gate rides on
+    // hw_mult_over_adder_latency.
     let hwp = addernet::sim::hwsim::DEFAULT_PARALLELISM;
-    let hw_lenet = addernet::sim::hwsim::per_image_cost(&plan, hwp).unwrap();
-    let hw_cnv6 = addernet::sim::hwsim::per_image_cost(&plan6, hwp).unwrap();
-    let params8 = synth_params(Arch::Resnet8, 42);
-    let (calib8a, _) = quantrep::calibrate(&params8, Arch::Resnet8,
-                                           SimKernel::Adder, 16);
-    let plan8a = QuantPlan::build(&params8, Arch::Resnet8, SimKernel::Adder,
-                                  qcfg, &calib8a).unwrap();
-    let (calib8m, _) = quantrep::calibrate(&params8, Arch::Resnet8,
-                                           SimKernel::Mult, 16);
-    let plan8m = QuantPlan::build(&params8, Arch::Resnet8, SimKernel::Mult,
-                                  qcfg, &calib8m).unwrap();
-    let hw_r8a = addernet::sim::hwsim::per_image_cost(&plan8a, hwp).unwrap();
-    let hw_r8m = addernet::sim::hwsim::per_image_cost(&plan8m, hwp).unwrap();
+    let hw_lenet = measure::hw_cycles(Arch::Lenet5, SimKernel::Adder, 8, hwp)
+        .unwrap();
+    let hw_cnv6 = measure::hw_cycles(Arch::Cnv6, SimKernel::Adder, 8, hwp)
+        .unwrap();
+    let hw_r8a = measure::hw_cycles(Arch::Resnet8, SimKernel::Adder, 8, hwp)
+        .unwrap();
+    let hw_r8m = measure::hw_cycles(Arch::Resnet8, SimKernel::Mult, 8, hwp)
+        .unwrap();
     println!("hwsim cycles/img (P={hwp}): lenet5 {} | cnv6 {} | resnet8 adder \
               {} | resnet8 mult {}",
              hw_lenet.cycles, hw_cnv6.cycles, hw_r8a.cycles, hw_r8m.cycles);
@@ -219,17 +207,9 @@ fn main() {
     // ratio used to read 1.0.  The paper's ~1.16x mult latency penalty
     // only shows where the mult critical path is the fmax limiter, so
     // measure it at the 16-bit datapath on the resnet8 descriptor.
-    use addernet::hw::KernelKind;
-    use addernet::sim::accelerator::{self, AccelConfig};
-    let r8desc = nn::resnet8();
-    let mult16 = accelerator::run(
-        &AccelConfig::zcu104(hwp, 16, KernelKind::Mult), &r8desc);
-    let adder16 = accelerator::run(
-        &AccelConfig::zcu104(hwp, 16, KernelKind::Adder2A), &r8desc);
-    let ratio16 = mult16.latency_ms() / adder16.latency_ms();
+    let (ratio16, mult_fmax, adder_fmax) = measure::mult_over_adder_dw16(hwp);
     println!("  dw16 mult-vs-adder latency (resnet8 descriptor): {ratio16:.3}x \
-              (mult fmax {:.0} MHz vs adder {:.0} MHz)",
-             mult16.fmax_mhz, adder16.fmax_mhz);
+              (mult fmax {mult_fmax:.0} MHz vs adder {adder_fmax:.0} MHz)");
     derived.push(("hw_mult_over_adder_latency".to_string(), ratio16));
 
     write_json(&rows, &derived);

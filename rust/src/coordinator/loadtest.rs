@@ -228,9 +228,23 @@ pub fn check(path: &Path, slo: &CheckSlo) -> Result<()> {
     let schema = j.at(&["schema"]).and_then(Json::as_str).unwrap_or("");
     anyhow::ensure!(schema == SCHEMA,
                     "{}: schema {schema:?}, expected {SCHEMA:?}", path.display());
-    let vars = j.at(&["variants"]).and_then(Json::as_obj)
+    let vnode = j.at(&["variants"])
         .ok_or_else(|| anyhow::anyhow!("{}: no variants object", path.display()))?;
-    anyhow::ensure!(!vars.is_empty(), "{}: empty variants object", path.display());
+    // A report whose every variant was skipped serializes an EMPTY
+    // variants container — that is an all-skipped drive and must fail
+    // the gate, whether the writer emitted `{}` or `[]`.
+    if let Json::Arr(items) = vnode {
+        anyhow::ensure!(!items.is_empty(),
+                        "{}: empty variants array — an all-skipped drive \
+                         must fail the gate", path.display());
+        anyhow::bail!("{}: variants must be an object keyed by variant name, \
+                       not an array", path.display());
+    }
+    let vars = vnode.as_obj()
+        .ok_or_else(|| anyhow::anyhow!("{}: no variants object", path.display()))?;
+    anyhow::ensure!(!vars.is_empty(),
+                    "{}: empty variants object — an all-skipped drive must \
+                     fail the gate", path.display());
     for (name, v) in vars {
         let num = |k: &str| -> Result<f64> {
             v.at(&[k]).and_then(Json::as_f64).ok_or_else(|| anyhow::anyhow!(
@@ -334,6 +348,33 @@ mod tests {
         r.write_json(&path).unwrap();
         assert!(check(&path, &CheckSlo::default()).is_err(),
                 "ok == 0 must fail the gate");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn check_rejects_empty_variants_in_every_spelling() {
+        // An all-skipped drive serializes no variant outcomes.  Every
+        // shape that can reach disk — `{}`, `[]`, or a missing key —
+        // must hard-error, never pass as "nothing to check".
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        for (tag, variants) in [("obj", "{}"), ("arr", "[]")] {
+            let path = dir.join(format!("addernet-loadtest-empty-{tag}-{pid}.json"));
+            let doc = format!(
+                "{{\"schema\": \"{SCHEMA}\", \"requested_qps\": 100, \
+                 \"achieved_qps\": 0, \"wall_ms\": 10, \"pool_workers\": 1, \
+                 \"replicas\": 1, \"variants\": {variants}}}");
+            std::fs::write(&path, doc).unwrap();
+            let err = check(&path, &CheckSlo::default())
+                .expect_err("empty variants must fail the gate");
+            assert!(format!("{err:#}").contains("empty variants"),
+                    "[{tag}] error should name the empty container: {err:#}");
+            std::fs::remove_file(&path).ok();
+        }
+        let path = dir.join(format!("addernet-loadtest-novariants-{pid}.json"));
+        std::fs::write(&path, format!("{{\"schema\": \"{SCHEMA}\"}}")).unwrap();
+        assert!(check(&path, &CheckSlo::default()).is_err(),
+                "missing variants key must fail the gate");
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,162 @@
+//! Run comparison and the history-sourced CI gate.
+//!
+//! [`diff_records`] lines up every key of two records with per-key
+//! ratio deltas; deterministic `hw_*` keys present in both that differ
+//! AT ALL are drift (`repro lab diff` exits nonzero on any) — the
+//! accelerator model is pure arithmetic, so inequality means the code
+//! changed, not the machine.
+//!
+//! [`check_records`] replaces `repro bench check` in CI: the same
+//! floor/ceiling semantics (floors fail below `baseline * (1 - tol)`,
+//! ceilings above `baseline * (1 + tol)`), but the baseline is a
+//! promoted run record instead of a hand-edited number file, and the
+//! gate set is every Floor/Ceiling-classed key the baseline carries —
+//! adding a gated key to the baseline is all it takes to gate it.
+
+use anyhow::Result;
+
+use super::store::{fmt_val, RunRecord};
+use super::{gate_class, is_deterministic, GateClass};
+use crate::util::table::{f, Table};
+
+/// One key lined up across two records.
+#[derive(Debug, Clone)]
+pub struct DiffRow {
+    pub key: String,
+    pub a: Option<f64>,
+    pub b: Option<f64>,
+    pub deterministic: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub rows: Vec<DiffRow>,
+}
+
+impl DiffReport {
+    /// Deterministic keys present in both records with unequal values
+    /// — bitwise inequality, no tolerance.
+    pub fn drift(&self) -> Vec<&DiffRow> {
+        self.rows.iter()
+            .filter(|r| {
+                r.deterministic
+                    && matches!((r.a, r.b), (Some(x), Some(y)) if x != y)
+            })
+            .collect()
+    }
+
+    pub fn table(&self, label_a: &str, label_b: &str) -> Table {
+        let mut t = Table::new(
+            &format!("lab diff: {label_a} -> {label_b}"),
+            &["key", label_a, label_b, "delta", "status"]);
+        for r in &self.rows {
+            let cell = |v: Option<f64>| {
+                v.map_or_else(|| "-".to_string(), fmt_val)
+            };
+            let (delta, status) = match (r.a, r.b) {
+                (Some(x), Some(y)) => {
+                    let delta = if x != 0.0 {
+                        format!("{:+.1}%", (y - x) / x * 100.0)
+                    } else {
+                        "-".to_string()
+                    };
+                    let status = if x == y {
+                        "="
+                    } else if r.deterministic {
+                        "DRIFT"
+                    } else {
+                        "~"
+                    };
+                    (delta, status)
+                }
+                (Some(_), None) => ("-".to_string(), "only left"),
+                (None, Some(_)) => ("-".to_string(), "only right"),
+                (None, None) => ("-".to_string(), "-"),
+            };
+            t.row(&[r.key.clone(), cell(r.a), cell(r.b), delta,
+                    status.to_string()]);
+        }
+        t
+    }
+}
+
+/// Line up every key of `a` and `b`.
+pub fn diff_records(a: &RunRecord, b: &RunRecord) -> DiffReport {
+    let mut names: Vec<&String> = a.keys.keys().chain(b.keys.keys()).collect();
+    names.sort();
+    names.dedup();
+    let rows = names.into_iter()
+        .map(|k| DiffRow {
+            key: k.clone(),
+            a: a.keys.get(k).copied(),
+            b: b.keys.get(k).copied(),
+            deterministic: is_deterministic(k),
+        })
+        .collect();
+    DiffReport { rows }
+}
+
+/// The CI gate: every Floor/Ceiling key the baseline carries must be
+/// present in `current` and inside its tolerance band.  Returns the
+/// render table, the failure list, and the gated-key count; a missing
+/// gated key is a hard error (a spec that silently stopped measuring a
+/// gated quantity must not pass green).
+pub fn check_records(current: &RunRecord, baseline: &RunRecord, tol: f64)
+                     -> Result<(Table, Vec<String>, usize)> {
+    anyhow::ensure!((0.0..1.0).contains(&tol),
+                    "--tolerance takes a fraction in [0, 1)");
+    let mut t = Table::new(
+        &format!("lab history gate (tolerance {:.0}%, baseline {})",
+                 tol * 100.0, baseline.run_id),
+        &["gated key", "baseline", "bound", "current", "status"]);
+    let mut failed = Vec::new();
+    let mut gated = 0usize;
+    for (key, &b) in &baseline.keys {
+        let class = gate_class(key);
+        if class == GateClass::Info {
+            continue;
+        }
+        gated += 1;
+        let c = current.keys.get(key).copied().ok_or_else(|| {
+            anyhow::anyhow!(
+                "run {} lacks gated baseline key {key} (did the sweep spec \
+                 drop a measurement family?)", current.run_id)
+        })?;
+        let (bound, ok, decimals) = match class {
+            GateClass::Floor => (b * (1.0 - tol), c >= b * (1.0 - tol), 2),
+            GateClass::Ceiling => (b * (1.0 + tol), c <= b * (1.0 + tol), 0),
+            GateClass::Info => unreachable!(),
+        };
+        t.row(&[key.clone(), f(b, decimals), f(bound, decimals),
+                f(c, decimals),
+                if ok { "ok" } else { "REGRESSED" }.to_string()]);
+        if !ok {
+            let dir = if class == GateClass::Floor { "<" } else { ">" };
+            failed.push(format!("{key}: {c:.3} {dir} bound {bound:.3}"));
+        }
+    }
+    anyhow::ensure!(gated > 0, "baseline {} carries no gated keys",
+                    baseline.run_id);
+    Ok((t, failed, gated))
+}
+
+/// Cut a baseline record from a run: the Floor/Ceiling keys only
+/// (or everything with `all_keys`), jobs dropped, provenance kept in
+/// `promoted_from`.  Committing the result is "promoting the run".
+pub fn promote(run: &RunRecord, all_keys: bool) -> RunRecord {
+    let keys = run.keys.iter()
+        .filter(|(k, _)| all_keys || gate_class(k) != GateClass::Info)
+        .map(|(k, &v)| (k.clone(), v))
+        .collect();
+    RunRecord {
+        run_id: format!("baseline-{}", run.run_id),
+        spec_name: run.spec_name.clone(),
+        spec_hash: run.spec_hash.clone(),
+        env_fp: run.env_fp.clone(),
+        created_unix: run.created_unix,
+        env: run.env.clone(),
+        jobs: Vec::new(),
+        keys,
+        promoted_from: Some(run.run_id.clone()),
+    }
+}

@@ -1,0 +1,425 @@
+//! Spec expansion and execution: turn a [`SweepSpec`] into jobs, run
+//! the expressible ones through the shared measurement cores, record
+//! skips with a note, derive the gateable ratio keys, and persist the
+//! record.
+//!
+//! Validity rules (each skip carries its reason into the record):
+//!
+//! * int16 × mult — per-call/plan quantization caps mult operands at
+//!   8 bits ([`QuantPlan::supports`]), so the point has no engine.
+//! * Winograd off the (int, mult) path — the transform-domain engine
+//!   is exact only on integer mult convs; everywhere else the resolver
+//!   falls back to the row kernels, so the measurement would duplicate
+//!   the Auto row and be recorded under a misleading key.
+//! * a non-ambient thread count — the engine pool is process-wide and
+//!   spawned once (`ADDERNET_THREADS`), so a spec cannot re-size it
+//!   mid-process; the point is skipped with a how-to-rerun note.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use anyhow::Result;
+
+use super::measure;
+use super::spec::{LabMode, SweepSpec};
+use super::store::{run_id, EnvInfo, JobLine, RunRecord, Store};
+use crate::coordinator::loadtest::{self, LoadtestCfg};
+use crate::coordinator::server::{self, FunctionalVariantCfg};
+use crate::quant::plan::QuantPlan;
+use crate::quant::Mode;
+use crate::report::quantrep;
+use crate::sim::functional::{Arch, KernelStrategy, QuantCfg, SimKernel};
+use crate::sim::hwsim;
+use crate::util::threads;
+
+/// What `run_spec` did.
+pub enum RunOutcome {
+    /// An identical (spec, env) record already existed; no measurement
+    /// ran.
+    Deduped(RunRecord),
+    /// A fresh record was measured and persisted.
+    Ran(RunRecord),
+}
+
+impl RunOutcome {
+    pub fn record(&self) -> &RunRecord {
+        match self {
+            RunOutcome::Deduped(r) | RunOutcome::Ran(r) => r,
+        }
+    }
+}
+
+/// Execute `spec` against `store`.  Without `force`, an existing
+/// record for the same (spec hash, env fingerprint) is returned as-is
+/// — the dedupe that makes re-running a committed sweep free; with
+/// `force`, a new generation is measured and appended.
+pub fn run_spec(store: &Store, spec: &SweepSpec, force: bool)
+                -> Result<RunOutcome> {
+    let mut spec = spec.clone();
+    spec.normalize();
+    spec.validate()?;
+    let spec_hash = spec.hash();
+    let env = EnvInfo::current();
+    let env_fp = env.fingerprint();
+    let gens = store.generations(&spec_hash, &env_fp)?;
+    if !force {
+        if let Some(&g) = gens.last() {
+            let id = run_id(&spec_hash, &env_fp, g);
+            return Ok(RunOutcome::Deduped(store.load(&id)?));
+        }
+    }
+    let generation = gens.last().copied().unwrap_or(0) + 1;
+    let id = run_id(&spec_hash, &env_fp, generation);
+    store.put_spec(&spec)?;
+    println!("[lab] run {id} (spec {}, hash {spec_hash})", spec.name);
+
+    let mut keys = BTreeMap::new();
+    let mut jobs = Vec::new();
+
+    // The pool dimension gates the whole wall-clock run: points asking
+    // for a worker count the ambient pool doesn't have are skipped —
+    // never silently measured on the wrong pool.
+    let ambient = threads::pool_workers().max(1);
+    let mut threads_ok = false;
+    for &t in &spec.threads {
+        if t == 0 || t == ambient {
+            threads_ok = true;
+        } else {
+            jobs.push(JobLine::skipped(
+                format!("threads {t}"),
+                format!("engine pool has {ambient} workers (process-wide); \
+                         set ADDERNET_THREADS={t} and re-run")));
+        }
+    }
+    if threads_ok {
+        run_layer_family(&spec, &mut keys, &mut jobs);
+        run_model_family(&spec, &mut keys, &mut jobs);
+        run_hw_family(&spec, &mut keys, &mut jobs)?;
+        run_loadtest_family(&spec, &mut keys, &mut jobs)?;
+        derive_keys(&spec, &mut keys);
+    }
+
+    let created_unix = SystemTime::now().duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs()).unwrap_or(0);
+    let rec = RunRecord {
+        run_id: id,
+        spec_name: spec.name.clone(),
+        spec_hash,
+        env_fp,
+        created_unix,
+        env: env.to_map(),
+        jobs,
+        keys,
+        promoted_from: None,
+    };
+    store.put_run(&rec)?;
+    Ok(RunOutcome::Ran(rec))
+}
+
+fn insert_key(keys: &mut BTreeMap<String, f64>, key: String, v: f64) {
+    if v.is_finite() {
+        keys.insert(key, v);
+    } else {
+        eprintln!("[lab] dropping non-finite value for key {key}");
+    }
+}
+
+/// Winograd layer points are only distinct from the Auto row kernels
+/// on integer mult convs (where the transform-domain engine is exact).
+fn winograd_distinct(mode: LabMode, kind: SimKernel) -> bool {
+    kind == SimKernel::Mult && mode.bits().is_some()
+}
+
+fn run_layer_family(spec: &SweepSpec, keys: &mut BTreeMap<String, f64>,
+                    jobs: &mut Vec<JobLine>) {
+    if !spec.measure.layer {
+        return;
+    }
+    for &batch in &spec.batches {
+        let lb = measure::LayerBench::new(batch);
+        for &mode in &spec.modes {
+            for &kind in &spec.kernels {
+                for &strat in &spec.strategies {
+                    let job = format!("layer {} {} {} b{batch}", mode.label(),
+                                      kind.label(), strat.label());
+                    if let Some(bits) = mode.bits() {
+                        if !QuantPlan::supports(kind, bits) {
+                            jobs.push(JobLine::skipped(
+                                job,
+                                format!("{} quantization caps at 8-bit \
+                                         operands", kind.label())));
+                            continue;
+                        }
+                    }
+                    if strat == KernelStrategy::Winograd
+                        && !winograd_distinct(mode, kind)
+                    {
+                        jobs.push(JobLine::skipped(
+                            job,
+                            "winograd resolves to the row fallback here — \
+                             the point duplicates the auto row kernel"
+                                .to_string()));
+                        continue;
+                    }
+                    // the naive oracle is slow — fewer iterations, like
+                    // the bench has always done
+                    let (warmup, iters) =
+                        if strat == KernelStrategy::Naive { (1, 5) } else { (2, 9) };
+                    let s = match mode.bits() {
+                        None => lb.time_f32(strat, kind, warmup, iters),
+                        Some(bits) => {
+                            let cfg = QuantCfg { bits, mode: Mode::SharedScale };
+                            lb.time_quant(strat, kind, cfg, warmup, iters)
+                        }
+                    };
+                    println!("[lab]   {job}: {:.3} ms", s * 1e3);
+                    insert_key(keys,
+                               format!("layer_{}_{}_{}_b{batch}_s",
+                                       mode.label(), kind.label(),
+                                       strat.label()),
+                               s);
+                    jobs.push(JobLine::ok(job));
+                }
+            }
+        }
+    }
+}
+
+fn run_model_family(spec: &SweepSpec, keys: &mut BTreeMap<String, f64>,
+                    jobs: &mut Vec<JobLine>) {
+    if !spec.measure.model {
+        return;
+    }
+    for &arch in &spec.model_archs {
+        for &kind in &spec.kernels {
+            let mut mb: Option<measure::ModelBench> = None;
+            for &mode in &spec.modes {
+                let job = format!("model {} {} {} b{}", arch.name(),
+                                  kind.label(), mode.label(), spec.model_batch);
+                match mode.bits() {
+                    None => {
+                        let b = mb.get_or_insert_with(|| {
+                            measure::ModelBench::new(arch, kind,
+                                                     spec.model_batch)
+                        });
+                        let s = b.time_f32(KernelStrategy::Auto, 1, 7);
+                        println!("[lab]   {job}: {:.3} ms", s * 1e3);
+                        insert_key(keys,
+                                   format!("e2e_f32_{}_{}_s", arch.name(),
+                                           kind.label()),
+                                   s);
+                        jobs.push(JobLine::ok(job));
+                    }
+                    Some(bits) => {
+                        if !QuantPlan::supports(kind, bits) {
+                            jobs.push(JobLine::skipped(
+                                job,
+                                format!("{} quantization caps at 8-bit \
+                                         operands", kind.label())));
+                            continue;
+                        }
+                        let b = mb.get_or_insert_with(|| {
+                            measure::ModelBench::new(arch, kind,
+                                                     spec.model_batch)
+                        });
+                        let cfg = QuantCfg { bits, mode: Mode::SharedScale };
+                        let percall =
+                            b.time_percall(KernelStrategy::Auto, cfg, 1, 7);
+                        let plan = match b.plan(bits) {
+                            Ok(p) => p,
+                            Err(e) => {
+                                jobs.push(JobLine::skipped(
+                                    job, format!("plan build failed: {e:#}")));
+                                continue;
+                            }
+                        };
+                        let plan_s =
+                            b.time_plan(&plan, KernelStrategy::Auto, 1, 7);
+                        println!("[lab]   {job}: percall {:.3} ms, plan \
+                                  {:.3} ms", percall * 1e3, plan_s * 1e3);
+                        let stem = format!("{}_{}_int{bits}", arch.name(),
+                                           kind.label());
+                        insert_key(keys, format!("e2e_percall_{stem}_s"),
+                                   percall);
+                        insert_key(keys, format!("e2e_plan_{stem}_s"), plan_s);
+                        jobs.push(JobLine::ok(job));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Key name for a hw cycle count.  At the default parallelism the name
+/// matches the historical bench contract (`hw_cycles_lenet5_int8`,
+/// `hw_cycles_resnet8_mult_int8`); other P get a `_p{P}` suffix.
+fn hw_cycles_key(arch: Arch, kind: SimKernel, bits: u32, p: u64) -> String {
+    let kind_tag = match kind {
+        SimKernel::Adder => String::new(),
+        SimKernel::Mult => "_mult".to_string(),
+    };
+    let p_tag = if p == hwsim::DEFAULT_PARALLELISM {
+        String::new()
+    } else {
+        format!("_p{p}")
+    };
+    format!("hw_cycles_{}{kind_tag}_int{bits}{p_tag}", arch.name())
+}
+
+fn run_hw_family(spec: &SweepSpec, keys: &mut BTreeMap<String, f64>,
+                 jobs: &mut Vec<JobLine>) -> Result<()> {
+    if spec.measure.hw {
+        for &p in &spec.hw_parallelism {
+            for &arch in &spec.archs {
+                for &kind in &spec.kernels {
+                    for &mode in &spec.modes {
+                        // hw points exist only where a plan quantizes
+                        let Some(bits) = mode.bits() else { continue };
+                        let job = format!("hw {} {} int{bits} p{p}",
+                                          arch.name(), kind.label());
+                        if !QuantPlan::supports(kind, bits) {
+                            jobs.push(JobLine::skipped(
+                                job,
+                                format!("no {} plans at {bits} bits",
+                                        kind.label())));
+                            continue;
+                        }
+                        // a failing plan build here is a bug, not a
+                        // skip: the hw keys are the CI gate's spine
+                        let cost = measure::hw_cycles(arch, kind, bits, p)?;
+                        println!("[lab]   {job}: {} cycles/img", cost.cycles);
+                        insert_key(keys, hw_cycles_key(arch, kind, bits, p),
+                                   cost.cycles as f64);
+                        jobs.push(JobLine::ok(job));
+                    }
+                }
+            }
+        }
+    }
+    if spec.measure.ratio_dw16 {
+        for &p in &spec.hw_parallelism {
+            let job = format!("hw dw16 mult/adder ratio p{p}");
+            let (ratio, mult_fmax, adder_fmax) =
+                measure::mult_over_adder_dw16(p);
+            println!("[lab]   {job}: {ratio:.3}x (mult fmax {mult_fmax:.0} \
+                      MHz vs adder {adder_fmax:.0} MHz)");
+            let key = if p == hwsim::DEFAULT_PARALLELISM {
+                "hw_mult_over_adder_latency".to_string()
+            } else {
+                format!("hw_mult_over_adder_latency_p{p}")
+            };
+            insert_key(keys, key, ratio);
+            jobs.push(JobLine::ok(job));
+        }
+    }
+    Ok(())
+}
+
+fn run_loadtest_family(spec: &SweepSpec, keys: &mut BTreeMap<String, f64>,
+                       jobs: &mut Vec<JobLine>) -> Result<()> {
+    let Some(lt) = spec.loadtest else { return Ok(()) };
+    for &arch in &spec.model_archs {
+        for &kind in &spec.kernels {
+            for &mode in &spec.modes {
+                let name = format!("{}_{}", arch.name(), kind.label());
+                let job = format!("loadtest {name} {} qps{}", mode.label(),
+                                  lt.qps);
+                let mut cfg = FunctionalVariantCfg::synthetic(
+                    &name, arch, kind, 42);
+                if let Some(bits) = mode.bits() {
+                    if !QuantPlan::supports(kind, bits) {
+                        jobs.push(JobLine::skipped(
+                            job,
+                            format!("{} quantization caps at 8-bit operands",
+                                    kind.label())));
+                        continue;
+                    }
+                    let (calib, _) =
+                        quantrep::calibrate(&cfg.params, arch, kind, 64);
+                    cfg.mode = crate::sim::functional::ExecMode::Quant(
+                        QuantCfg { bits, mode: Mode::SharedScale });
+                    cfg.calib = Some(calib);
+                }
+                let handle = server::start_functional(
+                    vec![cfg], Duration::from_millis(2))?;
+                let rep = loadtest::run(&handle, &[name.clone()],
+                                        &LoadtestCfg {
+                                            qps: lt.qps,
+                                            duration: Duration::from_millis(
+                                                lt.duration_ms),
+                                            replicas: 1,
+                                        })?;
+                handle.shutdown();
+                let o = &rep.variants[&name];
+                let stem = format!("lt_{name}_{}", mode.label());
+                println!("[lab]   {job}: p50 {}us p99 {}us shed {:.3}",
+                         o.lat.quantile_us(0.5), o.lat.quantile_us(0.99),
+                         o.shed_rate());
+                insert_key(keys, format!("{stem}_p50_us"),
+                           o.lat.quantile_us(0.5) as f64);
+                insert_key(keys, format!("{stem}_p99_us"),
+                           o.lat.quantile_us(0.99) as f64);
+                insert_key(keys, format!("{stem}_shed_rate"), o.shed_rate());
+                jobs.push(JobLine::ok(job));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Compute the gateable ratio keys from the recorded medians — the
+/// same derivations the hotpath bench publishes, under the same
+/// historical names (`winograd_vs_simd`, `plan_vs_f32`, ...), so the
+/// committed gate values carry over unchanged.  Ratios use the spec's
+/// first (smallest) batch for layer keys and the model_batch anchors
+/// for the e2e keys.
+fn derive_keys(spec: &SweepSpec, keys: &mut BTreeMap<String, f64>) {
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    if let Some(&b0) = spec.batches.first() {
+        for &mode in &spec.modes {
+            for &kind in &spec.kernels {
+                let get = |strategy: &str| -> Option<f64> {
+                    keys.get(&format!("layer_{}_{}_{strategy}_b{b0}_s",
+                                      mode.label(), kind.label()))
+                        .copied()
+                };
+                let stem = format!("{}_{}", mode.label(), kind.label());
+                if let (Some(naive), Some(tiled)) = (get("naive"), get("tiled"))
+                {
+                    derived.push((format!("{stem}_tiled_vs_naive"),
+                                  naive / tiled));
+                }
+                if let (Some(tiled), Some(simd)) = (get("tiled"), get("simd"))
+                {
+                    derived.push((format!("{stem}_simd_vs_tiled"),
+                                  tiled / simd));
+                }
+                if mode == LabMode::Int8 && kind == SimKernel::Mult {
+                    if let (Some(simd), Some(wino)) =
+                        (get("simd"), get("winograd"))
+                    {
+                        derived.push(("winograd_vs_simd".to_string(),
+                                      simd / wino));
+                    }
+                }
+            }
+        }
+    }
+    // whole-model anchor: the lenet5 adder trio under its historical
+    // unqualified names
+    let e2e = |k: &str| keys.get(k).copied();
+    if let (Some(f32_s), Some(plan_s)) = (e2e("e2e_f32_lenet5_adder_s"),
+                                          e2e("e2e_plan_lenet5_adder_int8_s"))
+    {
+        derived.push(("plan_vs_f32".to_string(), f32_s / plan_s));
+    }
+    if let (Some(percall_s), Some(plan_s)) =
+        (e2e("e2e_percall_lenet5_adder_int8_s"),
+         e2e("e2e_plan_lenet5_adder_int8_s"))
+    {
+        derived.push(("plan_vs_percall".to_string(), percall_s / plan_s));
+    }
+    for (k, v) in derived {
+        insert_key(keys, k, v);
+    }
+}

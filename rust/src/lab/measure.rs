@@ -1,0 +1,217 @@
+//! Measurement cores shared by the lab job runner and
+//! `benches/hotpath.rs` — ONE implementation of each fixture and
+//! timing loop, so "what the bench measures" and "what the lab
+//! records" can never drift apart.
+//!
+//! Two regimes live here:
+//!
+//! * wall-clock medians ([`time_it`], [`LayerBench`], [`ModelBench`])
+//!   — machine-bound, informational;
+//! * deterministic accelerator numbers ([`hw_cycles`],
+//!   [`mult_over_adder_dw16`]) — pure functions of
+//!   (arch, bits, kernel, parallelism), bit-identical everywhere,
+//!   which is what lets `lab diff` pin them exactly and `lab check`
+//!   gate them as absolutes.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data;
+use crate::hw::KernelKind;
+use crate::nn;
+use crate::quant::plan::QuantPlan;
+use crate::quant::{Calibration, LayerCalib, Mode};
+use crate::report::quantrep;
+use crate::sim::accelerator::{self, AccelConfig};
+use crate::sim::functional::{conv2d_quant_with, conv2d_with, synth_params,
+                             Arch, ConvW, ExecMode, KernelStrategy, Params,
+                             QuantCfg, Runner, SimKernel, Tensor};
+use crate::sim::hwsim::{self, HwCost};
+use crate::sim::intpath::PlanRunner;
+use crate::util::XorShift64;
+
+/// Time `f` `iters` times after `warmup` runs; returns
+/// (median_s, mean_s).  Moved here from `benches/common` so the lab
+/// and the bench share one timing loop; the bench harness delegates.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    (median, mean)
+}
+
+/// Shared-scale calibration of 1.0/1.0 — the layer fixture's ranges.
+pub fn unit_calib() -> LayerCalib {
+    LayerCalib { feat_max_abs: 1.0, weight_max_abs: 1.0 }
+}
+
+/// The hotpath bench's L3a fixture: a resnet-shape 3x3 16->16 conv on
+/// a Bx32x32x16 input, weights and activations drawn from the same
+/// seed-1 XorShift stream the bench has always used (at B=8 the tensor
+/// bytes are bit-identical to the historical fixture).
+pub struct LayerBench {
+    pub x: Tensor,
+    wdat: Vec<f32>,
+}
+
+impl LayerBench {
+    pub fn new(batch: usize) -> LayerBench {
+        let mut rng = XorShift64::new(1);
+        let x = Tensor::new(
+            (batch, 32, 32, 16),
+            (0..batch * 32 * 32 * 16).map(|_| rng.next_f32_sym(1.0)).collect());
+        let wdat: Vec<f32> =
+            (0..3 * 3 * 16 * 16).map(|_| rng.next_f32_sym(1.0)).collect();
+        LayerBench { x, wdat }
+    }
+
+    pub fn conv_w(&self) -> ConvW<'_> {
+        ConvW { data: &self.wdat, kh: 3, kw: 3, cin: 16, cout: 16 }
+    }
+
+    /// MAC count of one forward through the fixture (for rate lines).
+    pub fn macs(&self) -> f64 {
+        self.x.shape.0 as f64 * 32.0 * 32.0 * 9.0 * 16.0 * 16.0
+    }
+
+    /// Median seconds of the f32 conv under `strategy`.
+    pub fn time_f32(&self, strategy: KernelStrategy, kind: SimKernel,
+                    warmup: usize, iters: usize) -> f64 {
+        let w = self.conv_w();
+        let (median, _) = time_it(warmup, iters, || {
+            std::hint::black_box(conv2d_with(strategy, &self.x, &w, 1,
+                                             nn::Padding::Same, kind));
+        });
+        median
+    }
+
+    /// Median seconds of the per-call quantized conv under `strategy`.
+    pub fn time_quant(&self, strategy: KernelStrategy, kind: SimKernel,
+                      cfg: QuantCfg, warmup: usize, iters: usize) -> f64 {
+        let w = self.conv_w();
+        let calib = unit_calib();
+        let (median, _) = time_it(warmup, iters, || {
+            std::hint::black_box(conv2d_quant_with(strategy, &self.x, &w, 1,
+                                                   nn::Padding::Same, kind,
+                                                   cfg, &calib));
+        });
+        median
+    }
+}
+
+/// Whole-model fixture (the bench's L3a2): synthetic seed-42 params,
+/// an n=32 calibration pass, and a deterministic eval batch.
+pub struct ModelBench {
+    pub arch: Arch,
+    pub kind: SimKernel,
+    params: Params,
+    calib: Calibration,
+    x: Tensor,
+}
+
+impl ModelBench {
+    pub fn new(arch: Arch, kind: SimKernel, batch: usize) -> ModelBench {
+        let params = synth_params(arch, 42);
+        let (calib, _) = quantrep::calibrate(&params, arch, kind, 32);
+        let (h, w, c) = arch.graph().input;
+        let ev = data::eval_set(batch, 5);
+        assert_eq!(ev.images.len(), batch * h * w * c,
+                   "eval_set images must match the {} input shape",
+                   arch.name());
+        let x = Tensor::new((batch, h, w, c), ev.images);
+        ModelBench { arch, kind, params, calib, x }
+    }
+
+    /// Median seconds of one f32 engine forward over the batch.
+    pub fn time_f32(&self, strategy: KernelStrategy, warmup: usize,
+                    iters: usize) -> f64 {
+        let (median, _) = time_it(warmup, iters, || {
+            let mut r = Runner {
+                params: &self.params, arch: self.arch, kind: self.kind,
+                strategy, mode: ExecMode::F32, calib: None, observe: None,
+            };
+            std::hint::black_box(r.forward(&self.x));
+        });
+        median
+    }
+
+    /// Median seconds of the per-call quantized path (requantizes
+    /// weights every call).
+    pub fn time_percall(&self, strategy: KernelStrategy, cfg: QuantCfg,
+                        warmup: usize, iters: usize) -> f64 {
+        let (median, _) = time_it(warmup, iters, || {
+            let mut r = Runner {
+                params: &self.params, arch: self.arch, kind: self.kind,
+                strategy, mode: ExecMode::Quant(cfg),
+                calib: Some(&self.calib), observe: None,
+            };
+            std::hint::black_box(r.forward(&self.x));
+        });
+        median
+    }
+
+    /// Compile the fixture into a serving plan at `bits`.
+    pub fn plan(&self, bits: u32) -> Result<QuantPlan> {
+        let cfg = QuantCfg { bits, mode: Mode::SharedScale };
+        QuantPlan::build(&self.params, self.arch, self.kind, cfg, &self.calib)
+            .with_context(|| format!("compiling {} {} int{bits} plan",
+                                     self.arch.name(), self.kind.label()))
+    }
+
+    /// Median seconds of the compiled-plan i32 path.
+    pub fn time_plan(&self, plan: &QuantPlan, strategy: KernelStrategy,
+                     warmup: usize, iters: usize) -> f64 {
+        let (median, _) = time_it(warmup, iters, || {
+            let r = PlanRunner { plan, strategy };
+            std::hint::black_box(r.forward(&self.x));
+        });
+        median
+    }
+}
+
+/// Compile a deterministic serving plan for the hw cycle family:
+/// seed-42 synthetic params, an n=16 calibration pass.  (Calibration
+/// scales never reach the schedule — cycle counts depend only on the
+/// layer geometry and bit width — so the sample count is just "enough
+/// to build a valid plan".)
+pub fn int_plan(arch: Arch, kind: SimKernel, bits: u32) -> Result<QuantPlan> {
+    anyhow::ensure!(QuantPlan::supports(kind, bits),
+                    "no {} plans at {bits} bits", kind.label());
+    let params = synth_params(arch, 42);
+    let (calib, _) = quantrep::calibrate(&params, arch, kind, 16);
+    let cfg = QuantCfg { bits, mode: Mode::SharedScale };
+    QuantPlan::build(&params, arch, kind, cfg, &calib)
+        .with_context(|| format!("compiling {} {} int{bits} plan",
+                                 arch.name(), kind.label()))
+}
+
+/// Per-image accelerator cost of the `(arch, kind, bits)` plan at
+/// parallelism `p` — deterministic (pure schedule arithmetic).
+pub fn hw_cycles(arch: Arch, kind: SimKernel, bits: u32, p: u64)
+                 -> Result<HwCost> {
+    hwsim::per_image_cost(&int_plan(arch, kind, bits)?, p)
+}
+
+/// The paper's mult-vs-adder latency penalty at the 16-bit datapath on
+/// the resnet8 descriptor (where the mult critical path is the fmax
+/// limiter): returns (latency ratio, mult fmax MHz, adder fmax MHz).
+/// Deterministic — the accelerator model takes only the descriptor.
+pub fn mult_over_adder_dw16(p: u64) -> (f64, f64, f64) {
+    let desc = nn::resnet8();
+    let mult = accelerator::run(&AccelConfig::zcu104(p, 16, KernelKind::Mult),
+                                &desc);
+    let adder = accelerator::run(&AccelConfig::zcu104(p, 16,
+                                                      KernelKind::Adder2A),
+                                 &desc);
+    (mult.latency_ms() / adder.latency_ms(), mult.fmax_mhz, adder.fmax_mhz)
+}

@@ -1,0 +1,97 @@
+//! `repro lab` — the experiment subsystem (declarative sweeps, a
+//! content-addressed result store, history-sourced CI gating).
+//!
+//! The bench story used to be one hand-edited `bench_baseline.json`
+//! plus a transient `target/hotpath.json`.  The lab replaces that with
+//! recorded history, modeled on the repx run/job/store split:
+//!
+//! * [`spec`] — a declarative [`spec::SweepSpec`] over arch × kernel ×
+//!   strategy × mode (f32/int8/int16) × threads × batch ×
+//!   hw-parallelism, with a canonical JSON form whose FNV-1a hash
+//!   content-addresses the sweep (field order and dimension order never
+//!   change the hash).
+//! * [`job`] — expands a spec into jobs, skips the points the engine
+//!   cannot express (int16 mult plans, Winograd off the int-mult path,
+//!   a thread count the ambient pool does not match) with a recorded
+//!   note, and executes the rest through the SAME measurement cores the
+//!   hotpath bench uses ([`measure`]).
+//! * [`store`] — the `.lab/` directory: `specs/{spec_hash}.json` plus
+//!   immutable `runs/{spec_hash}-{env_fp}-g{N}.json` records in stable
+//!   `addernet-lab-v1` JSON.  Re-running an identical spec in an
+//!   identical environment dedupes to the existing record; `--force`
+//!   appends a new generation; nothing ever overwrites.
+//! * [`diff`] — per-key deltas between two runs (or a run and a
+//!   committed baseline record), a drift gate over the deterministic
+//!   keys, and the floor/ceiling check that replaces `repro bench
+//!   check` in CI with history-sourced gating.
+//!
+//! Keys split into two regimes.  Wall-clock medians
+//! (`layer_*_s`, `e2e_*_s`) vary per machine and are informational.
+//! Everything prefixed `hw_` is a pure function of
+//! (arch, bits, kernel, parallelism) on the simulated accelerator —
+//! bit-identical across runs and machines — so `lab diff` pins those
+//! exactly and `lab check` gates them as absolutes.
+
+pub mod diff;
+pub mod job;
+pub mod measure;
+pub mod spec;
+pub mod store;
+
+/// Default store directory (relative to the working directory, like
+/// `target/`); override with `repro lab --store DIR`.
+pub const DEFAULT_STORE: &str = ".lab";
+
+/// How a key participates in `lab check` gating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateClass {
+    /// Higher is better; fail when `current < baseline * (1 - tol)`.
+    /// The speedup-ratio families (`*_vs_*`) and the accelerator's
+    /// mult/adder latency ratio.
+    Floor,
+    /// Lower is better; fail when `current > baseline * (1 + tol)`.
+    /// The deterministic `hw_cycles_*` per-image counts.
+    Ceiling,
+    /// Recorded but never gated: raw wall-clock medians (`*_s`) and
+    /// anything else machine-specific.
+    Info,
+}
+
+/// Classify a result key for gating.  This single rule reproduces the
+/// curated FLOOR/CEILING lists `repro bench check` hard-codes: cycle
+/// counts are ceilings, ratio keys are floors, raw medians are info.
+pub fn gate_class(key: &str) -> GateClass {
+    if key.starts_with("hw_cycles_") {
+        GateClass::Ceiling
+    } else if key == "hw_mult_over_adder_latency"
+        || key.starts_with("hw_mult_over_adder_latency_p")
+    {
+        GateClass::Floor
+    } else if !key.ends_with("_s") && key.contains("_vs_") {
+        GateClass::Floor
+    } else {
+        GateClass::Info
+    }
+}
+
+/// Keys that must be bit-identical across runs of the same spec: the
+/// simulated-accelerator family.  `hwsim::per_image_cost` and
+/// `accelerator::run` are pure functions of the plan schedule /
+/// network descriptor — no wall clock anywhere — so two back-to-back
+/// `lab run`s must agree on these exactly, and `lab diff` treats any
+/// difference as drift (a nonzero exit).
+pub fn is_deterministic(key: &str) -> bool {
+    key.starts_with("hw_")
+}
+
+/// FNV-1a 64-bit — the store's content hash.  Stable, dependency-free,
+/// and good enough for addressing a handful of spec files (this is a
+/// cache key, not a security boundary).
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}

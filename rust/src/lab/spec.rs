@@ -1,0 +1,427 @@
+//! Declarative sweep specs and their content hash.
+//!
+//! A [`SweepSpec`] names the cartesian dimensions of an experiment
+//! (arch × kernel × strategy × mode × threads × batch ×
+//! hw-parallelism) plus which measurement families to run.  Specs
+//! normalize to a canonical single-line JSON form — dimensions sorted
+//! into a fixed enum order and deduped — and the FNV-1a hash of that
+//! form is the spec's identity in the store: permuting fields or
+//! dimension entries in a spec file can never mint a new run lineage.
+
+use std::fs;
+
+use anyhow::{Context, Result};
+
+use super::fnv64;
+use crate::sim::functional::{Arch, KernelStrategy, SimKernel};
+use crate::util::json::Json;
+
+pub const SPEC_SCHEMA: &str = "addernet-lab-spec-v1";
+
+/// Numeric execution mode of a sweep point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LabMode {
+    F32,
+    Int8,
+    Int16,
+}
+
+impl LabMode {
+    pub const ALL: [LabMode; 3] = [LabMode::F32, LabMode::Int8, LabMode::Int16];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            LabMode::F32 => "f32",
+            LabMode::Int8 => "int8",
+            LabMode::Int16 => "int16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LabMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" => Some(LabMode::F32),
+            "int8" => Some(LabMode::Int8),
+            "int16" => Some(LabMode::Int16),
+            _ => None,
+        }
+    }
+
+    /// Quantized bit width; `None` for f32.
+    pub fn bits(self) -> Option<u32> {
+        match self {
+            LabMode::F32 => None,
+            LabMode::Int8 => Some(8),
+            LabMode::Int16 => Some(16),
+        }
+    }
+}
+
+/// Which measurement families a sweep runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Measure {
+    /// Per-strategy wall-clock on the resnet-shape conv layer
+    /// (the hotpath bench's L3a fixture).
+    pub layer: bool,
+    /// Whole-model f32 / per-call / compiled-plan forward medians.
+    pub model: bool,
+    /// Deterministic hwsim per-image cycle counts per (arch, kernel).
+    pub hw: bool,
+    /// The dw16 mult-over-adder latency ratio on the resnet8
+    /// descriptor (deterministic; the paper's ~1.16x headline).
+    pub ratio_dw16: bool,
+}
+
+/// Optional open-loop loadtest point (off in the builtin CI specs —
+/// serving latency under load is wall-clock and machine-bound).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadPoint {
+    pub qps: f64,
+    pub duration_ms: u64,
+}
+
+/// A declarative sweep: dimensions + measurement families.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Archs for the hw cycle family.
+    pub archs: Vec<Arch>,
+    /// Archs for the (slow) whole-model and loadtest families.
+    pub model_archs: Vec<Arch>,
+    pub kernels: Vec<SimKernel>,
+    pub strategies: Vec<KernelStrategy>,
+    pub modes: Vec<LabMode>,
+    /// Engine-pool worker counts; `0` means "whatever the ambient
+    /// `ADDERNET_THREADS` pool has".  The pool is process-wide and
+    /// spawned once, so non-ambient counts become skipped jobs with a
+    /// note rather than silently mismeasured points.
+    pub threads: Vec<usize>,
+    /// Layer-fixture batch sizes.
+    pub batches: Vec<usize>,
+    /// Accelerator parallelism P for the hw families.
+    pub hw_parallelism: Vec<u64>,
+    /// Batch for the whole-model family (one value: e2e medians are
+    /// only comparable at a fixed batch).
+    pub model_batch: usize,
+    pub measure: Measure,
+    pub loadtest: Option<LoadPoint>,
+}
+
+impl SweepSpec {
+    pub const BUILTINS: &'static [&'static str] = &["ci-sweep", "ci-smoke"];
+
+    /// The CI bench sweep: everything the retired `cargo bench` +
+    /// `repro bench check` pipeline measured and gated, as one spec —
+    /// layer trios at B=8, the lenet5 whole-model anchor at B=64, hw
+    /// cycles for lenet5/cnv6/resnet8 on both kernels, and the dw16
+    /// ratio.
+    fn ci_sweep() -> SweepSpec {
+        SweepSpec {
+            name: "ci-sweep".to_string(),
+            archs: vec![Arch::Lenet5, Arch::Cnv6, Arch::Resnet8],
+            model_archs: vec![Arch::Lenet5],
+            kernels: vec![SimKernel::Adder, SimKernel::Mult],
+            strategies: vec![KernelStrategy::Naive, KernelStrategy::Tiled,
+                             KernelStrategy::Simd, KernelStrategy::Winograd],
+            modes: vec![LabMode::F32, LabMode::Int8],
+            threads: vec![0],
+            batches: vec![8],
+            hw_parallelism: vec![1024],
+            model_batch: 64,
+            measure: Measure { layer: true, model: true, hw: true,
+                               ratio_dw16: true },
+            loadtest: None,
+        }
+    }
+
+    /// Deterministic-only smoke: hw cycles + the dw16 ratio, no wall
+    /// clocks.  Two back-to-back runs of this spec must `lab diff`
+    /// clean bit-for-bit — the f32 CI leg pins exactly that.
+    fn ci_smoke() -> SweepSpec {
+        SweepSpec {
+            name: "ci-smoke".to_string(),
+            archs: vec![Arch::Lenet5, Arch::Resnet8],
+            model_archs: vec![],
+            kernels: vec![SimKernel::Adder, SimKernel::Mult],
+            strategies: vec![],
+            modes: vec![LabMode::Int8],
+            threads: vec![0],
+            batches: vec![8],
+            hw_parallelism: vec![1024],
+            model_batch: 64,
+            measure: Measure { layer: false, model: false, hw: true,
+                               ratio_dw16: true },
+            loadtest: None,
+        }
+    }
+
+    pub fn builtin(name: &str) -> Option<SweepSpec> {
+        match name {
+            "ci-sweep" => Some(Self::ci_sweep()),
+            "ci-smoke" => Some(Self::ci_smoke()),
+            _ => None,
+        }
+    }
+
+    /// Resolve a `--spec` argument: builtin name first, else a spec
+    /// JSON file path.
+    pub fn resolve(arg: &str) -> Result<SweepSpec> {
+        if let Some(s) = Self::builtin(arg) {
+            return Ok(s);
+        }
+        let text = fs::read_to_string(arg).with_context(|| {
+            format!("reading sweep spec {arg} (builtin specs: {})",
+                    Self::BUILTINS.join(", "))
+        })?;
+        Self::from_json(&text)
+            .with_context(|| format!("parsing sweep spec {arg}"))
+    }
+
+    /// Sort every dimension into its canonical enum order and dedupe.
+    /// Hashing normalizes first, so `["mult","adder"]` and
+    /// `["adder","mult"]` are the same spec.
+    pub fn normalize(&mut self) {
+        fn canon<T: Copy + PartialEq>(v: &mut Vec<T>, rank: impl Fn(T) -> usize) {
+            v.sort_by_key(|&x| rank(x));
+            v.dedup();
+        }
+        canon(&mut self.archs, arch_rank);
+        canon(&mut self.model_archs, arch_rank);
+        canon(&mut self.kernels, |k| match k {
+            SimKernel::Adder => 0,
+            SimKernel::Mult => 1,
+        });
+        canon(&mut self.strategies, strategy_rank);
+        canon(&mut self.modes, |m| match m {
+            LabMode::F32 => 0,
+            LabMode::Int8 => 1,
+            LabMode::Int16 => 2,
+        });
+        self.threads.sort_unstable();
+        self.threads.dedup();
+        self.batches.sort_unstable();
+        self.batches.dedup();
+        self.hw_parallelism.sort_unstable();
+        self.hw_parallelism.dedup();
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "spec needs a name");
+        anyhow::ensure!(
+            self.name.chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit()
+                     || c == '-' || c == '_'),
+            "spec name {:?} must be [a-z0-9_-]", self.name);
+        let m = &self.measure;
+        anyhow::ensure!(
+            m.layer || m.model || m.hw || m.ratio_dw16 || self.loadtest.is_some(),
+            "spec {} enables no measurement family", self.name);
+        anyhow::ensure!(!self.threads.is_empty(),
+                        "spec {} needs a threads dimension (0 = ambient pool)",
+                        self.name);
+        if m.layer {
+            anyhow::ensure!(
+                !self.modes.is_empty() && !self.kernels.is_empty()
+                    && !self.strategies.is_empty() && !self.batches.is_empty(),
+                "spec {}: the layer family needs modes, kernels, strategies \
+                 and batches", self.name);
+            anyhow::ensure!(self.batches.iter().all(|&b| b >= 1),
+                            "spec {}: batches must be >= 1", self.name);
+        }
+        if m.model || self.loadtest.is_some() {
+            anyhow::ensure!(
+                !self.model_archs.is_empty() && !self.kernels.is_empty()
+                    && !self.modes.is_empty(),
+                "spec {}: the model/loadtest families need model_archs, \
+                 kernels and modes", self.name);
+            anyhow::ensure!(self.model_batch >= 1,
+                            "spec {}: model_batch must be >= 1", self.name);
+        }
+        if m.hw {
+            anyhow::ensure!(
+                !self.archs.is_empty() && !self.kernels.is_empty(),
+                "spec {}: the hw family needs archs and kernels", self.name);
+            anyhow::ensure!(
+                self.modes.iter().any(|m| m.bits().is_some()),
+                "spec {}: the hw family needs an int mode (plans quantize)",
+                self.name);
+        }
+        if m.hw || m.ratio_dw16 {
+            anyhow::ensure!(
+                !self.hw_parallelism.is_empty()
+                    && self.hw_parallelism.iter().all(|&p| p >= 1),
+                "spec {}: the hw families need hw_parallelism >= 1", self.name);
+        }
+        if let Some(lt) = &self.loadtest {
+            anyhow::ensure!(lt.qps > 0.0 && lt.duration_ms >= 1,
+                            "spec {}: loadtest needs qps > 0 and duration_ms \
+                             >= 1", self.name);
+        }
+        Ok(())
+    }
+
+    /// Canonical single-line JSON — the hash input AND the stored spec
+    /// file.  Field order is fixed here; `normalize` fixes dimension
+    /// order; together they make the hash insensitive to how a spec
+    /// file was typed.
+    pub fn canonical_json(&self) -> String {
+        fn strs(items: &[&str]) -> String {
+            let quoted: Vec<String> =
+                items.iter().map(|s| format!("\"{s}\"")).collect();
+            format!("[{}]", quoted.join(","))
+        }
+        fn nums<T: std::fmt::Display>(items: &[T]) -> String {
+            let printed: Vec<String> =
+                items.iter().map(|n| n.to_string()).collect();
+            format!("[{}]", printed.join(","))
+        }
+        let archs: Vec<&str> = self.archs.iter().map(|a| a.name()).collect();
+        let march: Vec<&str> =
+            self.model_archs.iter().map(|a| a.name()).collect();
+        let kernels: Vec<&str> =
+            self.kernels.iter().map(|k| k.label()).collect();
+        let strats: Vec<&str> =
+            self.strategies.iter().map(|s| s.label()).collect();
+        let modes: Vec<&str> = self.modes.iter().map(|m| m.label()).collect();
+        let lt = match &self.loadtest {
+            None => "null".to_string(),
+            Some(l) => format!("{{\"qps\":{},\"duration_ms\":{}}}",
+                               l.qps, l.duration_ms),
+        };
+        format!(
+            "{{\"schema\":\"{SPEC_SCHEMA}\",\"name\":\"{}\",\
+             \"archs\":{},\"model_archs\":{},\"kernels\":{},\
+             \"strategies\":{},\"modes\":{},\"threads\":{},\"batches\":{},\
+             \"hw_parallelism\":{},\"model_batch\":{},\
+             \"measure\":{{\"layer\":{},\"model\":{},\"hw\":{},\
+             \"ratio_dw16\":{}}},\"loadtest\":{}}}",
+            self.name, strs(&archs), strs(&march), strs(&kernels),
+            strs(&strats), strs(&modes), nums(&self.threads),
+            nums(&self.batches), nums(&self.hw_parallelism), self.model_batch,
+            self.measure.layer, self.measure.model, self.measure.hw,
+            self.measure.ratio_dw16, lt)
+    }
+
+    /// Content hash: 16 hex chars of FNV-1a over the normalized
+    /// canonical JSON.
+    pub fn hash(&self) -> String {
+        let mut c = self.clone();
+        c.normalize();
+        format!("{:016x}", fnv64(c.canonical_json().as_bytes()))
+    }
+
+    /// Parse a spec from JSON (the canonical form or any field order).
+    /// Unlisted dimensions default to the canonical CI shape: ambient
+    /// threads, B=8 layer fixture, P=1024, B=64 whole-model.
+    pub fn from_json(text: &str) -> Result<SweepSpec> {
+        let j = Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("spec JSON: {e:?}"))?;
+        let schema = j.at(&["schema"]).and_then(Json::as_str).unwrap_or("");
+        anyhow::ensure!(schema == SPEC_SCHEMA,
+                        "spec schema {schema:?}, expected {SPEC_SCHEMA:?}");
+        let name = j.at(&["name"]).and_then(Json::as_str)
+            .context("spec needs a \"name\"")?
+            .to_string();
+        let parse_list = |key: &str| -> Result<Vec<String>> {
+            match j.at(&[key]) {
+                None => Ok(Vec::new()),
+                Some(v) => {
+                    let arr = v.as_arr().with_context(|| {
+                        format!("spec field {key:?} must be an array")
+                    })?;
+                    arr.iter()
+                        .map(|e| {
+                            e.as_str().map(str::to_string).with_context(|| {
+                                format!("spec field {key:?} must hold strings")
+                            })
+                        })
+                        .collect()
+                }
+            }
+        };
+        let archs = parse_list("archs")?.iter()
+            .map(|s| Arch::parse(s).with_context(|| {
+                format!("unknown arch {s:?} (expected {})", Arch::names_label())
+            }))
+            .collect::<Result<Vec<_>>>()?;
+        let model_archs = match j.at(&["model_archs"]) {
+            None => archs.clone(),
+            Some(_) => parse_list("model_archs")?.iter()
+                .map(|s| Arch::parse(s).with_context(|| {
+                    format!("unknown model arch {s:?}")
+                }))
+                .collect::<Result<Vec<_>>>()?,
+        };
+        let kernels = parse_list("kernels")?.iter()
+            .map(|s| SimKernel::parse(s)
+                .with_context(|| format!("unknown kernel {s:?} (adder|mult)")))
+            .collect::<Result<Vec<_>>>()?;
+        let strategies = parse_list("strategies")?.iter()
+            .map(|s| KernelStrategy::parse(s)
+                .with_context(|| format!("unknown strategy {s:?}")))
+            .collect::<Result<Vec<_>>>()?;
+        let modes = parse_list("modes")?.iter()
+            .map(|s| LabMode::parse(s)
+                .with_context(|| format!("unknown mode {s:?} (f32|int8|int16)")))
+            .collect::<Result<Vec<_>>>()?;
+        let parse_nums = |key: &str, default: Vec<usize>| -> Result<Vec<usize>> {
+            match j.at(&[key]) {
+                None => Ok(default),
+                Some(v) => {
+                    let arr = v.as_arr().with_context(|| {
+                        format!("spec field {key:?} must be an array")
+                    })?;
+                    arr.iter()
+                        .map(|e| e.as_usize().with_context(|| {
+                            format!("spec field {key:?} must hold integers")
+                        }))
+                        .collect()
+                }
+            }
+        };
+        let threads = parse_nums("threads", vec![0])?;
+        let batches = parse_nums("batches", vec![8])?;
+        let hw_parallelism = parse_nums("hw_parallelism", vec![1024])?
+            .into_iter().map(|p| p as u64).collect();
+        let model_batch = j.at(&["model_batch"]).and_then(Json::as_usize)
+            .unwrap_or(64);
+        let mflag = |key: &str| {
+            matches!(j.at(&["measure", key]), Some(Json::Bool(true)))
+        };
+        let measure = Measure {
+            layer: mflag("layer"),
+            model: mflag("model"),
+            hw: mflag("hw"),
+            ratio_dw16: mflag("ratio_dw16"),
+        };
+        let loadtest = match j.at(&["loadtest"]) {
+            None | Some(Json::Null) => None,
+            Some(l) => Some(LoadPoint {
+                qps: l.at(&["qps"]).and_then(Json::as_f64)
+                    .context("loadtest.qps must be a number")?,
+                duration_ms: l.at(&["duration_ms"]).and_then(Json::as_usize)
+                    .context("loadtest.duration_ms must be an integer")?
+                    as u64,
+            }),
+        };
+        let spec = SweepSpec {
+            name, archs, model_archs, kernels, strategies, modes, threads,
+            batches, hw_parallelism, model_batch, measure, loadtest,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+fn arch_rank(a: Arch) -> usize {
+    Arch::ALL.iter().position(|&x| x == a).unwrap_or(usize::MAX)
+}
+
+fn strategy_rank(s: KernelStrategy) -> usize {
+    match s {
+        KernelStrategy::Naive => 0,
+        KernelStrategy::Tiled => 1,
+        KernelStrategy::Simd => 2,
+        KernelStrategy::Winograd => 3,
+        KernelStrategy::Auto => 4,
+    }
+}

@@ -1,0 +1,433 @@
+//! The `.lab/` store: content-addressed, append-only run records.
+//!
+//! Layout:
+//!
+//! ```text
+//! .lab/
+//!   specs/{spec_hash}.json               canonical spec (written once)
+//!   runs/{spec_hash}-{env_fp}-g{N}.json  immutable addernet-lab-v1 record
+//! ```
+//!
+//! A run's identity is its spec hash plus an environment fingerprint
+//! (crate version, `ADDERNET_KERNEL` resolution, pool workers, the
+//! Winograd-adder opt-in) plus a generation counter.  Records are
+//! NEVER overwritten: re-running the same spec in the same environment
+//! dedupes to the existing record, and `--force` appends `g{N+1}`.
+//! Key values serialize through Rust's shortest-roundtrip `{}` float
+//! formatting, so a record read back compares bit-equal to the run
+//! that wrote it — the property `lab diff` relies on to pin the
+//! deterministic `hw_*` keys exactly.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::{fnv64, gate_class, is_deterministic, GateClass};
+use crate::sim::kernels::winograd;
+use crate::sim::functional::KernelStrategy;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::util::threads;
+
+pub const SCHEMA: &str = "addernet-lab-v1";
+
+/// The measurement environment a record was taken in.  Fingerprinted
+/// into the run id so records from different kernel-env legs or pool
+/// sizes never dedupe against each other.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EnvInfo {
+    pub version: String,
+    /// `ADDERNET_KERNEL` resolution (`auto` when unset).
+    pub kernel_env: String,
+    pub pool_workers: usize,
+    /// `exact` normally; `approx` under the `ADDERNET_WINOGRAD_ADDER`
+    /// opt-in (changes which engine Winograd points exercise).
+    pub winograd_adder: String,
+}
+
+impl EnvInfo {
+    pub fn current() -> EnvInfo {
+        EnvInfo {
+            version: env!("CARGO_PKG_VERSION").to_string(),
+            kernel_env: KernelStrategy::from_env().label().to_string(),
+            pool_workers: threads::pool_workers(),
+            winograd_adder: if winograd::adder_l1_opted_in() {
+                "approx"
+            } else {
+                "exact"
+            }.to_string(),
+        }
+    }
+
+    /// 8 hex chars over the canonical field string.
+    pub fn fingerprint(&self) -> String {
+        let s = format!("v={};k={};t={};wa={}", self.version, self.kernel_env,
+                        self.pool_workers, self.winograd_adder);
+        format!("{:08x}", fnv64(s.as_bytes()) & 0xffff_ffff)
+    }
+
+    pub fn to_map(&self) -> BTreeMap<String, String> {
+        BTreeMap::from([
+            ("version".to_string(), self.version.clone()),
+            ("kernel_env".to_string(), self.kernel_env.clone()),
+            ("pool_workers".to_string(), self.pool_workers.to_string()),
+            ("winograd_adder".to_string(), self.winograd_adder.clone()),
+        ])
+    }
+}
+
+/// One expanded sweep point's outcome line (executed or skipped).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobLine {
+    pub job: String,
+    /// `ok` | `skipped`.
+    pub status: String,
+    /// Why a point was skipped (empty for `ok`).
+    pub note: String,
+}
+
+impl JobLine {
+    pub fn ok(job: String) -> JobLine {
+        JobLine { job, status: "ok".to_string(), note: String::new() }
+    }
+
+    pub fn skipped(job: String, note: String) -> JobLine {
+        JobLine { job, status: "skipped".to_string(), note }
+    }
+}
+
+/// One immutable run record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRecord {
+    pub run_id: String,
+    pub spec_name: String,
+    pub spec_hash: String,
+    pub env_fp: String,
+    pub created_unix: u64,
+    pub env: BTreeMap<String, String>,
+    pub jobs: Vec<JobLine>,
+    pub keys: BTreeMap<String, f64>,
+    /// Set on promoted baseline records: the run they were cut from.
+    pub promoted_from: Option<String>,
+}
+
+/// `{spec_hash}-{env_fp}-g{N}` — the record's file stem.
+pub fn run_id(spec_hash: &str, env_fp: &str, generation: u32) -> String {
+    format!("{spec_hash}-{env_fp}-g{generation}")
+}
+
+/// Shortest-roundtrip float formatting — `4442` stays `4442`,
+/// wall-clock medians keep every bit — so write→read→write is a fixed
+/// point and deterministic keys survive the store bit-exactly.
+pub fn fmt_num(v: f64) -> String {
+    if v.is_finite() { format!("{v}") } else { "0".to_string() }
+}
+
+/// Compact display form (`4442`, `1.163`, `0.0031`).
+pub fn fmt_val(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e12 {
+        format!("{v:.0}")
+    } else if v.abs() >= 0.01 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push(' '),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl RunRecord {
+    /// Short display id: spec-hash prefix + generation.
+    pub fn short_id(&self) -> String {
+        let generation = self.run_id.rsplit('-').next().unwrap_or("");
+        if self.spec_hash.len() >= 8 {
+            format!("{}:{generation}", &self.spec_hash[..8])
+        } else {
+            self.run_id.clone()
+        }
+    }
+
+    pub fn jobs_ok(&self) -> usize {
+        self.jobs.iter().filter(|j| j.status == "ok").count()
+    }
+
+    pub fn jobs_skipped(&self) -> usize {
+        self.jobs.iter().filter(|j| j.status == "skipped").count()
+    }
+
+    /// Stable hand-assembled JSON (no serializer is vendored); keys
+    /// sorted by the BTreeMaps, floats via [`fmt_num`].
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+        s.push_str(&format!("  \"run_id\": \"{}\",\n", esc(&self.run_id)));
+        s.push_str(&format!("  \"spec_name\": \"{}\",\n",
+                            esc(&self.spec_name)));
+        s.push_str(&format!("  \"spec_hash\": \"{}\",\n",
+                            esc(&self.spec_hash)));
+        s.push_str(&format!("  \"env_fp\": \"{}\",\n", esc(&self.env_fp)));
+        s.push_str(&format!("  \"created_unix\": {},\n", self.created_unix));
+        if let Some(p) = &self.promoted_from {
+            s.push_str(&format!("  \"promoted_from\": \"{}\",\n", esc(p)));
+        }
+        let env: Vec<String> = self.env.iter()
+            .map(|(k, v)| format!("\"{}\": \"{}\"", esc(k), esc(v)))
+            .collect();
+        s.push_str(&format!("  \"env\": {{{}}},\n", env.join(", ")));
+        let jobs: Vec<String> = self.jobs.iter()
+            .map(|j| format!(
+                "    {{\"job\": \"{}\", \"status\": \"{}\", \"note\": \"{}\"}}",
+                esc(&j.job), esc(&j.status), esc(&j.note)))
+            .collect();
+        if jobs.is_empty() {
+            s.push_str("  \"jobs\": [],\n");
+        } else {
+            s.push_str(&format!("  \"jobs\": [\n{}\n  ],\n", jobs.join(",\n")));
+        }
+        let keys: Vec<String> = self.keys.iter()
+            .map(|(k, v)| format!("    \"{}\": {}", esc(k), fmt_num(*v)))
+            .collect();
+        if keys.is_empty() {
+            s.push_str("  \"keys\": {}\n");
+        } else {
+            s.push_str(&format!("  \"keys\": {{\n{}\n  }}\n", keys.join(",\n")));
+        }
+        s.push_str("}\n");
+        s
+    }
+
+    pub fn from_json(text: &str) -> Result<RunRecord> {
+        let j = Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("run record JSON: {e:?}"))?;
+        let schema = j.at(&["schema"]).and_then(Json::as_str).unwrap_or("");
+        anyhow::ensure!(schema == SCHEMA,
+                        "run record schema {schema:?}, expected {SCHEMA:?}");
+        let req_str = |key: &str| -> Result<String> {
+            j.at(&[key]).and_then(Json::as_str).map(str::to_string)
+                .with_context(|| format!("run record needs string {key:?}"))
+        };
+        let run_id = req_str("run_id")?;
+        let spec_name = req_str("spec_name")?;
+        let spec_hash = req_str("spec_hash")?;
+        let env_fp = req_str("env_fp")?;
+        let created_unix = j.at(&["created_unix"]).and_then(Json::as_f64)
+            .unwrap_or(0.0) as u64;
+        let promoted_from = j.at(&["promoted_from"]).and_then(Json::as_str)
+            .map(str::to_string);
+        let mut env = BTreeMap::new();
+        if let Some(obj) = j.at(&["env"]).and_then(Json::as_obj) {
+            for (k, v) in obj {
+                if let Some(s) = v.as_str() {
+                    env.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        let mut jobs = Vec::new();
+        if let Some(arr) = j.at(&["jobs"]).and_then(Json::as_arr) {
+            for e in arr {
+                jobs.push(JobLine {
+                    job: e.at(&["job"]).and_then(Json::as_str)
+                        .unwrap_or("").to_string(),
+                    status: e.at(&["status"]).and_then(Json::as_str)
+                        .unwrap_or("ok").to_string(),
+                    note: e.at(&["note"]).and_then(Json::as_str)
+                        .unwrap_or("").to_string(),
+                });
+            }
+        }
+        let mut keys = BTreeMap::new();
+        let kobj = j.at(&["keys"]).and_then(Json::as_obj)
+            .context("run record needs a \"keys\" object")?;
+        for (k, v) in kobj {
+            let n = v.as_f64().with_context(|| {
+                format!("run record key {k:?} must be a number")
+            })?;
+            keys.insert(k.clone(), n);
+        }
+        Ok(RunRecord {
+            run_id, spec_name, spec_hash, env_fp, created_unix, env, jobs,
+            keys, promoted_from,
+        })
+    }
+
+    /// All recorded keys with their gate class and determinism flag.
+    pub fn key_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!("lab run {} (spec {})", self.run_id, self.spec_name),
+            &["key", "value", "gate", "deterministic"]);
+        for (k, v) in &self.keys {
+            let gate = match gate_class(k) {
+                GateClass::Floor => "floor",
+                GateClass::Ceiling => "ceiling",
+                GateClass::Info => "-",
+            };
+            let det = if is_deterministic(k) { "yes" } else { "-" };
+            t.row(&[k.clone(), fmt_val(*v), gate.to_string(),
+                    det.to_string()]);
+        }
+        t
+    }
+}
+
+/// Filesystem store rooted at a `.lab/` directory.
+pub struct Store {
+    root: PathBuf,
+}
+
+impl Store {
+    pub fn open(root: &Path) -> Result<Store> {
+        let store = Store { root: root.to_path_buf() };
+        fs::create_dir_all(store.runs_dir())
+            .with_context(|| format!("creating {}",
+                                     store.runs_dir().display()))?;
+        fs::create_dir_all(store.specs_dir())
+            .with_context(|| format!("creating {}",
+                                     store.specs_dir().display()))?;
+        Ok(store)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn runs_dir(&self) -> PathBuf {
+        self.root.join("runs")
+    }
+
+    fn specs_dir(&self) -> PathBuf {
+        self.root.join("specs")
+    }
+
+    /// Write the canonical spec file if it is not already stored;
+    /// returns the spec hash either way.
+    pub fn put_spec(&self, spec: &super::spec::SweepSpec) -> Result<String> {
+        let hash = spec.hash();
+        let path = self.specs_dir().join(format!("{hash}.json"));
+        if !path.exists() {
+            let mut normalized = spec.clone();
+            normalized.normalize();
+            fs::write(&path, normalized.canonical_json() + "\n")
+                .with_context(|| format!("writing {}", path.display()))?;
+        }
+        Ok(hash)
+    }
+
+    /// Generations already recorded for `(spec_hash, env_fp)`, sorted.
+    pub fn generations(&self, spec_hash: &str, env_fp: &str)
+                       -> Result<Vec<u32>> {
+        let prefix = format!("{spec_hash}-{env_fp}-g");
+        let mut gens = Vec::new();
+        for entry in fs::read_dir(self.runs_dir())
+            .with_context(|| format!("reading {}",
+                                     self.runs_dir().display()))?
+        {
+            let name = entry?.file_name().to_string_lossy().to_string();
+            if let Some(rest) = name.strip_prefix(&prefix) {
+                if let Some(g) = rest.strip_suffix(".json")
+                    .and_then(|x| x.parse::<u32>().ok())
+                {
+                    gens.push(g);
+                }
+            }
+        }
+        gens.sort_unstable();
+        Ok(gens)
+    }
+
+    /// Append-only write: refuses to overwrite an existing record.
+    pub fn put_run(&self, rec: &RunRecord) -> Result<PathBuf> {
+        let path = self.runs_dir().join(format!("{}.json", rec.run_id));
+        let mut f = fs::OpenOptions::new().write(true).create_new(true)
+            .open(&path)
+            .with_context(|| format!(
+                "lab store is append-only — refusing to overwrite {} \
+                 (use --force to record a new generation)", path.display()))?;
+        f.write_all(rec.to_json().as_bytes())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    pub fn load_file(path: &Path) -> Result<RunRecord> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        RunRecord::from_json(&text)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Load by exact run id or unique prefix.
+    pub fn load(&self, id_or_prefix: &str) -> Result<RunRecord> {
+        let exact = self.runs_dir().join(format!("{id_or_prefix}.json"));
+        if exact.is_file() {
+            return Self::load_file(&exact);
+        }
+        let mut matches = Vec::new();
+        for entry in fs::read_dir(self.runs_dir())
+            .with_context(|| format!("reading {}",
+                                     self.runs_dir().display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().to_string();
+            if name.starts_with(id_or_prefix) && name.ends_with(".json") {
+                matches.push(entry.path());
+            }
+        }
+        match matches.len() {
+            0 => anyhow::bail!("no lab run matches {id_or_prefix:?} in {}",
+                               self.root.display()),
+            1 => Self::load_file(&matches[0]),
+            n => {
+                let mut names: Vec<String> = matches.iter()
+                    .filter_map(|p| p.file_stem())
+                    .map(|s| s.to_string_lossy().to_string())
+                    .collect();
+                names.sort();
+                anyhow::bail!("{n} lab runs match {id_or_prefix:?}: {}",
+                              names.join(", "))
+            }
+        }
+    }
+
+    /// Every record, oldest first (created_unix, then run_id).
+    pub fn list(&self) -> Result<Vec<RunRecord>> {
+        let mut recs = Vec::new();
+        for entry in fs::read_dir(self.runs_dir())
+            .with_context(|| format!("reading {}",
+                                     self.runs_dir().display()))?
+        {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("json") {
+                recs.push(Self::load_file(&path)?);
+            }
+        }
+        recs.sort_by(|a, b| {
+            a.created_unix.cmp(&b.created_unix)
+                .then_with(|| a.run_id.cmp(&b.run_id))
+        });
+        Ok(recs)
+    }
+
+    /// The `n` most recent records, newest first.
+    pub fn latest(&self, n: usize) -> Result<Vec<RunRecord>> {
+        let mut recs = self.list()?;
+        recs.reverse();
+        recs.truncate(n);
+        Ok(recs)
+    }
+}

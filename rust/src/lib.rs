@@ -20,6 +20,7 @@
 pub mod coordinator;
 pub mod data;
 pub mod hw;
+pub mod lab;
 pub mod nn;
 pub mod obs;
 pub mod quant;

@@ -23,6 +23,14 @@
 //!   simulate           run the FPGA accelerator simulator on a network
 //!   bench check        compare target/hotpath.json against a committed
 //!                      baseline; nonzero exit on speedup regressions
+//!   lab                the experiment subsystem: `lab run --spec` executes
+//!                      a declarative sweep into the content-addressed
+//!                      `.lab/` store; `lab list`/`lab diff` inspect and
+//!                      compare recorded runs (deterministic hw keys must
+//!                      match bit-for-bit); `lab check` is the CI gate
+//!                      against a committed baseline record; `lab promote`
+//!                      cuts a new baseline from a run; `lab report` renders
+//!                      the perf trajectory
 //!   info               list artifacts, graphs and networks
 //!
 //! No external CLI crate is vendored; parsing is a tiny flag scanner.
@@ -109,6 +117,7 @@ fn main() {
         "quantize" => cmd_quantize(&args),
         "simulate" => cmd_simulate(&args),
         "bench" => cmd_bench(&args),
+        "lab" => cmd_lab(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             usage();
@@ -161,6 +170,13 @@ fn usage() {
          repro simulate [--net resnet18] [--kernel adder|mult] [--dw 16] [--parallelism 1024]\n  \
          repro bench check --baseline bench_baseline.json \
                      [--current target/hotpath.json] [--tolerance 0.25]\n  \
+         repro lab run --spec ci-sweep|ci-smoke|FILE.json [--store .lab] [--force]\n  \
+         repro lab list [--store .lab]\n  \
+         repro lab diff [RUN_A RUN_B] [--latest] [--baseline FILE.json] [--store .lab]\n  \
+         repro lab check --baseline lab_baseline.json [--run ID] \
+                     [--tolerance 0.25] [--store .lab]\n  \
+         repro lab promote [--run ID] [--out lab_baseline.json] [--all-keys]\n  \
+         repro lab report [--keys k1,k2] [--store .lab]\n  \
          repro info",
         report::EXPERIMENTS.join(" ")
     );
@@ -666,6 +682,152 @@ fn bench_check(args: &Args) -> Result<()> {
     println!("[bench] all {} gated rows within {:.0}% of the baseline",
              FLOOR_GATES.len() + CEILING_GATES.len(), tol * 100.0);
     Ok(())
+}
+
+/// `repro lab` — the experiment subsystem (see `src/lab/`): declarative
+/// sweeps into a content-addressed store, diffs against recorded
+/// history, and the history-sourced CI gate that replaced `bench check`.
+fn cmd_lab(args: &Args) -> Result<()> {
+    use addernet::lab::{self, diff as labdiff, job, spec::SweepSpec,
+                        store::Store};
+    use std::path::Path;
+
+    let store_dir = args.get("store", lab::DEFAULT_STORE);
+    let open_store = || Store::open(Path::new(&store_dir));
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => {
+            let spec_arg = args.flags.get("spec").context(
+                "lab run needs --spec NAME|FILE.json (builtin specs: \
+                 ci-sweep, ci-smoke)")?;
+            let spec = SweepSpec::resolve(spec_arg)?;
+            let store = open_store()?;
+            let force = args.flags.contains_key("force");
+            match job::run_spec(&store, &spec, force)? {
+                job::RunOutcome::Deduped(rec) => {
+                    println!("[lab] run {} already recorded for this spec + \
+                              environment — deduped, nothing re-measured \
+                              (--force records a new generation)",
+                             rec.run_id);
+                }
+                job::RunOutcome::Ran(rec) => {
+                    rec.key_table().print();
+                    println!("[lab] recorded run {} ({} keys, {} jobs ok, {} \
+                              skipped) in {}",
+                             rec.run_id, rec.keys.len(), rec.jobs_ok(),
+                             rec.jobs_skipped(), store_dir);
+                }
+            }
+            Ok(())
+        }
+        Some("list") => {
+            let store = open_store()?;
+            let runs = store.list()?;
+            let mut t = Table::new(
+                &format!("lab store {store_dir} ({} runs)", runs.len()),
+                &["run", "spec", "created_unix", "jobs ok", "skipped",
+                  "keys"]);
+            for r in &runs {
+                t.row(&[r.run_id.clone(), r.spec_name.clone(),
+                        r.created_unix.to_string(), r.jobs_ok().to_string(),
+                        r.jobs_skipped().to_string(),
+                        r.keys.len().to_string()]);
+            }
+            t.print();
+            Ok(())
+        }
+        Some("diff") => {
+            let store = open_store()?;
+            let ids: Vec<&String> = args.positional.iter().skip(1).collect();
+            let (a, b) = if let Some(base) = args.flags.get("baseline") {
+                // committed baseline on the left, a run (named or
+                // latest) on the right
+                let a = Store::load_file(Path::new(base))?;
+                let b = match ids.first() {
+                    Some(id) => store.load(id)?,
+                    None => store.latest(1)?.pop().context(
+                        "lab store is empty — `repro lab run` first")?,
+                };
+                (a, b)
+            } else if ids.len() >= 2 {
+                (store.load(ids[0])?, store.load(ids[1])?)
+            } else {
+                // default / --latest: the two most recent runs,
+                // older on the left
+                let mut latest = store.latest(2)?;
+                anyhow::ensure!(latest.len() == 2,
+                                "lab diff needs two runs in the store (or \
+                                 two ids, or --baseline FILE)");
+                let b = latest.remove(0);
+                let a = latest.remove(0);
+                (a, b)
+            };
+            let report = labdiff::diff_records(&a, &b);
+            report.table(&a.short_id(), &b.short_id()).print();
+            let drift = report.drift();
+            anyhow::ensure!(
+                drift.is_empty(),
+                "deterministic keys drifted between {} and {}: {} — the \
+                 accelerator model is pure arithmetic, so this is a code \
+                 change, not noise",
+                a.run_id, b.run_id,
+                drift.iter().map(|r| r.key.as_str())
+                    .collect::<Vec<_>>().join(", "));
+            println!("[lab] no drift on deterministic keys ({} keys \
+                      compared)", report.rows.len());
+            Ok(())
+        }
+        Some("check") => {
+            let base_path = args.flags.get("baseline").context(
+                "lab check needs --baseline FILE (the committed run record, \
+                 e.g. rust/lab_baseline.json)")?;
+            let baseline = Store::load_file(Path::new(base_path))?;
+            let store = open_store()?;
+            let current = match args.flags.get("run") {
+                Some(id) => store.load(id)?,
+                None => store.latest(1)?.pop().context(
+                    "lab store is empty — `repro lab run --spec ci-sweep` \
+                     first")?,
+            };
+            let tol: f64 = args.get("tolerance", "0.25").parse()
+                .context("--tolerance takes a fraction, e.g. 0.25")?;
+            let (t, failed, gated) =
+                labdiff::check_records(&current, &baseline, tol)?;
+            t.print();
+            anyhow::ensure!(failed.is_empty(),
+                            "lab bench regression vs {base_path}: {}",
+                            failed.join("; "));
+            println!("[lab] all {gated} gated keys within {:.0}% of \
+                      baseline {base_path}", tol * 100.0);
+            Ok(())
+        }
+        Some("promote") => {
+            let store = open_store()?;
+            let run = match args.flags.get("run") {
+                Some(id) => store.load(id)?,
+                None => store.latest(1)?.pop().context(
+                    "lab store is empty — nothing to promote")?,
+            };
+            let out = args.get("out", "lab_baseline.json");
+            let all_keys = args.flags.contains_key("all-keys");
+            let baseline = labdiff::promote(&run, all_keys);
+            std::fs::write(&out, baseline.to_json())
+                .with_context(|| format!("writing {out}"))?;
+            println!("[lab] promoted run {} -> {out} ({} keys); commit it \
+                      to move the CI gate", run.run_id, baseline.keys.len());
+            Ok(())
+        }
+        Some("report") => {
+            let store = open_store()?;
+            let keys: Option<Vec<String>> = args.flags.get("keys")
+                .map(|s| s.split(',').map(|k| k.trim().to_string())
+                     .filter(|k| !k.is_empty()).collect());
+            report::labrep::trajectory(&store, keys.as_deref())?.print();
+            Ok(())
+        }
+        _ => anyhow::bail!(
+            "usage: repro lab run|list|diff|check|promote|report (see \
+             `repro help`)"),
+    }
 }
 
 /// Serve through the AOT eval graphs on the PJRT runtime.

@@ -1,0 +1,44 @@
+//! Perf-trajectory report over the lab store (`repro lab report`):
+//! one row per recorded run, oldest first, one column per gated key —
+//! the "did the last five PRs actually make it faster?" view that a
+//! single hand-edited baseline file could never answer.
+
+use anyhow::Result;
+
+use crate::lab::store::{fmt_val, Store};
+use crate::lab::{gate_class, GateClass};
+use crate::util::table::Table;
+
+/// Render the trajectory table.  `keys` selects the columns; `None`
+/// defaults to every Floor/Ceiling-classed key of the newest run.
+pub fn trajectory(store: &Store, keys: Option<&[String]>) -> Result<Table> {
+    let runs = store.list()?;
+    anyhow::ensure!(!runs.is_empty(),
+                    "lab store {} has no runs — `repro lab run --spec \
+                     ci-sweep` first", store.root().display());
+    let latest = runs.last().expect("non-empty");
+    let keys: Vec<String> = match keys {
+        Some(ks) if !ks.is_empty() => ks.to_vec(),
+        _ => latest.keys.keys()
+            .filter(|k| gate_class(k) != GateClass::Info)
+            .cloned()
+            .collect(),
+    };
+    anyhow::ensure!(!keys.is_empty(),
+                    "no gated keys in run {} — pass --keys k1,k2",
+                    latest.run_id);
+    let mut header: Vec<String> =
+        vec!["run".to_string(), "spec".to_string()];
+    header.extend(keys.iter().cloned());
+    let hrefs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new("lab perf trajectory (oldest -> newest)", &hrefs);
+    for r in &runs {
+        let mut row = vec![r.short_id(), r.spec_name.clone()];
+        for k in &keys {
+            row.push(r.keys.get(k).map_or_else(|| "-".to_string(),
+                                               |v| fmt_val(*v)));
+        }
+        t.row(&row);
+    }
+    Ok(t)
+}

@@ -5,6 +5,7 @@
 pub mod evalrt;
 pub mod fpga;
 pub mod kernels;
+pub mod labrep;
 pub mod quantrep;
 pub mod results;
 

@@ -1,0 +1,334 @@
+//! Lab-store tier tests: spec-hash stability, record write→read
+//! roundtrips, store immutability (dedupe, never overwrite), and
+//! `lab diff` determinism on the hwsim cycle keys — the properties the
+//! CI gate (`repro lab run` + `lab check`) stands on.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use addernet::lab::diff::{check_records, diff_records, promote};
+use addernet::lab::job::{run_spec, RunOutcome};
+use addernet::lab::spec::{LabMode, Measure, SweepSpec};
+use addernet::lab::store::{EnvInfo, JobLine, RunRecord, Store};
+use addernet::lab::{fnv64, gate_class, is_deterministic, GateClass};
+use addernet::sim::functional::{Arch, SimKernel};
+
+/// Fresh per-test store directory (tests run in parallel).
+fn temp_store(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("addernet-lab-test-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// A deterministic-only spec: one hwsim cycle point, no wall clocks —
+/// fast and bit-reproducible, so generations must diff clean.
+fn hw_only_spec(name: &str) -> SweepSpec {
+    SweepSpec {
+        name: name.to_string(),
+        archs: vec![Arch::Lenet5],
+        model_archs: vec![],
+        kernels: vec![SimKernel::Adder],
+        strategies: vec![],
+        modes: vec![LabMode::Int8],
+        threads: vec![0],
+        batches: vec![8],
+        hw_parallelism: vec![1024],
+        model_batch: 64,
+        measure: Measure { layer: false, model: false, hw: true,
+                           ratio_dw16: false },
+        loadtest: None,
+    }
+}
+
+fn sample_record(run_id: &str) -> RunRecord {
+    let mut keys = BTreeMap::new();
+    keys.insert("hw_cycles_lenet5_int8".to_string(), 4442.0);
+    keys.insert("layer_int8_adder_simd_b8_s".to_string(), 0.043_217_651);
+    keys.insert("winograd_vs_simd".to_string(), 0.1 + 0.2); // not 0.3 exactly
+    RunRecord {
+        run_id: run_id.to_string(),
+        spec_name: "test".to_string(),
+        spec_hash: "00112233aabbccdd".to_string(),
+        env_fp: "deadbeef".to_string(),
+        created_unix: 1_700_000_000,
+        env: EnvInfo::current().to_map(),
+        jobs: vec![
+            JobLine::ok("hw lenet5 adder int8 p1024".to_string()),
+            JobLine::skipped("layer int16 mult tiled b8".to_string(),
+                             "mult \"quantization\" caps at 8-bit \\ operands"
+                                 .to_string()),
+        ],
+        keys,
+        promoted_from: None,
+    }
+}
+
+#[test]
+fn fnv64_reference_vectors() {
+    assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+    assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    assert_eq!(fnv64(b"addernet-lab-v1"), 0xe486_dcb4_376f_9076);
+}
+
+#[test]
+fn gate_classification_matches_the_bench_contract() {
+    // ceilings: deterministic cycle counts
+    assert_eq!(gate_class("hw_cycles_lenet5_int8"), GateClass::Ceiling);
+    assert_eq!(gate_class("hw_cycles_resnet8_mult_int8"), GateClass::Ceiling);
+    // floors: ratio keys + the dw16 latency ratio
+    assert_eq!(gate_class("hw_mult_over_adder_latency"), GateClass::Floor);
+    assert_eq!(gate_class("hw_mult_over_adder_latency_p256"), GateClass::Floor);
+    assert_eq!(gate_class("winograd_vs_simd"), GateClass::Floor);
+    assert_eq!(gate_class("f32_adder_tiled_vs_naive"), GateClass::Floor);
+    assert_eq!(gate_class("plan_vs_f32"), GateClass::Floor);
+    // info: raw medians and loadtest percentiles never gate
+    assert_eq!(gate_class("layer_int8_adder_simd_b8_s"), GateClass::Info);
+    assert_eq!(gate_class("e2e_plan_lenet5_adder_int8_s"), GateClass::Info);
+    assert_eq!(gate_class("lt_lenet5_adder_int8_p99_us"), GateClass::Info);
+    // determinism is exactly the hwsim family
+    assert!(is_deterministic("hw_cycles_cnv6_int8"));
+    assert!(is_deterministic("hw_mult_over_adder_latency"));
+    assert!(!is_deterministic("winograd_vs_simd"));
+    assert!(!is_deterministic("layer_f32_adder_naive_b8_s"));
+}
+
+#[test]
+fn spec_hash_ignores_field_and_dimension_order() {
+    // same spec typed two ways: scrambled field order AND scrambled
+    // dimension order must hash identically after normalization
+    let a = SweepSpec::from_json(
+        r#"{"schema": "addernet-lab-spec-v1",
+            "kernels": ["mult", "adder"],
+            "archs": ["resnet8", "lenet5"],
+            "modes": ["int8"],
+            "measure": {"hw": true},
+            "name": "order-test"}"#).unwrap();
+    let b = SweepSpec::from_json(
+        r#"{"schema": "addernet-lab-spec-v1",
+            "name": "order-test",
+            "archs": ["lenet5", "resnet8", "lenet5"],
+            "kernels": ["adder", "mult"],
+            "modes": ["int8"],
+            "measure": {"hw": true}}"#).unwrap();
+    assert_eq!(a.hash(), b.hash(),
+               "field/dimension permutations must not mint a new lineage");
+    assert_eq!(a.hash().len(), 16);
+    assert!(a.hash().chars().all(|c| c.is_ascii_hexdigit()));
+
+    // a real content change must move the hash
+    let mut c = a.clone();
+    c.hw_parallelism = vec![256];
+    assert_ne!(a.hash(), c.hash());
+
+    // builtins resolve and hash stably against themselves
+    let s1 = SweepSpec::resolve("ci-sweep").unwrap();
+    let s2 = SweepSpec::resolve("ci-sweep").unwrap();
+    assert_eq!(s1.hash(), s2.hash());
+    assert_ne!(s1.hash(), SweepSpec::resolve("ci-smoke").unwrap().hash());
+}
+
+#[test]
+fn spec_json_defaults_mirror_the_ci_shape() {
+    let s = SweepSpec::from_json(
+        r#"{"schema": "addernet-lab-spec-v1", "name": "min",
+            "archs": ["lenet5"], "kernels": ["adder"], "modes": ["int8"],
+            "measure": {"hw": true}}"#).unwrap();
+    assert_eq!(s.threads, vec![0]);
+    assert_eq!(s.batches, vec![8]);
+    assert_eq!(s.hw_parallelism, vec![1024]);
+    assert_eq!(s.model_batch, 64);
+    assert_eq!(s.model_archs, s.archs, "model_archs defaults to archs");
+    // a spec with no measurement family is rejected, not silently empty
+    assert!(SweepSpec::from_json(
+        r#"{"schema": "addernet-lab-spec-v1", "name": "empty",
+            "archs": ["lenet5"], "kernels": ["adder"],
+            "modes": ["int8"]}"#).is_err());
+}
+
+#[test]
+fn record_roundtrips_bit_exactly() {
+    let rec = sample_record("00112233aabbccdd-deadbeef-g1");
+    let parsed = RunRecord::from_json(&rec.to_json()).unwrap();
+    assert_eq!(parsed, rec,
+               "write -> read must be a fixed point (incl. escaped notes \
+                and non-representable-in-decimal floats)");
+    // and the re-serialization is byte-stable
+    assert_eq!(parsed.to_json(), rec.to_json());
+    // the awkward float survived exactly (0.1 + 0.2 != 0.3 in f64)
+    assert_eq!(parsed.keys["winograd_vs_simd"], 0.1 + 0.2);
+    assert_eq!(rec.jobs_ok(), 1);
+    assert_eq!(rec.jobs_skipped(), 1);
+}
+
+#[test]
+fn store_is_append_only_with_prefix_loads() {
+    let root = temp_store("store");
+    let store = Store::open(&root).unwrap();
+    let rec = sample_record("00112233aabbccdd-deadbeef-g1");
+    store.put_run(&rec).unwrap();
+
+    // immutability: the same run id can never be written twice
+    let err = store.put_run(&rec).expect_err("overwrite must be refused");
+    assert!(format!("{err:#}").contains("append-only"),
+            "error should say why: {err:#}");
+
+    // exact and unique-prefix loads resolve
+    assert_eq!(store.load("00112233aabbccdd-deadbeef-g1").unwrap(), rec);
+    assert_eq!(store.load("00112233").unwrap(), rec);
+
+    // a second generation makes the short prefix ambiguous
+    let mut g2 = rec.clone();
+    g2.run_id = "00112233aabbccdd-deadbeef-g2".to_string();
+    store.put_run(&g2).unwrap();
+    assert!(store.load("00112233").is_err(), "ambiguous prefix must error");
+    assert_eq!(store.load("00112233aabbccdd-deadbeef-g2").unwrap(), g2);
+    assert!(store.load("ffffffff").is_err(), "no match must error");
+
+    // list is oldest-first and latest() newest-first
+    let listed = store.list().unwrap();
+    assert_eq!(listed.len(), 2);
+    assert_eq!(listed[0].run_id, rec.run_id);
+    assert_eq!(store.latest(1).unwrap()[0].run_id, g2.run_id);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn run_spec_dedupes_and_forces_new_generations() {
+    let root = temp_store("dedupe");
+    let store = Store::open(&root).unwrap();
+    let spec = hw_only_spec("test-hw");
+
+    let first = match run_spec(&store, &spec, false).unwrap() {
+        RunOutcome::Ran(r) => r,
+        RunOutcome::Deduped(_) => panic!("empty store cannot dedupe"),
+    };
+    assert!(first.run_id.ends_with("-g1"));
+    assert!(first.keys.contains_key("hw_cycles_lenet5_int8"),
+            "hw family must record the historical cycle key");
+    assert_eq!(first.env_fp, EnvInfo::current().fingerprint());
+
+    // identical spec + environment: deduped, nothing re-measured,
+    // nothing overwritten
+    match run_spec(&store, &spec, false).unwrap() {
+        RunOutcome::Deduped(r) => assert_eq!(r, first),
+        RunOutcome::Ran(_) => panic!("identical re-run must dedupe"),
+    }
+    assert_eq!(store.list().unwrap().len(), 1);
+
+    // --force appends generation 2 alongside, never over, g1
+    let second = match run_spec(&store, &spec, true).unwrap() {
+        RunOutcome::Ran(r) => r,
+        RunOutcome::Deduped(_) => panic!("--force must re-measure"),
+    };
+    assert!(second.run_id.ends_with("-g2"));
+    assert_eq!(store.list().unwrap().len(), 2);
+    assert_eq!(store.load(&first.run_id).unwrap(), first,
+               "g1 must be untouched after the forced g2");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn diff_pins_deterministic_keys_exactly() {
+    let root = temp_store("diff");
+    let store = Store::open(&root).unwrap();
+    let spec = hw_only_spec("test-diff");
+    let g1 = run_spec(&store, &spec, true).unwrap().record().clone();
+    let g2 = run_spec(&store, &spec, true).unwrap().record().clone();
+
+    // hwsim is pure arithmetic: two generations agree bit-for-bit
+    assert_eq!(g1.keys, g2.keys,
+               "hw-only generations must record identical keys");
+    let clean = diff_records(&g1, &g2);
+    assert!(clean.drift().is_empty(),
+            "back-to-back runs must diff clean on deterministic keys");
+
+    // any bit-level change on an hw_ key IS drift — no tolerance
+    let mut tampered = g2.clone();
+    let v = tampered.keys["hw_cycles_lenet5_int8"];
+    tampered.keys.insert("hw_cycles_lenet5_int8".to_string(), v + 1.0);
+    let drifted = diff_records(&g1, &tampered);
+    let drift = drifted.drift();
+    assert_eq!(drift.len(), 1);
+    assert_eq!(drift[0].key, "hw_cycles_lenet5_int8");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn check_records_enforces_floors_ceilings_and_presence() {
+    let mut baseline = sample_record("baseline-test-g1");
+    baseline.keys.clear();
+    baseline.keys.insert("winograd_vs_simd".to_string(), 2.0);
+    baseline.keys.insert("hw_cycles_lenet5_int8".to_string(), 1000.0);
+    baseline.keys.insert("layer_int8_adder_simd_b8_s".to_string(), 5.0);
+
+    let mut current = sample_record("current-test-g1");
+    current.keys.clear();
+    current.keys.insert("winograd_vs_simd".to_string(), 1.9);
+    current.keys.insert("hw_cycles_lenet5_int8".to_string(), 1100.0);
+
+    // inside the 25% band on both gates; the info key is never
+    // required, so its absence from current is fine
+    let (_, failed, gated) = check_records(&current, &baseline, 0.25).unwrap();
+    assert!(failed.is_empty(), "within tolerance must pass: {failed:?}");
+    assert_eq!(gated, 2, "exactly the floor + ceiling keys gate");
+
+    // floor breach: 1.4 < 2.0 * 0.75
+    current.keys.insert("winograd_vs_simd".to_string(), 1.4);
+    let (_, failed, _) = check_records(&current, &baseline, 0.25).unwrap();
+    assert_eq!(failed.len(), 1);
+    assert!(failed[0].contains("winograd_vs_simd"));
+
+    // ceiling breach: 1300 > 1000 * 1.25
+    current.keys.insert("winograd_vs_simd".to_string(), 2.0);
+    current.keys.insert("hw_cycles_lenet5_int8".to_string(), 1300.0);
+    let (_, failed, _) = check_records(&current, &baseline, 0.25).unwrap();
+    assert_eq!(failed.len(), 1);
+    assert!(failed[0].contains("hw_cycles_lenet5_int8"));
+
+    // a missing gated key is a hard error, not a silent pass
+    current.keys.remove("hw_cycles_lenet5_int8");
+    assert!(check_records(&current, &baseline, 0.25).is_err());
+
+    // tolerance domain is [0, 1)
+    assert!(check_records(&baseline, &baseline, 1.5).is_err());
+    assert!(check_records(&baseline, &baseline, -0.1).is_err());
+}
+
+#[test]
+fn promote_cuts_a_gated_baseline_with_provenance() {
+    let run = sample_record("00112233aabbccdd-deadbeef-g3");
+    let base = promote(&run, false);
+    assert_eq!(base.run_id, format!("baseline-{}", run.run_id));
+    assert_eq!(base.promoted_from.as_deref(), Some(run.run_id.as_str()));
+    assert!(base.jobs.is_empty(), "baselines carry keys, not job logs");
+    assert!(base.keys.contains_key("hw_cycles_lenet5_int8"));
+    assert!(base.keys.contains_key("winograd_vs_simd"));
+    assert!(!base.keys.contains_key("layer_int8_adder_simd_b8_s"),
+            "info keys are dropped unless --all-keys");
+    let all = promote(&run, true);
+    assert_eq!(all.keys.len(), run.keys.len());
+    // the promoted record itself roundtrips — it is what gets committed
+    assert_eq!(RunRecord::from_json(&base.to_json()).unwrap(), base);
+}
+
+#[test]
+fn committed_ci_baseline_parses_and_gates() {
+    // the actual file CI hands to `lab check --baseline`
+    let text = std::fs::read_to_string("lab_baseline.json").unwrap();
+    let baseline = RunRecord::from_json(&text).unwrap();
+    assert_eq!(baseline.spec_name, "ci-sweep");
+    let gated: Vec<&String> = baseline.keys.keys()
+        .filter(|k| gate_class(k) != GateClass::Info)
+        .collect();
+    assert_eq!(gated.len(), baseline.keys.len(),
+               "every committed baseline key must actually gate");
+    assert_eq!(gated.len(), 11,
+               "the migrated gate set is the bench check's 7 floors + 4 \
+                ceilings");
+    // a run equal to the baseline passes its own gate
+    let (_, failed, gated_n) =
+        check_records(&baseline, &baseline, 0.25).unwrap();
+    assert!(failed.is_empty());
+    assert_eq!(gated_n, 11);
+}
